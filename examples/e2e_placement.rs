@@ -1,0 +1,116 @@
+//! END-TO-END driver: proves all three layers compose on a real workload.
+//!
+//! Pipeline: `make artifacts` compiled the Pallas classification kernel
+//! (L1) inside the JAX placement model (L2) to HLO text; this binary
+//! loads it through PJRT, plugs it into HyPlacer's Control loop (L3) as
+//! the classifier, replays a recorded CG-L workload trace through the
+//! simulated DRAM+DCPMM machine, and reports the paper's headline
+//! metric — steady-state speedup over Linux's default placement — for
+//! BOTH the AOT and the native classifier, asserting they agree.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_placement
+//! ```
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::{run_pair, SimResult};
+use hyplacer::policies::hyplacer::HyPlacer;
+use hyplacer::policies::{self, Policy};
+use hyplacer::runtime::placement::AotClassifier;
+use hyplacer::runtime::default_artifacts_dir;
+use hyplacer::workloads::trace::{Trace, TraceWorkload};
+use hyplacer::workloads::{self, Workload};
+
+const EPOCHS: u32 = 120;
+
+fn run(
+    machine: &MachineConfig,
+    sim: &SimConfig,
+    trace: &Trace,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+) -> SimResult {
+    let w: Box<dyn Workload> = Box::new(TraceWorkload::new(trace.clone()));
+    run_pair(machine, sim, w, policy, window_frac)
+}
+
+fn main() {
+    let machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = EPOCHS;
+    sim.warmup_epochs = EPOCHS / 3;
+    let hp = HyPlacerConfig::default();
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+
+    // 1. Record a real workload trace (CG-L: 150 GB, 3.5x DRAM) so every
+    //    policy replays *identical* demand.
+    let mut live = workloads::by_name("cg-L", machine.page_bytes, sim.epoch_secs).unwrap();
+    let trace = Trace::record(live.as_mut(), EPOCHS);
+    println!(
+        "trace: {} epochs of {} ({} pages footprint)\n",
+        EPOCHS, trace.name, trace.footprint_pages
+    );
+
+    // 2. Baseline: Linux default first-touch placement.
+    let base = run(
+        &machine,
+        &sim,
+        &trace,
+        policies::by_name("adm-default", &machine, &hp).unwrap(),
+        window_frac,
+    );
+    println!(
+        "adm-default      : {:>6.2} GB/s steady  ({:.1}s total wall)",
+        base.steady_throughput / 1e9,
+        base.total_wall_secs
+    );
+
+    // 3. HyPlacer with the NATIVE classifier.
+    let native = run(
+        &machine,
+        &sim,
+        &trace,
+        policies::by_name("hyplacer", &machine, &hp).unwrap(),
+        window_frac,
+    );
+    println!(
+        "hyplacer(native) : {:>6.2} GB/s steady  => {:.2}x speedup",
+        native.steady_throughput / 1e9,
+        native.steady_speedup_vs(&base)
+    );
+
+    // 4. HyPlacer with the AOT/PJRT classifier — the full 3-layer stack.
+    let dir = default_artifacts_dir();
+    let aot = match AotClassifier::new(&dir) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("artifacts not built ({e:#}); run `make artifacts` first");
+            std::process::exit(2);
+        }
+    };
+    let policy: Box<dyn Policy> =
+        Box::new(HyPlacer::new(&machine, hp.clone()).with_classifier(Box::new(aot)));
+    let aot_run = run(&machine, &sim, &trace, policy, window_frac);
+    println!(
+        "hyplacer(aot)    : {:>6.2} GB/s steady  => {:.2}x speedup  [PJRT classifier]",
+        aot_run.steady_throughput / 1e9,
+        aot_run.steady_speedup_vs(&base)
+    );
+
+    // 5. The two classifier paths must agree (same math, fp32).
+    let native_speedup = native.steady_speedup_vs(&base);
+    let aot_speedup = aot_run.steady_speedup_vs(&base);
+    let rel = (native_speedup - aot_speedup).abs() / native_speedup;
+    println!(
+        "\nAOT vs native agreement: {:.3}x vs {:.3}x (rel diff {:.4})",
+        aot_speedup, native_speedup, rel
+    );
+    assert!(rel < 0.02, "AOT and native classifier paths diverged");
+    assert!(aot_speedup > 1.8, "headline speedup too low: {aot_speedup}");
+    println!(
+        "\nE2E OK — headline: HyPlacer {:.2}x vs ADM-default on CG-L \
+         (paper: up to 11x on its testbed; see EXPERIMENTS.md §Fig5)",
+        aot_speedup
+    );
+}

@@ -1,0 +1,46 @@
+//! GAP-style graph workloads (extension beyond the paper's NPB set):
+//! PageRank and BFS on a power-law graph, comparing placement policies.
+//! BFS's wandering frontier stresses slow-reacting hotness estimators.
+//!
+//! ```bash
+//! cargo run --release --example graph_serving [epochs]
+//! ```
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::{run_pair, SimResult};
+use hyplacer::policies;
+use hyplacer::report::Table;
+use hyplacer::workloads;
+
+fn main() {
+    let epochs: u32 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = epochs;
+    sim.warmup_epochs = epochs / 3;
+    let hp = HyPlacerConfig::default();
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+
+    for wname in ["pr-L", "bfs-L"] {
+        let mut table =
+            Table::new(vec!["policy", "throughput_GBs", "steady_speedup", "migrated"]);
+        let mut base: Option<SimResult> = None;
+        for pname in ["adm-default", "memm", "autonuma", "hyplacer"] {
+            let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs).unwrap();
+            let p = policies::by_name(pname, &machine, &hp).unwrap();
+            let r = run_pair(&machine, &sim, w, p, window_frac);
+            let speedup = base.as_ref().map(|b| r.steady_speedup_vs(b)).unwrap_or(1.0);
+            table.row(vec![
+                r.policy.clone(),
+                format!("{:.2}", r.throughput / 1e9),
+                format!("{speedup:.2}x"),
+                r.migrated_pages.to_string(),
+            ]);
+            if pname == "adm-default" {
+                base = Some(r);
+            }
+        }
+        println!("graph workload {wname}\n{}", table.render());
+    }
+}

@@ -1,0 +1,47 @@
+//! MLC insight study: regenerate the paper's §3 empirical analysis
+//! (Fig. 2 response surfaces + Fig. 3 bandwidth-balance study) and print
+//! the three Observations with measured evidence.
+//!
+//! ```bash
+//! cargo run --release --example mlc_study
+//! ```
+
+use hyplacer::bench_harness::{fig2, fig3};
+use hyplacer::config::{MachineConfig, Tier, GB};
+use hyplacer::mem::PerfModel;
+
+fn main() {
+    let machine = MachineConfig::paper_machine();
+
+    // ---- Fig. 2: open-loop characterization --------------------------
+    let rep2 = fig2::report(&machine);
+    println!("{}", rep2.render());
+
+    // ---- Observation 1: partitioned-policy cost ----------------------
+    // read-only pages stranded in DCPMM vs served from free DRAM
+    let model = PerfModel::new(&machine);
+    let demand = 12.0 * GB;
+    let (_, lat_pm) = model.characterize(Tier::Pm, demand, 0.0, 0.0);
+    let (_, lat_dram) = model.characterize(Tier::Dram, demand, 0.0, 0.0);
+    println!(
+        "Observation 1 (partitioned policy): read-only pages in DCPMM pay \
+         {:.1}x the latency of free DRAM at {:.0} GB/s demand\n",
+        lat_pm / lat_dram,
+        demand / GB
+    );
+
+    // ---- Observation 2: read/write awareness -------------------------
+    let (bw_r, _) = model.characterize(Tier::Pm, 30.0 * GB, 0.0, 0.0);
+    let (bw_w, _) = model.characterize(Tier::Pm, 30.0 * GB, 1.0 / 3.0, 0.0);
+    println!(
+        "Observation 2 (r/w awareness): at 30 GB/s offered, DCPMM sustains \
+         {:.1} GB/s all-reads but only {:.1} GB/s at 2R:1W — keeping \
+         write-intensive pages in DRAM matters\n",
+        bw_r / GB,
+        bw_w / GB
+    );
+
+    // ---- Fig. 3 / Observation 3: bandwidth balance -------------------
+    let rep3 = fig3::report();
+    println!("{}", rep3.render());
+}

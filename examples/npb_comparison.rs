@@ -1,0 +1,62 @@
+//! NPB comparison: run every placement policy of the paper's evaluation
+//! on one NPB workload — one Fig. 5 column.
+//!
+//! ```bash
+//! cargo run --release --example npb_comparison [workload] [epochs]
+//! cargo run --release --example npb_comparison cg-L 150
+//! ```
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::{run_pair, SimResult};
+use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::report::Table;
+use hyplacer::workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let workload = args.get(1).map(String::as_str).unwrap_or("cg-L");
+    let epochs: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(120);
+
+    let machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = epochs;
+    sim.warmup_epochs = epochs / 3;
+    let hp = HyPlacerConfig::default();
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+
+    let mut table = Table::new(vec![
+        "policy",
+        "wall_s",
+        "throughput_GBs",
+        "steady_speedup",
+        "energy_gain",
+        "DRAM_share",
+        "migrated_pages",
+    ]);
+    let mut base: Option<SimResult> = None;
+    for pname in FIG5_POLICIES {
+        let w = workloads::by_name(workload, machine.page_bytes, sim.epoch_secs)
+            .unwrap_or_else(|| panic!("unknown workload {workload}"));
+        let p = policies::by_name(pname, &machine, &hp).unwrap();
+        let r = run_pair(&machine, &sim, w, p, window_frac);
+        let (speedup, egain) = match &base {
+            Some(b) => (r.steady_speedup_vs(b), r.energy_gain_vs(b)),
+            None => (1.0, 1.0),
+        };
+        table.row(vec![
+            r.policy.clone(),
+            format!("{:.1}", r.total_wall_secs),
+            format!("{:.2}", r.throughput / 1e9),
+            format!("{speedup:.2}x"),
+            format!("{egain:.2}x"),
+            format!("{:.1}%", r.dram_traffic_share * 100.0),
+            r.migrated_pages.to_string(),
+        ]);
+        if pname == "adm-default" {
+            base = Some(r);
+        }
+    }
+    println!("NPB comparison — workload {workload}, {epochs} epochs\n");
+    println!("{}", table.render());
+    println!("(paper Fig. 5 shape: HyPlacer wins, MemM strong, nimble/memos ~baseline)");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: bind one workload to HyPlacer on the simulated
+//! DRAM+DCPMM machine and print the run summary.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::run_pair;
+use hyplacer::{policies, workloads};
+
+fn main() {
+    // The paper's machine: one socket, 32 GB DDR4 + 256 GB DCPMM.
+    let machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 80;
+
+    // A medium CG run (39.8 GB footprint, ~1.25x DRAM size).
+    let hp = HyPlacerConfig::default();
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+
+    println!("workload  CG-M (39.8 GB footprint, 32 GB DRAM)\n");
+    let mut baseline = None;
+    for policy in ["adm-default", "hyplacer"] {
+        let w = workloads::by_name("cg-M", machine.page_bytes, sim.epoch_secs).unwrap();
+        let p = policies::by_name(policy, &machine, &hp).unwrap();
+        let r = run_pair(&machine, &sim, w, p, window_frac);
+        println!(
+            "{:<12} wall {:>7.1}s  throughput {:>6.2} GB/s  DRAM share {:>5.1}%  migrated {:>6} pages",
+            r.policy,
+            r.total_wall_secs,
+            r.throughput / 1e9,
+            r.dram_traffic_share * 100.0,
+            r.migrated_pages
+        );
+        if policy == "adm-default" {
+            baseline = Some(r);
+        } else if let Some(base) = &baseline {
+            println!(
+                "\nHyPlacer: {:.2}x whole-run, {:.2}x steady-state speedup vs Linux \
+                 default placement (energy gain {:.2}x)",
+                r.speedup_vs(base),
+                r.steady_speedup_vs(base),
+                r.energy_gain_vs(base)
+            );
+        }
+    }
+}

@@ -1,0 +1,117 @@
+"""AOT pipeline: lower the L2 placement model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime
+(rust/src/runtime/) loads the text with ``HloModuleProto::from_text_file``,
+compiles it on the PJRT CPU client and executes it on the request path.
+
+HLO TEXT is the interchange format, NOT ``.serialize()`` /
+``jax.export``-style serialized protos: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all f32):
+  placement_<N>.hlo.txt  — placement_step over N pages, for each capacity
+                           bucket N in BUCKETS. rust picks the smallest
+                           bucket >= resident page count and pads.
+  plan_cost_<K>.hlo.txt  — plan_cost over K candidate plans.
+  manifest.json          — bucket list + parameter-layout versions, so the
+                           rust side can sanity-check at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.classify import N_PARAMS
+from .model import N_COST_PARAMS, placement_step_fn, plan_cost
+
+# Capacity buckets for the per-page pass. 8192 serves tests/small examples;
+# 65536/262144 cover the evaluation runs (2 MiB sim pages -> 262144 pages
+# models a 512 GiB address-space footprint, larger than any workload here).
+BUCKETS = (8192, 65536, 262144)
+PLAN_K = 32
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_placement(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    pspec = jax.ShapeDtypeStruct((N_PARAMS,), jnp.float32)
+    fn = placement_step_fn(n)
+    lowered = jax.jit(fn).lower(spec, spec, spec, spec, spec, spec, pspec)
+    return to_hlo_text(lowered)
+
+
+def lower_plan_cost(k: int) -> str:
+    dspec = jax.ShapeDtypeStruct((k, 4), jnp.float32)
+    pspec = jax.ShapeDtypeStruct((N_COST_PARAMS,), jnp.float32)
+    lowered = jax.jit(plan_cost).lower(dspec, pspec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="also write the first placement bucket to this exact path "
+        "(Makefile stamp target)",
+    )
+    ap.add_argument("--buckets", type=int, nargs="*", default=list(BUCKETS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "n_params": N_PARAMS,
+        "n_cost_params": N_COST_PARAMS,
+        "plan_k": PLAN_K,
+        "placement_buckets": [],
+    }
+
+    first_text = None
+    for n in args.buckets:
+        text = lower_placement(n)
+        path = os.path.join(args.out_dir, f"placement_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["placement_buckets"].append(n)
+        if first_text is None:
+            first_text = text
+        print(f"wrote {path} ({len(text)} chars)")
+
+    text = lower_plan_cost(PLAN_K)
+    path = os.path.join(args.out_dir, f"plan_cost_{PLAN_K}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(first_text)
+        print(f"wrote {args.out} (stamp)")
+
+
+if __name__ == "__main__":
+    main()

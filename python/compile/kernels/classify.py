@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: fused per-page classification + migration scoring.
+
+This is the vectorized analogue of HyPlacer's SelMo PTE callback (paper
+Sec. 4.4): for every resident page it folds the freshly sampled R/D bits
+into exponentially decayed hotness / write-intensity estimates, classifies
+the page (cold / read-intensive / write-intensive), and emits per-mode
+migration priority scores that the rust Control loop turns into PageFind
+responses via top-k selection.
+
+The kernel is a single fused pass over the page-stats arrays: one HBM->VMEM
+round trip per block, all math elementwise in fp32 on the VPU. Block shape
+is an (8,128)-multiple so the same BlockSpec lowers to TPU tiles untouched;
+on this image it runs under ``interpret=True`` (CPU) — real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Inputs (all f32[N], N a multiple of BLOCK):
+  ref      -- accessed-bit sample for the window (0/1, or a count if the
+              caller accumulated multiple walks)
+  dirty    -- dirty-bit sample for the window (0/1 or count)
+  hot_ewma -- previous hotness EWMA
+  wr_ewma  -- previous write-intensity EWMA
+  tier     -- 0.0 = DRAM, 1.0 = DCPMM
+  valid    -- 1.0 if the slot holds a resident page else 0.0
+  params   -- f32[8] broadcast parameter vector, see PARAM_* below
+
+Outputs (f32[N] each):
+  new_hot       -- updated hotness EWMA
+  new_wr        -- updated write-intensity EWMA
+  page_class    -- 0 cold, 1 read-intensive, 2 write-intensive
+  demote_score  -- DEMOTE priority (DRAM pages; colder => higher)
+  promote_score -- PROMOTE / PROMOTE_INT / SWITCH priority (DCPMM pages;
+                   hotter and more write-dominated => higher)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter-vector layout (kept in sync with rust/src/policies/hyplacer/native.rs
+# and runtime/placement.rs -- change in lockstep).
+PARAM_ALPHA = 0        # EWMA decay factor for the fresh sample
+PARAM_HOT_THRESH = 1   # hotness EWMA above which a page is "intensive"
+PARAM_WR_THRESH = 2    # write EWMA above which an intensive page is write-bound
+PARAM_WR_WEIGHT = 3    # weight of write intensity in promotion scores
+PARAM_COLD_BIAS = 4    # extra demotion priority for never-referenced pages
+PARAM_AGE_WEIGHT = 5   # weight of staleness (1 - hot) in demotion score
+PARAM_RESERVED6 = 6
+PARAM_RESERVED7 = 7
+N_PARAMS = 8
+
+# 512*128 fp32 lanes per block: 6 inputs + 5 outputs = 11 arrays
+# * 64 KiB/array = 0.69 MiB of VMEM per grid step -- far below the
+# 16 MiB budget, leaving room for double buffering.
+BLOCK = 512 * 128
+
+CLASS_COLD = 0.0
+CLASS_READ = 1.0
+CLASS_WRITE = 2.0
+
+
+def _classify_block(
+    ref_ref,
+    dirty_ref,
+    hot_ref,
+    wr_ref,
+    tier_ref,
+    valid_ref,
+    params_ref,
+    new_hot_ref,
+    new_wr_ref,
+    class_ref,
+    demote_ref,
+    promote_ref,
+):
+    """Kernel body: one VMEM-resident block of page stats."""
+    ref = ref_ref[...]
+    dirty = dirty_ref[...]
+    hot = hot_ref[...]
+    wr = wr_ref[...]
+    tier = tier_ref[...]
+    valid = valid_ref[...]
+
+    alpha = params_ref[PARAM_ALPHA]
+    hot_thresh = params_ref[PARAM_HOT_THRESH]
+    wr_thresh = params_ref[PARAM_WR_THRESH]
+    wr_weight = params_ref[PARAM_WR_WEIGHT]
+    cold_bias = params_ref[PARAM_COLD_BIAS]
+    age_weight = params_ref[PARAM_AGE_WEIGHT]
+
+    # A dirty bit implies an access even if the walker raced the R-bit clear.
+    touched = jnp.maximum(ref, dirty)
+
+    # EWMA fold of the fresh window sample (saturate the sample at 1.0 so a
+    # multi-walk accumulation cannot blow past the [0,1] hotness range).
+    new_hot = alpha * jnp.minimum(touched, 1.0) + (1.0 - alpha) * hot
+    new_wr = alpha * jnp.minimum(dirty, 1.0) + (1.0 - alpha) * wr
+
+    is_hot = new_hot > hot_thresh
+    is_write = jnp.logical_and(is_hot, new_wr > wr_thresh)
+    page_class = jnp.where(
+        is_write, CLASS_WRITE, jnp.where(is_hot, CLASS_READ, CLASS_COLD)
+    )
+
+    in_dram = tier < 0.5
+    in_pm = jnp.logical_not(in_dram)
+
+    # DEMOTE: pick the coldest, most read-dominated DRAM pages first.
+    # Staleness dominates; among equally-stale pages prefer read-dominated
+    # victims (Observation 2: keep write-intensive pages in DRAM).
+    never = jnp.logical_and(touched < 0.5, new_hot <= hot_thresh)
+    demote = (
+        age_weight * (1.0 - new_hot)
+        + (1.0 - age_weight) * (1.0 - new_wr)
+        + jnp.where(never, cold_bias, 0.0)
+    )
+    demote_score = jnp.where(jnp.logical_and(in_dram, valid > 0.5), demote, -1.0)
+
+    # PROMOTE family: hotter + more write-dominated DCPMM pages first.
+    promote = new_hot + wr_weight * new_wr
+    promote_score = jnp.where(jnp.logical_and(in_pm, valid > 0.5), promote, -1.0)
+
+    invalid = valid < 0.5
+    new_hot_ref[...] = jnp.where(invalid, 0.0, new_hot)
+    new_wr_ref[...] = jnp.where(invalid, 0.0, new_wr)
+    class_ref[...] = jnp.where(invalid, CLASS_COLD, page_class)
+    demote_ref[...] = demote_score
+    promote_ref[...] = promote_score
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def classify_pages(ref, dirty, hot_ewma, wr_ewma, tier, valid, params, *, block=BLOCK):
+    """Run the fused classification kernel over N pages.
+
+    All array arguments are f32[N] with N a multiple of ``block``;
+    ``params`` is f32[N_PARAMS]. Returns the 5-tuple of outputs described
+    in the module docstring.
+    """
+    n = ref.shape[0]
+    if n % block != 0:
+        raise ValueError(f"page array length {n} not a multiple of block {block}")
+    grid = (n // block,)
+    stats_spec = pl.BlockSpec((block,), lambda i: (i,))
+    param_spec = pl.BlockSpec((N_PARAMS,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 5
+    return pl.pallas_call(
+        _classify_block,
+        grid=grid,
+        in_specs=[stats_spec] * 6 + [param_spec],
+        out_specs=[stats_spec] * 5,
+        out_shape=out_shape,
+        interpret=True,
+    )(ref, dirty, hot_ewma, wr_ewma, tier, valid, params)

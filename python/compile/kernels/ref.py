@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the L1 classification kernel.
+
+Mirrors kernels/classify.py semantics exactly, but with no pallas — plain
+jnp over the whole array. pytest/hypothesis assert allclose between the two
+on swept shapes, dtypes and parameter points; the rust native fallback
+(policies/hyplacer/native.rs) is unit-tested against vectors generated from
+this oracle (see tests/test_golden.py + rust golden tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .classify import (
+    CLASS_COLD,
+    CLASS_READ,
+    CLASS_WRITE,
+    PARAM_AGE_WEIGHT,
+    PARAM_ALPHA,
+    PARAM_COLD_BIAS,
+    PARAM_HOT_THRESH,
+    PARAM_WR_THRESH,
+    PARAM_WR_WEIGHT,
+)
+
+
+def classify_pages_ref(ref, dirty, hot_ewma, wr_ewma, tier, valid, params):
+    """Reference implementation; same signature/returns as classify_pages."""
+    alpha = params[PARAM_ALPHA]
+    hot_thresh = params[PARAM_HOT_THRESH]
+    wr_thresh = params[PARAM_WR_THRESH]
+    wr_weight = params[PARAM_WR_WEIGHT]
+    cold_bias = params[PARAM_COLD_BIAS]
+    age_weight = params[PARAM_AGE_WEIGHT]
+
+    touched = jnp.maximum(ref, dirty)
+    new_hot = alpha * jnp.minimum(touched, 1.0) + (1.0 - alpha) * hot_ewma
+    new_wr = alpha * jnp.minimum(dirty, 1.0) + (1.0 - alpha) * wr_ewma
+
+    is_hot = new_hot > hot_thresh
+    is_write = jnp.logical_and(is_hot, new_wr > wr_thresh)
+    page_class = jnp.where(
+        is_write, CLASS_WRITE, jnp.where(is_hot, CLASS_READ, CLASS_COLD)
+    )
+
+    in_dram = tier < 0.5
+    in_pm = jnp.logical_not(in_dram)
+    never = jnp.logical_and(touched < 0.5, new_hot <= hot_thresh)
+    demote = (
+        age_weight * (1.0 - new_hot)
+        + (1.0 - age_weight) * (1.0 - new_wr)
+        + jnp.where(never, cold_bias, 0.0)
+    )
+    demote_score = jnp.where(jnp.logical_and(in_dram, valid > 0.5), demote, -1.0)
+    promote = new_hot + wr_weight * new_wr
+    promote_score = jnp.where(jnp.logical_and(in_pm, valid > 0.5), promote, -1.0)
+
+    invalid = valid < 0.5
+    return (
+        jnp.where(invalid, 0.0, new_hot),
+        jnp.where(invalid, 0.0, new_wr),
+        jnp.where(invalid, CLASS_COLD, page_class),
+        demote_score,
+        promote_score,
+    )

@@ -1,0 +1,165 @@
+"""L2: HyPlacer's placement decision model as a JAX compute graph.
+
+Two jitted entry points, both AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust Control hot loop via PJRT (python is never on the
+request path):
+
+``placement_step``
+    The per-epoch page pass. Calls the L1 pallas kernel
+    (kernels/classify.py) to fold the sampled R/D bits into hotness /
+    write-intensity EWMAs, classify every page and score migration
+    candidates — then reduces the per-page outputs into the small
+    aggregate vector Control needs for its threshold decisions
+    (per-tier, per-class page counts and intensity sums). Fusing the
+    reduction into the same HLO module saves rust a second pass over
+    the page arrays.
+
+``plan_cost``
+    The decision-lookahead cost model. Given K candidate demand splits
+    (read/write bytes per tier after a hypothetical migration batch),
+    predict each candidate's epoch service time under a simplified
+    DRAM+DCPMM performance surface (read/write-asymmetric bandwidth
+    ceilings + latency floor — the same shape the rust simulator
+    implements in full). Control uses argmin over candidates to size
+    SWITCH/PROMOTE batches.
+
+Aggregate vector layout (f32[N_AGGREGATES]), kept in sync with
+rust/src/runtime/placement.rs:
+  0 dram_valid   1 pm_valid
+  2 dram_cold    3 dram_read   4 dram_write
+  5 pm_cold      6 pm_read     7 pm_write
+  8 dram_hot_sum 9 pm_hot_sum 10 dram_wr_sum 11 pm_wr_sum
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.classify import BLOCK, CLASS_READ, CLASS_WRITE, classify_pages
+
+N_AGGREGATES = 12
+
+# plan_cost tier-parameter vector layout (f32[N_COST_PARAMS]); values are
+# produced by rust from its calibrated MachineConfig (mem/perfmodel.rs).
+COST_DRAM_READ_BW = 0    # bytes/s peak
+COST_DRAM_WRITE_BW = 1
+COST_PM_READ_BW = 2
+COST_PM_WRITE_BW = 3
+COST_DRAM_LAT = 4        # seconds, idle load-to-use
+COST_PM_READ_LAT = 5
+COST_PM_WRITE_LAT = 6
+COST_LINE_BYTES = 7      # access granularity (cache line)
+COST_OVERLAP = 8         # 0..1, cross-tier overlap factor (1 = perfect)
+COST_RESERVED9 = 9
+N_COST_PARAMS = 10
+
+
+def placement_step(ref, dirty, hot_ewma, wr_ewma, tier, valid, params, *, block=BLOCK):
+    """Full per-epoch pass: L1 kernel + aggregate reduction.
+
+    Returns (new_hot, new_wr, page_class, demote_score, promote_score,
+    aggregates) where aggregates is f32[N_AGGREGATES].
+    """
+    new_hot, new_wr, page_class, demote_score, promote_score = classify_pages(
+        ref, dirty, hot_ewma, wr_ewma, tier, valid, params, block=block
+    )
+    ok = valid > 0.5
+    in_dram = jnp.logical_and(ok, tier < 0.5)
+    in_pm = jnp.logical_and(ok, tier >= 0.5)
+    is_read = page_class == CLASS_READ
+    is_write = page_class == CLASS_WRITE
+    is_cold = page_class < 0.5
+
+    def msum(mask, arr=None):
+        a = jnp.ones_like(new_hot) if arr is None else arr
+        return jnp.sum(jnp.where(mask, a, 0.0))
+
+    aggregates = jnp.stack(
+        [
+            msum(in_dram),
+            msum(in_pm),
+            msum(jnp.logical_and(in_dram, is_cold)),
+            msum(jnp.logical_and(in_dram, is_read)),
+            msum(jnp.logical_and(in_dram, is_write)),
+            msum(jnp.logical_and(in_pm, is_cold)),
+            msum(jnp.logical_and(in_pm, is_read)),
+            msum(jnp.logical_and(in_pm, is_write)),
+            msum(in_dram, new_hot),
+            msum(in_pm, new_hot),
+            msum(in_dram, new_wr),
+            msum(in_pm, new_wr),
+        ]
+    )
+    return new_hot, new_wr, page_class, demote_score, promote_score, aggregates
+
+
+def _tier_time(read_bytes, write_bytes, read_bw, write_bw, read_lat, write_lat, line):
+    """Service time for one tier under a read/write byte demand.
+
+    Bandwidth term: reads and writes share the channel, so the effective
+    ceiling is the mix-weighted harmonic combination of the read and
+    write ceilings (this is what collapses DCPMM throughput as the write
+    fraction grows — Observation 2). Latency floor: per-line base cost
+    for demand too sparse to be bandwidth-bound.
+    """
+    eps = 1e-9
+    tiny = 1e-30
+    total = read_bytes + write_bytes
+    rfrac = read_bytes / (total + eps)
+    wfrac = 1.0 - rfrac
+    eff_bw = 1.0 / (rfrac / (read_bw + eps) + wfrac / (write_bw + eps) + tiny)
+    bw_time = total / (eff_bw + eps)
+    lines = total / jnp.maximum(line, 1.0)
+    base_lat = rfrac * read_lat + wfrac * write_lat
+    # ~64 lines in flight per tier (32 HW threads x 2 outstanding misses):
+    # the latency floor only binds when demand is too sparse for the
+    # bandwidth term to matter.
+    lat_time = lines * base_lat / 64.0
+    return jnp.maximum(bw_time, lat_time)
+
+
+def plan_cost(demands, cost_params):
+    """Predict epoch service time for K candidate demand splits.
+
+    demands: f32[K, 4] — (dram_read_bytes, dram_write_bytes,
+                          pm_read_bytes, pm_write_bytes) per candidate.
+    cost_params: f32[N_COST_PARAMS].
+    Returns f32[K] predicted seconds.
+    """
+    line = cost_params[COST_LINE_BYTES]
+    overlap = cost_params[COST_OVERLAP]
+    t_dram = _tier_time(
+        demands[:, 0],
+        demands[:, 1],
+        cost_params[COST_DRAM_READ_BW],
+        cost_params[COST_DRAM_WRITE_BW],
+        cost_params[COST_DRAM_LAT],
+        cost_params[COST_DRAM_LAT],
+        line,
+    )
+    t_pm = _tier_time(
+        demands[:, 2],
+        demands[:, 3],
+        cost_params[COST_PM_READ_BW],
+        cost_params[COST_PM_WRITE_BW],
+        cost_params[COST_PM_READ_LAT],
+        cost_params[COST_PM_WRITE_LAT],
+        line,
+    )
+    # overlap=1: tiers served fully in parallel (max); overlap=0: serial (sum).
+    return overlap * jnp.maximum(t_dram, t_pm) + (1.0 - overlap) * (t_dram + t_pm)
+
+
+def placement_step_fn(n, block=None):
+    """placement_step specialized to n pages (pallas block <= n)."""
+    blk = block or min(BLOCK, n)
+    if n % blk != 0:
+        raise ValueError(f"n={n} not a multiple of block={blk}")
+
+    def fn(ref, dirty, hot_ewma, wr_ewma, tier, valid, params):
+        return placement_step(
+            ref, dirty, hot_ewma, wr_ewma, tier, valid, params, block=blk
+        )
+
+    return fn

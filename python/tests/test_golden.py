@@ -1,0 +1,55 @@
+# Golden-vector bridge between the python oracle and the rust native
+# fallback (rust/src/policies/hyplacer/native.rs).
+#
+# Generates a deterministic input set, runs the pure-jnp oracle, and writes
+# tests/golden/classify_golden.json (if absent). The committed file is then
+# verified against the oracle on every pytest run; the rust unit test
+# `native::tests::golden_matches_python_oracle` loads the same file and
+# asserts its scalar implementation matches to 1e-5.
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels.ref import classify_pages_ref
+from .test_kernel import mk_params, mk_stats
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "classify_golden.json")
+N = 96
+
+
+def build_golden():
+    stats = mk_stats(N, seed=42, bit_density=0.6, valid_density=0.85)
+    params = mk_params(
+        alpha=0.35, hot=0.25, wr=0.4, wr_weight=0.6, cold_bias=0.2, age_weight=0.65
+    )
+    out = classify_pages_ref(*stats, params)
+    names_in = ["ref", "dirty", "hot_ewma", "wr_ewma", "tier", "valid"]
+    names_out = ["new_hot", "new_wr", "page_class", "demote_score", "promote_score"]
+    doc = {
+        "n": N,
+        "params": [float(x) for x in np.asarray(params)],
+        "inputs": {k: [float(x) for x in np.asarray(v)] for k, v in zip(names_in, stats)},
+        "outputs": {k: [float(x) for x in np.asarray(v)] for k, v in zip(names_out, out)},
+    }
+    return doc
+
+
+def test_golden_file_matches_oracle():
+    doc = build_golden()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    if not os.path.exists(GOLDEN_PATH):
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(doc, f, indent=1)
+    with open(GOLDEN_PATH) as f:
+        committed = json.load(f)
+    assert committed["n"] == doc["n"]
+    np.testing.assert_allclose(committed["params"], doc["params"], rtol=1e-6)
+    for k, v in doc["inputs"].items():
+        np.testing.assert_allclose(committed["inputs"][k], v, rtol=1e-6, err_msg=k)
+    for k, v in doc["outputs"].items():
+        np.testing.assert_allclose(
+            committed["outputs"][k], v, rtol=1e-5, atol=1e-6, err_msg=k
+        )

@@ -1,0 +1,231 @@
+# pytest: L1 pallas kernel vs pure-jnp ref — the CORE correctness signal.
+#
+# hypothesis sweeps shapes, block sizes, parameter points and degenerate
+# stat distributions; every case asserts allclose between
+# kernels.classify.classify_pages (pallas, interpret=True) and
+# kernels.ref.classify_pages_ref.
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.classify import (
+    CLASS_COLD,
+    CLASS_READ,
+    CLASS_WRITE,
+    N_PARAMS,
+    PARAM_AGE_WEIGHT,
+    PARAM_ALPHA,
+    PARAM_COLD_BIAS,
+    PARAM_HOT_THRESH,
+    PARAM_WR_THRESH,
+    PARAM_WR_WEIGHT,
+    classify_pages,
+)
+from compile.kernels.ref import classify_pages_ref
+
+
+def mk_params(
+    alpha=0.3, hot=0.2, wr=0.3, wr_weight=0.5, cold_bias=0.25, age_weight=0.7
+):
+    p = np.zeros(N_PARAMS, dtype=np.float32)
+    p[PARAM_ALPHA] = alpha
+    p[PARAM_HOT_THRESH] = hot
+    p[PARAM_WR_THRESH] = wr
+    p[PARAM_WR_WEIGHT] = wr_weight
+    p[PARAM_COLD_BIAS] = cold_bias
+    p[PARAM_AGE_WEIGHT] = age_weight
+    return jnp.asarray(p)
+
+
+def mk_stats(n, seed=0, bit_density=0.5, valid_density=0.9):
+    rng = np.random.default_rng(seed)
+    ref = (rng.random(n) < bit_density).astype(np.float32)
+    dirty = (rng.random(n) < bit_density * 0.5).astype(np.float32)
+    hot = rng.random(n, dtype=np.float32)
+    wr = rng.random(n, dtype=np.float32)
+    tier = (rng.random(n) < 0.5).astype(np.float32)
+    valid = (rng.random(n) < valid_density).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (ref, dirty, hot, wr, tier, valid))
+
+
+def run_both(stats, params, block):
+    out_k = classify_pages(*stats, params, block=block)
+    out_r = classify_pages_ref(*stats, params)
+    return [np.asarray(a) for a in out_k], [np.asarray(a) for a in out_r]
+
+
+def assert_match(out_k, out_r):
+    names = ["new_hot", "new_wr", "class", "demote", "promote"]
+    for name, a, b in zip(names, out_k, out_r):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+@pytest.mark.parametrize("n,block", [(256, 256), (1024, 256), (8192, 1024), (8192, 8192)])
+def test_kernel_matches_ref_shapes(n, block):
+    stats = mk_stats(n, seed=n)
+    out_k, out_r = run_both(stats, mk_params(), block)
+    assert_match(out_k, out_r)
+
+
+def test_kernel_multi_block_equals_single_block():
+    stats = mk_stats(2048, seed=7)
+    multi = classify_pages(*stats, mk_params(), block=256)
+    single = classify_pages(*stats, mk_params(), block=2048)
+    for a, b in zip(multi, single):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-7)
+
+
+def test_rejects_non_multiple_block():
+    stats = mk_stats(100)
+    with pytest.raises(ValueError):
+        classify_pages(*stats, mk_params(), block=64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([128, 256, 512]),
+    alpha=st.floats(0.01, 1.0),
+    hot=st.floats(0.0, 1.0),
+    wr=st.floats(0.0, 1.0),
+    wr_weight=st.floats(0.0, 2.0),
+    cold_bias=st.floats(0.0, 1.0),
+    age_weight=st.floats(0.0, 1.0),
+    bit_density=st.floats(0.0, 1.0),
+    valid_density=st.floats(0.0, 1.0),
+)
+def test_kernel_matches_ref_hypothesis(
+    seed, n_blocks, block, alpha, hot, wr, wr_weight, cold_bias, age_weight,
+    bit_density, valid_density,
+):
+    n = n_blocks * block
+    stats = mk_stats(n, seed=seed, bit_density=bit_density, valid_density=valid_density)
+    params = mk_params(alpha, hot, wr, wr_weight, cold_bias, age_weight)
+    out_k, out_r = run_both(stats, params, block)
+    assert_match(out_k, out_r)
+
+
+# ----- semantic invariants (on the kernel itself) -----
+
+
+def test_invalid_pages_zeroed_and_excluded():
+    n = 256
+    stats = list(mk_stats(n, seed=3))
+    stats[5] = jnp.zeros(n, dtype=jnp.float32)  # all invalid
+    out = classify_pages(*stats, mk_params(), block=n)
+    new_hot, new_wr, cls, demote, promote = [np.asarray(a) for a in out]
+    assert (new_hot == 0).all() and (new_wr == 0).all()
+    assert (cls == CLASS_COLD).all()
+    assert (demote == -1.0).all() and (promote == -1.0).all()
+
+
+def test_class_partition_by_tier_masking():
+    n = 512
+    stats = mk_stats(n, seed=11)
+    out = classify_pages(*stats, mk_params(), block=n)
+    _, _, _, demote, promote = [np.asarray(a) for a in out]
+    tier = np.asarray(stats[4])
+    valid = np.asarray(stats[5])
+    live_dram = (tier < 0.5) & (valid > 0.5)
+    live_pm = (tier >= 0.5) & (valid > 0.5)
+    # demote scores only on live DRAM pages, promote only on live PM pages
+    assert (demote[~live_dram] == -1.0).all()
+    assert (demote[live_dram] >= 0.0).all()
+    assert (promote[~live_pm] == -1.0).all()
+    assert (promote[live_pm] >= 0.0).all()
+
+
+def test_ewma_decay_monotone():
+    """A page never touched again decays toward zero; a page touched every
+    window converges toward one."""
+    n = 128
+    params = mk_params(alpha=0.4)
+    hot = jnp.full((n,), 0.8, dtype=jnp.float32)
+    wr = jnp.zeros(n, dtype=jnp.float32)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    prev = hot
+    for _ in range(6):
+        out = classify_pages(zeros, zeros, prev, wr, zeros, ones,
+                             params, block=n)
+        nxt = out[0]
+        assert float(jnp.max(nxt)) < float(jnp.max(prev))
+        prev = nxt
+    assert float(jnp.max(prev)) < 0.05
+    prev = jnp.zeros(n, dtype=jnp.float32)
+    for _ in range(12):
+        out = classify_pages(ones, zeros, prev, wr, zeros, ones, params, block=n)
+        prev = out[0]
+    assert float(jnp.min(prev)) > 0.95
+
+
+def test_write_pages_require_hotness():
+    """A dirty-but-globally-cold page must not classify as write-intensive."""
+    n = 128
+    params = mk_params(alpha=0.05, hot=0.5)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    out = classify_pages(zeros, ones, zeros, zeros, zeros, ones, params, block=n)
+    cls = np.asarray(out[2])
+    assert (cls == CLASS_COLD).all()
+
+
+def test_hot_write_page_classifies_write():
+    n = 128
+    params = mk_params(alpha=0.5, hot=0.2, wr=0.3)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    hot = jnp.full((n,), 0.9, dtype=jnp.float32)
+    out = classify_pages(ones, ones, hot, hot, jnp.zeros(n, jnp.float32), ones,
+                         params, block=n)
+    assert (np.asarray(out[2]) == CLASS_WRITE).all()
+
+
+def test_hot_readonly_page_classifies_read():
+    n = 128
+    params = mk_params(alpha=0.5, hot=0.2, wr=0.3)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    hot = jnp.full((n,), 0.9, dtype=jnp.float32)
+    out = classify_pages(ones, zeros, hot, zeros, zeros, ones, params, block=n)
+    assert (np.asarray(out[2]) == CLASS_READ).all()
+
+
+def test_demote_prefers_cold_over_hot():
+    """Observation 2: among DRAM pages the coldest, most read-dominated
+    ones must score highest for demotion."""
+    n = 128
+    params = mk_params()
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    hot = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    out = classify_pages(zeros, zeros, hot, zeros, zeros, ones, params, block=n)
+    demote = np.asarray(out[3])
+    assert (np.diff(demote) <= 1e-6).all()  # hotter -> lower demote score
+
+
+def test_promote_prefers_write_intensive():
+    """Among equally hot PM pages, write-dominated ones must score higher
+    for promotion (wr_weight > 0)."""
+    n = 128
+    params = mk_params(wr_weight=0.8)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    hot = jnp.full((n,), 0.6, dtype=jnp.float32)
+    wr = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    out = classify_pages(zeros, zeros, hot, wr, ones, ones, params, block=n)
+    promote = np.asarray(out[4])
+    assert (np.diff(promote) >= -1e-6).all()
+
+
+def test_dirty_implies_touched():
+    """A dirty bit with a racing cleared R bit still counts as an access."""
+    n = 128
+    params = mk_params(alpha=1.0, hot=0.5)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    out = classify_pages(zeros, ones, zeros, zeros, zeros, ones, params, block=n)
+    np.testing.assert_allclose(np.asarray(out[0]), 1.0)

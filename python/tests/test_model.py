@@ -1,0 +1,194 @@
+# pytest: L2 placement model — aggregate reduction + plan_cost surface.
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.classify import CLASS_COLD, CLASS_READ, CLASS_WRITE
+from compile.kernels.ref import classify_pages_ref
+from compile.model import (
+    COST_DRAM_LAT,
+    COST_DRAM_READ_BW,
+    COST_DRAM_WRITE_BW,
+    COST_LINE_BYTES,
+    COST_OVERLAP,
+    COST_PM_READ_BW,
+    COST_PM_READ_LAT,
+    COST_PM_WRITE_BW,
+    COST_PM_WRITE_LAT,
+    N_AGGREGATES,
+    N_COST_PARAMS,
+    placement_step_fn,
+    plan_cost,
+)
+from .test_kernel import mk_params, mk_stats
+
+GB = 1e9
+
+
+def paper_cost_params(overlap=1.0):
+    """Cost params mirroring the paper machine (2 DRAM + 2 DCPMM channels)."""
+    p = np.zeros(N_COST_PARAMS, dtype=np.float32)
+    p[COST_DRAM_READ_BW] = 34 * GB
+    p[COST_DRAM_WRITE_BW] = 28 * GB
+    p[COST_PM_READ_BW] = 13.2 * GB
+    p[COST_PM_WRITE_BW] = 4.6 * GB
+    p[COST_DRAM_LAT] = 81e-9
+    p[COST_PM_READ_LAT] = 169e-9
+    p[COST_PM_WRITE_LAT] = 94e-9
+    p[COST_LINE_BYTES] = 64.0
+    p[COST_OVERLAP] = overlap
+    return jnp.asarray(p)
+
+
+# ----- placement_step aggregates -----
+
+
+def np_aggregates(stats, params):
+    """Independent numpy recomputation of the aggregate vector."""
+    new_hot, new_wr, cls, _, _ = [np.asarray(a) for a in classify_pages_ref(*stats, params)]
+    tier = np.asarray(stats[4])
+    valid = np.asarray(stats[5]) > 0.5
+    dram = valid & (tier < 0.5)
+    pm = valid & (tier >= 0.5)
+    agg = np.array(
+        [
+            dram.sum(),
+            pm.sum(),
+            (dram & (cls == CLASS_COLD)).sum(),
+            (dram & (cls == CLASS_READ)).sum(),
+            (dram & (cls == CLASS_WRITE)).sum(),
+            (pm & (cls == CLASS_COLD)).sum(),
+            (pm & (cls == CLASS_READ)).sum(),
+            (pm & (cls == CLASS_WRITE)).sum(),
+            new_hot[dram].sum(),
+            new_hot[pm].sum(),
+            new_wr[dram].sum(),
+            new_wr[pm].sum(),
+        ],
+        dtype=np.float64,
+    )
+    return agg
+
+
+@pytest.mark.parametrize("n", [256, 2048])
+def test_aggregates_match_numpy(n):
+    stats = mk_stats(n, seed=n + 1)
+    params = mk_params()
+    out = placement_step_fn(n)(*stats, params)
+    agg = np.asarray(out[-1], dtype=np.float64)
+    expected = np_aggregates(stats, params)
+    assert agg.shape == (N_AGGREGATES,)
+    np.testing.assert_allclose(agg, expected, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), valid_density=st.floats(0, 1))
+def test_aggregate_counts_conserve(seed, valid_density):
+    """Class counts per tier must sum to the tier's valid-page count."""
+    n = 512
+    stats = mk_stats(n, seed=seed, valid_density=valid_density)
+    agg = np.asarray(placement_step_fn(n)(*stats, mk_params())[-1])
+    assert agg[2] + agg[3] + agg[4] == pytest.approx(agg[0], abs=0.5)
+    assert agg[5] + agg[6] + agg[7] == pytest.approx(agg[1], abs=0.5)
+    valid = np.asarray(stats[5]) > 0.5
+    assert agg[0] + agg[1] == pytest.approx(valid.sum(), abs=0.5)
+
+
+# ----- plan_cost surface properties -----
+
+
+def demands(dram_r, dram_w, pm_r, pm_w):
+    return jnp.asarray(np.array([[dram_r, dram_w, pm_r, pm_w]], dtype=np.float32))
+
+
+def cost1(dram_r, dram_w, pm_r, pm_w, overlap=1.0):
+    return float(plan_cost(demands(dram_r, dram_w, pm_r, pm_w), paper_cost_params(overlap))[0])
+
+
+def test_dram_faster_than_pm():
+    """The same demand served from DRAM must be predicted cheaper."""
+    assert cost1(10 * GB, 5 * GB, 0, 0) < cost1(0, 0, 10 * GB, 5 * GB)
+
+
+def test_pm_write_asymmetry():
+    """Writes on DCPMM must cost far more than reads (Fig. 2 asymmetry)."""
+    t_reads = cost1(0, 0, 10 * GB, 0)
+    t_writes = cost1(0, 0, 0, 10 * GB)
+    assert t_writes > 2.0 * t_reads
+
+
+def test_dram_mild_asymmetry():
+    t_reads = cost1(10 * GB, 0, 0, 0)
+    t_writes = cost1(0, 10 * GB, 0, 0)
+    assert t_writes > t_reads
+    assert t_writes < 1.5 * t_reads
+
+
+def test_overlap_bounds():
+    """Parallel (overlap=1) <= any mix <= serial (overlap=0)."""
+    a = (6 * GB, 2 * GB, 4 * GB, 1 * GB)
+    t_par = cost1(*a, overlap=1.0)
+    t_half = cost1(*a, overlap=0.5)
+    t_ser = cost1(*a, overlap=0.0)
+    assert t_par <= t_half <= t_ser
+    assert t_ser == pytest.approx(
+        cost1(a[0], a[1], 0, 0) + cost1(0, 0, a[2], a[3]), rel=1e-4
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dr=st.floats(0, 50 * GB),
+    dw=st.floats(0, 50 * GB),
+    pr=st.floats(0, 50 * GB),
+    pw=st.floats(0, 50 * GB),
+    extra=st.floats(1e6, 20 * GB),
+)
+def test_cost_monotone_in_demand(dr, dw, pr, pw, extra):
+    """Adding bytes anywhere never reduces predicted time."""
+    base = cost1(dr, dw, pr, pw)
+    assert cost1(dr + extra, dw, pr, pw) >= base - 1e-9
+    assert cost1(dr, dw + extra, pr, pw) >= base - 1e-9
+    assert cost1(dr, dw, pr + extra, pw) >= base - 1e-9
+    assert cost1(dr, dw, pr, pw + extra) >= base - 1e-9
+
+
+def test_cost_batched_matches_single():
+    rows = np.array(
+        [
+            [10 * GB, 1 * GB, 2 * GB, 0.5 * GB],
+            [0, 0, 30 * GB, 0],
+            [5 * GB, 5 * GB, 5 * GB, 5 * GB],
+        ],
+        dtype=np.float32,
+    )
+    batched = np.asarray(plan_cost(jnp.asarray(rows), paper_cost_params()))
+    for i, row in enumerate(rows):
+        single = cost1(*row)
+        assert batched[i] == pytest.approx(single, rel=1e-5)
+
+
+def test_zero_demand_zero_cost():
+    assert cost1(0, 0, 0, 0) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_fill_dram_first_is_optimal_for_moderate_demand():
+    """Moving a read-dominated slice of demand from PM to free DRAM must
+    reduce predicted time — the geometry behind Observation 1."""
+    before = cost1(0, 0, 20 * GB, 0)
+    after = cost1(15 * GB, 0, 5 * GB, 0)
+    assert after < before
+
+
+def test_bandwidth_balance_gain_is_modest():
+    """Observation 3: even all-reads, the parallel-tier gain over all-DRAM
+    is bounded (DCPMM adds much less than nominal peak suggests)."""
+    all_dram = cost1(60 * GB, 0, 0, 0)
+    best = min(
+        cost1((60 - s) * GB, 0, s * GB, 0) for s in range(0, 31, 2)
+    )
+    gain = all_dram / best
+    assert 1.0 <= gain < 1.5

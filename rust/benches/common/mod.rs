@@ -1,0 +1,18 @@
+//! Minimal bench harness (criterion is not available offline): warmup +
+//! N timed iterations, reporting min/mean like `cargo bench` output.
+
+use std::time::Instant;
+
+pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!("bench {name:<40} min {:>10.3} ms   mean {:>10.3} ms", min * 1e3, mean * 1e3);
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig2` — regenerate paper Fig. 2 and time the
+//! characterization sweep.
+mod common;
+
+use hyplacer::bench_harness::fig2;
+use hyplacer::config::MachineConfig;
+
+fn main() {
+    let machine = MachineConfig::paper_machine();
+    let rep = fig2::report(&machine);
+    println!("{}", rep.render());
+    common::bench("fig2/sweep", 20, || {
+        let pts = fig2::sweep(&machine);
+        assert!(!pts.is_empty());
+    });
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig3` — regenerate paper Fig. 3 and time the
+//! closed-loop interleave-ratio sweep.
+mod common;
+
+use hyplacer::bench_harness::fig3;
+
+fn main() {
+    let rep = fig3::report();
+    println!("{}", rep.render());
+    common::bench("fig3/sweep", 10, || {
+        let cells = fig3::sweep();
+        assert!(!cells.is_empty());
+    });
+}

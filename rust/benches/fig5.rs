@@ -1,0 +1,25 @@
+//! `cargo bench --bench fig5` — regenerate paper Fig. 5 (full evaluation
+//! matrix, M+L) and report per-run simulation throughput.
+mod common;
+
+use hyplacer::bench_harness::{fig5, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts::default();
+    let t0 = std::time::Instant::now();
+    let (rep, matrix) = fig5::fig5_report(&opts);
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!("{}", rep.render());
+    let runs = matrix.runs.len();
+    println!(
+        "matrix: {} runs x {} epochs in {:.1}s ({:.2} s/run)",
+        runs,
+        opts.epochs,
+        elapsed,
+        elapsed / runs as f64
+    );
+    common::bench("fig5/one-cg-l-run", 3, || {
+        let m = fig5::run_matrix(&["L"], &BenchOpts { epochs: 30, ..BenchOpts::quick() });
+        assert!(!m.runs.is_empty());
+    });
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig6` — regenerate paper Fig. 6 (energy gains;
+//! reuses the Fig. 5 matrix runs).
+use hyplacer::bench_harness::{fig5, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts::default();
+    let (_, matrix) = fig5::fig5_report(&opts);
+    let rep = fig5::fig6_report(&matrix);
+    println!("{}", rep.render());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig7` — regenerate paper Fig. 7 (small-data-set
+//! overhead study).
+use hyplacer::bench_harness::{fig5, BenchOpts};
+
+fn main() {
+    let (rep, _) = fig5::fig7_report(&BenchOpts::default());
+    println!("{}", rep.render());
+}

@@ -1,0 +1,94 @@
+//! `cargo bench --bench hotpath` — the §Perf instrument: times every
+//! stage of HyPlacer's per-epoch decision path at realistic page counts,
+//! for both the native and the AOT/PJRT classifier, plus the simulator's
+//! end-to-end epoch step rate.
+mod common;
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier};
+use hyplacer::coordinator::Simulation;
+use hyplacer::policies::hyplacer::classifier::{Classifier, NativeClassifier};
+use hyplacer::policies::hyplacer::native::PageStats;
+use hyplacer::policies::hyplacer::selmo::SelMo;
+use hyplacer::runtime::default_artifacts_dir;
+use hyplacer::runtime::placement::AotClassifier;
+use hyplacer::util::{top_k_indices, Rng64};
+use hyplacer::vm::PageTable;
+use hyplacer::{policies, workloads};
+
+fn stats_for(n: usize, seed: u64) -> PageStats {
+    let mut rng = Rng64::new(seed);
+    let mut s = PageStats::with_len(n);
+    for i in 0..n {
+        s.refd[i] = if rng.chance(0.4) { 1.0 } else { 0.0 };
+        s.dirty[i] = if rng.chance(0.15) { 1.0 } else { 0.0 };
+        s.hot_ewma[i] = rng.next_f64() as f32;
+        s.wr_ewma[i] = rng.next_f64() as f32;
+        s.tier[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        s.valid[i] = 1.0;
+    }
+    s
+}
+
+fn main() {
+    let params: [f32; 8] = [0.35, 0.25, 0.4, 0.6, 0.2, 0.65, 0.0, 0.0];
+
+    // --- classifier: native vs AOT at the evaluation's page counts ---
+    for n in [8192usize, 65536, 262144] {
+        let stats = stats_for(n, n as u64);
+        let mut native = NativeClassifier;
+        common::bench(&format!("classify/native/{n}"), 20, || {
+            let out = native.classify(&stats, &params).unwrap();
+            assert_eq!(out.new_hot.len(), n);
+        });
+    }
+    match AotClassifier::new(default_artifacts_dir()) {
+        Ok(mut aot) => {
+            for n in [8192usize, 65536, 262144] {
+                let stats = stats_for(n, n as u64);
+                common::bench(&format!("classify/aot-pjrt/{n}"), 10, || {
+                    let out = aot.classify(&stats, &params).unwrap();
+                    assert_eq!(out.new_hot.len(), n);
+                });
+            }
+        }
+        Err(e) => println!("(AOT classifier unavailable: {e:#})"),
+    }
+
+    // --- SelMo page-table walk ---
+    let cfg = MachineConfig::paper_machine();
+    let n = 76800u32; // CG-L footprint in 2 MiB pages
+    let mut pt = PageTable::new(n, cfg.page_bytes, cfg.dram.capacity, cfg.pm.capacity);
+    for p in 0..n {
+        let t = if p < 16384 { Tier::Dram } else { Tier::Pm };
+        pt.allocate(p, t);
+        if p % 3 == 0 {
+            pt.touch(p, p % 6 == 0);
+        }
+    }
+    let mut selmo = SelMo::new(0.25);
+    let mut stats = PageStats::with_len(n as usize);
+    common::bench("selmo/gather_stats/76800", 50, || {
+        selmo.gather_stats(&mut pt, &mut stats);
+    });
+
+    // --- top-k selection ---
+    let scores: Vec<f32> = {
+        let mut rng = Rng64::new(7);
+        (0..n).map(|_| if rng.chance(0.3) { -1.0 } else { rng.next_f64() as f32 }).collect()
+    };
+    common::bench("topk/256-of-76800", 100, || {
+        let v = top_k_indices(&scores, 256, 0.0);
+        assert_eq!(v.len(), 256);
+    });
+
+    // --- whole epoch step (simulator + policy + memory model) ---
+    let mut sim_cfg = SimConfig::default();
+    sim_cfg.epochs = 1;
+    let hp = HyPlacerConfig::default();
+    let w = workloads::by_name("cg-L", cfg.page_bytes, sim_cfg.epoch_secs).unwrap();
+    let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+    let mut sim = Simulation::new(cfg.clone(), sim_cfg, w, p, 0.05);
+    common::bench("simulation/epoch_step/cg-L", 50, || {
+        sim.step();
+    });
+}

@@ -1,0 +1,229 @@
+//! Fig. 2 — "Latency and bandwidth for DRAM and DCPMM, for different
+//! read/write intensities and memory access demands."
+//!
+//! The MLC-style open-loop characterization: each (tier, R/W mix) pair is
+//! swept over offered demand; the model reports achieved bandwidth and
+//! loaded read latency. The paper's headline shape checks:
+//!   * DCPMM mixes diverge from each other past ~20 GB/s demand,
+//!   * DRAM mixes stay overlapped until far higher demand,
+//!   * worst-case DCPMM:DRAM latency ratio ≈ 11.3x,
+//!   * all-reads peak bandwidth ratio ≈ 2x.
+
+use crate::config::{MachineConfig, Tier, GB};
+use crate::mem::PerfModel;
+use crate::report::Table;
+use crate::workloads::mlc::Mlc;
+
+use super::Report;
+
+/// One measured point of the characterization grid.
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub tier: Tier,
+    pub write_frac: f64,
+    pub offered_bw: f64,
+    pub achieved_bw: f64,
+    pub latency_ns: f64,
+}
+
+/// Run the sweep and return all points.
+pub fn sweep(cfg: &MachineConfig) -> Vec<Point> {
+    let model = PerfModel::new(cfg);
+    let mut out = Vec::new();
+    for tier in [Tier::Dram, Tier::Pm] {
+        for (_, wf) in Mlc::paper_write_fracs() {
+            for offered in Mlc::demand_sweep() {
+                let (achieved, lat) = model.characterize(tier, offered, wf, 0.0);
+                out.push(Point {
+                    tier,
+                    write_frac: wf,
+                    offered_bw: offered,
+                    achieved_bw: achieved,
+                    latency_ns: lat,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Headline ratios extracted from the sweep (the figure's annotations).
+pub struct Headlines {
+    /// max loaded-DCPMM vs lightly-loaded-DRAM read latency ratio.
+    pub latency_ratio: f64,
+    /// all-reads peak bandwidth ratio DRAM/DCPMM.
+    pub bandwidth_ratio: f64,
+    /// offered demand (B/s) where DCPMM mixes first diverge by >10%.
+    pub pm_divergence_bw: f64,
+    /// same for DRAM (f64::INFINITY if never within the sweep).
+    pub dram_divergence_bw: f64,
+}
+
+pub fn headlines(points: &[Point]) -> Headlines {
+    let max_lat = |tier: Tier| {
+        points
+            .iter()
+            .filter(|p| p.tier == tier)
+            .map(|p| p.latency_ns)
+            .fold(0.0f64, f64::max)
+    };
+    let dram_light = points
+        .iter()
+        .filter(|p| p.tier == Tier::Dram && p.offered_bw <= 8.0 * GB && p.write_frac == 0.0)
+        .map(|p| p.latency_ns)
+        .fold(f64::INFINITY, f64::min);
+    let peak_bw = |tier: Tier| {
+        points
+            .iter()
+            .filter(|p| p.tier == tier && p.write_frac == 0.0)
+            .map(|p| p.achieved_bw)
+            .fold(0.0f64, f64::max)
+    };
+    let divergence = |tier: Tier| {
+        for offered in Mlc::demand_sweep() {
+            let at: Vec<f64> = points
+                .iter()
+                .filter(|p| p.tier == tier && p.offered_bw == offered)
+                .map(|p| p.achieved_bw)
+                .collect();
+            let lo = at.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = at.iter().cloned().fold(0.0f64, f64::max);
+            if hi > 0.0 && (hi - lo) / hi > 0.10 {
+                return offered;
+            }
+        }
+        f64::INFINITY
+    };
+    Headlines {
+        latency_ratio: max_lat(Tier::Pm) / dram_light,
+        bandwidth_ratio: peak_bw(Tier::Dram) / peak_bw(Tier::Pm),
+        pm_divergence_bw: divergence(Tier::Pm),
+        dram_divergence_bw: divergence(Tier::Dram),
+    }
+}
+
+pub fn report(cfg: &MachineConfig) -> Report {
+    let points = sweep(cfg);
+    let mut rep = Report::new("fig2", "DRAM vs DCPMM latency/bandwidth response surfaces");
+    let mut t = Table::new(vec![
+        "tier",
+        "rw_mix",
+        "offered_GBs",
+        "achieved_GBs",
+        "read_latency_ns",
+    ]);
+    for p in &points {
+        let mix = Mlc::paper_write_fracs()
+            .iter()
+            .find(|(_, wf)| (*wf - p.write_frac).abs() < 1e-9)
+            .map(|(n, _)| *n)
+            .unwrap_or("?");
+        t.row(vec![
+            p.tier.name().to_string(),
+            mix.to_string(),
+            format!("{:.1}", p.offered_bw / GB),
+            format!("{:.2}", p.achieved_bw / GB),
+            format!("{:.0}", p.latency_ns),
+        ]);
+    }
+    rep.tables.push(("points".to_string(), t));
+
+    let h = headlines(&points);
+    let mut ht = Table::new(vec!["metric", "paper", "measured"]);
+    ht.row(vec![
+        "max DCPMM/DRAM read-latency ratio".to_string(),
+        "11.3x".to_string(),
+        format!("{:.1}x", h.latency_ratio),
+    ]);
+    ht.row(vec![
+        "all-reads peak-bandwidth ratio".to_string(),
+        "2x".to_string(),
+        format!("{:.2}x", h.bandwidth_ratio),
+    ]);
+    ht.row(vec![
+        "DCPMM mix divergence point".to_string(),
+        "~20 GB/s".to_string(),
+        format!("{:.0} GB/s", h.pm_divergence_bw / GB),
+    ]);
+    ht.row(vec![
+        "DRAM mix divergence point".to_string(),
+        ">60 GB/s".to_string(),
+        if h.dram_divergence_bw.is_finite() {
+            format!("{:.0} GB/s", h.dram_divergence_bw / GB)
+        } else {
+            "none in sweep".to_string()
+        },
+    ]);
+    rep.tables.push(("headlines".to_string(), ht));
+    rep.notes.push("Observation 1/2 geometry: see DESIGN.md §5 (Fig. 2 row)".to_string());
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::paper_machine()
+    }
+
+    #[test]
+    fn headline_latency_ratio_near_paper() {
+        let h = headlines(&sweep(&cfg()));
+        assert!(
+            h.latency_ratio > 8.0 && h.latency_ratio < 16.0,
+            "latency ratio {:.1}",
+            h.latency_ratio
+        );
+    }
+
+    #[test]
+    fn headline_bandwidth_ratio_near_2x() {
+        let h = headlines(&sweep(&cfg()));
+        assert!(
+            h.bandwidth_ratio > 1.6 && h.bandwidth_ratio < 3.2,
+            "bw ratio {:.2}",
+            h.bandwidth_ratio
+        );
+    }
+
+    #[test]
+    fn pm_diverges_before_dram() {
+        let h = headlines(&sweep(&cfg()));
+        assert!(h.pm_divergence_bw < 30.0 * GB, "{:.0}", h.pm_divergence_bw / GB);
+        assert!(
+            h.dram_divergence_bw > 2.0 * h.pm_divergence_bw,
+            "DRAM diverges at {:.0} vs PM {:.0}",
+            h.dram_divergence_bw / GB,
+            h.pm_divergence_bw / GB
+        );
+    }
+
+    #[test]
+    fn write_heavier_mixes_never_faster() {
+        let points = sweep(&cfg());
+        for tier in [Tier::Dram, Tier::Pm] {
+            for offered in Mlc::demand_sweep() {
+                let series: Vec<&Point> = points
+                    .iter()
+                    .filter(|p| p.tier == tier && p.offered_bw == offered)
+                    .collect();
+                for w in series.windows(2) {
+                    assert!(
+                        w[1].achieved_bw <= w[0].achieved_bw + 1.0,
+                        "{tier:?} at {offered}: more writes increased bandwidth"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = report(&cfg());
+        let s = rep.render();
+        assert!(s.contains("fig2"));
+        assert!(s.contains("DCPMM"));
+        assert_eq!(rep.tables.len(), 2);
+    }
+}

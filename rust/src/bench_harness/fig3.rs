@@ -1,0 +1,192 @@
+//! Fig. 3 — "Effective bandwidth gains achievable by an ideal
+//! *bandwidth balance* with read-only workloads of varying memory access
+//! demand levels, under different memory module configurations."
+//!
+//! For channel splits 3:3, 2:4, 1:5 and rising thread counts, sweep the
+//! weighted-interleave ratio (100% DRAM, 95%, … 50%) through the
+//! closed-loop throughput model and keep the ratio maximizing
+//! throughput. The paper's shape checks:
+//!   * below ~8–12 threads the best configuration is 100% DRAM
+//!     (DCPMM's higher latency makes any split a loss before DRAM
+//!     bandwidth saturates),
+//!   * even at 32 threads the ideal gain is modest (≤ ~1.13x).
+
+use crate::config::MachineConfig;
+use crate::mem::PerfModel;
+use crate::report::Table;
+
+use super::Report;
+
+pub const THREAD_SWEEP: [u32; 8] = [1, 2, 4, 8, 12, 16, 24, 32];
+pub const SPLITS: [(u32, u32); 3] = [(3, 3), (2, 4), (1, 5)];
+
+/// Result for one (split, threads) cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub dram_ch: u32,
+    pub pm_ch: u32,
+    pub threads: u32,
+    /// best DRAM share of pages/traffic (1.0 = all DRAM).
+    pub best_ratio: f64,
+    /// throughput(best) / throughput(all-DRAM) — "effective bandwidth gain".
+    pub gain: f64,
+    /// absolute throughput at the best ratio, B/s.
+    pub best_tp: f64,
+}
+
+pub fn sweep() -> Vec<Cell> {
+    let mut out = Vec::new();
+    for (dram_ch, pm_ch) in SPLITS {
+        let cfg = MachineConfig::channel_split(dram_ch, pm_ch);
+        let model = PerfModel::new(&cfg);
+        for threads in THREAD_SWEEP {
+            let all_dram = model.closed_loop_throughput(threads, 0.0, 0.0, 1.0);
+            let mut best_ratio = 1.0;
+            let mut best_tp = all_dram;
+            let mut share = 0.95;
+            while share >= 0.499 {
+                let tp = model.closed_loop_throughput(threads, 0.0, 0.0, share);
+                if tp > best_tp * 1.0005 {
+                    best_tp = tp;
+                    best_ratio = share;
+                }
+                share -= 0.05;
+            }
+            out.push(Cell {
+                dram_ch,
+                pm_ch,
+                threads,
+                best_ratio,
+                gain: best_tp / all_dram,
+                best_tp,
+            });
+        }
+    }
+    out
+}
+
+pub fn report() -> Report {
+    let cells = sweep();
+    let mut rep = Report::new("fig3", "Ideal bandwidth-balance gains vs thread count");
+    let mut t = Table::new(vec!["config", "threads", "best_dram_share", "best_GBs", "gain"]);
+    for c in &cells {
+        t.row(vec![
+            format!("{}:{}", c.dram_ch, c.pm_ch),
+            c.threads.to_string(),
+            format!("{:.0}%", c.best_ratio * 100.0),
+            format!("{:.1}", c.best_tp / 1e9),
+            format!("{:.3}x", c.gain),
+        ]);
+    }
+    rep.tables.push(("gains".to_string(), t));
+    let max_gain = cells.iter().map(|c| c.gain).fold(0.0f64, f64::max);
+    rep.notes.push(format!(
+        "max ideal gain {:.3}x (paper: at most 1.13x) — Observation 3",
+        max_gain
+    ));
+    let break_even: Vec<String> = SPLITS
+        .iter()
+        .map(|&(d, p)| {
+            let first = cells
+                .iter()
+                .filter(|c| c.dram_ch == d && c.pm_ch == p && c.gain > 1.005)
+                .map(|c| c.threads)
+                .min();
+            format!(
+                "{d}:{p} break-even at {}",
+                first.map(|t| t.to_string()).unwrap_or_else(|| "none".into())
+            )
+        })
+        .collect();
+    rep.notes.push(format!(
+        "{} (paper: all-DRAM best up to 8 threads for 2:4/1:5, 12 for 3:3)",
+        break_even.join(", ")
+    ));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cells() -> &'static [Cell] {
+        use std::sync::OnceLock;
+        static C: OnceLock<Vec<Cell>> = OnceLock::new();
+        C.get_or_init(sweep)
+    }
+
+    #[test]
+    fn low_thread_counts_prefer_all_dram() {
+        for c in cells() {
+            if c.threads <= 4 {
+                assert!(
+                    (c.best_ratio - 1.0).abs() < 1e-9,
+                    "{}:{} at {} threads best {}",
+                    c.dram_ch,
+                    c.pm_ch,
+                    c.threads,
+                    c.best_ratio
+                );
+                assert!((c.gain - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn high_demand_gains_exist_but_modest() {
+        let max_gain = cells().iter().map(|c| c.gain).fold(0.0f64, f64::max);
+        assert!(max_gain > 1.02, "bandwidth balance never helps: {max_gain}");
+        assert!(max_gain < 1.5, "gain {max_gain} too optimistic vs paper's 1.13x");
+    }
+
+    #[test]
+    fn break_even_at_medium_thread_counts() {
+        for (d, p) in SPLITS {
+            let first = cells()
+                .iter()
+                .filter(|c| c.dram_ch == d && c.pm_ch == p && c.gain > 1.005)
+                .map(|c| c.threads)
+                .min();
+            if let Some(first) = first {
+                assert!(first >= 8, "{d}:{p} breaks even at {first} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn dram_starved_configs_balance_earlier() {
+        // 1:5 saturates its single DRAM channel first, so its break-even
+        // thread count must be <= 3:3's
+        let first_gain = |d: u32, p: u32| {
+            cells()
+                .iter()
+                .filter(|c| c.dram_ch == d && c.pm_ch == p && c.gain > 1.005)
+                .map(|c| c.threads)
+                .min()
+                .unwrap_or(u32::MAX)
+        };
+        assert!(first_gain(1, 5) <= first_gain(3, 3));
+    }
+
+    #[test]
+    fn gain_monotone_with_demand_once_started() {
+        // after break-even, more threads never reduce the ideal gain much
+        for (d, p) in SPLITS {
+            let series: Vec<f64> = cells()
+                .iter()
+                .filter(|c| c.dram_ch == d && c.pm_ch == p)
+                .map(|c| c.gain)
+                .collect();
+            for w in series.windows(2) {
+                assert!(w[1] >= w[0] - 0.1, "{d}:{p} gain dropped: {series:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = report();
+        assert!(rep.render().contains("fig3"));
+        assert_eq!(rep.tables.len(), 1);
+    }
+}

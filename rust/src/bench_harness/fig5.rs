@@ -1,0 +1,241 @@
+//! Figs. 5–7 — the evaluation matrix.
+//!
+//! Fig. 5: throughput speedup vs ADM-default for BT/FT/MG/CG x {M, L}
+//!         across {MemM, autonuma, memos, nimble, HyPlacer} + geomean.
+//! Fig. 6: per-access memory-energy gain vs ADM-default, same matrix.
+//! Fig. 7: the same speedup matrix on S data sets (fit in DRAM) — the
+//!         worst case where only overheads show.
+//!
+//! One matrix run serves all three figures (the paper's runs do too).
+
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::coordinator::{run_pair, SimResult};
+use crate::policies::{self, FIG5_POLICIES};
+use crate::report::Table;
+use crate::util::geomean;
+use crate::workloads::{self, NPB_NAMES};
+
+use super::{BenchOpts, Report};
+
+/// All runs for one size class, keyed (workload, policy).
+pub struct Matrix {
+    pub sizes: Vec<&'static str>,
+    pub runs: Vec<SimResult>,
+}
+
+impl Matrix {
+    pub fn get(&self, workload: &str, policy: &str) -> Option<&SimResult> {
+        self.runs
+            .iter()
+            .find(|r| r.workload == workload && r.policy == policy)
+    }
+
+    pub fn speedup(&self, workload: &str, policy: &str) -> Option<f64> {
+        let base = self.get(workload, "adm-default")?;
+        Some(self.get(workload, policy)?.steady_speedup_vs(base))
+    }
+
+    pub fn energy_gain(&self, workload: &str, policy: &str) -> Option<f64> {
+        let base = self.get(workload, "adm-default")?;
+        Some(self.get(workload, policy)?.energy_gain_vs(base))
+    }
+
+    pub fn workload_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for base in NPB_NAMES {
+            for size in &self.sizes {
+                let n = format!("{base}-{size}");
+                if self.runs.iter().any(|r| r.workload == n) {
+                    names.push(n);
+                }
+            }
+        }
+        names
+    }
+
+    /// Geomean speedup of a policy over all workloads in the matrix.
+    pub fn geomean_speedup(&self, policy: &str) -> f64 {
+        let vals: Vec<f64> = self
+            .workload_names()
+            .iter()
+            .filter_map(|w| self.speedup(w, policy))
+            .collect();
+        geomean(&vals)
+    }
+}
+
+/// Run the evaluation matrix for the given size classes.
+pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = opts.epochs;
+    sim.seed = opts.seed;
+    // steady state: skip the convergence transient (paper runs last
+    // minutes-to-hours; placement converges in the first seconds)
+    sim.warmup_epochs = (opts.epochs / 3).max(2);
+    let mut hp = HyPlacerConfig::default();
+    hp.use_aot = opts.use_aot;
+
+    let mut runs = Vec::new();
+    for base in NPB_NAMES {
+        for size in sizes {
+            let wname = format!("{base}-{size}");
+            for pname in FIG5_POLICIES {
+                let w = workloads::by_name(&wname, cfg.page_bytes, sim.epoch_secs)
+                    .unwrap_or_else(|| panic!("workload {wname}"));
+                let mut p = policies::by_name(pname, &cfg, &hp)
+                    .unwrap_or_else(|| panic!("policy {pname}"));
+                if pname == "hyplacer" && opts.use_aot {
+                    p = build_aot_hyplacer(&cfg, &hp).unwrap_or(p);
+                }
+                runs.push(run_pair(&cfg, &sim, w, p, opts.window_frac));
+            }
+        }
+    }
+    Matrix { sizes: sizes.to_vec(), runs }
+}
+
+/// HyPlacer with the AOT/PJRT classifier (falls back to native if the
+/// artifacts are missing).
+fn build_aot_hyplacer(
+    cfg: &MachineConfig,
+    hp: &HyPlacerConfig,
+) -> Option<Box<dyn policies::Policy>> {
+    let dir = if hp.artifacts_dir == "artifacts" {
+        crate::runtime::default_artifacts_dir()
+    } else {
+        std::path::PathBuf::from(&hp.artifacts_dir)
+    };
+    match crate::runtime::placement::AotClassifier::new(dir) {
+        Ok(c) => Some(Box::new(
+            policies::hyplacer::HyPlacer::new(cfg, hp.clone()).with_classifier(Box::new(c)),
+        )),
+        Err(e) => {
+            eprintln!("AOT classifier unavailable ({e:#}); using native");
+            None
+        }
+    }
+}
+
+fn matrix_table(m: &Matrix, metric: &str) -> Table {
+    let mut headers = vec!["policy".to_string()];
+    headers.extend(m.workload_names());
+    headers.push("geomean".to_string());
+    let mut t = Table::new(headers);
+    for pname in FIG5_POLICIES.iter().skip(1) {
+        let mut row = vec![pname.to_string()];
+        let mut vals = Vec::new();
+        for w in m.workload_names() {
+            let v = match metric {
+                "speedup" => m.speedup(&w, pname),
+                "energy" => m.energy_gain(&w, pname),
+                _ => unreachable!(),
+            }
+            .unwrap_or(f64::NAN);
+            vals.push(v);
+            row.push(format!("{v:.2}x"));
+        }
+        row.push(format!("{:.2}x", geomean(&vals)));
+        t.row(row);
+    }
+    t
+}
+
+pub fn fig5_report(opts: &BenchOpts) -> (Report, Matrix) {
+    let m = run_matrix(&["M", "L"], opts);
+    let mut rep = Report::new("fig5", "Throughput speedup vs ADM-default (M and L data sets)");
+    rep.tables.push(("speedup".to_string(), matrix_table(&m, "speedup")));
+    rep.notes.push(format!(
+        "HyPlacer geomean {:.2}x (paper: 4.6x avg on large-footprint)",
+        m.geomean_speedup("hyplacer")
+    ));
+    let cg_l = m.speedup("CG-L", "hyplacer").unwrap_or(f64::NAN);
+    rep.notes.push(format!("HyPlacer on CG-L: {cg_l:.1}x (paper: up to 11x)"));
+    (rep, m)
+}
+
+pub fn fig6_report(matrix: &Matrix) -> Report {
+    let mut rep =
+        Report::new("fig6", "Per-access memory energy gain vs ADM-default (higher = better)");
+    rep.tables.push(("energy_gain".to_string(), matrix_table(matrix, "energy")));
+    rep.notes
+        .push("trend check: energy gains track Fig. 5 throughput speedups".to_string());
+    rep
+}
+
+pub fn fig7_report(opts: &BenchOpts) -> (Report, Matrix) {
+    let m = run_matrix(&["S"], opts);
+    let mut rep =
+        Report::new("fig7", "Small data sets (fit in DRAM): overheads vs ADM-default");
+    rep.tables.push(("speedup".to_string(), matrix_table(&m, "speedup")));
+    rep.notes.push(
+        "expected shape: all policies ~1.0x; dips = pure management overhead (paper §5.3)"
+            .to_string(),
+    );
+    (rep, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One shared quick matrix for all shape tests (runs are the slow part).
+    fn quick_ml() -> &'static Matrix {
+        use std::sync::OnceLock;
+        static M: OnceLock<Matrix> = OnceLock::new();
+        M.get_or_init(|| run_matrix(&["M", "L"], &BenchOpts::quick()))
+    }
+
+    #[test]
+    fn hyplacer_wins_on_average() {
+        let m = quick_ml();
+        let hyp = m.geomean_speedup("hyplacer");
+        for other in ["memm", "autonuma", "memos", "nimble"] {
+            let o = m.geomean_speedup(other);
+            assert!(hyp > o, "hyplacer {hyp:.2} vs {other} {o:.2}");
+        }
+        assert!(hyp > 1.25, "hyplacer geomean {hyp:.2} too low");
+    }
+
+    #[test]
+    fn cg_l_is_the_headline_case() {
+        let m = quick_ml();
+        let cg = m.speedup("CG-L", "hyplacer").unwrap();
+        assert!(cg > 2.0, "CG-L speedup {cg:.2}");
+        // CG-L is among HyPlacer's best cases
+        let avg = m.geomean_speedup("hyplacer");
+        assert!(cg >= avg, "CG-L {cg:.2} below geomean {avg:.2}");
+    }
+
+    #[test]
+    fn nimble_at_par_or_worse_than_baseline() {
+        let m = quick_ml();
+        let g = m.geomean_speedup("nimble");
+        assert!(g < 1.3, "nimble geomean {g:.2} should be near/below baseline");
+    }
+
+    #[test]
+    fn memos_underperforms_other_dynamic_policies() {
+        let m = quick_ml();
+        assert!(m.geomean_speedup("memos") < m.geomean_speedup("hyplacer"));
+        assert!(m.geomean_speedup("memos") < m.geomean_speedup("memm"));
+    }
+
+    #[test]
+    fn energy_gains_track_speedups() {
+        let m = quick_ml();
+        // direction agreement on the headline case
+        let s = m.speedup("CG-L", "hyplacer").unwrap();
+        let e = m.energy_gain("CG-L", "hyplacer").unwrap();
+        assert!(s > 1.0 && e > 1.0, "speedup {s:.2} energy {e:.2}");
+    }
+
+    #[test]
+    fn small_sets_are_overhead_only() {
+        let m = run_matrix(&["S"], &BenchOpts::quick());
+        for w in m.workload_names() {
+            let s = m.speedup(&w, "hyplacer").unwrap();
+            assert!(s > 0.7 && s < 1.3, "{w}: hyplacer small-set {s:.2}x");
+        }
+    }
+}

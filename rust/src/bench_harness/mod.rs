@@ -1,0 +1,83 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index).
+//!
+//! Each `figN`/`tableN` function returns a [`Report`] containing the
+//! printable table(s) and the raw rows, so the same code serves the CLI
+//! (`hyplacer fig5`), the cargo benches (`cargo bench --bench fig5`) and
+//! integration tests (which assert the *shape* of each result: who wins,
+//! orderings, crossover locations).
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod tables;
+
+use crate::report::Table;
+
+/// A regenerated experiment: named tables plus free-form notes.
+pub struct Report {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub tables: Vec<(String, Table)>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &'static str, title: &'static str) -> Self {
+        Report { id, title, tables: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        for (name, t) in &self.tables {
+            out.push_str(&format!("\n-- {name} --\n"));
+            out.push_str(&t.render());
+        }
+        if !self.notes.is_empty() {
+            out.push_str("\nnotes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("  * {n}\n"));
+            }
+        }
+        out
+    }
+
+    /// Write every table as CSV under `dir/<id>_<name>.csv`.
+    pub fn write_csv(&self, dir: &str) -> std::io::Result<Vec<String>> {
+        let mut written = Vec::new();
+        for (name, t) in &self.tables {
+            let safe: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            let path = format!("{dir}/{}_{safe}.csv", self.id);
+            t.write_csv(&path)?;
+            written.push(path);
+        }
+        Ok(written)
+    }
+}
+
+/// Shared run-length knobs for the evaluation matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub epochs: u32,
+    pub seed: u64,
+    /// delay-window fraction (HyPlacer delay / epoch length).
+    pub window_frac: f64,
+    /// use the AOT/PJRT classifier for HyPlacer when artifacts exist.
+    pub use_aot: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { epochs: 150, seed: 42, window_frac: 0.05, use_aot: false }
+    }
+}
+
+impl BenchOpts {
+    /// Quick mode for tests/CI.
+    pub fn quick() -> Self {
+        BenchOpts { epochs: 50, seed: 42, window_frac: 0.05, use_aot: false }
+    }
+}

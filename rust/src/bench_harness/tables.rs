@@ -1,0 +1,146 @@
+//! Tables 1–3 — regenerated from live system metadata wherever possible
+//! (implemented policies report their own Table 1 rows; PageFind modes
+//! and workloads describe themselves), with the paper's literature-only
+//! rows kept as static records.
+
+use crate::config::{HyPlacerConfig, MachineConfig, GB};
+use crate::policies::{self, Table1Row};
+use crate::report::Table;
+use crate::workloads::npb::{Bt, Cg, Ft, Mg, SizeClass};
+
+use super::Report;
+
+/// Literature rows of Table 1 that we do not implement (kept verbatim
+/// from the paper for the regenerated table).
+pub fn literature_rows() -> Vec<Table1Row> {
+    let row = |system,
+               hmh,
+               placement_policy,
+               selection_criteria,
+               selection_algorithm,
+               modifications| Table1Row {
+        system,
+        hmh,
+        placement_policy,
+        selection_criteria,
+        selection_algorithm,
+        modifications,
+        full_implementation: false,
+        evaluated_on_dcpmm: false,
+    };
+    vec![
+        row("M-CLOCK [26]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "CLOCK", "OS"),
+        row("AC-CLOCK [20]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "CLOCK", "HW+OS"),
+        row("AIMR [48]", "DRAM+PCM/ReRAM", "Fill DRAM first", "Hotness+r/w", "CLOCK+LRU", "HW+OS"),
+        row("CLOCK-HM [8]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "CLOCK+LRU", "HW+OS"),
+        row("Seok et al. [46]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "LRU", "HW+OS"),
+        row("DualStack [62]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "LRU", "HW+OS"),
+        row("HeteroOS [19]", "DRAM+NVM", "Fill DRAM first", "Hotness", "LRU", "OS"),
+        row("UIMigrate [49]", "DRAM+PCM", "Fill DRAM first", "Hotness", "LRU", "HW+OS"),
+        row("TwoLRU [44]", "DRAM+PCM", "Fill DRAM first", "Hotness+r/w", "LRU", "HW+OS"),
+        row("Thermostat [1]", "DRAM+3D XPoint", "Fill DRAM first", "Hotness", "TLB misses", "OS"),
+        row("Yu et al. [60]", "DRAM-PCM", "Bandwidth balance", "n/a", "n/a", ""),
+    ]
+}
+
+pub fn table1() -> Report {
+    let cfg = MachineConfig::paper_machine();
+    let hp = HyPlacerConfig::default();
+    let mut rep =
+        Report::new("table1", "Comparison of proposals for tiered page placement");
+    let mut t = Table::new(vec![
+        "system",
+        "HMH",
+        "policy",
+        "criteria",
+        "algorithm",
+        "mods",
+        "full_impl",
+        "on_DCPMM",
+    ]);
+    let mut rows = Vec::new();
+    // implemented systems describe themselves
+    for name in ["partitioned", "nimble", "autonuma", "memos", "memm", "hyplacer"] {
+        rows.push(policies::by_name(name, &cfg, &hp).unwrap().table1_row());
+    }
+    rows.extend(literature_rows());
+    for r in rows {
+        t.row(vec![
+            r.system.to_string(),
+            r.hmh.to_string(),
+            r.placement_policy.to_string(),
+            r.selection_criteria.to_string(),
+            r.selection_algorithm.to_string(),
+            r.modifications.to_string(),
+            if r.full_implementation { "yes" } else { "" }.to_string(),
+            if r.evaluated_on_dcpmm { "yes" } else { "" }.to_string(),
+        ]);
+    }
+    rep.tables.push(("proposals".to_string(), t));
+    rep
+}
+
+pub fn table2() -> Report {
+    use crate::policies::hyplacer::selmo::PageFindMode;
+    let mut rep = Report::new("table2", "PageFind modes and goals");
+    let mut t = Table::new(vec!["mode", "tier_scope", "goal"]);
+    for m in PageFindMode::ALL {
+        t.row(vec![format!("{m:?}").to_uppercase(), m.tier_scope().to_string(), m.goal().to_string()]);
+    }
+    rep.tables.push(("modes".to_string(), t));
+    rep
+}
+
+pub fn table3() -> Report {
+    let mut rep = Report::new("table3", "Summary of evaluated applications");
+    let mut t = Table::new(vec!["benchmark", "rw_ratio", "S_GB", "M_GB", "L_GB"]);
+    let rows: [(&str, &str, fn(SizeClass) -> f64); 4] = [
+        ("BT", "3.5R:1W", Bt::footprint_bytes),
+        ("FT", "1.7R:1W", Ft::footprint_bytes),
+        ("MG", "4R:1W", Mg::footprint_bytes),
+        ("CG", ">60R:1W", Cg::footprint_bytes),
+    ];
+    for (name, rw, f) in rows {
+        t.row(vec![
+            name.to_string(),
+            rw.to_string(),
+            format!("{:.1}", f(SizeClass::S) / GB),
+            format!("{:.1}", f(SizeClass::M) / GB),
+            format!("{:.1}", f(SizeClass::L) / GB),
+        ]);
+    }
+    rep.tables.push(("applications".to_string(), t));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_15_paper_rows() {
+        let rep = table1();
+        let rendered = rep.render();
+        // 6 implemented + 11 literature = 17 rows (we add interleave-less
+        // CLOCK-DWF as "partitioned" and MemM beyond the paper's 15)
+        for name in ["HyPlacer", "CLOCK-DWF", "Nimble", "Memos", "Thermostat", "AutoNUMA"] {
+            assert!(rendered.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn table2_matches_paper_modes() {
+        let s = table2().render();
+        for mode in ["DEMOTE", "PROMOTE", "PROMOTEINT", "SWITCH", "DCPMMCLEAR"] {
+            assert!(s.contains(mode), "missing {mode} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn table3_matches_paper_footprints() {
+        let s = table3().render();
+        for v in ["28.4", "39.1", "53.9", "20.0", "40.0", "80.0", "26.5", "74.3", "131.0", "18.0", "39.8", "150.0"] {
+            assert!(s.contains(v), "missing footprint {v} in:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,420 @@
+//! Configuration system: machine calibration (the paper's dual-socket
+//! Xeon Gold 5218 + 2xDDR4 + 2xDCPMM per socket), simulation parameters,
+//! and per-policy tunables. Configs load from a TOML-subset file
+//! ([`parse::Doc`]) and/or CLI overrides; presets mirror the paper's
+//! experimental setups.
+
+pub mod parse;
+
+use parse::Doc;
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+/// Binary gigabyte — DIMM capacities are powers of two (32 "GB" DDR4 =
+/// 32 GiB), which also keeps page-count arithmetic exact.
+pub const GIB: u64 = 1 << 30;
+
+/// Which memory tier a page lives in. DRAM is NUMA node 0, DCPMM node 1
+/// (App Direct Mode exposes them exactly like this — paper §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Dram,
+    Pm,
+}
+
+impl Tier {
+    pub fn other(self) -> Tier {
+        match self {
+            Tier::Dram => Tier::Pm,
+            Tier::Pm => Tier::Dram,
+        }
+    }
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Dram => 0,
+            Tier::Pm => 1,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Dram => "DRAM",
+            Tier::Pm => "DCPMM",
+        }
+    }
+}
+
+/// Calibration for one memory tier (per-channel numbers; see DESIGN.md §6
+/// for the public-literature anchors).
+#[derive(Clone, Debug)]
+pub struct TierSpec {
+    /// Populated memory channels for this tier.
+    pub channels: u32,
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// Peak sequential read bandwidth per channel (B/s).
+    pub read_bw_per_chan: f64,
+    /// Peak sequential write bandwidth per channel (B/s).
+    pub write_bw_per_chan: f64,
+    /// Idle (unloaded) read latency, ns.
+    pub idle_read_lat_ns: f64,
+    /// Idle write (store-to-visible) latency, ns.
+    pub idle_write_lat_ns: f64,
+    /// Random-access read-bandwidth derate (0..1].
+    pub random_read_derate: f64,
+    /// Random-store write amplification at full randomness (DCPMM XPLine
+    /// read-modify-write; 1.0 for DRAM).
+    pub rmw_amplification: f64,
+    /// Queueing-latency shape factor `q`: loaded = idle * (1 + q·ρ/(1−ρ)).
+    pub queue_factor: f64,
+}
+
+impl TierSpec {
+    pub fn peak_read_bw(&self) -> f64 {
+        self.channels as f64 * self.read_bw_per_chan
+    }
+    pub fn peak_write_bw(&self) -> f64 {
+        self.channels as f64 * self.write_bw_per_chan
+    }
+}
+
+/// Whole-machine calibration (single socket, as all paper experiments are
+/// socket-confined via numactl).
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    pub dram: TierSpec,
+    pub pm: TierSpec,
+    /// Hardware threads available to the workload (paper: 32).
+    pub threads: u32,
+    /// Cache-line granularity of DDR-T/DDR4 transactions.
+    pub line_bytes: u64,
+    /// Simulator page unit. The paper manages 4 KiB pages; simulating
+    /// multi-GB footprints page-by-page is wasteful, so the simulator
+    /// default is 2 MiB units (policies are granularity-agnostic;
+    /// `repro --page-bytes 4096` reproduces small runs at native grain).
+    pub page_bytes: u64,
+    /// Cross-tier service overlap: 1 = tiers fully parallel, 0 = serial.
+    pub overlap: f64,
+    /// Memory-level parallelism: outstanding lines across the socket for
+    /// *random* (dependent, prefetch-hostile) access streams.
+    pub mlp: f64,
+    /// Outstanding misses per thread for closed-loop (MLC-style)
+    /// execution — Little's-law knob of [`crate::mem::PerfModel::closed_loop_throughput`].
+    pub mlp_per_thread: f64,
+    /// Cross-tier iMC interference: concurrent DRAM+DCPMM streams share
+    /// integrated-memory-controller queues, derating each tier's ceiling
+    /// by (1 − k · other-tier-share). This is why the measured aggregate
+    /// bandwidth of *bandwidth balance* is far below the sum of nominal
+    /// peaks (paper §3.3 / Observation 3).
+    pub cross_tier_interference: f64,
+    /// App-side compute rate (B/s touched if memory were infinitely fast);
+    /// sets the CPU-bound throughput ceiling.
+    pub cpu_rate: f64,
+    /// Fixed kernel overhead per migrated page (syscall + PTE + TLB), sec.
+    pub migrate_page_overhead: f64,
+    /// Energy model (J/byte and W) — see mem/energy.rs.
+    pub energy: EnergyConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct EnergyConfig {
+    pub dram_read_j_per_b: f64,
+    pub dram_write_j_per_b: f64,
+    pub pm_read_j_per_b: f64,
+    pub pm_write_j_per_b: f64,
+    pub dram_background_w: f64,
+    pub pm_background_w: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        // pJ/bit-class anchors: DRAM ~15 pJ/B read, DCPMM ~4x read / ~8x
+        // write energy per byte; background per-DIMM draws from DCPMM
+        // power spec (12-18 W/DIMM active, ~3.5 W idle avg model).
+        EnergyConfig {
+            dram_read_j_per_b: 15e-12,
+            dram_write_j_per_b: 20e-12,
+            pm_read_j_per_b: 60e-12,
+            pm_write_j_per_b: 170e-12,
+            dram_background_w: 2.4,  // 2 DIMMs x 1.2 W
+            pm_background_w: 7.0,    // 2 DIMMs x 3.5 W
+        }
+    }
+}
+
+impl MachineConfig {
+    /// The paper's evaluation machine, one socket: 2x16 GB DDR4-2666 +
+    /// 2x128 GB DCPMM-100, 32 HW threads (§5.1).
+    pub fn paper_machine() -> Self {
+        MachineConfig {
+            dram: TierSpec {
+                channels: 2,
+                capacity: 32 * GIB,
+                read_bw_per_chan: 17.0 * GB,
+                write_bw_per_chan: 14.0 * GB,
+                idle_read_lat_ns: 81.0,
+                idle_write_lat_ns: 86.0,
+                random_read_derate: 0.80,
+                rmw_amplification: 1.0,
+                queue_factor: 0.12,
+            },
+            pm: TierSpec {
+                channels: 2,
+                capacity: 256 * GIB,
+                read_bw_per_chan: 6.6 * GB,
+                write_bw_per_chan: 2.3 * GB,
+                idle_read_lat_ns: 169.0,
+                idle_write_lat_ns: 94.0,
+                random_read_derate: 0.55,
+                rmw_amplification: 3.6,
+                queue_factor: 0.35,
+            },
+            threads: 32,
+            line_bytes: 64,
+            page_bytes: 2 * 1024 * 1024,
+            overlap: 0.85,
+            mlp: 48.0,
+            mlp_per_thread: 2.5,
+            cross_tier_interference: 0.65,
+            cpu_rate: 150.0 * GB,
+            // fixed kernel cost per 2 MiB page move (PTE ops + TLB
+            // shootdown; the copy itself is charged as tier traffic)
+            migrate_page_overhead: 10e-6,
+            energy: EnergyConfig::default(),
+        }
+    }
+
+    /// Fig. 3 insight-study machine: all 6 channels of the socket
+    /// populated, split `dram_ch:pm_ch` (3:3, 2:4, 1:5). Capacities scale
+    /// with module counts (16 GB DRAM / 128 GB DCPMM per channel).
+    pub fn channel_split(dram_ch: u32, pm_ch: u32) -> Self {
+        assert!(dram_ch >= 1 && pm_ch >= 1 && dram_ch + pm_ch <= 6);
+        let mut m = Self::paper_machine();
+        m.dram.channels = dram_ch;
+        m.dram.capacity = dram_ch as u64 * 16 * GIB;
+        m.pm.channels = pm_ch;
+        m.pm.capacity = pm_ch as u64 * 128 * GIB;
+        m
+    }
+
+    pub fn dram_pages(&self) -> u64 {
+        self.dram.capacity / self.page_bytes
+    }
+    pub fn pm_pages(&self) -> u64 {
+        self.pm.capacity / self.page_bytes
+    }
+    pub fn tier(&self, t: Tier) -> &TierSpec {
+        match t {
+            Tier::Dram => &self.dram,
+            Tier::Pm => &self.pm,
+        }
+    }
+
+    /// Apply `[machine]` overrides from a parsed config file.
+    pub fn apply_doc(&mut self, doc: &Doc) {
+        if let Some(v) = doc.f64("machine.dram_gb") {
+            self.dram.capacity = (v as u64) * GIB;
+        }
+        if let Some(v) = doc.f64("machine.pm_gb") {
+            self.pm.capacity = (v as u64) * GIB;
+        }
+        if let Some(v) = doc.i64("machine.dram_channels") {
+            self.dram.channels = v as u32;
+        }
+        if let Some(v) = doc.i64("machine.pm_channels") {
+            self.pm.channels = v as u32;
+        }
+        if let Some(v) = doc.i64("machine.threads") {
+            self.threads = v as u32;
+        }
+        if let Some(v) = doc.i64("machine.page_bytes") {
+            self.page_bytes = v as u64;
+        }
+        if let Some(v) = doc.f64("machine.overlap") {
+            self.overlap = v;
+        }
+        if let Some(v) = doc.f64("machine.cpu_rate_gbs") {
+            self.cpu_rate = v * GB;
+        }
+    }
+}
+
+/// Simulation-run parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Nominal epoch wall-clock budget (Control monitor period; paper ~1s).
+    pub epoch_secs: f64,
+    /// Number of epochs to simulate.
+    pub epochs: u32,
+    /// RNG seed (all randomness derives from it).
+    pub seed: u64,
+    /// Epochs ignored when computing steady-state throughput.
+    pub warmup_epochs: u32,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { epoch_secs: 1.0, epochs: 120, seed: 42, warmup_epochs: 10 }
+    }
+}
+
+impl SimConfig {
+    pub fn apply_doc(&mut self, doc: &Doc) {
+        if let Some(v) = doc.f64("sim.epoch_secs") {
+            self.epoch_secs = v;
+        }
+        if let Some(v) = doc.i64("sim.epochs") {
+            self.epochs = v as u32;
+        }
+        if let Some(v) = doc.i64("sim.seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.i64("sim.warmup_epochs") {
+            self.warmup_epochs = v as u32;
+        }
+    }
+}
+
+/// HyPlacer tunables (paper §5.1 defaults).
+#[derive(Clone, Debug)]
+pub struct HyPlacerConfig {
+    /// DRAM occupancy threshold: above it the tier is "full" (0.95).
+    pub dram_watermark: f64,
+    /// Max bytes migrated per activation (paper: 128 K x 4 KiB pages).
+    pub max_migrate_bytes: u64,
+    /// DCPMM write-throughput threshold (B/s) that marks the PM tier as
+    /// holding write-intensive pages (10 MB/s).
+    pub pm_write_bw_threshold: f64,
+    /// R/D clearance delay before the promotion walk (50 ms).
+    pub delay_secs: f64,
+    /// Classifier EWMA decay.
+    pub alpha: f64,
+    /// Hotness EWMA threshold for "intensive".
+    pub hot_threshold: f64,
+    /// Write EWMA threshold for "write-dominated".
+    pub wr_threshold: f64,
+    /// Weight of write intensity in promotion scores.
+    pub wr_weight: f64,
+    /// Extra demotion priority for never-referenced pages.
+    pub cold_bias: f64,
+    /// Weight of staleness vs read-dominance in demotion scores.
+    pub age_weight: f64,
+    /// Use the AOT PJRT classifier (true) or the native fallback.
+    pub use_aot: bool,
+    /// Directory holding placement_<N>.hlo.txt artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for HyPlacerConfig {
+    fn default() -> Self {
+        HyPlacerConfig {
+            dram_watermark: 0.95,
+            max_migrate_bytes: 128 * 1024 * 4096, // 128K 4-KiB pages = 512 MiB
+            pm_write_bw_threshold: 10.0 * MB,
+            delay_secs: 0.050,
+            alpha: 0.35,
+            hot_threshold: 0.25,
+            wr_threshold: 0.40,
+            wr_weight: 0.6,
+            cold_bias: 0.2,
+            age_weight: 0.65,
+            use_aot: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl HyPlacerConfig {
+    pub fn apply_doc(&mut self, doc: &Doc) {
+        if let Some(v) = doc.f64("hyplacer.dram_watermark") {
+            self.dram_watermark = v;
+        }
+        if let Some(v) = doc.f64("hyplacer.max_migrate_mb") {
+            self.max_migrate_bytes = (v * MB) as u64;
+        }
+        if let Some(v) = doc.f64("hyplacer.pm_write_bw_threshold_mb") {
+            self.pm_write_bw_threshold = v * MB;
+        }
+        if let Some(v) = doc.f64("hyplacer.delay_ms") {
+            self.delay_secs = v / 1e3;
+        }
+        if let Some(v) = doc.f64("hyplacer.alpha") {
+            self.alpha = v;
+        }
+        if let Some(v) = doc.f64("hyplacer.hot_threshold") {
+            self.hot_threshold = v;
+        }
+        if let Some(v) = doc.f64("hyplacer.wr_threshold") {
+            self.wr_threshold = v;
+        }
+        if let Some(v) = doc.bool("hyplacer.use_aot") {
+            self.use_aot = v;
+        }
+        if let Some(v) = doc.str("hyplacer.artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_machine_matches_spec() {
+        let m = MachineConfig::paper_machine();
+        assert_eq!(m.dram.capacity, 32 * GIB);
+        assert_eq!(m.pm.capacity, 256 * GIB);
+        assert_eq!(m.threads, 32);
+        assert_eq!(m.dram_pages(), 16384);
+        assert_eq!(m.pm_pages(), 131072);
+        // tier asymmetry anchors
+        assert!(m.pm.peak_read_bw() < m.dram.peak_read_bw());
+        assert!(m.pm.peak_write_bw() < 0.5 * m.pm.peak_read_bw());
+        assert!(m.pm.idle_read_lat_ns > 1.5 * m.dram.idle_read_lat_ns);
+    }
+
+    #[test]
+    fn channel_split_scales_capacity() {
+        let m = MachineConfig::channel_split(3, 3);
+        assert_eq!(m.dram.channels, 3);
+        assert_eq!(m.pm.channels, 3);
+        assert_eq!(m.dram.capacity, 48 * GIB);
+        assert_eq!(m.pm.capacity, 384 * GIB);
+        let m15 = MachineConfig::channel_split(1, 5);
+        assert!(m15.pm.peak_read_bw() > m.pm.peak_read_bw());
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_split_rejects_overpopulation() {
+        let _ = MachineConfig::channel_split(4, 4);
+    }
+
+    #[test]
+    fn doc_overrides() {
+        let doc = parse::Doc::parse(
+            "[machine]\ndram_gb = 64\nthreads = 16\n[sim]\nepochs = 5\n[hyplacer]\ndelay_ms = 25",
+        )
+        .unwrap();
+        let mut m = MachineConfig::paper_machine();
+        m.apply_doc(&doc);
+        assert_eq!(m.dram.capacity, 64 * GIB);
+        assert_eq!(m.threads, 16);
+        let mut s = SimConfig::default();
+        s.apply_doc(&doc);
+        assert_eq!(s.epochs, 5);
+        let mut h = HyPlacerConfig::default();
+        h.apply_doc(&doc);
+        assert!((h.delay_secs - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hyplacer_defaults_match_paper() {
+        let h = HyPlacerConfig::default();
+        assert!((h.dram_watermark - 0.95).abs() < 1e-12);
+        assert_eq!(h.max_migrate_bytes, 512 * 1024 * 1024);
+        assert!((h.pm_write_bw_threshold - 10.0 * MB).abs() < 1.0);
+        assert!((h.delay_secs - 0.05).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,343 @@
+//! Minimal TOML-subset parser for the config system (the `toml`/`serde`
+//! crates are unreachable offline; the subset below covers everything the
+//! launcher needs: `[section]` and `[section.sub]` headers, string /
+//! float / int / bool scalars, homogeneous inline arrays of scalars, `#`
+//! comments, and basic escape sequences in strings).
+//!
+//! The parser produces a flat map from `section.key` to [`Value`];
+//! typed accessors with good error messages live on [`Doc`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("line {line}: {msg}")]
+    Syntax { line: usize, msg: String },
+}
+
+/// Parsed document: flat `section.key -> Value` map.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError::Syntax {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError::Syntax {
+                        line: lineno + 1,
+                        msg: "empty section name".into(),
+                    });
+                }
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ParseError::Syntax {
+                line: lineno + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError::Syntax { line: lineno + 1, msg: "empty key".into() });
+            }
+            let value = parse_value(val.trim(), lineno + 1)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.f64(key).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.i64(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a string literal is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError::Syntax { line, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // ints without '.', 'e', or 'E' (underscore separators allowed)
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains(['.', 'e', 'E']) {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    cleaned
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| err(format!("cannot parse value {s:?}")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            top = 1
+            [machine]
+            dram_gb = 32.0        # paper machine
+            name = "xeon-5218"
+            channels = [2, 2]
+            enabled = true
+            [hyplacer.control]
+            threshold = 0.95
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64("top"), Some(1));
+        assert_eq!(doc.f64("machine.dram_gb"), Some(32.0));
+        assert_eq!(doc.str("machine.name"), Some("xeon-5218"));
+        assert_eq!(doc.bool("machine.enabled"), Some(true));
+        assert_eq!(doc.f64("hyplacer.control.threshold"), Some(0.95));
+        match doc.get("machine.channels").unwrap() {
+            Value::Array(xs) => assert_eq!(xs.len(), 2),
+            v => panic!("unexpected {v:?}"),
+        }
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("a = 3\nb = 3.5\nc = 1e9\nd = 1_000").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(3.5)));
+        assert_eq!(doc.get("c"), Some(&Value::Float(1e9)));
+        assert_eq!(doc.get("d"), Some(&Value::Int(1000)));
+        // ints coerce to f64 through accessor
+        assert_eq!(doc.f64("a"), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse(r##"s = "a#b" # comment"##).unwrap();
+        assert_eq!(doc.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Doc::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.str("s"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = Doc::parse("x = ").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("a = [1, 2").is_err());
+        assert!(Doc::parse("a = \"oops").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.f64_or("missing", 4.2), 4.2);
+        assert_eq!(doc.i64_or("missing", 7), 7);
+        assert!(doc.bool_or("missing", true));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = Doc::parse("a = [[1, 2], [3]]").unwrap();
+        match doc.get("a").unwrap() {
+            Value::Array(outer) => {
+                assert_eq!(outer.len(), 2);
+                match &outer[0] {
+                    Value::Array(inner) => assert_eq!(inner.len(), 2),
+                    v => panic!("unexpected {v:?}"),
+                }
+            }
+            v => panic!("unexpected {v:?}"),
+        }
+    }
+}

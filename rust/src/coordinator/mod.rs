@@ -1,0 +1,487 @@
+//! The coordinator: binds a workload, a placement policy and the
+//! simulated machine together and drives the epoch loop.
+//!
+//! Per epoch (mirroring how HyPlacer's Control period interleaves with
+//! the application on the real machine):
+//!
+//!  1. the workload declares its region activity; the MMU side sets
+//!     R/D (+ delay-window) bits on touched pages,
+//!  2. the policy's decision tick runs against the page table, PCMon's
+//!     last window and the machine config, producing a migration plan,
+//!  3. the plan executes (`move_pages`/exchange), yielding copy traffic
+//!     and fixed kernel overhead,
+//!  4. the epoch's app demand is computed from the *current* page
+//!     distribution (post-migration), combined with migration traffic,
+//!     optionally routed (Memory Mode), and served by the perf model,
+//!  5. PCMon, energy and run statistics record the served epoch.
+//!
+//! Total app work is identical across policies, so relative speedup is
+//! a pure wall-clock ratio — the normalization of the paper's Fig. 5.
+
+use crate::config::{MachineConfig, SimConfig, Tier};
+use crate::mem::energy::EnergyAccount;
+use crate::mem::{EpochDemand, PerfModel, Pcmon, TierDemand};
+use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx};
+use crate::sim::{RunStats, SimClock};
+use crate::util::Rng64;
+use crate::vm::{migrate, PageTable};
+use crate::workloads::Workload;
+
+/// Result summary of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub workload: String,
+    pub policy: String,
+    pub total_wall_secs: f64,
+    pub total_app_bytes: f64,
+    /// App throughput, B/s.
+    pub throughput: f64,
+    pub steady_throughput: f64,
+    /// Per-access memory energy, J/B.
+    pub energy_j_per_byte: f64,
+    pub total_energy_j: f64,
+    pub migrated_pages: u64,
+    pub dram_traffic_share: f64,
+    pub stats: RunStats,
+}
+
+impl SimResult {
+    /// Whole-run speedup relative to a baseline run of the same workload.
+    pub fn speedup_vs(&self, baseline: &SimResult) -> f64 {
+        baseline.total_wall_secs / self.total_wall_secs
+    }
+    /// Steady-state (post-warmup) speedup. The paper's runs last minutes
+    /// to hours while placement converges in seconds, so steady state is
+    /// the honest analogue of its end-to-end numbers; our runs are only
+    /// tens of epochs and would otherwise over-weight the transient.
+    pub fn steady_speedup_vs(&self, baseline: &SimResult) -> f64 {
+        if baseline.steady_throughput <= 0.0 {
+            return 0.0;
+        }
+        self.steady_throughput / baseline.steady_throughput
+    }
+    /// Energy gain (how many times lower energy per byte) vs baseline.
+    pub fn energy_gain_vs(&self, baseline: &SimResult) -> f64 {
+        if self.energy_j_per_byte <= 0.0 {
+            return 0.0;
+        }
+        baseline.energy_j_per_byte / self.energy_j_per_byte
+    }
+}
+
+/// A bound simulation, ready to run.
+pub struct Simulation {
+    cfg: MachineConfig,
+    sim: SimConfig,
+    model: PerfModel,
+    pt: PageTable,
+    policy: Box<dyn Policy>,
+    workload: Box<dyn Workload>,
+    pcmon: Pcmon,
+    clock: SimClock,
+    stats: RunStats,
+    energy: EnergyAccount,
+    rng: Rng64,
+    /// delay-window fraction of the epoch (HyPlacer's 50 ms / 1 s).
+    window_frac: f64,
+    region_scratch: Vec<ActiveRegion>,
+    /// Cached region boundaries (start, pages) and incremental per-region
+    /// DRAM-resident page counts — avoids rescanning every region's pages
+    /// each epoch to split demand across tiers. Invalidated if a workload
+    /// ever changes its region boundaries (trace replays may).
+    region_bounds: Vec<(u32, u32)>,
+    region_dram: Vec<u64>,
+}
+
+impl Simulation {
+    pub fn new(
+        cfg: MachineConfig,
+        sim: SimConfig,
+        workload: Box<dyn Workload>,
+        mut policy: Box<dyn Policy>,
+        window_frac: f64,
+    ) -> Self {
+        let footprint = workload.footprint_pages();
+        let mut pt = PageTable::new(
+            footprint,
+            cfg.page_bytes,
+            cfg.dram.capacity,
+            cfg.pm.capacity,
+        );
+        // First-touch allocation in address order (NPB-style init loops
+        // touch arrays in allocation order).
+        for page in 0..footprint {
+            let want = policy.place_new(page, &pt);
+            if !pt.allocate(page, want) && !pt.allocate(page, want.other()) {
+                panic!(
+                    "footprint {} pages exceeds machine capacity ({} DRAM + {} PM pages)",
+                    footprint,
+                    pt.capacity_pages(Tier::Dram),
+                    pt.capacity_pages(Tier::Pm)
+                );
+            }
+        }
+        let model = PerfModel::new(&cfg);
+        let seed = sim.seed;
+        let warmup = sim.warmup_epochs;
+        let mut this = Simulation {
+            cfg,
+            sim,
+            model,
+            pt,
+            policy,
+            workload,
+            pcmon: Pcmon::new(),
+            clock: SimClock::new(),
+            stats: RunStats::new(warmup),
+            energy: EnergyAccount::default(),
+            rng: Rng64::new(seed),
+            window_frac: window_frac.clamp(0.0, 1.0),
+            region_scratch: Vec::new(),
+            region_bounds: Vec::new(),
+            region_dram: Vec::new(),
+        };
+        let regions = this.workload.regions(0);
+        this.rebuild_region_counts(&regions);
+        this
+    }
+
+    /// (Re)build the per-region DRAM counters by scanning once.
+    fn rebuild_region_counts(&mut self, regions: &[crate::workloads::Region]) {
+        self.region_bounds = regions.iter().map(|r| (r.start, r.pages)).collect();
+        self.region_dram.clear();
+        for r in regions {
+            let mut dram = 0u64;
+            for page in r.start..r.end() {
+                if self.pt.flags(page).tier() == Tier::Dram {
+                    dram += 1;
+                }
+            }
+            self.region_dram.push(dram);
+        }
+    }
+
+    /// Region index containing `page` (regions are sorted, contiguous).
+    fn region_of(&self, page: u32) -> Option<usize> {
+        let idx = match self.region_bounds.binary_search_by(|&(start, _)| start.cmp(&page)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let (start, pages) = self.region_bounds[idx];
+        if page >= start && page < start + pages {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Refresh the incremental counters after a migration plan executed,
+    /// by exact per-page deltas: every policy selects promotion
+    /// candidates from PM and demotion victims from DRAM (the PageFind
+    /// contract), so a page's *current* tier tells us whether its move
+    /// actually happened (skipped moves leave the tier unchanged).
+    /// O(plan size), independent of footprint.
+    fn apply_plan_to_counts(&mut self, plan: &crate::vm::MigrationPlan) {
+        if plan.is_empty() {
+            return;
+        }
+        let delta = |page: u32, went_dram_if: Tier, d: i64, this: &mut Self| {
+            if this.pt.flags(page).tier() == went_dram_if {
+                if let Some(idx) = this.region_of(page) {
+                    let c = &mut this.region_dram[idx];
+                    *c = (*c as i64 + d).max(0) as u64;
+                }
+            }
+        };
+        for &p in &plan.promote {
+            delta(p, Tier::Dram, 1, self); // was PM; now DRAM => moved
+        }
+        for &p in &plan.demote {
+            delta(p, Tier::Pm, -1, self); // was DRAM; now PM => moved
+        }
+        for &(pm_page, dram_page) in &plan.exchange {
+            // exchange is atomic: if the PM page is now in DRAM, both sides flipped
+            if self.pt.flags(pm_page).tier() == Tier::Dram {
+                if let Some(idx) = self.region_of(pm_page) {
+                    self.region_dram[idx] += 1;
+                }
+                if let Some(idx) = self.region_of(dram_page) {
+                    let c = &mut self.region_dram[idx];
+                    *c = c.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    pub fn page_table(&self) -> &PageTable {
+        &self.pt
+    }
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Run one epoch; returns its wall-clock seconds.
+    pub fn step(&mut self) -> f64 {
+        let epoch = self.clock.epoch();
+        let regions = self.workload.regions(epoch);
+        let total_weight: f64 = regions.iter().map(|r| r.weight).sum();
+        let offered = self.workload.offered_bytes();
+        let page_bytes = self.cfg.page_bytes as f64;
+
+        // --- 1. MMU: set R/D bits (+ delay-window bits) on touched pages.
+        let mut active_pages = 0u64;
+        self.region_scratch.clear();
+        for r in &regions {
+            let share = if total_weight > 0.0 { r.weight / total_weight } else { 0.0 };
+            let bytes = offered * share;
+            self.region_scratch.push(ActiveRegion {
+                pages: r.pages as u64,
+                read_bytes: bytes * (1.0 - r.write_frac),
+                write_bytes: bytes * r.write_frac,
+                random_frac: r.random_frac,
+            });
+            if bytes <= 0.0 {
+                continue;
+            }
+            let coverage = bytes / (r.pages as f64 * page_bytes);
+            let p_touch = 1.0 - (-coverage).exp();
+            let p_dirty_given = 1.0 - (-coverage * r.write_frac).exp();
+            // Delay-window sampling is about *access events* in time, not
+            // byte coverage: a sequentially streamed page is visited in
+            // one burst per pass (~`coverage` events/epoch), while a
+            // randomly accessed page sees many independent events spread
+            // across the epoch. P(page observed in the delay window)
+            // therefore scales with the event rate -- this is exactly the
+            // frequency filter the paper's 50 ms delay implements.
+            let events = coverage * (1.0 + r.random_frac * 60.0);
+            let wcov = events * self.window_frac;
+            let p_window = 1.0 - (-wcov).exp();
+            let p_wdirty = 1.0 - (-wcov * r.write_frac).exp();
+            let p_write_given_touch = p_dirty_given / p_touch.max(1e-12);
+            let p_wwrite_given = p_wdirty / p_window.max(1e-12);
+            for page in r.start..r.end() {
+                if self.rng.chance(p_touch) {
+                    active_pages += 1;
+                    let write = self.rng.chance(p_write_given_touch);
+                    self.pt.touch(page, write);
+                }
+            }
+            // Window bits: for sparse probabilities (streamed regions at
+            // a 50 ms window, p ~ 1e-2), geometric gap sampling visits
+            // only the hit pages instead of drawing per page.
+            if p_window > 0.2 {
+                for page in r.start..r.end() {
+                    if self.rng.chance(p_window) {
+                        let wwrite = self.rng.chance(p_wwrite_given);
+                        self.pt.touch_window(page, wwrite);
+                    }
+                }
+            } else if p_window > 0.0 {
+                let ln1p = (1.0 - p_window).ln();
+                let mut page = r.start as u64;
+                loop {
+                    let u = self.rng.next_f64().max(1e-300);
+                    let gap = (u.ln() / ln1p).floor() as u64;
+                    page += gap;
+                    if page >= r.end() as u64 {
+                        break;
+                    }
+                    let wwrite = self.rng.chance(p_wwrite_given);
+                    self.pt.touch_window(page as u32, wwrite);
+                    page += 1;
+                }
+            }
+        }
+
+        // --- 2. Policy decision tick.
+        let plan = {
+            let mut ctx = PolicyCtx {
+                pt: &mut self.pt,
+                pcmon: self.pcmon.snapshot(),
+                cfg: &self.cfg,
+                epoch,
+                epoch_secs: self.sim.epoch_secs,
+            };
+            self.policy.epoch_tick(&mut ctx)
+        };
+
+        // --- 3. Execute migrations.
+        let mig = migrate::execute(&mut self.pt, &self.cfg, &plan);
+
+        // --- 4. App demand from the post-migration distribution, using
+        // the incrementally maintained per-region DRAM counts.
+        let bounds_match = regions.len() == self.region_bounds.len()
+            && regions
+                .iter()
+                .zip(self.region_bounds.iter())
+                .all(|(r, &(start, pages))| r.start == start && r.pages == pages);
+        if !bounds_match {
+            self.rebuild_region_counts(&regions);
+        } else {
+            self.apply_plan_to_counts(&plan);
+        }
+        let mut demand = EpochDemand::default();
+        demand.app_bytes = offered;
+        for (i, (r, ar)) in regions.iter().zip(self.region_scratch.iter()).enumerate() {
+            if ar.total() <= 0.0 {
+                continue;
+            }
+            let dram_pages = self.region_dram[i];
+            let dram_frac = dram_pages as f64 / r.pages as f64;
+            let mk = |bytes_r: f64, bytes_w: f64| TierDemand {
+                read_bytes: bytes_r,
+                write_bytes: bytes_w,
+                random_frac: ar.random_frac,
+            };
+            demand
+                .dram
+                .add(&mk(ar.read_bytes * dram_frac, ar.write_bytes * dram_frac));
+            demand
+                .pm
+                .add(&mk(ar.read_bytes * (1.0 - dram_frac), ar.write_bytes * (1.0 - dram_frac)));
+        }
+        // Demand routing (Memory Mode cache).
+        let route_ctx = RouteCtx {
+            cfg: &self.cfg,
+            active_pages,
+            regions: &self.region_scratch,
+            epoch,
+        };
+        demand = self.policy.route_demand(demand, &route_ctx);
+        // Migration copy traffic + kernel overhead.
+        demand.dram.add(&mig.dram_traffic);
+        demand.pm.add(&mig.pm_traffic);
+        demand.overhead_secs += mig.overhead_secs;
+
+        // --- 5. Serve + record.
+        let outcome = self.model.service(&demand);
+        self.pcmon.record_epoch(&demand, &outcome);
+        self.energy.record(&self.cfg, &demand, &outcome);
+        self.stats
+            .record(epoch, &demand, &outcome, &mig, self.pt.dram_occupancy());
+        self.clock.advance(outcome.wall_secs);
+        outcome.wall_secs
+    }
+
+    /// Run the configured number of epochs and summarize.
+    pub fn run(mut self) -> SimResult {
+        for _ in 0..self.sim.epochs {
+            self.step();
+        }
+        self.finish()
+    }
+
+    /// Summarize without consuming a fixed epoch count (for callers that
+    /// drove `step()` manually).
+    pub fn finish(mut self) -> SimResult {
+        self.stats.energy = self.energy;
+        SimResult {
+            workload: self.workload.name(),
+            policy: self.policy.name().to_string(),
+            total_wall_secs: self.stats.total_wall_secs(),
+            total_app_bytes: self.stats.total_app_bytes(),
+            throughput: self.stats.throughput(),
+            steady_throughput: self.stats.steady_throughput(),
+            energy_j_per_byte: self.energy.j_per_byte(),
+            total_energy_j: self.energy.total_j(),
+            migrated_pages: self.stats.total_migrated_pages(),
+            dram_traffic_share: self.stats.tier_traffic_share(Tier::Dram),
+            stats: self.stats,
+        }
+    }
+}
+
+/// Convenience: build + run a (workload, policy) pair on a machine.
+pub fn run_pair(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    workload: Box<dyn Workload>,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+) -> SimResult {
+    Simulation::new(cfg.clone(), sim.clone(), workload, policy, window_frac).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HyPlacerConfig, GB};
+    use crate::policies;
+    use crate::workloads;
+
+    fn small_sim(policy: &str, workload: &str, epochs: u32) -> SimResult {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = epochs;
+        sim.warmup_epochs = 2;
+        let hp = HyPlacerConfig::default();
+        let w = workloads::by_name(workload, cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p = policies::by_name(policy, &cfg, &hp).unwrap();
+        run_pair(&cfg, &sim, w, p, 0.05)
+    }
+
+    #[test]
+    fn adm_default_serves_fixed_work() {
+        let r = small_sim("adm-default", "cg-S", 10);
+        assert_eq!(r.policy, "adm-default");
+        assert!((r.total_app_bytes - 10.0 * 36.0 * GB).abs() < 1e6);
+        assert!(r.total_wall_secs > 0.0);
+        assert_eq!(r.migrated_pages, 0, "ADM-default never migrates");
+    }
+
+    #[test]
+    fn small_footprint_is_all_dram_under_first_touch() {
+        let r = small_sim("adm-default", "cg-S", 6);
+        assert!(r.dram_traffic_share > 0.99, "share {}", r.dram_traffic_share);
+    }
+
+    #[test]
+    fn large_footprint_spills_to_pm() {
+        let r = small_sim("adm-default", "cg-L", 6);
+        assert!(r.dram_traffic_share < 0.7, "share {}", r.dram_traffic_share);
+    }
+
+    #[test]
+    fn hyplacer_improves_cg_l_substantially() {
+        // the paper's headline case: CG-L, HyPlacer vs ADM-default
+        let base = small_sim("adm-default", "cg-L", 40);
+        let hyp = small_sim("hyplacer", "cg-L", 40);
+        let speedup = hyp.steady_speedup_vs(&base);
+        assert!(speedup > 1.8, "CG-L speedup only {speedup:.2}x");
+        assert!(hyp.migrated_pages > 0);
+        // hot vectors end up served from DRAM
+        assert!(hyp.dram_traffic_share > base.dram_traffic_share);
+    }
+
+    #[test]
+    fn hyplacer_small_overhead_bounded() {
+        // Fig. 7: small data sets — overhead only, must stay near 1.0x
+        let base = small_sim("adm-default", "mg-S", 30);
+        let hyp = small_sim("hyplacer", "mg-S", 30);
+        let speedup = hyp.speedup_vs(&base);
+        assert!(speedup > 0.75 && speedup < 1.25, "MG-S overhead {speedup:.2}x");
+    }
+
+    #[test]
+    fn energy_tracks_throughput_direction() {
+        let base = small_sim("adm-default", "cg-L", 30);
+        let hyp = small_sim("hyplacer", "cg-L", 30);
+        assert!(hyp.energy_gain_vs(&base) > 1.0, "better placement saves energy");
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let a = small_sim("hyplacer", "bt-M", 12);
+        let b = small_sim("hyplacer", "bt-M", 12);
+        assert_eq!(a.total_wall_secs.to_bits(), b.total_wall_secs.to_bits());
+        assert_eq!(a.migrated_pages, b.migrated_pages);
+    }
+
+    #[test]
+    fn memm_beats_adm_default_on_large_cg() {
+        let base = small_sim("adm-default", "cg-L", 30);
+        let memm = small_sim("memm", "cg-L", 30);
+        assert!(memm.speedup_vs(&base) > 1.2, "{}", memm.speedup_vs(&base));
+    }
+}

@@ -1,0 +1,29 @@
+//! HyPlacer — reproduction of *Dynamic Page Placement on Real Persistent
+//! Memory Systems* (Marques et al., 2021) as a three-layer
+//! rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate): the HyPlacer coordinator (Control + SelMo), every
+//! baseline placement policy from the paper's evaluation, and the full
+//! simulated substrate a real deployment would rely on: a calibrated
+//! DRAM+DCPMM memory model, virtual-memory page tables with MMU-managed
+//! R/D bits, page migration, workload engines and the benchmark harness
+//! that regenerates every figure and table in the paper.
+//!
+//! Layers 1/2 (python/, build-time only): the per-page classification
+//! kernel (Pallas) and placement decision model (JAX), AOT-lowered to HLO
+//! text and executed from [`runtime`] via the PJRT C API. Python is never
+//! on the request path.
+pub mod util;
+pub mod config;
+pub mod sim;
+pub mod mem;
+pub mod vm;
+pub mod workloads;
+pub mod policies;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod bench_harness;
+
+pub use config::MachineConfig;
+pub use coordinator::{Simulation, SimResult};

@@ -1,0 +1,296 @@
+//! `hyplacer` — launcher CLI.
+//!
+//! Subcommands regenerate the paper's experiments or run ad-hoc
+//! (workload, policy) pairs on the simulated DRAM+DCPMM machine:
+//!
+//! ```text
+//! hyplacer fig2|fig3|fig5|fig6|fig7        # regenerate a figure
+//! hyplacer table1|table2|table3            # regenerate a table
+//! hyplacer run --workload cg-L --policy hyplacer [--epochs N]
+//! hyplacer compare --workload cg-L         # all policies on one workload
+//! hyplacer all                             # everything (EXPERIMENTS.md data)
+//! ```
+//!
+//! Common flags: `--epochs N --seed N --csv DIR --aot --quick
+//! --config FILE` (TOML-subset, see rust/src/config/parse.rs).
+
+use std::process::ExitCode;
+
+use hyplacer::bench_harness::{fig2, fig3, fig5, tables, BenchOpts, Report};
+use hyplacer::config::{parse::Doc, HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::run_pair;
+use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::report::Table;
+use hyplacer::workloads;
+
+struct Args {
+    command: String,
+    epochs: Option<u32>,
+    seed: Option<u64>,
+    csv: Option<String>,
+    aot: bool,
+    quick: bool,
+    workload: String,
+    policy: String,
+    config: Option<String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        command: String::new(),
+        epochs: None,
+        seed: None,
+        csv: None,
+        aot: false,
+        quick: false,
+        workload: "cg-M".to_string(),
+        policy: "hyplacer".to_string(),
+        config: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut take = |name: &str| -> Result<String, String> {
+            it.next().ok_or_else(|| format!("{name} requires a value"))
+        };
+        match a.as_str() {
+            "--epochs" => args.epochs = Some(take("--epochs")?.parse().map_err(|e| format!("--epochs: {e}"))?),
+            "--seed" => args.seed = Some(take("--seed")?.parse().map_err(|e| format!("--seed: {e}"))?),
+            "--csv" => args.csv = Some(take("--csv")?),
+            "--workload" | "-w" => args.workload = take("--workload")?,
+            "--policy" | "-p" => args.policy = take("--policy")?,
+            "--config" => args.config = Some(take("--config")?),
+            "--aot" => args.aot = true,
+            "--quick" => args.quick = true,
+            "--help" | "-h" => {
+                args.command = "help".to_string();
+                return Ok(args);
+            }
+            cmd if !cmd.starts_with('-') && args.command.is_empty() => {
+                args.command = cmd.to_string();
+            }
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    if args.command.is_empty() {
+        args.command = "help".to_string();
+    }
+    Ok(args)
+}
+
+const HELP: &str = "\
+hyplacer — dynamic page placement on a simulated DRAM+DCPMM machine
+
+USAGE: hyplacer <command> [flags]
+
+COMMANDS
+  fig2      DRAM/DCPMM latency+bandwidth response surfaces (paper Fig. 2)
+  fig3      ideal bandwidth-balance gains (paper Fig. 3)
+  fig5      throughput speedup matrix, M+L data sets (paper Fig. 5)
+  fig6      energy-gain matrix (paper Fig. 6; reuses the fig5 runs)
+  fig7      small-data-set overheads (paper Fig. 7)
+  table1    proposal comparison table (paper Table 1)
+  table2    PageFind modes (paper Table 2)
+  table3    workload summary (paper Table 3)
+  run       one (workload, policy) pair    [-w cg-L -p hyplacer]
+  compare   all policies on one workload   [-w cg-L]
+  all       every figure and table in sequence
+
+FLAGS
+  --epochs N     epochs per run (default 60; figures use their own)
+  --seed N       RNG seed (default 42)
+  --csv DIR      also write each table as CSV under DIR
+  --aot          use the AOT/PJRT classifier for HyPlacer (needs artifacts/)
+  --quick        short runs (CI)
+  --config FILE  TOML-subset config overriding machine/sim/hyplacer knobs
+  -w, --workload NAME   bt|ft|mg|cg|pr|bfs + -S/-M/-L  (default cg-M)
+  -p, --policy NAME     adm-default|memm|autonuma|memos|nimble|hyplacer|
+                        partitioned|interleave-<pct>   (default hyplacer)
+";
+
+fn opts_from(args: &Args) -> BenchOpts {
+    let mut o = if args.quick { BenchOpts::quick() } else { BenchOpts::default() };
+    if let Some(e) = args.epochs {
+        o.epochs = e;
+    }
+    if let Some(s) = args.seed {
+        o.seed = s;
+    }
+    o.use_aot = args.aot;
+    o
+}
+
+fn emit(rep: &Report, csv: &Option<String>) {
+    println!("{}", rep.render());
+    if let Some(dir) = csv {
+        match rep.write_csv(dir) {
+            Ok(files) => {
+                for f in files {
+                    println!("wrote {f}");
+                }
+            }
+            Err(e) => eprintln!("csv write failed: {e}"),
+        }
+    }
+}
+
+fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig), String> {
+    let mut machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    let mut hp = HyPlacerConfig::default();
+    if let Some(path) = &args.config {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = Doc::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        machine.apply_doc(&doc);
+        sim.apply_doc(&doc);
+        hp.apply_doc(&doc);
+    }
+    if let Some(e) = args.epochs {
+        sim.epochs = e;
+    }
+    if let Some(s) = args.seed {
+        sim.seed = s;
+    }
+    hp.use_aot = args.aot;
+    Ok((machine, sim, hp))
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let (machine, sim, hp) = load_configs(args)?;
+    let w = workloads::by_name(&args.workload, machine.page_bytes, sim.epoch_secs)
+        .ok_or_else(|| format!("unknown workload {:?}", args.workload))?;
+    let p = policies::by_name(&args.policy, &machine, &hp)
+        .ok_or_else(|| format!("unknown policy {:?}", args.policy))?;
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+    let r = run_pair(&machine, &sim, w, p, window_frac);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["workload".to_string(), r.workload.clone()]);
+    t.row(vec!["policy".to_string(), r.policy.clone()]);
+    t.row(vec!["total wall (s)".to_string(), format!("{:.2}", r.total_wall_secs)]);
+    t.row(vec!["throughput (GB/s)".to_string(), format!("{:.2}", r.throughput / 1e9)]);
+    t.row(vec![
+        "steady throughput (GB/s)".to_string(),
+        format!("{:.2}", r.steady_throughput / 1e9),
+    ]);
+    t.row(vec!["energy (pJ/B)".to_string(), format!("{:.1}", r.energy_j_per_byte * 1e12)]);
+    t.row(vec!["migrated pages".to_string(), r.migrated_pages.to_string()]);
+    t.row(vec![
+        "DRAM traffic share".to_string(),
+        format!("{:.1}%", r.dram_traffic_share * 100.0),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let (machine, sim, hp) = load_configs(args)?;
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+    let mut t = Table::new(vec![
+        "policy",
+        "wall_s",
+        "throughput_GBs",
+        "speedup",
+        "energy_gain",
+        "migrated",
+    ]);
+    let mut base: Option<f64> = None;
+    let mut base_energy: Option<f64> = None;
+    for pname in FIG5_POLICIES {
+        let w = workloads::by_name(&args.workload, machine.page_bytes, sim.epoch_secs)
+            .ok_or_else(|| format!("unknown workload {:?}", args.workload))?;
+        let p = policies::by_name(pname, &machine, &hp).unwrap();
+        let r = run_pair(&machine, &sim, w, p, window_frac);
+        let speedup = base.map(|b| b / r.total_wall_secs).unwrap_or(1.0);
+        let egain = base_energy.map(|b| b / r.energy_j_per_byte).unwrap_or(1.0);
+        if pname == "adm-default" {
+            base = Some(r.total_wall_secs);
+            base_energy = Some(r.energy_j_per_byte);
+        }
+        t.row(vec![
+            pname.to_string(),
+            format!("{:.1}", r.total_wall_secs),
+            format!("{:.2}", r.throughput / 1e9),
+            format!("{speedup:.2}x"),
+            format!("{egain:.2}x"),
+            r.migrated_pages.to_string(),
+        ]);
+    }
+    println!("workload: {}\n{}", args.workload, t.render());
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let opts = opts_from(&args);
+    let machine = MachineConfig::paper_machine();
+    let result: Result<(), String> = match args.command.as_str() {
+        "help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "fig2" => {
+            emit(&fig2::report(&machine), &args.csv);
+            Ok(())
+        }
+        "fig3" => {
+            emit(&fig3::report(), &args.csv);
+            Ok(())
+        }
+        "fig5" => {
+            let (rep, _) = fig5::fig5_report(&opts);
+            emit(&rep, &args.csv);
+            Ok(())
+        }
+        "fig6" => {
+            let (rep5, matrix) = fig5::fig5_report(&opts);
+            emit(&rep5, &None);
+            emit(&fig5::fig6_report(&matrix), &args.csv);
+            Ok(())
+        }
+        "fig7" => {
+            let (rep, _) = fig5::fig7_report(&opts);
+            emit(&rep, &args.csv);
+            Ok(())
+        }
+        "table1" => {
+            emit(&tables::table1(), &args.csv);
+            Ok(())
+        }
+        "table2" => {
+            emit(&tables::table2(), &args.csv);
+            Ok(())
+        }
+        "table3" => {
+            emit(&tables::table3(), &args.csv);
+            Ok(())
+        }
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "all" => {
+            emit(&fig2::report(&machine), &args.csv);
+            emit(&fig3::report(), &args.csv);
+            let (rep5, matrix) = fig5::fig5_report(&opts);
+            emit(&rep5, &args.csv);
+            emit(&fig5::fig6_report(&matrix), &args.csv);
+            let (rep7, _) = fig5::fig7_report(&opts);
+            emit(&rep7, &args.csv);
+            emit(&tables::table1(), &args.csv);
+            emit(&tables::table2(), &args.csv);
+            emit(&tables::table3(), &args.csv);
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{HELP}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! DRAM device-level detail model: row-buffer locality effects on the
+//! random-access derate. DRAM's asymmetries are mild next to DCPMM's
+//! (paper Fig. 2: DRAM read/write curves only diverge when "stressed at
+//! extreme levels"), so this model is deliberately thin — a row-hit-rate
+//! dependent bandwidth derate and constants used by tests and docs.
+
+use crate::config::TierSpec;
+
+/// DDR4 row-buffer (page) size per bank.
+pub const ROW_BYTES: u64 = 8 * 1024;
+/// Banks per DDR4 channel (16 banks x ranks ~ parallelism proxy).
+pub const BANKS_PER_CHANNEL: u32 = 16;
+
+/// Effective read/write bandwidth derate for an access stream.
+/// Sequential streams hit open rows (derate 1.0); fully random accesses
+/// pay precharge+activate on most requests, landing at
+/// `spec.random_read_derate` of peak. DRAM treats reads and writes alike.
+pub fn bandwidth_derate(spec: &TierSpec, random_frac: f64) -> f64 {
+    let rf = random_frac.clamp(0.0, 1.0);
+    1.0 - (1.0 - spec.random_read_derate) * rf
+}
+
+/// Approximate row-hit rate for a stream with the given random fraction
+/// (reporting only).
+pub fn row_hit_rate(random_frac: f64) -> f64 {
+    let rf = random_frac.clamp(0.0, 1.0);
+    // sequential 64 B lines in an 8 KiB row: 127/128 hits; random: ~0
+    (1.0 - rf) * (1.0 - 64.0 / ROW_BYTES as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    #[test]
+    fn sequential_full_speed() {
+        let d = MachineConfig::paper_machine().dram;
+        assert!((bandwidth_derate(&d, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_derate_mild_compared_to_pm() {
+        let m = MachineConfig::paper_machine();
+        // DRAM's random penalty must be milder than DCPMM's
+        assert!(bandwidth_derate(&m.dram, 1.0) > m.pm.random_read_derate);
+    }
+
+    #[test]
+    fn row_hit_rate_bounds() {
+        assert!(row_hit_rate(0.0) > 0.98);
+        assert!(row_hit_rate(1.0) < 0.01);
+        let mid = row_hit_rate(0.5);
+        assert!(mid > 0.45 && mid < 0.55);
+    }
+}

@@ -1,0 +1,106 @@
+//! Memory-system energy model (paper Fig. 6 is measured via
+//! `perf stat -e power/energy-ram`; we integrate an access-energy +
+//! background-power model over the simulated run instead).
+
+use crate::config::{EnergyConfig, MachineConfig};
+
+use super::perfmodel::{EpochDemand, EpochOutcome};
+
+/// Accumulated energy accounting for a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyAccount {
+    /// Dynamic (access) energy, joules.
+    pub dynamic_j: f64,
+    /// Background (refresh/idle) energy, joules.
+    pub background_j: f64,
+    /// Total bytes moved (for per-access normalization).
+    pub total_bytes: f64,
+}
+
+impl EnergyAccount {
+    pub fn total_j(&self) -> f64 {
+        self.dynamic_j + self.background_j
+    }
+
+    /// Energy per byte actually accessed — the paper's "per-access memory
+    /// energy" metric (Fig. 6 normalizes by work, not wall time).
+    pub fn j_per_byte(&self) -> f64 {
+        if self.total_bytes <= 0.0 {
+            0.0
+        } else {
+            self.total_j() / self.total_bytes
+        }
+    }
+
+    /// Record one served epoch.
+    pub fn record(&mut self, cfg: &MachineConfig, demand: &EpochDemand, outcome: &EpochOutcome) {
+        let e: &EnergyConfig = &cfg.energy;
+        self.dynamic_j += demand.dram.read_bytes * e.dram_read_j_per_b
+            + demand.dram.write_bytes * e.dram_write_j_per_b
+            + demand.pm.read_bytes * e.pm_read_j_per_b
+            + demand.pm.write_bytes * e.pm_write_j_per_b;
+        self.background_j += (e.dram_background_w + e.pm_background_w) * outcome.wall_secs;
+        self.total_bytes += demand.dram.total() + demand.pm.total();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GB;
+    use crate::mem::{PerfModel, TierDemand};
+
+    fn setup() -> (MachineConfig, PerfModel) {
+        let cfg = MachineConfig::paper_machine();
+        let pm = PerfModel::new(&cfg);
+        (cfg, pm)
+    }
+
+    #[test]
+    fn pm_writes_cost_most() {
+        let (cfg, model) = setup();
+        let mk = |dram_w: f64, pm_w: f64| {
+            let mut d = EpochDemand::default();
+            d.dram.write_bytes = dram_w;
+            d.pm.write_bytes = pm_w;
+            d.app_bytes = dram_w + pm_w;
+            let out = model.service(&d);
+            let mut acc = EnergyAccount::default();
+            acc.record(&cfg, &d, &out);
+            acc
+        };
+        let dram_only = mk(10.0 * GB, 0.0);
+        let pm_only = mk(0.0, 10.0 * GB);
+        assert!(pm_only.dynamic_j > 5.0 * dram_only.dynamic_j);
+        // background also grows because PM epochs run longer
+        assert!(pm_only.background_j > dram_only.background_j);
+    }
+
+    #[test]
+    fn per_byte_normalization() {
+        let (cfg, model) = setup();
+        let mut d = EpochDemand::default();
+        d.dram = TierDemand::new(4.0 * GB, 1.0 * GB, 0.0);
+        d.app_bytes = 5.0 * GB;
+        let out = model.service(&d);
+        let mut acc = EnergyAccount::default();
+        acc.record(&cfg, &d, &out);
+        assert!((acc.total_bytes - 5.0 * GB).abs() < 1.0);
+        assert!(acc.j_per_byte() > 0.0);
+        // slower placements burn more background energy per byte
+        let mut d2 = EpochDemand::default();
+        d2.pm = TierDemand::new(4.0 * GB, 1.0 * GB, 0.0);
+        d2.app_bytes = 5.0 * GB;
+        let out2 = model.service(&d2);
+        let mut acc2 = EnergyAccount::default();
+        acc2.record(&cfg, &d2, &out2);
+        assert!(acc2.j_per_byte() > acc.j_per_byte());
+    }
+
+    #[test]
+    fn empty_account_is_zero() {
+        let acc = EnergyAccount::default();
+        assert_eq!(acc.total_j(), 0.0);
+        assert_eq!(acc.j_per_byte(), 0.0);
+    }
+}

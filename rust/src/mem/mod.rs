@@ -1,0 +1,13 @@
+//! Memory substrate: the calibrated DRAM+DCPMM performance model that
+//! replaces the paper's physical Optane machine (see DESIGN.md §2 for the
+//! substitution argument), plus device-level detail models, the energy
+//! model, and the PCMon counter facility Control reads.
+
+pub mod perfmodel;
+pub mod dcpmm;
+pub mod dram;
+pub mod energy;
+pub mod pcmon;
+
+pub use perfmodel::{EpochDemand, EpochOutcome, PerfModel, TierDemand, TierLoad};
+pub use pcmon::{Pcmon, PcmonSnapshot};

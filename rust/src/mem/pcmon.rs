@@ -1,0 +1,112 @@
+//! Processor Counter Monitor (PCMon) stand-in.
+//!
+//! On the real machine, HyPlacer's Control reads per-iMC bandwidth
+//! counters from the text file PCMon periodically rewrites (paper §4.3).
+//! Here the coordinator feeds served-epoch statistics into [`Pcmon`], and
+//! policies read [`PcmonSnapshot`]s through the same pull interface —
+//! including PCMon's sampling-window semantics (counters are only as
+//! fresh as the last completed window).
+
+use crate::config::Tier;
+use crate::mem::perfmodel::{EpochDemand, EpochOutcome};
+
+/// One completed sampling window's bandwidth readings (B/s).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PcmonSnapshot {
+    pub dram_read_bw: f64,
+    pub dram_write_bw: f64,
+    pub pm_read_bw: f64,
+    pub pm_write_bw: f64,
+    /// Wall seconds the window covered.
+    pub window_secs: f64,
+    /// Monotonic id of the window (0 = nothing sampled yet).
+    pub window_id: u64,
+}
+
+impl PcmonSnapshot {
+    pub fn read_bw(&self, t: Tier) -> f64 {
+        match t {
+            Tier::Dram => self.dram_read_bw,
+            Tier::Pm => self.pm_read_bw,
+        }
+    }
+    pub fn write_bw(&self, t: Tier) -> f64 {
+        match t {
+            Tier::Dram => self.dram_write_bw,
+            Tier::Pm => self.pm_write_bw,
+        }
+    }
+    pub fn total_bw(&self) -> f64 {
+        self.dram_read_bw + self.dram_write_bw + self.pm_read_bw + self.pm_write_bw
+    }
+}
+
+/// The counter facility. `record_epoch` is called by the coordinator after
+/// each served epoch; `snapshot` is what Control "reads from the file".
+#[derive(Clone, Debug, Default)]
+pub struct Pcmon {
+    current: PcmonSnapshot,
+    windows: u64,
+}
+
+impl Pcmon {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_epoch(&mut self, demand: &EpochDemand, outcome: &EpochOutcome) {
+        let w = outcome.wall_secs.max(1e-12);
+        self.windows += 1;
+        self.current = PcmonSnapshot {
+            dram_read_bw: demand.dram.read_bytes / w,
+            dram_write_bw: demand.dram.write_bytes / w,
+            pm_read_bw: demand.pm.read_bytes / w,
+            pm_write_bw: demand.pm.write_bytes / w,
+            window_secs: w,
+            window_id: self.windows,
+        };
+    }
+
+    /// Latest completed window (what Control reads).
+    pub fn snapshot(&self) -> PcmonSnapshot {
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, GB};
+    use crate::mem::{PerfModel, TierDemand};
+
+    #[test]
+    fn snapshot_reflects_last_window() {
+        let model = PerfModel::new(&MachineConfig::paper_machine());
+        let mut pcm = Pcmon::new();
+        assert_eq!(pcm.snapshot().window_id, 0);
+
+        let mut d = EpochDemand::default();
+        d.dram = TierDemand::new(10.0 * GB, 2.0 * GB, 0.0);
+        d.pm = TierDemand::new(1.0 * GB, 0.1 * GB, 0.0);
+        d.app_bytes = 13.1 * GB;
+        let out = model.service(&d);
+        pcm.record_epoch(&d, &out);
+
+        let s = pcm.snapshot();
+        assert_eq!(s.window_id, 1);
+        assert!((s.dram_read_bw * s.window_secs - 10.0 * GB).abs() < 1.0);
+        assert!((s.pm_write_bw * s.window_secs - 0.1 * GB).abs() < 1.0);
+        assert!(s.read_bw(Tier::Dram) > s.read_bw(Tier::Pm));
+
+        // next epoch fully replaces the window
+        let mut d2 = EpochDemand::default();
+        d2.pm = TierDemand::new(5.0 * GB, 5.0 * GB, 0.0);
+        d2.app_bytes = 10.0 * GB;
+        let out2 = model.service(&d2);
+        pcm.record_epoch(&d2, &out2);
+        let s2 = pcm.snapshot();
+        assert_eq!(s2.window_id, 2);
+        assert_eq!(s2.dram_read_bw, 0.0);
+        assert!(s2.pm_write_bw > 0.0);
+    }
+}

@@ -1,0 +1,488 @@
+//! The calibrated DRAM+DCPMM performance response surface.
+//!
+//! This is the substrate that stands in for the paper's physical machine:
+//! given the byte demand each tier receives in an epoch (reads, writes,
+//! randomness; app traffic plus migration traffic), it produces the
+//! epoch's wall-clock time, per-tier achieved bandwidth, loaded latency
+//! and utilization. All placement-policy comparisons reduce to how their
+//! page distributions shape this demand.
+//!
+//! Model structure (anchors in DESIGN.md §6):
+//!  * per-tier bandwidth ceilings: peak read/write per channel x channels,
+//!    derated for random access (DRAM row misses; DCPMM XPLine prefetch
+//!    miss + read-modify-write store amplification),
+//!  * mixed-stream ceiling: mix-weighted harmonic mean of the read/write
+//!    ceilings (reads and writes share each channel),
+//!  * loaded latency: idle x (1 + q·ρ/(1−ρ)), ρ = utilization clamped to
+//!    0.95 — the hyperbolic "hockey stick" of Fig. 2,
+//!  * epoch time: max(cpu-bound floor, latency-bound floor, combined
+//!    tier busy time), tiers overlapping by `overlap`.
+
+use crate::config::{MachineConfig, Tier};
+
+use super::{dcpmm, dram};
+
+/// Byte demand offered to one tier during an epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierDemand {
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+    /// Fraction of traffic that is effectively random at device grain.
+    pub random_frac: f64,
+}
+
+impl TierDemand {
+    pub fn new(read_bytes: f64, write_bytes: f64, random_frac: f64) -> Self {
+        TierDemand { read_bytes, write_bytes, random_frac }
+    }
+    pub fn total(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+    pub fn write_frac(&self) -> f64 {
+        let t = self.total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.write_bytes / t
+        }
+    }
+    pub fn add(&mut self, other: &TierDemand) {
+        // blend randomness weighted by bytes
+        let t = self.total() + other.total();
+        if t > 0.0 {
+            self.random_frac =
+                (self.random_frac * self.total() + other.random_frac * other.total()) / t;
+        }
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+    }
+}
+
+/// Whole-machine demand for an epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochDemand {
+    pub dram: TierDemand,
+    pub pm: TierDemand,
+    /// App-side bytes processed (sets the CPU-bound floor; usually equals
+    /// total app traffic, excludes migration traffic).
+    pub app_bytes: f64,
+    /// Extra fixed time spent in migration syscalls this epoch.
+    pub overhead_secs: f64,
+}
+
+impl EpochDemand {
+    pub fn tier(&self, t: Tier) -> &TierDemand {
+        match t {
+            Tier::Dram => &self.dram,
+            Tier::Pm => &self.pm,
+        }
+    }
+    pub fn tier_mut(&mut self, t: Tier) -> &mut TierDemand {
+        match t {
+            Tier::Dram => &mut self.dram,
+            Tier::Pm => &mut self.pm,
+        }
+    }
+}
+
+/// Per-tier outcome of serving an epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierLoad {
+    /// Achieved bandwidth (B/s) over the epoch wall time.
+    pub achieved_bw: f64,
+    /// Mix- and randomness-adjusted bandwidth ceiling (B/s).
+    pub ceiling_bw: f64,
+    /// Utilization ρ in [0, 0.95].
+    pub utilization: f64,
+    /// Loaded read latency, ns.
+    pub read_latency_ns: f64,
+    /// Busy time serving this tier's demand, seconds.
+    pub busy_secs: f64,
+}
+
+/// Outcome of serving one epoch's demand.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochOutcome {
+    pub wall_secs: f64,
+    pub dram: TierLoad,
+    pub pm: TierLoad,
+}
+
+impl EpochOutcome {
+    pub fn tier(&self, t: Tier) -> &TierLoad {
+        match t {
+            Tier::Dram => &self.dram,
+            Tier::Pm => &self.pm,
+        }
+    }
+}
+
+/// The response-surface evaluator. Cheap to construct; holds only config.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    cfg: MachineConfig,
+}
+
+pub const RHO_MAX: f64 = 0.95;
+
+impl PerfModel {
+    pub fn new(cfg: &MachineConfig) -> Self {
+        PerfModel { cfg: cfg.clone() }
+    }
+
+    pub fn config(&self) -> &MachineConfig {
+        &self.cfg
+    }
+
+    /// Mix-adjusted bandwidth ceiling for a tier under a demand.
+    pub fn ceiling(&self, tier: Tier, demand: &TierDemand) -> f64 {
+        let spec = self.cfg.tier(tier);
+        let (read_ceiling, write_ceiling) = match tier {
+            Tier::Dram => {
+                let derate = dram::bandwidth_derate(spec, demand.random_frac);
+                (spec.peak_read_bw() * derate, spec.peak_write_bw() * derate)
+            }
+            Tier::Pm => {
+                let rd = dcpmm::read_derate(spec, demand.random_frac);
+                let amp = dcpmm::write_amplification(spec, demand.random_frac);
+                (spec.peak_read_bw() * rd, spec.peak_write_bw() / amp)
+            }
+        };
+        let wf = demand.write_frac();
+        let rf = 1.0 - wf;
+        if demand.total() <= 0.0 {
+            return read_ceiling;
+        }
+        1.0 / (rf / read_ceiling.max(1.0) + wf / write_ceiling.max(1.0))
+    }
+
+    /// Busy time for a tier to serve `demand` in isolation (no
+    /// cross-tier interference) — used by characterization tooling.
+    pub fn busy_time(&self, tier: Tier, demand: &TierDemand) -> f64 {
+        let t = demand.total();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        t / self.ceiling(tier, demand)
+    }
+
+    /// Loaded read latency (ns) at utilization ρ.
+    pub fn loaded_latency_ns(&self, tier: Tier, demand: &TierDemand, rho: f64) -> f64 {
+        let spec = self.cfg.tier(tier);
+        let wf = demand.write_frac();
+        let idle = (1.0 - wf) * spec.idle_read_lat_ns + wf * spec.idle_write_lat_ns;
+        let r = rho.clamp(0.0, RHO_MAX);
+        idle * (1.0 + spec.queue_factor * r / (1.0 - r))
+    }
+
+    /// Latency-bound service time for the *random* fraction of a tier's
+    /// traffic: dependent, prefetch-hostile accesses sustain only
+    /// `mlp` lines in flight, so serving them takes
+    /// lines x loaded-latency / mlp. Sequential traffic is prefetched and
+    /// never latency-bound (the bandwidth term covers it). This term is
+    /// what makes random-access pages stranded in DCPMM catastrophic —
+    /// the CG pathology behind the paper's 11x headline gap.
+    fn latency_time(&self, tier: Tier, demand: &TierDemand, rho: f64) -> f64 {
+        let rand_bytes = demand.total() * demand.random_frac;
+        if rand_bytes <= 0.0 {
+            return 0.0;
+        }
+        let lines = rand_bytes / self.cfg.line_bytes as f64;
+        lines * self.loaded_latency_ns(tier, demand, rho) * 1e-9 / self.cfg.mlp
+    }
+
+    /// Serve one epoch's demand; the central entry point.
+    pub fn service(&self, demand: &EpochDemand) -> EpochOutcome {
+        let mut loads = [TierLoad::default(); 2];
+        let mut busy = [0.0f64; 2];
+        // Cross-tier iMC interference: concurrent streams to the other
+        // tier derate this tier's ceiling (same physics as in
+        // `closed_loop_throughput`; it is what keeps the aggregate of a
+        // balanced split far below the sum of nominal peaks).
+        let total = demand.dram.total() + demand.pm.total();
+        let k = self.cfg.cross_tier_interference;
+        for (i, tier) in [Tier::Dram, Tier::Pm].into_iter().enumerate() {
+            let d = demand.tier(tier);
+            let other_share = if total > 0.0 {
+                demand.tier(tier.other()).total() / total
+            } else {
+                0.0
+            };
+            let ceiling = self.ceiling(tier, d) * (1.0 - k * other_share);
+            let bw_time = if d.total() > 0.0 { d.total() / ceiling } else { 0.0 };
+            // ρ from this tier's share of the (provisional) epoch time:
+            // tiers run concurrently, so utilization is busy/max(busy).
+            busy[i] = bw_time;
+            loads[i].ceiling_bw = ceiling;
+            loads[i].busy_secs = bw_time;
+        }
+        // Combined tier time: overlap-weighted between parallel and serial.
+        let t_parallel = busy[0].max(busy[1]);
+        let t_serial = busy[0] + busy[1];
+        let t_tiers = self.cfg.overlap * t_parallel + (1.0 - self.cfg.overlap) * t_serial;
+
+        // Latency terms use ρ estimated against the provisional wall
+        // time; random streams to both tiers are issued by the same
+        // threads, so their latency-bound times add.
+        let provisional = t_tiers.max(1e-12);
+        let mut t_latency: f64 = 0.0;
+        for (i, tier) in [Tier::Dram, Tier::Pm].into_iter().enumerate() {
+            let d = demand.tier(tier);
+            let rho = (busy[i] / provisional).clamp(0.0, RHO_MAX);
+            loads[i].utilization = rho;
+            loads[i].read_latency_ns = self.loaded_latency_ns(tier, d, rho);
+            t_latency += self.latency_time(tier, d, rho);
+        }
+
+        let t_cpu = if self.cfg.cpu_rate > 0.0 { demand.app_bytes / self.cfg.cpu_rate } else { 0.0 };
+        let wall = t_tiers.max(t_latency).max(t_cpu) + demand.overhead_secs;
+        let wall = wall.max(1e-12);
+
+        for (i, tier) in [Tier::Dram, Tier::Pm].into_iter().enumerate() {
+            loads[i].achieved_bw = demand.tier(tier).total() / wall;
+        }
+        EpochOutcome { wall_secs: wall, dram: loads[0], pm: loads[1] }
+    }
+
+    /// Closed-loop (MLC-style) throughput for `threads` threads issuing
+    /// line-grain accesses against a page distribution with `dram_share`
+    /// of traffic landing in DRAM. Used by the Fig. 3 harness.
+    ///
+    /// Little's law per thread: each thread keeps `mlp_per_thread` lines
+    /// outstanding, so thread-side throughput is
+    /// threads x mlp x line / avg-loaded-latency; tier ceilings cap the
+    /// per-tier shares. Loaded latency depends on utilization, which
+    /// depends on throughput — solved by damped fixed-point iteration.
+    pub fn closed_loop_throughput(
+        &self,
+        threads: u32,
+        write_frac: f64,
+        random_frac: f64,
+        dram_share: f64,
+    ) -> f64 {
+        let r = dram_share.clamp(0.0, 1.0);
+        let line = self.cfg.line_bytes as f64;
+        let mk = |share: f64| TierDemand {
+            read_bytes: share * (1.0 - write_frac),
+            write_bytes: share * write_frac,
+            random_frac,
+        };
+        let d_dram = mk(r);
+        let d_pm = mk(1.0 - r);
+        // iMC interference: concurrent streams to the other tier derate
+        // this tier's effective ceiling (§3.3's "aggregate bandwidth far
+        // below the sum of nominal peaks").
+        let k = self.cfg.cross_tier_interference;
+        let dram_ceil = self.ceiling(Tier::Dram, &d_dram) * (1.0 - k * (1.0 - r));
+        let pm_ceil = self.ceiling(Tier::Pm, &d_pm) * (1.0 - k * r);
+        let issue = threads as f64 * self.cfg.mlp_per_thread * line;
+        let mut tp = 1e9f64;
+        for _ in 0..60 {
+            let rho_d = if r > 0.0 { (tp * r / dram_ceil).clamp(0.0, RHO_MAX) } else { 0.0 };
+            let rho_p =
+                if r < 1.0 { (tp * (1.0 - r) / pm_ceil).clamp(0.0, RHO_MAX) } else { 0.0 };
+            let lat_d = self.loaded_latency_ns(Tier::Dram, &d_dram, rho_d);
+            let lat_p = self.loaded_latency_ns(Tier::Pm, &d_pm, rho_p);
+            let avg_lat_ns = r * lat_d + (1.0 - r) * lat_p;
+            let mut cap = issue / (avg_lat_ns * 1e-9);
+            if r > 0.0 {
+                cap = cap.min(dram_ceil / r);
+            }
+            if r < 1.0 {
+                cap = cap.min(pm_ceil / (1.0 - r));
+            }
+            tp = 0.5 * tp + 0.5 * cap;
+        }
+        tp
+    }
+
+    /// Open-loop characterization used by the Fig. 2 harness: offer a
+    /// demand rate (B/s) with a given write fraction / randomness to a
+    /// single tier and report (achieved bandwidth B/s, loaded read
+    /// latency ns).
+    pub fn characterize(
+        &self,
+        tier: Tier,
+        offered_bw: f64,
+        write_frac: f64,
+        random_frac: f64,
+    ) -> (f64, f64) {
+        let demand = TierDemand {
+            read_bytes: offered_bw * (1.0 - write_frac),
+            write_bytes: offered_bw * write_frac,
+            random_frac,
+        };
+        let ceiling = self.ceiling(tier, &demand);
+        let achieved = offered_bw.min(ceiling);
+        let rho = (offered_bw / ceiling).clamp(0.0, RHO_MAX);
+        let lat = self.loaded_latency_ns(tier, &demand, rho);
+        (achieved, lat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, GB};
+
+    fn model() -> PerfModel {
+        PerfModel::new(&MachineConfig::paper_machine())
+    }
+
+    fn reads(bytes: f64) -> TierDemand {
+        TierDemand::new(bytes, 0.0, 0.0)
+    }
+
+    fn writes(bytes: f64) -> TierDemand {
+        TierDemand::new(0.0, bytes, 0.0)
+    }
+
+    #[test]
+    fn dram_read_ceiling_is_peak() {
+        let m = model();
+        let c = m.ceiling(Tier::Dram, &reads(1.0 * GB));
+        assert!((c - 34.0 * GB).abs() / GB < 1e-9);
+    }
+
+    #[test]
+    fn pm_write_ceiling_far_below_read() {
+        let m = model();
+        let r = m.ceiling(Tier::Pm, &reads(1.0 * GB));
+        let w = m.ceiling(Tier::Pm, &writes(1.0 * GB));
+        assert!(w < 0.5 * r, "pm write {w} vs read {r}");
+    }
+
+    #[test]
+    fn random_pm_writes_collapse() {
+        let m = model();
+        let seq = m.ceiling(Tier::Pm, &writes(1.0 * GB));
+        let rnd = m.ceiling(Tier::Pm, &TierDemand::new(0.0, 1.0 * GB, 1.0));
+        assert!(rnd < 0.4 * seq, "rnd {rnd} vs seq {seq}");
+    }
+
+    #[test]
+    fn mixed_ceiling_between_pure_ceilings() {
+        let m = model();
+        for tier in [Tier::Dram, Tier::Pm] {
+            let r = m.ceiling(tier, &reads(1.0));
+            let w = m.ceiling(tier, &writes(1.0));
+            let mix = m.ceiling(tier, &TierDemand::new(2.0, 1.0, 0.0));
+            assert!(mix < r && mix > w, "{tier:?}: {w} <= {mix} <= {r}");
+        }
+    }
+
+    #[test]
+    fn loaded_latency_hockey_stick() {
+        let m = model();
+        let d = reads(1.0);
+        let idle = m.loaded_latency_ns(Tier::Pm, &d, 0.0);
+        let half = m.loaded_latency_ns(Tier::Pm, &d, 0.5);
+        let sat = m.loaded_latency_ns(Tier::Pm, &d, 0.95);
+        assert!(idle < half && half < sat);
+        assert!(sat > 5.0 * idle, "saturated {sat} vs idle {idle}");
+    }
+
+    #[test]
+    fn paper_latency_gap_at_saturation_near_11x() {
+        // Fig. 2 / Observation 1: up to ~11.3x read-latency cost for
+        // DCPMM vs DRAM serving the same all-read workload.
+        let m = model();
+        let d = reads(1.0);
+        let pm_sat = m.loaded_latency_ns(Tier::Pm, &d, RHO_MAX);
+        let dram_light = m.loaded_latency_ns(Tier::Dram, &d, 0.3);
+        let ratio = pm_sat / dram_light;
+        assert!(ratio > 8.0 && ratio < 16.0, "latency gap {ratio}");
+    }
+
+    #[test]
+    fn service_zero_demand_is_instant() {
+        let m = model();
+        let out = m.service(&EpochDemand::default());
+        assert!(out.wall_secs <= 1e-9);
+    }
+
+    #[test]
+    fn service_dram_faster_than_pm() {
+        let m = model();
+        let mut d1 = EpochDemand::default();
+        d1.dram = TierDemand::new(8.0 * GB, 2.0 * GB, 0.0);
+        d1.app_bytes = 10.0 * GB;
+        let mut d2 = EpochDemand::default();
+        d2.pm = TierDemand::new(8.0 * GB, 2.0 * GB, 0.0);
+        d2.app_bytes = 10.0 * GB;
+        let t1 = m.service(&d1).wall_secs;
+        let t2 = m.service(&d2).wall_secs;
+        assert!(t2 > 1.5 * t1, "dram {t1} vs pm {t2}");
+    }
+
+    #[test]
+    fn service_monotone_in_demand() {
+        let m = model();
+        let mut base = EpochDemand::default();
+        base.dram = TierDemand::new(5.0 * GB, 1.0 * GB, 0.2);
+        base.pm = TierDemand::new(2.0 * GB, 0.5 * GB, 0.2);
+        base.app_bytes = 8.5 * GB;
+        let t0 = m.service(&base).wall_secs;
+        let mut more = base;
+        more.pm.write_bytes += 2.0 * GB;
+        assert!(m.service(&more).wall_secs > t0);
+        let mut more_dram = base;
+        more_dram.dram.read_bytes += 20.0 * GB;
+        assert!(m.service(&more_dram).wall_secs > t0);
+    }
+
+    #[test]
+    fn overhead_adds_directly() {
+        let m = model();
+        let mut d = EpochDemand::default();
+        d.dram = reads(1.0 * GB);
+        d.app_bytes = 1.0 * GB;
+        let t0 = m.service(&d).wall_secs;
+        d.overhead_secs = 0.25;
+        let t1 = m.service(&d).wall_secs;
+        assert!((t1 - t0 - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_floor_binds_for_tiny_demand() {
+        let m = model();
+        let mut d = EpochDemand::default();
+        d.dram = reads(1.0 * GB);
+        d.app_bytes = 300.0 * GB; // app compute dominates
+        let t = m.service(&d).wall_secs;
+        assert!((t - 2.0).abs() < 0.01, "cpu floor: {t}"); // 300 GB / 150 GB/s
+    }
+
+    #[test]
+    fn characterize_matches_fig2_shape() {
+        // DCPMM curves diverge by write intensity well below DRAM's
+        // divergence point (Observation 2's geometry).
+        let m = model();
+        // demand at 10 GB/s: pm read vs 2R:1W already far apart
+        let (bw_r, _) = m.characterize(Tier::Pm, 10.0 * GB, 0.0, 0.0);
+        let (bw_w, _) = m.characterize(Tier::Pm, 10.0 * GB, 1.0 / 3.0, 0.0);
+        assert!(bw_r > bw_w);
+        // same offered demand on DRAM: no divergence yet
+        let (d_r, _) = m.characterize(Tier::Dram, 10.0 * GB, 0.0, 0.0);
+        let (d_w, _) = m.characterize(Tier::Dram, 10.0 * GB, 1.0 / 3.0, 0.0);
+        assert!((d_r - d_w).abs() < 1e-6);
+    }
+
+    #[test]
+    fn utilization_capped() {
+        let m = model();
+        let mut d = EpochDemand::default();
+        d.pm = TierDemand::new(500.0 * GB, 500.0 * GB, 1.0);
+        d.app_bytes = 1000.0 * GB;
+        let out = m.service(&d);
+        assert!(out.pm.utilization <= RHO_MAX + 1e-12);
+    }
+
+    #[test]
+    fn demand_add_blends_randomness() {
+        let mut a = TierDemand::new(1.0, 1.0, 0.0);
+        a.add(&TierDemand::new(2.0, 0.0, 1.0));
+        assert!((a.random_frac - 0.5).abs() < 1e-12);
+        assert_eq!(a.total(), 4.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! `ADM-default`: App Direct Mode with Linux's default first-touch NUMA
+//! policy and **no** dynamic placement (paper §5.1, baseline (a) and the
+//! denominator of every Fig. 5/6 bar). Pages land on the fastest node
+//! with free space at first touch and never move again.
+
+use super::{Policy, Table1Row};
+
+#[derive(Default)]
+pub struct AdmDefault;
+
+impl AdmDefault {
+    pub fn new() -> Self {
+        AdmDefault
+    }
+}
+
+impl Policy for AdmDefault {
+    fn name(&self) -> &'static str {
+        "adm-default"
+    }
+
+    // place_new: trait default (fill DRAM first); epoch_tick: no-op.
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "ADM-default (Linux first-touch)",
+            hmh: "DRAM+DCPMM",
+            placement_policy: "Fill DRAM first (static)",
+            selection_criteria: "none",
+            selection_algorithm: "n/a",
+            modifications: "none",
+            full_implementation: true,
+            evaluated_on_dcpmm: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, Tier};
+    use crate::mem::PcmonSnapshot;
+    use crate::policies::PolicyCtx;
+    use crate::vm::PageTable;
+
+    #[test]
+    fn never_migrates() {
+        let cfg = MachineConfig::paper_machine();
+        let mut pt = PageTable::new(8, 1024, 4 * 1024, 4 * 1024);
+        let mut p = AdmDefault::new();
+        for page in 0..8 {
+            let tier = p.place_new(page, &pt);
+            assert!(pt.allocate(page, tier));
+        }
+        assert_eq!(pt.used_pages(Tier::Dram), 4);
+        assert_eq!(pt.used_pages(Tier::Pm), 4);
+        let mut ctx = PolicyCtx {
+            pt: &mut pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg: &cfg,
+            epoch: 0,
+            epoch_secs: 1.0,
+        };
+        let plan = p.epoch_tick(&mut ctx);
+        assert!(plan.is_empty());
+    }
+}

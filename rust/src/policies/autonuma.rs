@@ -1,0 +1,246 @@
+//! Intel's tiered AutoNUMA extension (Huang, tiering-0.4 [16], [17]) as
+//! evaluated by the paper (§5.1 option 1).
+//!
+//! Mechanism modeled after the patch series: AutoNUMA's sampling scanner
+//! unmaps/protects a sliding window of pages each period; pages that
+//! fault again ("hint faults") accumulate access proof. A DCPMM page
+//! needs `PROMOTE_THRESHOLD` observed accesses in recent windows to be
+//! promoted; demotion reuses kswapd reclaim — when DRAM crosses a
+//! watermark, cold DRAM pages (no recent access proof) are pushed down.
+//! Promotion is rate-limited (the patch's default ~256 MB/s).
+//!
+//! In the simulator, "protect + hint fault" collapses to: scan window
+//! clears R/D bits; on the next pass a set R bit counts as one access
+//! proof. The scanner covers `scan_window` pages per epoch, so large
+//! footprints take many epochs to profile — the sluggishness the paper
+//! observes on BT ("autonuma fails to improve ADM-default on BT").
+
+use crate::config::{MachineConfig, Tier};
+use crate::vm::{MigrationPlan, PageWalker, WalkControl};
+
+use super::{Policy, PolicyCtx, Table1Row};
+
+const PROMOTE_THRESHOLD: u8 = 2;
+const PROOF_DECAY_EPOCHS: u32 = 24;
+
+pub struct AutoNuma {
+    scanner: PageWalker,
+    demote_hand: PageWalker,
+    /// access proof counters, lazily sized
+    proof: Vec<u8>,
+    last_decay: u32,
+    /// pages scanned per epoch
+    scan_window: usize,
+    /// promotion rate limit, pages per epoch
+    promote_budget: usize,
+    dram_watermark: f64,
+}
+
+impl AutoNuma {
+    pub fn new(cfg: &MachineConfig) -> Self {
+        AutoNuma {
+            scanner: PageWalker::new(),
+            demote_hand: PageWalker::new(),
+            proof: Vec::new(),
+            last_decay: 0,
+            // PTE scanning is cheap: cover 16 GiB of address space per
+            // period; promotion rate-limited to 2 GiB/s (the tiering
+            // patch's ratelimit knob scaled to the simulator epoch)
+            scan_window: (16u64 * 1024 * 1024 * 1024 / cfg.page_bytes).max(1) as usize,
+            promote_budget: (2u64 * 1024 * 1024 * 1024 / cfg.page_bytes).max(1) as usize,
+            dram_watermark: 0.97,
+        }
+    }
+}
+
+impl Policy for AutoNuma {
+    fn name(&self) -> &'static str {
+        "autonuma"
+    }
+
+    fn epoch_tick(&mut self, ctx: &mut PolicyCtx) -> MigrationPlan {
+        let pt = &mut *ctx.pt;
+        if self.proof.len() < pt.len() as usize {
+            self.proof.resize(pt.len() as usize, 0);
+        }
+        // periodically decay access proof so stale hotness ages out
+        if ctx.epoch.saturating_sub(self.last_decay) >= PROOF_DECAY_EPOCHS {
+            self.last_decay = ctx.epoch;
+            for p in self.proof.iter_mut() {
+                *p /= 2;
+            }
+        }
+
+        // Sampling scan: observe R bits in the window, count proof, then
+        // clear (the "protect" step of the next sampling round).
+        let mut promote = Vec::new();
+        let budget = self.promote_budget;
+        let proof = &mut self.proof;
+        self.scanner.walk(pt, self.scan_window, |page, flags, pt| {
+            if flags.referenced() {
+                let c = &mut proof[page as usize];
+                *c = c.saturating_add(1);
+                if flags.tier() == Tier::Pm && *c >= PROMOTE_THRESHOLD && promote.len() < budget {
+                    promote.push(page);
+                }
+            }
+            pt.clear_rd(page);
+            WalkControl::Continue
+        });
+
+        // Demotion via reclaim when DRAM is above the watermark: push the
+        // coldest DRAM pages (zero proof) down to make room.
+        let mut demote = Vec::new();
+        let cap = pt.capacity_pages(Tier::Dram);
+        let used = pt.used_pages(Tier::Dram);
+        let over = (used + promote.len() as u64)
+            .saturating_sub((self.dram_watermark * cap as f64) as u64);
+        if over > 0 {
+            let need = over as usize;
+            let proof = &self.proof;
+            // kswapd-style second chance: referenced pages get their bit
+            // cleared and survive this pass; unreferenced, proof-less
+            // pages are reclaim victims
+            self.demote_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
+                if flags.tier() == Tier::Dram {
+                    if flags.referenced() {
+                        pt.clear_rd(page);
+                    } else if proof[page as usize] == 0 {
+                        demote.push(page);
+                    }
+                }
+                if demote.len() >= need {
+                    WalkControl::Stop
+                } else {
+                    WalkControl::Continue
+                }
+            });
+        }
+
+        MigrationPlan { promote, demote, exchange: Vec::new() }
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "Tiered AutoNUMA [16]",
+            hmh: "DRAM+DCPMM",
+            placement_policy: "Fill DRAM first",
+            selection_criteria: "Hotness+r/w",
+            selection_algorithm: "LRU (hint faults)",
+            modifications: "OS",
+            full_implementation: true,
+            evaluated_on_dcpmm: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PcmonSnapshot;
+    use crate::vm::PageTable;
+
+    fn tick(p: &mut AutoNuma, cfg: &MachineConfig, pt: &mut PageTable, epoch: u32) -> MigrationPlan {
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg,
+            epoch,
+            epoch_secs: 1.0,
+        };
+        p.epoch_tick(&mut ctx)
+    }
+
+    fn setup(total: u32, dram: u64, pm: u64) -> (MachineConfig, PageTable) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        (cfg, PageTable::new(total, 1024, dram * 1024, pm * 1024))
+    }
+
+    #[test]
+    fn needs_repeated_proof_before_promoting() {
+        let (cfg, mut pt) = setup(4, 10, 10);
+        let mut p = AutoNuma::new(&cfg);
+        pt.allocate(0, Tier::Pm);
+        pt.touch(0, false);
+        // first observation: proof=1 < threshold, no promotion
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert!(plan.promote.is_empty());
+        // page stays hot: touched again before next scan
+        pt.touch(0, false);
+        let plan = tick(&mut p, &cfg, &mut pt, 1);
+        assert_eq!(plan.promote, vec![0]);
+    }
+
+    #[test]
+    fn one_shot_access_never_promotes() {
+        let (cfg, mut pt) = setup(4, 10, 10);
+        let mut p = AutoNuma::new(&cfg);
+        pt.allocate(0, Tier::Pm);
+        pt.touch(0, false);
+        for e in 0..5 {
+            let plan = tick(&mut p, &cfg, &mut pt, e);
+            assert!(plan.promote.is_empty(), "epoch {e}");
+        }
+    }
+
+    #[test]
+    fn scan_window_limits_profiling_speed() {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        let mut p = AutoNuma::new(&cfg);
+        p.scan_window = 2; // tiny window
+        let mut pt = PageTable::new(8, 1024, 10 * 1024, 10 * 1024);
+        for page in 0..8 {
+            pt.allocate(page, Tier::Pm);
+            pt.touch(page, false);
+        }
+        let mut ctx = PolicyCtx {
+            pt: &mut pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg: &cfg,
+            epoch: 0,
+            epoch_secs: 1.0,
+        };
+        let _ = p.epoch_tick(&mut ctx);
+        // only the 2-page window was observed/cleared
+        let cleared = (0..8).filter(|&pg| !pt.flags(pg).referenced()).count();
+        assert_eq!(cleared, 2);
+    }
+
+    #[test]
+    fn demotes_cold_pages_over_watermark() {
+        let (cfg, mut pt) = setup(12, 10, 10);
+        let mut p = AutoNuma::new(&cfg);
+        for page in 0..10 {
+            pt.allocate(page, Tier::Dram);
+        }
+        // DRAM 100% full; pages 0..2 hot (proof builds), rest idle
+        for e in 0..3 {
+            for page in 0..3u32 {
+                pt.touch(page, false);
+            }
+            let plan = tick(&mut p, &cfg, &mut pt, e);
+            for d in &plan.demote {
+                assert!(*d >= 3, "hot page {d} must not be demoted");
+            }
+            if !plan.demote.is_empty() {
+                return;
+            }
+        }
+        panic!("never demoted despite DRAM pressure");
+    }
+
+    #[test]
+    fn proof_decays() {
+        let (cfg, mut pt) = setup(4, 10, 10);
+        let mut p = AutoNuma::new(&cfg);
+        pt.allocate(0, Tier::Pm);
+        pt.touch(0, false);
+        let _ = tick(&mut p, &cfg, &mut pt, 0);
+        assert_eq!(p.proof[0], 1);
+        // long idle gap: decay halves the proof
+        let _ = tick(&mut p, &cfg, &mut pt, PROOF_DECAY_EPOCHS + 1);
+        assert_eq!(p.proof[0], 0);
+    }
+}

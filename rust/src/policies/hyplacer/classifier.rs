@@ -1,0 +1,46 @@
+//! Classifier abstraction: the per-page classification pass can run
+//! either natively ([`NativeClassifier`], rust scalar code) or through
+//! the AOT-compiled placement kernel executed via PJRT
+//! ([`crate::runtime::placement::AotClassifier`] — the L1/L2 layers of
+//! the stack). Both implement the same trait and the same math; an
+//! integration test asserts they agree bit-for-bit to fp32 tolerance.
+
+use anyhow::Result;
+
+use super::native::{classify, ClassifyOutput, PageStats, N_PARAMS};
+
+pub trait Classifier {
+    fn name(&self) -> &'static str;
+    /// Run the fused classification pass. `stats.len()` is the page
+    /// count; implementations may pad internally.
+    fn classify(&mut self, stats: &PageStats, params: &[f32; N_PARAMS]) -> Result<ClassifyOutput>;
+}
+
+/// Pure-rust fallback (and ablation baseline).
+#[derive(Default)]
+pub struct NativeClassifier;
+
+impl Classifier for NativeClassifier {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn classify(&mut self, stats: &PageStats, params: &[f32; N_PARAMS]) -> Result<ClassifyOutput> {
+        Ok(classify(stats, params))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_classifier_runs() {
+        let mut c = NativeClassifier;
+        let mut stats = PageStats::with_len(16);
+        stats.valid = vec![1.0; 16];
+        let params = [0.3, 0.2, 0.3, 0.5, 0.2, 0.6, 0.0, 0.0];
+        let out = c.classify(&stats, &params).unwrap();
+        assert_eq!(out.new_hot.len(), 16);
+        assert_eq!(c.name(), "native");
+    }
+}

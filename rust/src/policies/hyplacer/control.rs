@@ -1,0 +1,183 @@
+//! Control — HyPlacer's user-space decision process (paper §4.3–4.4).
+//!
+//! Control periodically reads memory usage and PCMon throughput, checks
+//! the three target-suitability criteria of §4.2, and when the current
+//! distribution is off target formulates a PageFind request for SelMo:
+//!
+//!  * DRAM above its usage threshold  → **DEMOTE** (restore the free
+//!    buffer for newly touched pages),
+//!  * DCPMM write throughput above threshold:
+//!      - DRAM above threshold       → **SWITCH** (exchange intensive PM
+//!        pages against cold DRAM pages; capacity preserved),
+//!      - DRAM below threshold       → **PROMOTE_INT** (fill DRAM up to
+//!        the threshold with intensive pages only),
+//!  * DCPMM write throughput nominal and DRAM has space → **PROMOTE**
+//!    (eagerly pull recently accessed PM pages up),
+//!  * otherwise the distribution is on target → no request.
+//!
+//! Every decision is budgeted by the max-migration size (§5.1: 128 K
+//! pages per activation).
+
+use crate::config::{HyPlacerConfig, Tier};
+use crate::mem::PcmonSnapshot;
+use crate::vm::PageTable;
+
+use super::selmo::PageFindMode;
+
+/// A formulated placement decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub mode: PageFindMode,
+    /// Number of pages to request from SelMo.
+    pub count: usize,
+}
+
+/// Decide the epoch's PageFind request (if any).
+pub fn decide(cfg: &HyPlacerConfig, pt: &PageTable, pcmon: &PcmonSnapshot) -> Option<Decision> {
+    let page_bytes = pt.page_bytes();
+    let budget_pages = (cfg.max_migrate_bytes / page_bytes).max(1) as usize;
+
+    let dram_cap = pt.capacity_pages(Tier::Dram);
+    let dram_used = pt.used_pages(Tier::Dram);
+    let watermark_pages = (cfg.dram_watermark * dram_cap as f64) as u64;
+    // Hysteresis slack: DEMOTE drains to (watermark − slack); eager
+    // PROMOTE only refills below (watermark − 2·slack). Without the dead
+    // band, buffer maintenance and eager promotion fight each other and
+    // churn pages every epoch.
+    let slack_pages = ((0.01 * dram_cap as f64) as u64).max(1);
+    let dram_full = dram_used >= watermark_pages;
+    let pm_write_hot = pcmon.pm_write_bw > cfg.pm_write_bw_threshold;
+
+    if pm_write_hot {
+        if dram_full {
+            // criterion 3 nuance: exchange keeps the free buffer intact
+            return Some(Decision { mode: PageFindMode::Switch, count: budget_pages });
+        }
+        // fill DRAM with intensive pages up to the watermark
+        let room = (watermark_pages - dram_used) as usize;
+        return Some(Decision {
+            mode: PageFindMode::PromoteInt,
+            count: room.min(budget_pages).max(1),
+        });
+    }
+
+    if dram_full {
+        // restore the free-space buffer by demoting cold pages
+        let excess = (dram_used - watermark_pages) as usize;
+        return Some(Decision {
+            mode: PageFindMode::Demote,
+            count: (excess + slack_pages as usize).clamp(1, budget_pages),
+        });
+    }
+
+    // PM quiet, DRAM has room beyond the dead band: eagerly promote
+    // recently accessed pages, but never above (watermark − slack).
+    let pm_used = pt.used_pages(Tier::Pm);
+    if pm_used > 0 && dram_used + 2 * slack_pages < watermark_pages {
+        let room = (watermark_pages - slack_pages - dram_used) as usize;
+        return Some(Decision {
+            mode: PageFindMode::Promote,
+            count: room.min(budget_pages),
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MB;
+
+    fn pt_with(dram_used: u32, dram_cap: u64, pm_used: u32) -> PageTable {
+        let page = 1024u64;
+        let mut pt =
+            PageTable::new(dram_used + pm_used + 64, page, dram_cap * page, 10_000 * page);
+        for p in 0..dram_used {
+            pt.allocate(p, Tier::Dram);
+        }
+        for p in dram_used..dram_used + pm_used {
+            pt.allocate(p, Tier::Pm);
+        }
+        pt
+    }
+
+    fn cfg() -> HyPlacerConfig {
+        let mut c = HyPlacerConfig::default();
+        c.max_migrate_bytes = 64 * 1024; // 64 pages at 1 KiB
+        c
+    }
+
+    fn quiet_pcmon() -> PcmonSnapshot {
+        PcmonSnapshot::default()
+    }
+
+    fn writey_pcmon() -> PcmonSnapshot {
+        PcmonSnapshot { pm_write_bw: 50.0 * MB, window_secs: 1.0, window_id: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn switch_when_dram_full_and_pm_writing() {
+        let pt = pt_with(100, 100, 50);
+        let d = decide(&cfg(), &pt, &writey_pcmon()).unwrap();
+        assert_eq!(d.mode, PageFindMode::Switch);
+        assert_eq!(d.count, 64); // budget-capped
+    }
+
+    #[test]
+    fn promote_int_when_dram_has_room_and_pm_writing() {
+        let pt = pt_with(50, 100, 50);
+        let d = decide(&cfg(), &pt, &writey_pcmon()).unwrap();
+        assert_eq!(d.mode, PageFindMode::PromoteInt);
+        // room to watermark = 95-50 = 45
+        assert_eq!(d.count, 45);
+    }
+
+    #[test]
+    fn demote_when_dram_full_and_pm_quiet() {
+        let pt = pt_with(98, 100, 50);
+        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        assert_eq!(d.mode, PageFindMode::Demote);
+        assert_eq!(d.count, 4, "excess (3) + slack (1)");
+    }
+
+    #[test]
+    fn eager_promote_when_everything_quiet() {
+        let pt = pt_with(50, 100, 50);
+        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        assert_eq!(d.mode, PageFindMode::Promote);
+        assert_eq!(d.count, 44); // to watermark (95) - slack (1)
+    }
+
+    #[test]
+    fn hysteresis_dead_band_prevents_churn() {
+        // at watermark - slack (where DEMOTE drains to), eager PROMOTE
+        // must NOT re-trigger
+        let pt = pt_with(94, 100, 50);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+        // one page below the dead band: still quiet
+        let pt = pt_with(93, 100, 50);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+        // below the dead band: promotion resumes
+        let pt = pt_with(92, 100, 50);
+        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        assert_eq!(d.mode, PageFindMode::Promote);
+    }
+
+    #[test]
+    fn on_target_when_pm_empty_and_dram_below_watermark() {
+        let pt = pt_with(50, 100, 0);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+    }
+
+    #[test]
+    fn threshold_boundary() {
+        let pt = pt_with(50, 100, 50);
+        let mut pcm = quiet_pcmon();
+        pcm.pm_write_bw = HyPlacerConfig::default().pm_write_bw_threshold; // == threshold: not above
+        let d = decide(&cfg(), &pt, &pcm).unwrap();
+        assert_eq!(d.mode, PageFindMode::Promote);
+        pcm.pm_write_bw *= 1.01;
+        let d = decide(&cfg(), &pt, &pcm).unwrap();
+        assert_eq!(d.mode, PageFindMode::PromoteInt);
+    }
+}

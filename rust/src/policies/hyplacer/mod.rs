@@ -1,0 +1,415 @@
+//! HyPlacer — the paper's contribution (§4), assembled from its two
+//! components:
+//!
+//!  * **Control** ([`control`]) — user-space decision loop: reads DRAM
+//!    occupancy + PCMon bandwidth, formulates PageFind requests,
+//!  * **SelMo** ([`selmo`]) — kernel-module page selection: page-table
+//!    walks, R/D (+ delay-window) bit handling, per-mode selection,
+//!
+//! plus the classification pass that turns sampled bits into per-page
+//! hotness / write-intensity estimates and migration scores. The
+//! classification is the stack's compute hot-spot and runs either
+//! natively or through the AOT-compiled Pallas/JAX kernel via PJRT
+//! ([`classifier::Classifier`]).
+//!
+//! Epoch flow (mirroring §4.4): gather PTE stats → classify → Control
+//! decides a mode → SelMo selects pages → migration plan (exchange-based
+//! for SWITCH) → DCPMM_CLEAR to open the next delay window.
+
+pub mod classifier;
+pub mod control;
+pub mod native;
+pub mod selmo;
+
+use crate::config::{HyPlacerConfig, MachineConfig};
+use crate::vm::MigrationPlan;
+
+use classifier::{Classifier, NativeClassifier};
+use native::{PageStats, N_PARAMS};
+use selmo::{PageFindMode, SelMo};
+
+use super::{Policy, PolicyCtx, Table1Row};
+
+pub struct HyPlacer {
+    cfg: HyPlacerConfig,
+    selmo: SelMo,
+    classifier: Box<dyn Classifier>,
+    /// Persistent per-page EWMAs (classifier state), lazily sized.
+    hot: Vec<f32>,
+    wr: Vec<f32>,
+    /// Scratch stats buffer reused across epochs.
+    stats: PageStats,
+    /// PM write bytes our own migrations caused last epoch. PCMon cannot
+    /// distinguish app stores from migration copies, so Control discounts
+    /// the traffic it knows it generated — otherwise a big demotion burst
+    /// reads as "write-intensive pages in DCPMM" and locks the policy in
+    /// SWITCH mode forever.
+    self_pm_write_bytes: f64,
+    /// PM read bytes our migrations caused (promotions + exchanges).
+    self_pm_read_bytes: f64,
+    /// Adaptive SWITCH budget scale in (0, 1]. If a switch burst does not
+    /// reduce the app's PM traffic, the hot sets of both tiers are
+    /// statistically identical (FT-style uniform traffic) and switching
+    /// is regression-to-the-mean churn — back off exponentially,
+    /// re-probe occasionally.
+    switch_backoff: f64,
+    /// App PM bytes observed when the last SWITCH was issued.
+    pm_bytes_at_switch: f64,
+    /// Consecutive non-improving switch bursts (two strikes => back off).
+    switch_strikes: u32,
+    last_was_switch: bool,
+    epochs_since_probe: u32,
+    /// Last decision (observability / tests).
+    pub last_decision: Option<control::Decision>,
+}
+
+impl HyPlacer {
+    pub fn new(_m: &MachineConfig, cfg: HyPlacerConfig) -> Self {
+        let classifier: Box<dyn Classifier> = Box::new(NativeClassifier);
+        let floor = cfg.hot_threshold as f32;
+        HyPlacer {
+            cfg,
+            selmo: SelMo::new(floor),
+            classifier,
+            hot: Vec::new(),
+            wr: Vec::new(),
+            stats: PageStats::default(),
+            self_pm_write_bytes: 0.0,
+            self_pm_read_bytes: 0.0,
+            switch_backoff: 1.0,
+            pm_bytes_at_switch: 0.0,
+            switch_strikes: 0,
+            last_was_switch: false,
+            epochs_since_probe: 0,
+            last_decision: None,
+        }
+    }
+
+    /// Swap in a different classifier (the AOT/PJRT one).
+    pub fn with_classifier(mut self, c: Box<dyn Classifier>) -> Self {
+        self.classifier = c;
+        self
+    }
+
+    pub fn classifier_name(&self) -> &'static str {
+        self.classifier.name()
+    }
+
+    pub fn params(&self) -> [f32; N_PARAMS] {
+        let mut p = [0.0f32; N_PARAMS];
+        p[native::PARAM_ALPHA] = self.cfg.alpha as f32;
+        p[native::PARAM_HOT_THRESH] = self.cfg.hot_threshold as f32;
+        p[native::PARAM_WR_THRESH] = self.cfg.wr_threshold as f32;
+        p[native::PARAM_WR_WEIGHT] = self.cfg.wr_weight as f32;
+        p[native::PARAM_COLD_BIAS] = self.cfg.cold_bias as f32;
+        p[native::PARAM_AGE_WEIGHT] = self.cfg.age_weight as f32;
+        p
+    }
+
+    fn ensure_buffers(&mut self, n: usize) {
+        if self.hot.len() < n {
+            self.hot.resize(n, 0.0);
+            self.wr.resize(n, 0.0);
+        }
+        if self.stats.len() < n {
+            self.stats = PageStats::with_len(n);
+        }
+    }
+}
+
+impl Policy for HyPlacer {
+    fn name(&self) -> &'static str {
+        "hyplacer"
+    }
+
+    // place_new: trait default — ADM first-touch fill-DRAM-first; the
+    // free-space buffer Control maintains is what keeps this effective.
+
+    fn epoch_tick(&mut self, ctx: &mut PolicyCtx) -> MigrationPlan {
+        let n = ctx.pt.len() as usize;
+        if n == 0 {
+            return MigrationPlan::default();
+        }
+        self.ensure_buffers(n);
+
+        // 1. SelMo walk: snapshot R/D (+ window) bits into stats.
+        self.selmo.gather_stats(ctx.pt, &mut self.stats);
+        self.stats.hot_ewma[..n].copy_from_slice(&self.hot[..n]);
+        self.stats.wr_ewma[..n].copy_from_slice(&self.wr[..n]);
+
+        // 2. Classification pass (native or AOT/PJRT).
+        let params = self.params();
+        let out = match self.classifier.classify(&self.stats, &params) {
+            Ok(o) => o,
+            Err(e) => {
+                // AOT failure degrades to a no-op epoch, never a crash.
+                eprintln!("hyplacer: classifier error, skipping epoch: {e:#}");
+                return MigrationPlan::default();
+            }
+        };
+        self.hot[..n].copy_from_slice(&out.new_hot[..n]);
+        self.wr[..n].copy_from_slice(&out.new_wr[..n]);
+
+        // 3. Control decision from occupancy + PCMon, with our own
+        // last-epoch migration traffic discounted from the PM write
+        // counter (see `self_pm_write_bytes`).
+        let mut pcmon = ctx.pcmon;
+        if pcmon.window_secs > 0.0 {
+            pcmon.pm_write_bw =
+                (pcmon.pm_write_bw - self.self_pm_write_bytes / pcmon.window_secs).max(0.0);
+        }
+        // Adaptive SWITCH backoff: grade the previous switch burst on
+        // total app PM *bytes per window* (bandwidth is misleading:
+        // better placement shortens the epoch, which can raise bandwidth
+        // even as traffic falls), with our own migration reads/writes
+        // discounted and a two-strike rule against epoch noise.
+        let pm_app_bytes = ((pcmon.pm_write_bw + pcmon.pm_read_bw) * pcmon.window_secs
+            - self.self_pm_write_bytes
+            - self.self_pm_read_bytes)
+            .max(0.0);
+        if self.last_was_switch {
+            if pm_app_bytes < 0.99 * self.pm_bytes_at_switch {
+                self.switch_backoff = 1.0; // it helped: keep tracking
+                self.switch_strikes = 0;
+            } else {
+                self.switch_strikes += 1;
+                if self.switch_strikes >= 2 {
+                    self.switch_backoff = (self.switch_backoff * 0.5).max(1.0 / 64.0);
+                }
+            }
+            self.last_was_switch = false;
+        }
+        self.epochs_since_probe += 1;
+        if self.epochs_since_probe >= 16 {
+            self.epochs_since_probe = 0;
+            self.switch_backoff = (self.switch_backoff * 2.0).min(1.0);
+        }
+
+        let decision = control::decide(&self.cfg, ctx.pt, &pcmon);
+        self.last_decision = decision;
+
+        // 4. SelMo PageFind reply → migration plan.
+        let mut plan = MigrationPlan::default();
+        if let Some(d) = decision {
+            let mut count = d.count;
+            if d.mode == PageFindMode::Switch {
+                count = ((count as f64 * self.switch_backoff).ceil() as usize).max(1);
+                self.last_was_switch = true;
+                self.pm_bytes_at_switch = pm_app_bytes;
+            }
+            let reply = self.selmo.page_find(
+                d.mode,
+                count,
+                &out.demote_score,
+                &out.promote_score,
+                &out.new_hot,
+                0.0,
+            );
+            match d.mode {
+                PageFindMode::Switch => {
+                    for (p, q) in reply.promote.iter().zip(reply.demote.iter()) {
+                        plan.exchange.push((*p, *q));
+                    }
+                }
+                _ => {
+                    plan.promote = reply.promote;
+                    plan.demote = reply.demote;
+                }
+            }
+        }
+
+        // Every demotion and every exchange writes one page into PM;
+        // every promotion and every exchange reads one page from PM.
+        let page_bytes = ctx.cfg.page_bytes as f64;
+        self.self_pm_write_bytes =
+            (plan.demote.len() + plan.exchange.len()) as f64 * page_bytes;
+        self.self_pm_read_bytes =
+            (plan.promote.len() + plan.exchange.len()) as f64 * page_bytes;
+
+        // 5. DCPMM_CLEAR: open the next delay window for PM pages.
+        self.selmo.dcpmm_clear(ctx.pt);
+        plan
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "HyPlacer (this paper)",
+            hmh: "DRAM+DCPMM",
+            placement_policy: "Fill DRAM first",
+            selection_criteria: "Hotness+r/w",
+            selection_algorithm: "CLOCK+PCMon [36]",
+            modifications: "OS (1 line)",
+            full_implementation: true,
+            evaluated_on_dcpmm: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Tier, MB};
+    use crate::mem::PcmonSnapshot;
+    use crate::vm::PageTable;
+
+    fn setup(dram_pages: u64, total: u32) -> (MachineConfig, HyPlacerConfig, PageTable) {
+        let mut m = MachineConfig::paper_machine();
+        m.page_bytes = 1024;
+        let mut hp = HyPlacerConfig::default();
+        hp.max_migrate_bytes = 32 * 1024;
+        let pt = PageTable::new(total, 1024, dram_pages * 1024, 10_000 * 1024);
+        (m, hp, pt)
+    }
+
+    fn tick(
+        h: &mut HyPlacer,
+        m: &MachineConfig,
+        pt: &mut PageTable,
+        pcmon: PcmonSnapshot,
+        epoch: u32,
+    ) -> MigrationPlan {
+        let mut ctx = PolicyCtx { pt, pcmon, cfg: m, epoch, epoch_secs: 1.0 };
+        h.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn promotes_window_hot_pm_pages_when_quiet() {
+        let (m, hp, mut pt) = setup(100, 16);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..8 {
+            pt.allocate(p, Tier::Pm);
+        }
+        // pages 0..3 hot in the delay window across epochs. Eager PROMOTE
+        // may pull cold pages too (paper: "allows cold pages to be
+        // eagerly promoted"), but hot pages must rank first.
+        for e in 0..4 {
+            for p in 0..4 {
+                pt.touch_window(p, p == 1);
+            }
+            let plan = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), e);
+            if !plan.promote.is_empty() {
+                assert!(plan.demote.is_empty() && plan.exchange.is_empty());
+                let hot_rank: Vec<bool> =
+                    plan.promote.iter().map(|p| *p < 4).collect();
+                let first_cold = hot_rank.iter().position(|h| !h).unwrap_or(hot_rank.len());
+                assert!(
+                    hot_rank[..first_cold].len() >= hot_rank.iter().filter(|h| **h).count(),
+                    "hot pages must precede cold ones: {:?}",
+                    plan.promote
+                );
+                assert!(hot_rank[0], "first promoted page must be hot: {:?}", plan.promote);
+                return;
+            }
+        }
+        panic!("hot PM pages never promoted");
+    }
+
+    #[test]
+    fn switch_mode_exchanges_when_dram_full_and_pm_writes() {
+        let (m, hp, mut pt) = setup(8, 16);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..8 {
+            pt.allocate(p, Tier::Dram);
+        }
+        for p in 8..16 {
+            pt.allocate(p, Tier::Pm);
+        }
+        // DRAM pages 0..4 hot; 4..8 idle. PM pages 8..10 write-hot in window.
+        let pcm = PcmonSnapshot {
+            pm_write_bw: 100.0 * MB,
+            window_secs: 1.0,
+            window_id: 1,
+            ..Default::default()
+        };
+        let mut exchanged = false;
+        for e in 0..6 {
+            for p in 0..4 {
+                pt.touch(p, true);
+            }
+            for p in 8..10u32 {
+                pt.touch_window(p, true);
+                pt.touch(p, true);
+            }
+            let plan = tick(&mut h, &m, &mut pt, pcm, e);
+            if !plan.exchange.is_empty() {
+                exchanged = true;
+                for &(pm_page, dram_page) in &plan.exchange {
+                    assert!((8..10).contains(&pm_page), "switch promoted {pm_page}");
+                    assert!((4..8).contains(&dram_page), "switch demoted hot {dram_page}");
+                }
+                break;
+            }
+        }
+        assert!(exchanged, "SWITCH never triggered");
+        assert_eq!(h.last_decision.unwrap().mode, PageFindMode::Switch);
+    }
+
+    #[test]
+    fn demotes_cold_pages_when_dram_over_watermark() {
+        let (m, hp, mut pt) = setup(100, 120);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..98 {
+            pt.allocate(p, Tier::Dram);
+        }
+        // hot pages 0..8 touched; rest cold
+        for e in 0..3 {
+            for p in 0..8 {
+                pt.touch(p, false);
+            }
+            let plan = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), e);
+            if !plan.demote.is_empty() {
+                for page in &plan.demote {
+                    assert!(*page >= 8, "hot page {page} demoted");
+                }
+                return;
+            }
+        }
+        panic!("never demoted under DRAM pressure");
+    }
+
+    #[test]
+    fn ewma_state_persists_across_epochs() {
+        let (m, hp, mut pt) = setup(100, 8);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..4 {
+            pt.allocate(p, Tier::Pm);
+        }
+        pt.touch_window(0, false);
+        let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 0);
+        let after_one = h.hot[0];
+        assert!(after_one > 0.0);
+        // second epoch without touches: decays but persists
+        let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 1);
+        assert!(h.hot[0] > 0.0 && h.hot[0] < after_one);
+    }
+
+    #[test]
+    fn dcpmm_clear_runs_every_epoch() {
+        let (m, hp, mut pt) = setup(100, 8);
+        let mut h = HyPlacer::new(&m, hp);
+        pt.allocate(0, Tier::Pm);
+        pt.touch_window(0, true);
+        let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 0);
+        assert!(!pt.flags(0).window_referenced(), "window must be re-armed");
+    }
+
+    #[test]
+    fn empty_table_safe() {
+        let (m, hp, mut pt_empty) = setup(10, 0);
+        let mut h = HyPlacer::new(&m, hp);
+        let plan = tick(&mut h, &m, &mut pt_empty, PcmonSnapshot::default(), 0);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn params_reflect_config() {
+        let (m, mut hp, _) = setup(10, 0);
+        hp.alpha = 0.5;
+        hp.hot_threshold = 0.1;
+        let h = HyPlacer::new(&m, hp);
+        let p = h.params();
+        assert_eq!(p[native::PARAM_ALPHA], 0.5);
+        assert_eq!(p[native::PARAM_HOT_THRESH], 0.1);
+        assert_eq!(h.classifier_name(), "native");
+    }
+}

@@ -1,0 +1,287 @@
+//! Native (pure-rust) implementation of the page classification +
+//! scoring math — the scalar twin of the L1 pallas kernel
+//! (`python/compile/kernels/classify.py`) and the L2 aggregates
+//! (`python/compile/model.py`).
+//!
+//! Used (a) as the fallback classifier when AOT artifacts are absent,
+//! (b) as the ablation baseline for the AOT-vs-native bench, and (c) to
+//! cross-validate the HLO path: a golden-vector test asserts this code
+//! matches the python oracle to 1e-5, and a runtime integration test
+//! asserts the PJRT-executed artifact matches this code.
+//!
+//! Keep in lockstep with classify.py / model.py (param layout below).
+
+/// Parameter vector layout — must match classify.py PARAM_*.
+pub const PARAM_ALPHA: usize = 0;
+pub const PARAM_HOT_THRESH: usize = 1;
+pub const PARAM_WR_THRESH: usize = 2;
+pub const PARAM_WR_WEIGHT: usize = 3;
+pub const PARAM_COLD_BIAS: usize = 4;
+pub const PARAM_AGE_WEIGHT: usize = 5;
+pub const N_PARAMS: usize = 8;
+
+/// Aggregate vector layout — must match model.py.
+pub const AGG_DRAM_VALID: usize = 0;
+pub const AGG_PM_VALID: usize = 1;
+pub const AGG_DRAM_COLD: usize = 2;
+pub const AGG_DRAM_READ: usize = 3;
+pub const AGG_DRAM_WRITE: usize = 4;
+pub const AGG_PM_COLD: usize = 5;
+pub const AGG_PM_READ: usize = 6;
+pub const AGG_PM_WRITE: usize = 7;
+pub const AGG_DRAM_HOT_SUM: usize = 8;
+pub const AGG_PM_HOT_SUM: usize = 9;
+pub const AGG_DRAM_WR_SUM: usize = 10;
+pub const AGG_PM_WR_SUM: usize = 11;
+pub const N_AGGREGATES: usize = 12;
+
+pub const CLASS_COLD: f32 = 0.0;
+pub const CLASS_READ: f32 = 1.0;
+pub const CLASS_WRITE: f32 = 2.0;
+
+/// Per-page input stats (SoA, all same length).
+#[derive(Clone, Debug, Default)]
+pub struct PageStats {
+    pub refd: Vec<f32>,
+    pub dirty: Vec<f32>,
+    pub hot_ewma: Vec<f32>,
+    pub wr_ewma: Vec<f32>,
+    pub tier: Vec<f32>,
+    pub valid: Vec<f32>,
+}
+
+impl PageStats {
+    pub fn with_len(n: usize) -> Self {
+        PageStats {
+            refd: vec![0.0; n],
+            dirty: vec![0.0; n],
+            hot_ewma: vec![0.0; n],
+            wr_ewma: vec![0.0; n],
+            tier: vec![0.0; n],
+            valid: vec![0.0; n],
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.refd.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.refd.is_empty()
+    }
+}
+
+/// Per-page outputs + epoch aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct ClassifyOutput {
+    pub new_hot: Vec<f32>,
+    pub new_wr: Vec<f32>,
+    pub class: Vec<f32>,
+    pub demote_score: Vec<f32>,
+    pub promote_score: Vec<f32>,
+    pub aggregates: [f32; N_AGGREGATES],
+}
+
+/// The fused classification pass (semantics identical to classify.py +
+/// the aggregate reduction of model.py).
+pub fn classify(stats: &PageStats, params: &[f32; N_PARAMS]) -> ClassifyOutput {
+    let n = stats.len();
+    let alpha = params[PARAM_ALPHA];
+    let hot_thresh = params[PARAM_HOT_THRESH];
+    let wr_thresh = params[PARAM_WR_THRESH];
+    let wr_weight = params[PARAM_WR_WEIGHT];
+    let cold_bias = params[PARAM_COLD_BIAS];
+    let age_weight = params[PARAM_AGE_WEIGHT];
+
+    let mut out = ClassifyOutput {
+        new_hot: vec![0.0; n],
+        new_wr: vec![0.0; n],
+        class: vec![0.0; n],
+        demote_score: vec![0.0; n],
+        promote_score: vec![0.0; n],
+        aggregates: [0.0; N_AGGREGATES],
+    };
+    let mut agg = [0.0f64; N_AGGREGATES];
+
+    // hot path: length-pinned sub-slices let LLVM hoist the bounds
+    // checks and vectorize the arithmetic — see EXPERIMENTS.md §Perf.
+    let (refd_s, dirty_s) = (&stats.refd[..n], &stats.dirty[..n]);
+    let (hot_s, wr_s) = (&stats.hot_ewma[..n], &stats.wr_ewma[..n]);
+    let (tier_s, valid_s) = (&stats.tier[..n], &stats.valid[..n]);
+
+    for i in 0..n {
+        let refd = refd_s[i];
+        let dirty = dirty_s[i];
+        let touched = refd.max(dirty);
+        let new_hot = alpha * touched.min(1.0) + (1.0 - alpha) * hot_s[i];
+        let new_wr = alpha * dirty.min(1.0) + (1.0 - alpha) * wr_s[i];
+
+        let is_hot = new_hot > hot_thresh;
+        let is_write = is_hot && new_wr > wr_thresh;
+        let class = if is_write {
+            CLASS_WRITE
+        } else if is_hot {
+            CLASS_READ
+        } else {
+            CLASS_COLD
+        };
+
+        let valid = valid_s[i] > 0.5;
+        let in_dram = tier_s[i] < 0.5;
+        let never = touched < 0.5 && new_hot <= hot_thresh;
+        let demote = age_weight * (1.0 - new_hot)
+            + (1.0 - age_weight) * (1.0 - new_wr)
+            + if never { cold_bias } else { 0.0 };
+        let demote_score = if in_dram && valid { demote } else { -1.0 };
+        let promote = new_hot + wr_weight * new_wr;
+        let promote_score = if !in_dram && valid { promote } else { -1.0 };
+
+        out.new_hot[i] = if valid { new_hot } else { 0.0 };
+        out.new_wr[i] = if valid { new_wr } else { 0.0 };
+        out.class[i] = if valid { class } else { CLASS_COLD };
+        out.demote_score[i] = demote_score;
+        out.promote_score[i] = promote_score;
+
+        if valid {
+            let (v_idx, c_base, hot_idx, wr_idx) = if in_dram {
+                (AGG_DRAM_VALID, AGG_DRAM_COLD, AGG_DRAM_HOT_SUM, AGG_DRAM_WR_SUM)
+            } else {
+                (AGG_PM_VALID, AGG_PM_COLD, AGG_PM_HOT_SUM, AGG_PM_WR_SUM)
+            };
+            agg[v_idx] += 1.0;
+            agg[c_base + class as usize] += 1.0;
+            agg[hot_idx] += new_hot as f64;
+            agg[wr_idx] += new_wr as f64;
+        }
+    }
+    for (o, a) in out.aggregates.iter_mut().zip(agg.iter()) {
+        *o = *a as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> [f32; N_PARAMS] {
+        let mut p = [0.0; N_PARAMS];
+        p[PARAM_ALPHA] = 0.35;
+        p[PARAM_HOT_THRESH] = 0.25;
+        p[PARAM_WR_THRESH] = 0.4;
+        p[PARAM_WR_WEIGHT] = 0.6;
+        p[PARAM_COLD_BIAS] = 0.2;
+        p[PARAM_AGE_WEIGHT] = 0.65;
+        p
+    }
+
+    #[test]
+    fn classes_basic() {
+        let mut s = PageStats::with_len(3);
+        s.valid = vec![1.0; 3];
+        // page 0: hot + written => WRITE
+        s.refd[0] = 1.0;
+        s.dirty[0] = 1.0;
+        s.hot_ewma[0] = 0.8;
+        s.wr_ewma[0] = 0.8;
+        // page 1: hot, read-only => READ
+        s.refd[1] = 1.0;
+        s.hot_ewma[1] = 0.8;
+        // page 2: untouched => COLD
+        let out = classify(&s, &params());
+        assert_eq!(out.class, vec![CLASS_WRITE, CLASS_READ, CLASS_COLD]);
+    }
+
+    #[test]
+    fn score_masking_by_tier() {
+        let mut s = PageStats::with_len(4);
+        s.valid = vec![1.0, 1.0, 1.0, 0.0];
+        s.tier = vec![0.0, 1.0, 0.0, 1.0];
+        let out = classify(&s, &params());
+        assert!(out.demote_score[0] >= 0.0 && out.demote_score[2] >= 0.0);
+        assert_eq!(out.demote_score[1], -1.0);
+        assert!(out.promote_score[1] >= 0.0);
+        assert_eq!(out.promote_score[0], -1.0);
+        // invalid page masked everywhere
+        assert_eq!(out.promote_score[3], -1.0);
+        assert_eq!(out.new_hot[3], 0.0);
+    }
+
+    #[test]
+    fn aggregates_count_correctly() {
+        let mut s = PageStats::with_len(6);
+        s.valid = vec![1.0; 6];
+        s.tier = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        // DRAM: one hot-write, one hot-read, one cold
+        s.refd[0] = 1.0;
+        s.dirty[0] = 1.0;
+        s.hot_ewma[0] = 0.9;
+        s.wr_ewma[0] = 0.9;
+        s.refd[1] = 1.0;
+        s.hot_ewma[1] = 0.9;
+        // PM: one hot-read, two cold
+        s.refd[3] = 1.0;
+        s.hot_ewma[3] = 0.9;
+        let out = classify(&s, &params());
+        assert_eq!(out.aggregates[AGG_DRAM_VALID], 3.0);
+        assert_eq!(out.aggregates[AGG_PM_VALID], 3.0);
+        assert_eq!(out.aggregates[AGG_DRAM_WRITE], 1.0);
+        assert_eq!(out.aggregates[AGG_DRAM_READ], 1.0);
+        assert_eq!(out.aggregates[AGG_DRAM_COLD], 1.0);
+        assert_eq!(out.aggregates[AGG_PM_READ], 1.0);
+        assert_eq!(out.aggregates[AGG_PM_COLD], 2.0);
+        assert!(out.aggregates[AGG_DRAM_HOT_SUM] > out.aggregates[AGG_PM_HOT_SUM]);
+    }
+
+    #[test]
+    fn golden_matches_python_oracle() {
+        // Cross-language contract: python/tests/golden/classify_golden.json
+        // is generated from the pure-jnp oracle; this test replays it.
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/python/tests/golden/classify_golden.json"
+        );
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("golden file missing (run pytest once) — skipping");
+                return;
+            }
+        };
+        let doc = crate::report::json::parse(&text).expect("golden json parses");
+        let arr = |k: &str| -> Vec<f32> {
+            doc.path(&["inputs", k])
+                .and_then(|v| v.as_f32_vec())
+                .unwrap_or_else(|| panic!("missing inputs.{k}"))
+        };
+        let out_arr = |k: &str| -> Vec<f32> {
+            doc.path(&["outputs", k])
+                .and_then(|v| v.as_f32_vec())
+                .unwrap_or_else(|| panic!("missing outputs.{k}"))
+        };
+        let stats = PageStats {
+            refd: arr("ref"),
+            dirty: arr("dirty"),
+            hot_ewma: arr("hot_ewma"),
+            wr_ewma: arr("wr_ewma"),
+            tier: arr("tier"),
+            valid: arr("valid"),
+        };
+        let pvec = doc.path(&["params"]).and_then(|v| v.as_f32_vec()).unwrap();
+        let mut params = [0.0f32; N_PARAMS];
+        params.copy_from_slice(&pvec);
+        let out = classify(&stats, &params);
+        let check = |name: &str, got: &[f32], want: &[f32]| {
+            assert_eq!(got.len(), want.len(), "{name} length");
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-5 + 1e-5 * w.abs(),
+                    "{name}[{i}]: got {g}, want {w}"
+                );
+            }
+        };
+        check("new_hot", &out.new_hot, &out_arr("new_hot"));
+        check("new_wr", &out.new_wr, &out_arr("new_wr"));
+        check("class", &out.class, &out_arr("page_class"));
+        check("demote", &out.demote_score, &out_arr("demote_score"));
+        check("promote", &out.promote_score, &out_arr("promote_score"));
+    }
+}

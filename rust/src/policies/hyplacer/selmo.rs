@@ -1,0 +1,316 @@
+//! SelMo — HyPlacer's kernel-module half (paper §4.3–4.4).
+//!
+//! On a real system SelMo is a kernel module that drives the exported
+//! `walk_page_range()` with one PTE callback per PageFind mode, observes
+//! and manipulates R/D bits, and replies with the selected page array.
+//! Here it plays exactly that role against the [`crate::vm`] substrate:
+//!
+//!  * [`SelMo::gather_stats`] — the walk that snapshots every PTE's
+//!    R/D (+ delay-window) bits into the dense f32 arrays handed to the
+//!    classifier (the vectorized form of the per-PTE callbacks; the AOT
+//!    kernel then computes per-mode scores in one fused pass),
+//!  * [`SelMo::page_find`] — mode-specific selection on the score arrays
+//!    (the reply-back phase), with the budget semantics of Table 2,
+//!  * [`SelMo::dcpmm_clear`] — the DCPMM_CLEAR walk resetting the delay
+//!    window before a promotion decision.
+
+use crate::config::Tier;
+use crate::util::top_k_indices;
+use crate::vm::{PageId, PageTable, PageWalker, WalkControl};
+
+use super::native::PageStats;
+
+/// PageFind modes (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageFindMode {
+    /// Demote cold pages (tier scope: DRAM).
+    Demote,
+    /// Promote pages (tier scope: DCPMM).
+    Promote,
+    /// Promote only intensive pages (tier scope: DCPMM).
+    PromoteInt,
+    /// Switch intensive with cold pages (both tiers).
+    Switch,
+    /// Clear the R/D bits from all resident DCPMM pages.
+    DcpmmClear,
+}
+
+impl PageFindMode {
+    pub fn tier_scope(self) -> &'static str {
+        match self {
+            PageFindMode::Demote => "DRAM",
+            PageFindMode::Promote | PageFindMode::PromoteInt | PageFindMode::DcpmmClear => "DCPMM",
+            PageFindMode::Switch => "DRAM+DCPMM",
+        }
+    }
+    pub fn goal(self) -> &'static str {
+        match self {
+            PageFindMode::Demote => "Demote cold pages",
+            PageFindMode::Promote => "Promote pages",
+            PageFindMode::PromoteInt => "Promote only intensive pages",
+            PageFindMode::Switch => "Switch intensive with cold pages",
+            PageFindMode::DcpmmClear => "Clear the R/D bits from all resident pages",
+        }
+    }
+    pub const ALL: [PageFindMode; 5] = [
+        PageFindMode::Demote,
+        PageFindMode::Promote,
+        PageFindMode::PromoteInt,
+        PageFindMode::Switch,
+        PageFindMode::DcpmmClear,
+    ];
+}
+
+/// A PageFind reply: the selected pages for the requested mode.
+#[derive(Clone, Debug, Default)]
+pub struct PageFindReply {
+    pub promote: Vec<PageId>,
+    pub demote: Vec<PageId>,
+}
+
+pub struct SelMo {
+    stats_hand: PageWalker,
+    clear_hand: PageWalker,
+    /// Promotion candidates must score above this (an "intensive"
+    /// floor for PROMOTE_INT/SWITCH, derived from classifier params).
+    pub intensive_floor: f32,
+}
+
+impl SelMo {
+    pub fn new(intensive_floor: f32) -> Self {
+        SelMo { stats_hand: PageWalker::new(), clear_hand: PageWalker::new(), intensive_floor }
+    }
+
+    /// Snapshot PTE state into classifier input arrays.
+    ///
+    /// DRAM pages report their full-epoch R/D bits (demotion wants "was
+    /// this touched at all since the last clear"); DCPMM pages report the
+    /// **delay-window** bits (promotion wants "accessed within the 50 ms
+    /// window after DCPMM_CLEAR" — the paper's frequency filter). The
+    /// walk also clears full-epoch bits behind itself (CLOCK behaviour).
+    pub fn gather_stats(&mut self, pt: &mut PageTable, stats: &mut PageStats) {
+        let n = pt.len() as usize;
+        debug_assert!(stats.len() >= n, "stats buffer too small");
+        // zero only the prefix in use
+        for v in [
+            &mut stats.refd[..n],
+            &mut stats.dirty[..n],
+            &mut stats.tier[..n],
+            &mut stats.valid[..n],
+        ] {
+            v.fill(0.0);
+        }
+        self.stats_hand.walk(pt, n, |page, flags, pt| {
+            let i = page as usize;
+            stats.valid[i] = 1.0;
+            match flags.tier() {
+                Tier::Dram => {
+                    stats.tier[i] = 0.0;
+                    stats.refd[i] = if flags.referenced() { 1.0 } else { 0.0 };
+                    stats.dirty[i] = if flags.dirty() { 1.0 } else { 0.0 };
+                }
+                Tier::Pm => {
+                    stats.tier[i] = 1.0;
+                    stats.refd[i] = if flags.window_referenced() { 1.0 } else { 0.0 };
+                    stats.dirty[i] = if flags.window_dirty() { 1.0 } else { 0.0 };
+                }
+            }
+            pt.clear_rd(page);
+            WalkControl::Continue
+        });
+    }
+
+    /// DCPMM_CLEAR: reset delay-window bits on all resident PM pages.
+    pub fn dcpmm_clear(&mut self, pt: &mut PageTable) -> usize {
+        let n = pt.len() as usize;
+        let mut cleared = 0;
+        self.clear_hand.walk(pt, n, |page, flags, pt| {
+            if flags.tier() == Tier::Pm {
+                pt.clear_window(page);
+                cleared += 1;
+            }
+            WalkControl::Continue
+        });
+        cleared
+    }
+
+    /// Minimum hotness advantage an intensive PM page must have over the
+    /// DRAM victim it would replace for a SWITCH pair to be worthwhile.
+    /// Without the margin, uniformly hot workloads (BT/FT phases) churn
+    /// equally hot pages back and forth, paying full migration cost for
+    /// zero benefit.
+    pub const SWITCH_MARGIN: f32 = 0.10;
+
+    /// The selection (reply-back) phase: given the classifier's score
+    /// arrays (and the hotness estimates for SWITCH benefit checks),
+    /// answer a PageFind request for up to `count` pages.
+    pub fn page_find(
+        &self,
+        mode: PageFindMode,
+        count: usize,
+        demote_score: &[f32],
+        promote_score: &[f32],
+        new_hot: &[f32],
+        switch_floor: f32,
+    ) -> PageFindReply {
+        let mut reply = PageFindReply::default();
+        match mode {
+            PageFindMode::Demote => {
+                reply.demote = top_k_indices(demote_score, count, 0.0);
+            }
+            PageFindMode::Promote => {
+                // eager promotion: any resident PM page qualifies,
+                // hottest first
+                reply.promote = top_k_indices(promote_score, count, 0.0);
+            }
+            PageFindMode::PromoteInt => {
+                reply.promote = top_k_indices(promote_score, count, self.intensive_floor);
+            }
+            PageFindMode::Switch => {
+                let promote = top_k_indices(promote_score, count, self.intensive_floor);
+                let demote = top_k_indices(demote_score, promote.len(), 0.0);
+                // promote is hottest-first, demote is coldest-first: the
+                // first pair failing the benefit margin means every later
+                // pair fails too.
+                let mut pairs = 0;
+                for (p, d) in promote.iter().zip(demote.iter()) {
+                    let hp = new_hot[*p as usize];
+                    let hd = new_hot[*d as usize];
+                    // per-pair margin AND population floor: the candidate
+                    // must beat the victim *and* the average DRAM page —
+                    // otherwise EWMA noise outliers of uniformly hot
+                    // workloads cause regression-to-the-mean churn.
+                    if hp > hd + Self::SWITCH_MARGIN && hp > switch_floor {
+                        pairs += 1;
+                    } else {
+                        break;
+                    }
+                }
+                reply.promote = promote[..pairs].to_vec();
+                reply.demote = demote[..pairs].to_vec();
+            }
+            PageFindMode::DcpmmClear => {}
+        }
+        reply
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> PageTable {
+        let mut pt = PageTable::new(8, 1024, 100 * 1024, 100 * 1024);
+        for p in 0..4 {
+            pt.allocate(p, Tier::Dram);
+        }
+        for p in 4..8 {
+            pt.allocate(p, Tier::Pm);
+        }
+        pt
+    }
+
+    #[test]
+    fn table2_metadata_complete() {
+        for m in PageFindMode::ALL {
+            assert!(!m.tier_scope().is_empty());
+            assert!(!m.goal().is_empty());
+        }
+        assert_eq!(PageFindMode::Demote.tier_scope(), "DRAM");
+        assert_eq!(PageFindMode::Switch.tier_scope(), "DRAM+DCPMM");
+    }
+
+    #[test]
+    fn gather_reads_epoch_bits_for_dram_window_bits_for_pm() {
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        pt.touch(0, true); // DRAM epoch-dirty
+        pt.touch(5, true); // PM epoch-dirty, but NO window access
+        pt.touch_window(6, false); // PM window-read
+        let mut stats = PageStats::with_len(8);
+        selmo.gather_stats(&mut pt, &mut stats);
+        assert_eq!(stats.dirty[0], 1.0);
+        assert_eq!(stats.tier[0], 0.0);
+        // PM page 5: epoch bit ignored for PM (delay filter)
+        assert_eq!(stats.refd[5], 0.0);
+        assert_eq!(stats.refd[6], 1.0);
+        assert_eq!(stats.dirty[6], 0.0);
+        assert_eq!(stats.valid.iter().sum::<f32>(), 8.0);
+        // walk cleared the epoch bits
+        assert!(!pt.flags(0).dirty());
+    }
+
+    #[test]
+    fn dcpmm_clear_only_touches_pm() {
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        pt.touch_window(0, true); // DRAM — must survive
+        pt.touch_window(5, true);
+        let cleared = selmo.dcpmm_clear(&mut pt);
+        assert_eq!(cleared, 4);
+        assert!(pt.flags(0).window_dirty());
+        assert!(!pt.flags(5).window_dirty());
+    }
+
+    #[test]
+    fn page_find_demote_selects_top_scores() {
+        let selmo = SelMo::new(0.3);
+        let demote = vec![0.9, -1.0, 0.5, 0.7, -1.0, -1.0, -1.0, -1.0];
+        let promote = vec![-1.0; 8];
+        let hot = vec![0.0f32; 8];
+        let r = selmo.page_find(PageFindMode::Demote, 2, &demote, &promote, &hot, 0.0);
+        assert_eq!(r.demote, vec![0, 3]);
+        assert!(r.promote.is_empty());
+    }
+
+    #[test]
+    fn promote_int_respects_floor() {
+        let selmo = SelMo::new(0.5);
+        let promote = vec![-1.0, -1.0, -1.0, -1.0, 0.9, 0.2, 0.6, 0.1];
+        let demote = vec![-1.0; 8];
+        let hot = vec![0.0f32; 8];
+        let eager = selmo.page_find(PageFindMode::Promote, 10, &demote, &promote, &hot, 0.0);
+        assert_eq!(eager.promote, vec![4, 6, 5, 7]);
+        let intensive = selmo.page_find(PageFindMode::PromoteInt, 10, &demote, &promote, &hot, 0.0);
+        assert_eq!(intensive.promote, vec![4, 6]);
+    }
+
+    #[test]
+    fn switch_pairs_equal_counts() {
+        let selmo = SelMo::new(0.5);
+        let promote = vec![-1.0, -1.0, -1.0, -1.0, 0.9, 0.8, 0.7, 0.1];
+        let demote = vec![0.9, 0.8, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0];
+        // PM candidates much hotter than the DRAM victims
+        let hot = vec![0.1, 0.2, 0.0, 0.0, 0.9, 0.8, 0.7, 0.0];
+        let r = selmo.page_find(PageFindMode::Switch, 3, &demote, &promote, &hot, 0.0);
+        // 3 intensive PM pages but only 2 cold DRAM victims => 2 pairs
+        assert_eq!(r.promote.len(), 2);
+        assert_eq!(r.demote.len(), 2);
+        assert_eq!(r.demote, vec![0, 1]);
+    }
+
+    #[test]
+    fn switch_requires_hotness_margin() {
+        let selmo = SelMo::new(0.5);
+        let promote = vec![-1.0, -1.0, 0.9, 0.8];
+        let demote = vec![0.9, 0.8, -1.0, -1.0];
+        // PM pages no hotter than the DRAM victims: churn guard kicks in
+        let hot = vec![0.5, 0.5, 0.55, 0.5];
+        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.0);
+        assert!(r.promote.is_empty(), "equal-hotness switch must be refused");
+        // give the PM pages a real advantage
+        let hot = vec![0.2, 0.2, 0.9, 0.9];
+        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.0);
+        assert_eq!(r.promote.len(), 2);
+        // ...but a high population floor (hot average DRAM) refuses it
+        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.95);
+        assert!(r.promote.is_empty(), "population floor must block noise switches");
+    }
+
+    #[test]
+    fn clear_mode_selects_nothing() {
+        let selmo = SelMo::new(0.5);
+        let r = selmo.page_find(PageFindMode::DcpmmClear, 5, &[0.5], &[0.5], &[0.5], 0.0);
+        assert!(r.promote.is_empty() && r.demote.is_empty());
+    }
+}

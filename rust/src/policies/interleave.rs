@@ -1,0 +1,115 @@
+//! Static weighted interleaving (paper §3.3 / Fig. 3): pages are spread
+//! across DRAM and DCPMM at a fixed ratio at first touch, with no
+//! migration. This is the "ideal bandwidth balance" building block — the
+//! Fig. 3 harness sweeps the ratio and picks the best performer per
+//! demand level, exactly as the paper does with `numactl`-style
+//! weighted-interleaved placement [15].
+
+use crate::config::Tier;
+use crate::vm::{PageId, PageTable};
+
+use super::{Policy, Table1Row};
+
+pub struct Interleave {
+    /// Fraction of pages placed in DRAM (1.0 = all DRAM).
+    dram_ratio: f64,
+    /// Error accumulator (Bresenham-style deterministic interleaving).
+    acc: f64,
+}
+
+impl Interleave {
+    pub fn new(dram_ratio: f64) -> Self {
+        assert!((0.0..=1.0).contains(&dram_ratio));
+        Interleave { dram_ratio, acc: 0.0 }
+    }
+
+    pub fn dram_ratio(&self) -> f64 {
+        self.dram_ratio
+    }
+}
+
+impl Policy for Interleave {
+    fn name(&self) -> &'static str {
+        "interleave"
+    }
+
+    fn place_new(&mut self, _page: PageId, pt: &PageTable) -> Tier {
+        // deterministic weighted round-robin with capacity fallback
+        self.acc += self.dram_ratio;
+        let want_dram = self.acc >= 1.0;
+        if want_dram {
+            self.acc -= 1.0;
+        }
+        match (want_dram, pt.free_pages(Tier::Dram) > 0, pt.free_pages(Tier::Pm) > 0) {
+            (true, true, _) => Tier::Dram,
+            (true, false, _) => Tier::Pm,
+            (false, _, true) => Tier::Pm,
+            (false, _, false) => Tier::Dram,
+        }
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "Weighted interleave [15]",
+            hmh: "DRAM+DCPMM",
+            placement_policy: "Bandwidth balance (static)",
+            selection_criteria: "none",
+            selection_algorithm: "round-robin",
+            modifications: "none (numactl)",
+            full_implementation: true,
+            evaluated_on_dcpmm: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn distribute(ratio: f64, pages: u32) -> (u64, u64) {
+        let mut p = Interleave::new(ratio);
+        let mut pt = PageTable::new(pages, 1024, 1024 * pages as u64, 1024 * pages as u64);
+        for page in 0..pages {
+            let t = p.place_new(page, &pt);
+            pt.allocate(page, t);
+        }
+        (pt.used_pages(Tier::Dram), pt.used_pages(Tier::Pm))
+    }
+
+    #[test]
+    fn ratio_respected() {
+        let (dram, pm) = distribute(0.9, 1000);
+        assert!((dram as f64 - 900.0).abs() <= 1.0, "dram={dram}");
+        assert!((pm as f64 - 100.0).abs() <= 1.0);
+        let (dram, _) = distribute(1.0, 100);
+        assert_eq!(dram, 100);
+        let (dram, pm) = distribute(0.5, 100);
+        assert_eq!(dram, 50);
+        assert_eq!(pm, 50);
+        let (dram, _) = distribute(0.0, 100);
+        assert_eq!(dram, 0);
+    }
+
+    #[test]
+    fn deterministic_pattern() {
+        let mut a = Interleave::new(0.75);
+        let mut b = Interleave::new(0.75);
+        let pt = PageTable::new(100, 1024, 1024 * 100, 1024 * 100);
+        for page in 0..50 {
+            assert_eq!(a.place_new(page, &pt), b.place_new(page, &pt));
+        }
+    }
+
+    #[test]
+    fn capacity_fallback() {
+        let mut p = Interleave::new(1.0);
+        // only 2 DRAM pages available
+        let mut pt = PageTable::new(4, 1024, 2 * 1024, 4 * 1024);
+        for page in 0..4 {
+            let t = p.place_new(page, &pt);
+            pt.allocate(page, t);
+        }
+        assert_eq!(pt.used_pages(Tier::Dram), 2);
+        assert_eq!(pt.used_pages(Tier::Pm), 2);
+    }
+}

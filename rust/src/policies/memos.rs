@@ -1,0 +1,236 @@
+//! Memos' tiered page placement (Liu et al., TPDS'19) as ported by the
+//! paper (§5.1 option 2): since Memos' code is not public, the paper
+//! re-implemented its *policy* on top of HyPlacer's architecture —
+//! monitoring via the same page-walk + PCMon mechanisms — and we do the
+//! same. Features requiring deep kernel changes (bank imbalance, the
+//! in-house TLB-miss profiler, alternative migration paths) are omitted,
+//! as in the paper.
+//!
+//! Policy (adaptive, read/write-aware *bandwidth balance*):
+//!  * new pages are allocated to DCPMM first (the paper calls this out
+//!    as Memos' "poor initial memory placement"),
+//!  * each period, if DRAM bandwidth is below its share of the target
+//!    DRAM:PM bandwidth split, promote hot (referenced) PM pages —
+//!    preferring read-dominated ones so PM retains bandwidth-friendly
+//!    traffic,
+//!  * demote cold DRAM pages under capacity pressure,
+//!  * all movement obeys the paper's re-tuned rate limit (100 MB/s:
+//!    10x the original 10,000 pages / 40 s cycle, at 4 s periodicity).
+
+use crate::config::{HyPlacerConfig, MachineConfig, Tier};
+use crate::vm::{MigrationPlan, PageId, PageTable, PageWalker, WalkControl};
+
+use super::{Policy, PolicyCtx, Table1Row};
+
+pub struct Memos {
+    pm_hand: PageWalker,
+    dram_hand: PageWalker,
+    /// pages per epoch (100 MB/s rate limit, paper-adjusted)
+    migrate_budget: usize,
+    /// activate every `period_epochs` epochs (paper-adjusted 4 s)
+    period_epochs: u32,
+    /// target DRAM share of total bandwidth
+    target_dram_share: f64,
+    dram_watermark: f64,
+}
+
+impl Memos {
+    pub fn new(cfg: &MachineConfig, _hp: &HyPlacerConfig) -> Self {
+        // The paper re-tunes Memos to 100,000 pages per 4 s period. Our
+        // simulator pages are 2 MiB (THP-like), so the byte reading of
+        // that limit (100 MB/s => 50 pages/s) would starve Memos on any
+        // footprint; we take a page-count reading scaled down 10x
+        // (2,500 pages/epoch) so Memos converges within a run while its
+        // migration traffic cost stays visible. See DESIGN.md §scaling.
+        let dram_bw = cfg.dram.peak_read_bw();
+        let pm_bw = cfg.pm.peak_read_bw();
+        Memos {
+            pm_hand: PageWalker::new(),
+            dram_hand: PageWalker::new(),
+            migrate_budget: 2500,
+            period_epochs: 4,
+            target_dram_share: dram_bw / (dram_bw + pm_bw),
+            dram_watermark: 0.98,
+        }
+    }
+}
+
+impl Policy for Memos {
+    fn name(&self) -> &'static str {
+        "memos"
+    }
+
+    /// Memos allocates new pages in DCPMM (promotion later balances).
+    fn place_new(&mut self, _page: PageId, pt: &PageTable) -> Tier {
+        if pt.free_pages(Tier::Pm) > 0 {
+            Tier::Pm
+        } else {
+            Tier::Dram
+        }
+    }
+
+    fn epoch_tick(&mut self, ctx: &mut PolicyCtx) -> MigrationPlan {
+        if ctx.epoch % self.period_epochs != 0 {
+            return MigrationPlan::default();
+        }
+        let snapshot = ctx.pcmon;
+        let pt = &mut *ctx.pt;
+
+        let total_bw = snapshot.total_bw();
+        let dram_share = if total_bw > 0.0 {
+            (snapshot.dram_read_bw + snapshot.dram_write_bw) / total_bw
+        } else {
+            1.0
+        };
+
+        let mut plan = MigrationPlan::default();
+        if dram_share < self.target_dram_share {
+            // DRAM under-used for the target balance: promote hot PM
+            // pages, read-dominated last (they are PM's best tenants),
+            // i.e. prefer promoting *written* pages.
+            // scan the whole PM tier, then rank: written pages first
+            // (they hurt PM bandwidth the most), reads as filler
+            let budget = self.migrate_budget;
+            let mut hot_written = Vec::new();
+            let mut hot_read = Vec::new();
+            self.pm_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
+                if flags.tier() == Tier::Pm {
+                    if flags.referenced() || flags.dirty() {
+                        if flags.dirty() {
+                            hot_written.push(page);
+                        } else {
+                            hot_read.push(page);
+                        }
+                    }
+                    pt.clear_rd(page);
+                }
+                WalkControl::Continue
+            });
+            hot_written.extend(hot_read);
+            hot_written.truncate(budget);
+            plan.promote = hot_written;
+        }
+
+        // capacity pressure: demote cold DRAM pages
+        let cap = pt.capacity_pages(Tier::Dram);
+        let used = pt.used_pages(Tier::Dram);
+        let over = (used + plan.promote.len() as u64)
+            .saturating_sub((self.dram_watermark * cap as f64) as u64);
+        if over > 0 {
+            let need = over as usize;
+            self.dram_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
+                if flags.tier() == Tier::Dram {
+                    if !flags.referenced() {
+                        plan.demote.push(page);
+                    } else {
+                        pt.clear_rd(page);
+                    }
+                }
+                if plan.demote.len() >= need {
+                    WalkControl::Stop
+                } else {
+                    WalkControl::Continue
+                }
+            });
+        }
+        plan
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "Memos [30]",
+            hmh: "DRAM+NVM",
+            placement_policy: "Fill DRAM first + bandwidth balance",
+            selection_criteria: "Hotness",
+            selection_algorithm: "TLB misses+CLOCK",
+            modifications: "OS",
+            full_implementation: true,
+            evaluated_on_dcpmm: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GB;
+    use crate::mem::PcmonSnapshot;
+
+    fn setup(total: u32, dram: u64, pm: u64) -> (MachineConfig, PageTable, Memos) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        let pt = PageTable::new(total, 1024, dram * 1024, pm * 1024);
+        let m = Memos::new(&cfg, &HyPlacerConfig::default());
+        (cfg, pt, m)
+    }
+
+    fn tick_with_bw(
+        m: &mut Memos,
+        cfg: &MachineConfig,
+        pt: &mut PageTable,
+        epoch: u32,
+        dram_bw: f64,
+        pm_bw: f64,
+    ) -> MigrationPlan {
+        let pcmon = PcmonSnapshot {
+            dram_read_bw: dram_bw,
+            pm_read_bw: pm_bw,
+            window_secs: 1.0,
+            window_id: 1,
+            ..Default::default()
+        };
+        let mut ctx = PolicyCtx { pt, pcmon, cfg, epoch, epoch_secs: 1.0 };
+        m.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn allocates_to_pm_first() {
+        let (_, pt, mut m) = setup(4, 10, 10);
+        assert_eq!(m.place_new(0, &pt), Tier::Pm);
+    }
+
+    #[test]
+    fn periodicity_respected() {
+        let (cfg, mut pt, mut m) = setup(4, 10, 10);
+        pt.allocate(0, Tier::Pm);
+        pt.touch(0, false);
+        // non-period epoch: no action even with imbalanced bandwidth
+        let plan = tick_with_bw(&mut m, &cfg, &mut pt, 1, 0.0, 10.0 * GB);
+        assert!(plan.is_empty());
+        let plan = tick_with_bw(&mut m, &cfg, &mut pt, 4, 0.0, 10.0 * GB);
+        assert_eq!(plan.promote, vec![0]);
+    }
+
+    #[test]
+    fn promotes_written_pages_first() {
+        let (cfg, mut pt, mut m) = setup(8, 10, 10);
+        m.migrate_budget = 2;
+        for page in 0..4 {
+            pt.allocate(page, Tier::Pm);
+        }
+        pt.touch(0, false); // read-hot
+        pt.touch(1, true); // write-hot
+        pt.touch(2, true); // write-hot
+        pt.touch(3, false); // read-hot
+        let plan = tick_with_bw(&mut m, &cfg, &mut pt, 0, 0.0, 10.0 * GB);
+        assert_eq!(plan.promote.len(), 2);
+        assert!(plan.promote.contains(&1) && plan.promote.contains(&2));
+    }
+
+    #[test]
+    fn no_promotion_when_dram_share_on_target() {
+        let (cfg, mut pt, mut m) = setup(4, 10, 10);
+        pt.allocate(0, Tier::Pm);
+        pt.touch(0, false);
+        // DRAM already carries nearly all traffic
+        let plan = tick_with_bw(&mut m, &cfg, &mut pt, 0, 30.0 * GB, 0.1 * GB);
+        assert!(plan.promote.is_empty());
+    }
+
+    #[test]
+    fn rate_limit_is_page_count_scaled() {
+        let cfg = MachineConfig::paper_machine();
+        let m = Memos::new(&cfg, &HyPlacerConfig::default());
+        assert_eq!(m.migrate_budget, 2500);
+    }
+}

@@ -1,0 +1,220 @@
+//! Placement-policy framework and the full comparison suite from the
+//! paper's evaluation (§5.1):
+//!
+//! * [`adm_default`] — Linux first-touch NUMA policy, no migration,
+//! * [`memm`] — DCPMM Memory Mode (hardware-managed DRAM cache),
+//! * [`nimble`] — Nimble's active/inactive-list fill-DRAM-first,
+//! * [`autonuma`] — Intel's tiered AutoNUMA extension,
+//! * [`memos`] — Memos' adaptive bandwidth-balance policy,
+//! * [`partitioned`] — CLOCK-DWF-style partitioned placement (§3.1),
+//! * [`interleave`] — static weighted interleaving (the Fig. 3 study),
+//! * [`hyplacer`] — the paper's contribution.
+//!
+//! Policies interact with the system only through the interfaces a real
+//! Linux deployment would have: first-touch placement, the page-table
+//! walker + R/D bits, `move_pages`/exchange migration, and PCMon
+//! bandwidth counters.
+
+pub mod adm_default;
+pub mod interleave;
+pub mod memm;
+pub mod nimble;
+pub mod autonuma;
+pub mod memos;
+pub mod partitioned;
+pub mod hyplacer;
+
+use crate::config::{HyPlacerConfig, MachineConfig, Tier};
+use crate::mem::{EpochDemand, PcmonSnapshot};
+use crate::vm::{MigrationPlan, PageId, PageTable};
+
+/// Per-epoch context handed to a policy's decision tick.
+pub struct PolicyCtx<'a> {
+    pub pt: &'a mut PageTable,
+    pub pcmon: PcmonSnapshot,
+    pub cfg: &'a MachineConfig,
+    pub epoch: u32,
+    /// Nominal epoch length (Control's monitoring period), seconds.
+    pub epoch_secs: f64,
+}
+
+/// One active region's demand this epoch (coordinator-computed summary
+/// handed to demand-routing policies).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActiveRegion {
+    pub pages: u64,
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+    pub random_frac: f64,
+}
+
+impl ActiveRegion {
+    pub fn total(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+    /// Access density: bytes per page this epoch (the hotness proxy a
+    /// hardware cache effectively sorts by).
+    pub fn density(&self) -> f64 {
+        if self.pages == 0 {
+            0.0
+        } else {
+            self.total() / self.pages as f64
+        }
+    }
+}
+
+/// Demand-routing context (for policies that virtualize placement, like
+/// Memory Mode's hardware cache).
+pub struct RouteCtx<'a> {
+    pub cfg: &'a MachineConfig,
+    /// Pages touched this epoch (the epoch's working set).
+    pub active_pages: u64,
+    /// Per-region demand summary for the epoch.
+    pub regions: &'a [ActiveRegion],
+    pub epoch: u32,
+}
+
+/// A tiered page-placement policy.
+pub trait Policy {
+    /// Short identifier used in reports ("hyplacer", "autonuma", ...).
+    fn name(&self) -> &'static str;
+
+    /// First-touch placement for a newly mapped page. The default is
+    /// Linux's ADM behaviour: fastest node while it has space (§2.2).
+    fn place_new(&mut self, _page: PageId, pt: &PageTable) -> Tier {
+        if pt.free_pages(Tier::Dram) > 0 {
+            Tier::Dram
+        } else {
+            Tier::Pm
+        }
+    }
+
+    /// Periodic decision point (once per epoch, after R/D bits and PCMon
+    /// are updated). Returns the migrations to execute.
+    fn epoch_tick(&mut self, _ctx: &mut PolicyCtx) -> MigrationPlan {
+        MigrationPlan::default()
+    }
+
+    /// Transform the epoch's tier demand before it reaches the memory
+    /// model. Identity for everything except Memory Mode, which hides
+    /// DRAM behind a hardware cache.
+    fn route_demand(&mut self, demand: EpochDemand, _ctx: &RouteCtx) -> EpochDemand {
+        demand
+    }
+
+    /// Row for the Table 1 comparison (policy family, selection criteria,
+    /// selection algorithm, modification footprint).
+    fn table1_row(&self) -> Table1Row;
+}
+
+/// Metadata mirroring the columns of the paper's Table 1.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Table1Row {
+    pub system: &'static str,
+    pub hmh: &'static str,
+    pub placement_policy: &'static str,
+    pub selection_criteria: &'static str,
+    pub selection_algorithm: &'static str,
+    pub modifications: &'static str,
+    pub full_implementation: bool,
+    pub evaluated_on_dcpmm: bool,
+}
+
+/// Build a policy by name. `hp_cfg` parameterizes HyPlacer (and the
+/// Memos port, which reuses HyPlacer's monitoring mechanisms, §5.1).
+pub fn by_name(
+    name: &str,
+    cfg: &MachineConfig,
+    hp_cfg: &HyPlacerConfig,
+) -> Option<Box<dyn Policy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "adm-default" | "adm" | "default" => Some(Box::new(adm_default::AdmDefault::new())),
+        "memm" | "memory-mode" => Some(Box::new(memm::MemoryMode::new(cfg))),
+        "nimble" => Some(Box::new(nimble::Nimble::new(cfg))),
+        "autonuma" => Some(Box::new(autonuma::AutoNuma::new(cfg))),
+        "memos" => Some(Box::new(memos::Memos::new(cfg, hp_cfg))),
+        "partitioned" | "clock-dwf" => Some(Box::new(partitioned::Partitioned::new(cfg))),
+        "hyplacer" | "ambix" => Some(Box::new(hyplacer::HyPlacer::new(cfg, hp_cfg.clone()))),
+        other => {
+            // interleave-<dram_pct>, e.g. interleave-90
+            if let Some(pct) = other.strip_prefix("interleave-") {
+                let pct: u32 = pct.parse().ok()?;
+                if pct > 100 {
+                    return None;
+                }
+                return Some(Box::new(interleave::Interleave::new(pct as f64 / 100.0)));
+            }
+            None
+        }
+    }
+}
+
+/// The Fig. 5 comparison set, in presentation order.
+pub const FIG5_POLICIES: [&str; 6] =
+    ["adm-default", "memm", "autonuma", "memos", "nimble", "hyplacer"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HyPlacerConfig;
+
+    #[test]
+    fn registry_builds_everything() {
+        let cfg = MachineConfig::paper_machine();
+        let hp = HyPlacerConfig::default();
+        for name in FIG5_POLICIES {
+            let p = by_name(name, &cfg, &hp);
+            assert!(p.is_some(), "missing policy {name}");
+        }
+        assert!(by_name("partitioned", &cfg, &hp).is_some());
+        assert!(by_name("interleave-90", &cfg, &hp).is_some());
+        assert!(by_name("interleave-101", &cfg, &hp).is_none());
+        assert!(by_name("bogus", &cfg, &hp).is_none());
+        // aliases
+        assert_eq!(by_name("ambix", &cfg, &hp).unwrap().name(), "hyplacer");
+        assert_eq!(by_name("memory-mode", &cfg, &hp).unwrap().name(), "memm");
+    }
+
+    #[test]
+    fn table1_rows_present() {
+        let cfg = MachineConfig::paper_machine();
+        let hp = HyPlacerConfig::default();
+        for name in FIG5_POLICIES {
+            let p = by_name(name, &cfg, &hp).unwrap();
+            let row = p.table1_row();
+            assert!(!row.system.is_empty());
+        }
+        // HyPlacer's row matches the paper's claims
+        let hyp = by_name("hyplacer", &cfg, &hp).unwrap().table1_row();
+        assert_eq!(hyp.modifications, "OS (1 line)");
+        assert!(hyp.full_implementation && hyp.evaluated_on_dcpmm);
+    }
+
+    #[test]
+    fn default_place_new_fills_dram_first() {
+        struct P;
+        impl Policy for P {
+            fn name(&self) -> &'static str {
+                "p"
+            }
+            fn table1_row(&self) -> Table1Row {
+                Table1Row {
+                    system: "p",
+                    hmh: "",
+                    placement_policy: "",
+                    selection_criteria: "",
+                    selection_algorithm: "",
+                    modifications: "",
+                    full_implementation: false,
+                    evaluated_on_dcpmm: false,
+                }
+            }
+        }
+        let mut p = P;
+        let mut pt = PageTable::new(4, 1024, 2 * 1024, 10 * 1024);
+        assert_eq!(p.place_new(0, &pt), Tier::Dram);
+        pt.allocate(0, Tier::Dram);
+        pt.allocate(1, Tier::Dram);
+        assert_eq!(p.place_new(2, &pt), Tier::Pm);
+    }
+}

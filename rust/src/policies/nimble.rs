@@ -1,0 +1,219 @@
+//! Nimble page management (Yan et al., ASPLOS'19) as evaluated by the
+//! paper (§5.1 option 3): the HeteroOS-lineage *fill DRAM first* policy
+//! driven purely by page **hotness**, implemented over the active /
+//! inactive page lists Linux keeps per NUMA node, with aggressive
+//! (optimized, exchange-capable) migration.
+//!
+//! Model: a CLOCK hand per tier approximates the two-list recency split —
+//! a page whose R bit is set when the hand passes is "active", otherwise
+//! "inactive". Each epoch Nimble promotes active DCPMM pages and, when
+//! DRAM is tight, exchanges them against inactive DRAM pages. Crucially
+//! (and per Table 1) it is **read/write agnostic** and its migration
+//! budget was tuned for pre-DCPMM assumptions — large transfers every
+//! epoch. On big, uniformly hot footprints it ping-pongs pages and burns
+//! bandwidth, which is exactly the paper's finding ("at par or worse
+//! than ADM-default").
+
+use crate::config::{MachineConfig, Tier};
+use crate::vm::{MigrationPlan, PageWalker, WalkControl};
+
+use super::{Policy, PolicyCtx, Table1Row};
+
+pub struct Nimble {
+    pm_hand: PageWalker,
+    dram_hand: PageWalker,
+    /// Max pages moved per epoch (tuned-for-DRAM default: generous).
+    migrate_budget_pages: usize,
+    /// Keep a little DRAM headroom like kswapd watermarks.
+    watermark: f64,
+}
+
+impl Nimble {
+    pub fn new(cfg: &MachineConfig) -> Self {
+        // Nimble's THP-optimized migration moves up to ~1 GB/s; per 1 s
+        // epoch that is 1 GB worth of pages.
+        let budget_bytes = 1024u64 * 1024 * 1024;
+        Nimble {
+            pm_hand: PageWalker::new(),
+            dram_hand: PageWalker::new(),
+            migrate_budget_pages: (budget_bytes / cfg.page_bytes).max(1) as usize,
+            watermark: 0.98,
+        }
+    }
+}
+
+impl Policy for Nimble {
+    fn name(&self) -> &'static str {
+        "nimble"
+    }
+
+    fn epoch_tick(&mut self, ctx: &mut PolicyCtx) -> MigrationPlan {
+        let budget = self.migrate_budget_pages;
+        let pt = &mut *ctx.pt;
+
+        // Pass 1: collect "active" PM pages (R bit set), clearing bits as
+        // the hand passes (second chance).
+        let mut promote = Vec::new();
+        let scan_budget = pt.len() as usize;
+        self.pm_hand.walk(pt, scan_budget, |page, flags, pt| {
+            if flags.tier() == Tier::Pm {
+                if flags.referenced() {
+                    promote.push(page);
+                }
+                pt.clear_rd(page);
+            }
+            if promote.len() >= budget {
+                WalkControl::Stop
+            } else {
+                WalkControl::Continue
+            }
+        });
+        if promote.is_empty() {
+            return MigrationPlan::default();
+        }
+
+        // Pass 2: find inactive DRAM victims (R bit clear when the hand
+        // arrives). Hotness only — the dirty bit is ignored by design.
+        let dram_cap = pt.capacity_pages(Tier::Dram);
+        let headroom_pages = ((1.0 - self.watermark) * dram_cap as f64) as u64;
+        let free = pt.free_pages(Tier::Dram);
+        let direct_promotions = free.saturating_sub(headroom_pages).min(promote.len() as u64);
+        let need_exchange = promote.len() - direct_promotions as usize;
+
+        let mut victims = Vec::new();
+        if need_exchange > 0 {
+            self.dram_hand.walk(pt, scan_budget, |page, flags, pt| {
+                if flags.tier() == Tier::Dram {
+                    if !flags.referenced() {
+                        victims.push(page);
+                    } else {
+                        pt.clear_rd(page); // second chance
+                    }
+                }
+                if victims.len() >= need_exchange {
+                    WalkControl::Stop
+                } else {
+                    WalkControl::Continue
+                }
+            });
+        }
+
+        let mut plan = MigrationPlan::default();
+        let (direct, exchanged) = promote.split_at(direct_promotions as usize);
+        plan.promote = direct.to_vec();
+        for (pm_page, dram_page) in exchanged.iter().zip(victims.iter()) {
+            plan.exchange.push((*pm_page, *dram_page));
+        }
+        plan
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "Nimble [59] (HeteroOS lineage)",
+            hmh: "MC-DRAM+DRAM+NVM",
+            placement_policy: "Fill DRAM first",
+            selection_criteria: "Hotness",
+            selection_algorithm: "LRU (active/inactive lists)",
+            modifications: "OS",
+            full_implementation: true,
+            evaluated_on_dcpmm: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PcmonSnapshot;
+    use crate::vm::PageTable;
+
+    fn ctx_setup(dram_pages: u64, pm_pages: u64, total: u32) -> (MachineConfig, PageTable) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        let pt = PageTable::new(total, 1024, dram_pages * 1024, pm_pages * 1024);
+        (cfg, pt)
+    }
+
+    fn tick(p: &mut Nimble, cfg: &MachineConfig, pt: &mut PageTable, epoch: u32) -> MigrationPlan {
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg,
+            epoch,
+            epoch_secs: 1.0,
+        };
+        p.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn promotes_referenced_pm_pages_into_free_dram() {
+        let (cfg, mut pt) = ctx_setup(10, 10, 8);
+        let mut p = Nimble::new(&cfg);
+        for page in 0..8 {
+            pt.allocate(page, Tier::Pm);
+        }
+        pt.touch(2, false);
+        pt.touch(5, true);
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert_eq!(plan.promote, vec![2, 5]);
+        assert!(plan.exchange.is_empty());
+    }
+
+    #[test]
+    fn exchanges_when_dram_full() {
+        let (cfg, mut pt) = ctx_setup(4, 10, 8);
+        let mut p = Nimble::new(&cfg);
+        for page in 0..4 {
+            pt.allocate(page, Tier::Dram);
+        }
+        for page in 4..8 {
+            pt.allocate(page, Tier::Pm);
+        }
+        // DRAM pages 0,1 idle; 2,3 hot. PM pages 4,6 hot.
+        pt.touch(2, false);
+        pt.touch(3, false);
+        pt.touch(4, false);
+        pt.touch(6, false);
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        // hot PM pages exchanged against cold DRAM pages
+        assert!(plan.promote.is_empty());
+        assert_eq!(plan.exchange.len(), 2);
+        let victims: Vec<u32> = plan.exchange.iter().map(|&(_, d)| d).collect();
+        assert!(victims.contains(&0) && victims.contains(&1));
+    }
+
+    #[test]
+    fn hotness_only_ignores_dirty() {
+        // a write-hot and a read-hot PM page rank identically
+        let (cfg, mut pt) = ctx_setup(10, 10, 4);
+        let mut p = Nimble::new(&cfg);
+        pt.allocate(0, Tier::Pm);
+        pt.allocate(1, Tier::Pm);
+        pt.touch(0, true); // write-hot
+        pt.touch(1, false); // read-hot
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert_eq!(plan.promote.len(), 2);
+    }
+
+    #[test]
+    fn second_chance_clears_bits() {
+        let (cfg, mut pt) = ctx_setup(2, 10, 4);
+        let mut p = Nimble::new(&cfg);
+        pt.allocate(0, Tier::Dram);
+        pt.allocate(1, Tier::Pm);
+        pt.touch(0, false);
+        pt.touch(1, false);
+        let _ = tick(&mut p, &cfg, &mut pt, 0);
+        // PM hand cleared PM page bits
+        assert!(!pt.flags(1).referenced());
+    }
+
+    #[test]
+    fn idle_pm_means_no_plan() {
+        let (cfg, mut pt) = ctx_setup(2, 10, 4);
+        let mut p = Nimble::new(&cfg);
+        pt.allocate(0, Tier::Pm);
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert!(plan.is_empty());
+    }
+}

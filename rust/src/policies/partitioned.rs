@@ -1,0 +1,180 @@
+//! Partitioned placement, CLOCK-DWF style (Lee et al. [27]; analyzed and
+//! rejected in paper §3.1 / Observation 1).
+//!
+//! The partitioned family classifies each page as DRAM-bound or PM-bound
+//! from simple recent-history criteria: **read-dominated pages belong in
+//! PM** (the pre-DCPMM assumption that PM reads are nearly DRAM-class),
+//! pages are migrated to DRAM **when writes are detected**, and
+//! write-cold DRAM pages drain back to PM. The paper shows this wastes
+//! free DRAM on read-heavy workloads — up to 11.3x latency and 2x
+//! bandwidth cost for the read-only pages stranded in PM. We implement
+//! it to regenerate that analysis (and as an ablation bench).
+
+use crate::config::{MachineConfig, Tier};
+use crate::vm::{MigrationPlan, PageId, PageTable, PageWalker, WalkControl};
+
+use super::{Policy, PolicyCtx, Table1Row};
+
+/// Epochs a DRAM page may stay unwritten before it is deemed PM-bound.
+const WRITE_IDLE_LIMIT: u8 = 3;
+
+pub struct Partitioned {
+    hand: PageWalker,
+    /// consecutive write-idle epochs per page
+    write_idle: Vec<u8>,
+    migrate_budget: usize,
+}
+
+impl Partitioned {
+    pub fn new(cfg: &MachineConfig) -> Self {
+        Partitioned {
+            hand: PageWalker::new(),
+            write_idle: Vec::new(),
+            migrate_budget: (512u64 * 1024 * 1024 / cfg.page_bytes).max(1) as usize,
+        }
+    }
+}
+
+impl Policy for Partitioned {
+    fn name(&self) -> &'static str {
+        "partitioned"
+    }
+
+    /// First touch cannot know the class yet; CLOCK-DWF starts pages in
+    /// PM and promotes on the first write fault.
+    fn place_new(&mut self, _page: PageId, pt: &PageTable) -> Tier {
+        if pt.free_pages(Tier::Pm) > 0 {
+            Tier::Pm
+        } else {
+            Tier::Dram
+        }
+    }
+
+    fn epoch_tick(&mut self, ctx: &mut PolicyCtx) -> MigrationPlan {
+        let pt = &mut *ctx.pt;
+        if self.write_idle.len() < pt.len() as usize {
+            self.write_idle.resize(pt.len() as usize, 0);
+        }
+        let mut plan = MigrationPlan::default();
+        let budget = self.migrate_budget;
+        let write_idle = &mut self.write_idle;
+        let mut promote = Vec::new();
+        let mut demote = Vec::new();
+        self.hand.walk(pt, pt.len() as usize, |page, flags, pt| {
+            match flags.tier() {
+                Tier::Pm => {
+                    // write detected => DRAM-bound
+                    if flags.dirty() && promote.len() < budget {
+                        promote.push(page);
+                        write_idle[page as usize] = 0;
+                    }
+                }
+                Tier::Dram => {
+                    // read-dominated for several epochs => PM-bound
+                    let idle = &mut write_idle[page as usize];
+                    if flags.dirty() {
+                        *idle = 0;
+                    } else {
+                        *idle = idle.saturating_add(1);
+                        if *idle >= WRITE_IDLE_LIMIT && demote.len() < budget {
+                            demote.push(page);
+                            *idle = 0;
+                        }
+                    }
+                }
+            }
+            pt.clear_rd(page);
+            WalkControl::Continue
+        });
+        // capacity guard: promotions beyond free DRAM become exchanges
+        let free = pt.free_pages(Tier::Dram) + demote.len() as u64;
+        if (promote.len() as u64) > free {
+            promote.truncate(free as usize);
+        }
+        plan.promote = promote;
+        plan.demote = demote;
+        plan
+    }
+
+    fn table1_row(&self) -> Table1Row {
+        Table1Row {
+            system: "CLOCK-DWF [27]",
+            hmh: "DRAM+PCM",
+            placement_policy: "Partitioned",
+            selection_criteria: "Hotness+r/w",
+            selection_algorithm: "CLOCK",
+            modifications: "OS",
+            full_implementation: false,
+            evaluated_on_dcpmm: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::PcmonSnapshot;
+
+    fn setup(total: u32) -> (MachineConfig, PageTable, Partitioned) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        let pt = PageTable::new(total, 1024, 100 * 1024, 100 * 1024);
+        let p = Partitioned::new(&cfg);
+        (cfg, pt, p)
+    }
+
+    fn tick(p: &mut Partitioned, cfg: &MachineConfig, pt: &mut PageTable, epoch: u32) -> MigrationPlan {
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg,
+            epoch,
+            epoch_secs: 1.0,
+        };
+        p.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn starts_pages_in_pm() {
+        let (_, pt, mut p) = setup(4);
+        assert_eq!(p.place_new(0, &pt), Tier::Pm);
+    }
+
+    #[test]
+    fn write_promotes_read_stays() {
+        let (cfg, mut pt, mut p) = setup(4);
+        pt.allocate(0, Tier::Pm);
+        pt.allocate(1, Tier::Pm);
+        pt.touch(0, true); // written
+        pt.touch(1, false); // read-only — stays in PM (the §3.1 pathology)
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert_eq!(plan.promote, vec![0]);
+    }
+
+    #[test]
+    fn read_dominated_dram_page_drains_to_pm() {
+        let (cfg, mut pt, mut p) = setup(4);
+        pt.allocate(0, Tier::Dram);
+        let mut demoted = false;
+        for e in 0..WRITE_IDLE_LIMIT as u32 + 1 {
+            pt.touch(0, false); // read every epoch, never written
+            let plan = tick(&mut p, &cfg, &mut pt, e);
+            if plan.demote.contains(&0) {
+                demoted = true;
+                break;
+            }
+        }
+        assert!(demoted, "read-dominated page must be classified PM-bound");
+    }
+
+    #[test]
+    fn writes_reset_the_idle_clock() {
+        let (cfg, mut pt, mut p) = setup(4);
+        pt.allocate(0, Tier::Dram);
+        for e in 0..(WRITE_IDLE_LIMIT as u32 * 3) {
+            pt.touch(0, true); // written every epoch
+            let plan = tick(&mut p, &cfg, &mut pt, e);
+            assert!(!plan.demote.contains(&0), "epoch {e}: write-hot page demoted");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax >= 0.5 emits
+//! HloModuleProto with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. See
+//! /opt/xla-example/README.md and python/compile/aot.py.
+//!
+//! Python never runs at simulation time — artifacts are compiled once by
+//! `make artifacts` and this module is self-contained afterwards.
+
+pub mod placement;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A PJRT client plus the executables loaded on it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, source: path.to_path_buf() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    source: PathBuf,
+}
+
+impl Executable {
+    pub fn source(&self) -> &Path {
+        &self.source
+    }
+
+    /// Execute with f32 vector inputs (1-D each, or (rows, cols) when a
+    /// shape is given) and return all tuple outputs as f32 vectors.
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// device output is always a tuple literal.
+    pub fn run_f32(&self, inputs: &[F32Input]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| match inp.shape {
+                None => Ok(xla::Literal::vec1(inp.data)),
+                Some((r, c)) => xla::Literal::vec1(inp.data)
+                    .reshape(&[r as i64, c as i64])
+                    .context("reshape input"),
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.source.display()))?;
+        if result.is_empty() || result[0].is_empty() {
+            bail!("empty execution result");
+        }
+        let out = result[0][0].to_literal_sync().context("fetching result")?;
+        let parts = out.to_tuple().context("decomposing output tuple")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// One f32 input: flat data plus optional 2-D shape.
+pub struct F32Input<'a> {
+    pub data: &'a [f32],
+    pub shape: Option<(usize, usize)>,
+}
+
+impl<'a> F32Input<'a> {
+    pub fn vec(data: &'a [f32]) -> Self {
+        F32Input { data, shape: None }
+    }
+    pub fn mat(data: &'a [f32], rows: usize, cols: usize) -> Self {
+        F32Input { data, shape: Some((rows, cols)) }
+    }
+}
+
+/// Default artifacts directory (relative to the workspace root).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("artifacts not built — skipping PJRT tests");
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn plan_cost_artifact_executes() {
+        let Some(dir) = artifacts() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join("plan_cost_32.hlo.txt")).unwrap();
+        // 32 candidate rows x 4 demand entries
+        let mut demands = vec![0.0f32; 32 * 4];
+        // candidate 0: 10 GB DRAM reads; candidate 1: 10 GB PM writes
+        demands[0] = 1e10;
+        demands[4 + 3] = 1e10;
+        let params: Vec<f32> = vec![
+            34e9, 28e9, 13.2e9, 4.6e9, 81e-9, 169e-9, 94e-9, 64.0, 1.0, 0.0,
+        ];
+        let out = exe
+            .run_f32(&[F32Input::mat(&demands, 32, 4), F32Input::vec(&params)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let costs = &out[0];
+        assert_eq!(costs.len(), 32);
+        // DRAM reads are far cheaper than PM writes
+        assert!(costs[0] > 0.0 && costs[1] > 2.0 * costs[0], "{costs:?}");
+        // zero-demand candidates cost ~nothing
+        assert!(costs[2].abs() < 1e-6);
+    }
+}

@@ -1,0 +1,231 @@
+//! The AOT placement classifier: executes `placement_<N>.hlo.txt` (the
+//! Pallas classification kernel + JAX aggregate reduction, lowered once
+//! at build time) on the PJRT CPU client, implementing the same
+//! [`Classifier`] interface as the native fallback.
+//!
+//! Capacity bucketing: artifacts are compiled for fixed page counts
+//! (manifest `placement_buckets`); the classifier picks the smallest
+//! bucket >= the resident page count and zero-pads. Padding slots have
+//! `valid = 0`, which the kernel masks out of every output and
+//! aggregate, so bucketing is exact, not approximate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::policies::hyplacer::classifier::Classifier;
+use crate::policies::hyplacer::native::{
+    ClassifyOutput, PageStats, N_AGGREGATES, N_PARAMS,
+};
+use crate::report::json;
+
+use super::{Executable, F32Input, Runtime};
+
+pub struct AotClassifier {
+    rt: Runtime,
+    dir: PathBuf,
+    buckets: Vec<usize>,
+    loaded: BTreeMap<usize, Executable>,
+    /// Padded input scratch (reused).
+    scratch: Vec<Vec<f32>>,
+}
+
+impl AotClassifier {
+    /// Load the manifest and prepare (lazily) the bucket executables.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        let n_params = doc
+            .get("n_params")
+            .and_then(|v| v.as_f64())
+            .context("manifest missing n_params")? as usize;
+        if n_params != N_PARAMS {
+            bail!("manifest n_params {n_params} != compiled-in {N_PARAMS}; re-run make artifacts");
+        }
+        let buckets: Vec<usize> = doc
+            .get("placement_buckets")
+            .and_then(|v| v.as_i64_vec())
+            .context("manifest missing placement_buckets")?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect();
+        if buckets.is_empty() {
+            bail!("manifest has no placement buckets");
+        }
+        let rt = Runtime::cpu()?;
+        Ok(AotClassifier { rt, dir, buckets, loaded: BTreeMap::new(), scratch: Vec::new() })
+    }
+
+    fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|b| *b >= n)
+            .min()
+            .with_context(|| format!("no placement bucket fits {n} pages (max {:?})", self.buckets.iter().max()))
+    }
+
+    fn ensure_loaded(&mut self, bucket: usize) -> Result<()> {
+        if self.loaded.contains_key(&bucket) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("placement_{bucket}.hlo.txt"));
+        let exe = self.rt.load_hlo_text(&path)?;
+        self.loaded.insert(bucket, exe);
+        Ok(())
+    }
+
+    fn pad_inputs(&mut self, stats: &PageStats, bucket: usize) {
+        let n = stats.len();
+        if self.scratch.len() != 6 {
+            self.scratch = vec![Vec::new(); 6];
+        }
+        let sources: [&[f32]; 6] = [
+            &stats.refd,
+            &stats.dirty,
+            &stats.hot_ewma,
+            &stats.wr_ewma,
+            &stats.tier,
+            &stats.valid,
+        ];
+        for (buf, src) in self.scratch.iter_mut().zip(sources.iter()) {
+            buf.clear();
+            buf.reserve(bucket);
+            buf.extend_from_slice(&src[..n]);
+            buf.resize(bucket, 0.0);
+        }
+    }
+}
+
+impl Classifier for AotClassifier {
+    fn name(&self) -> &'static str {
+        "aot-pjrt"
+    }
+
+    fn classify(&mut self, stats: &PageStats, params: &[f32; N_PARAMS]) -> Result<ClassifyOutput> {
+        let n = stats.len();
+        let bucket = self.bucket_for(n)?;
+        self.ensure_loaded(bucket)?;
+        self.pad_inputs(stats, bucket);
+        let exe = self.loaded.get(&bucket).expect("just loaded");
+
+        let inputs: Vec<F32Input> = self
+            .scratch
+            .iter()
+            .map(|b| F32Input::vec(b))
+            .chain(std::iter::once(F32Input::vec(&params[..])))
+            .collect();
+        let mut outs = exe.run_f32(&inputs)?;
+        if outs.len() != 6 {
+            bail!("placement artifact returned {} outputs, expected 6", outs.len());
+        }
+        let aggregates_vec = outs.pop().unwrap();
+        if aggregates_vec.len() != N_AGGREGATES {
+            bail!("aggregate vector has {} entries, expected {N_AGGREGATES}", aggregates_vec.len());
+        }
+        let truncate = |mut v: Vec<f32>| {
+            v.truncate(n);
+            v
+        };
+        let promote_score = truncate(outs.pop().unwrap());
+        let demote_score = truncate(outs.pop().unwrap());
+        let class = truncate(outs.pop().unwrap());
+        let new_wr = truncate(outs.pop().unwrap());
+        let new_hot = truncate(outs.pop().unwrap());
+        let mut aggregates = [0.0f32; N_AGGREGATES];
+        aggregates.copy_from_slice(&aggregates_vec);
+        Ok(ClassifyOutput { new_hot, new_wr, class, demote_score, promote_score, aggregates })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::hyplacer::classifier::NativeClassifier;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::Rng64;
+
+    fn aot() -> Option<AotClassifier> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built — skipping AOT classifier tests");
+            return None;
+        }
+        Some(AotClassifier::new(dir).expect("classifier loads"))
+    }
+
+    fn random_stats(n: usize, seed: u64) -> PageStats {
+        let mut rng = Rng64::new(seed);
+        let mut s = PageStats::with_len(n);
+        for i in 0..n {
+            s.refd[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+            s.dirty[i] = if rng.chance(0.3) { 1.0 } else { 0.0 };
+            s.hot_ewma[i] = rng.next_f64() as f32;
+            s.wr_ewma[i] = rng.next_f64() as f32;
+            s.tier[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+            s.valid[i] = if rng.chance(0.9) { 1.0 } else { 0.0 };
+        }
+        s
+    }
+
+    fn params() -> [f32; N_PARAMS] {
+        [0.35, 0.25, 0.4, 0.6, 0.2, 0.65, 0.0, 0.0]
+    }
+
+    /// THE key integration test: the AOT/PJRT path and the native path
+    /// must produce identical classifications — proving the three-layer
+    /// stack (pallas kernel -> jax model -> HLO -> PJRT -> rust) is
+    /// numerically sound end to end.
+    #[test]
+    fn aot_matches_native_exactly() {
+        let Some(mut aot) = aot() else { return };
+        let mut native = NativeClassifier;
+        for (n, seed) in [(100usize, 1u64), (4096, 2), (8192, 3)] {
+            let stats = random_stats(n, seed);
+            let a = aot.classify(&stats, &params()).unwrap();
+            let b = native.classify(&stats, &params()).unwrap();
+            for (name, x, y) in [
+                ("new_hot", &a.new_hot, &b.new_hot),
+                ("new_wr", &a.new_wr, &b.new_wr),
+                ("class", &a.class, &b.class),
+                ("demote", &a.demote_score, &b.demote_score),
+                ("promote", &a.promote_score, &b.promote_score),
+            ] {
+                assert_eq!(x.len(), y.len(), "{name} length n={n}");
+                for i in 0..x.len() {
+                    assert!(
+                        (x[i] - y[i]).abs() < 1e-5,
+                        "{name}[{i}] n={n}: aot {} vs native {}",
+                        x[i],
+                        y[i]
+                    );
+                }
+            }
+            for i in 0..N_AGGREGATES {
+                let (x, y) = (a.aggregates[i], b.aggregates[i]);
+                assert!(
+                    (x - y).abs() <= 1e-2 + 1e-4 * y.abs(),
+                    "agg[{i}] n={n}: aot {x} vs native {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_selection_and_padding() {
+        let Some(aot) = aot() else { return };
+        assert_eq!(aot.bucket_for(10).unwrap(), 8192);
+        assert_eq!(aot.bucket_for(8192).unwrap(), 8192);
+        assert_eq!(aot.bucket_for(8193).unwrap(), 65536);
+        assert!(aot.bucket_for(10_000_000).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(AotClassifier::new("/nonexistent/dir").is_err());
+    }
+}

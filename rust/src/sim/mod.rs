@@ -1,0 +1,51 @@
+//! Simulation engine: the epoch clock and run-level statistics tracker.
+//!
+//! The simulator advances in *epochs* (Control's monitoring period). Each
+//! epoch the bound workload offers a fixed quantum of work; the memory
+//! model determines how long that quantum takes given the current page
+//! distribution. Total work is therefore identical across policies and
+//! speedup reduces to a wall-clock ratio — the same normalization the
+//! paper's Fig. 5 uses.
+
+pub mod stats;
+
+pub use stats::{EpochRecord, RunStats};
+
+/// Simulated wall clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimClock {
+    now_secs: f64,
+    epoch: u32,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn now(&self) -> f64 {
+        self.now_secs
+    }
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+    pub fn advance(&mut self, secs: f64) {
+        debug_assert!(secs >= 0.0);
+        self.now_secs += secs;
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+        assert_eq!(c.epoch(), 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Run-level statistics: per-epoch records and the derived throughput /
+//! energy / migration summaries every bench and example reports.
+
+use crate::config::Tier;
+use crate::mem::energy::EnergyAccount;
+use crate::mem::{EpochDemand, EpochOutcome};
+use crate::vm::MigrationStats;
+
+/// Everything recorded about one served epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochRecord {
+    pub epoch: u32,
+    pub wall_secs: f64,
+    pub app_bytes: f64,
+    pub dram_bytes: f64,
+    pub pm_bytes: f64,
+    pub dram_util: f64,
+    pub pm_util: f64,
+    pub pm_read_latency_ns: f64,
+    pub dram_read_latency_ns: f64,
+    pub migrated_pages: u64,
+    pub migration_overhead_secs: f64,
+    pub dram_occupancy: f64,
+}
+
+/// Aggregated statistics for a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub epochs: Vec<EpochRecord>,
+    pub energy: EnergyAccount,
+    pub warmup_epochs: u32,
+}
+
+impl RunStats {
+    pub fn new(warmup_epochs: u32) -> Self {
+        RunStats { epochs: Vec::new(), energy: EnergyAccount::default(), warmup_epochs }
+    }
+
+    pub fn record(
+        &mut self,
+        epoch: u32,
+        demand: &EpochDemand,
+        outcome: &EpochOutcome,
+        migration: &MigrationStats,
+        dram_occupancy: f64,
+    ) {
+        self.epochs.push(EpochRecord {
+            epoch,
+            wall_secs: outcome.wall_secs,
+            app_bytes: demand.app_bytes,
+            dram_bytes: demand.dram.total(),
+            pm_bytes: demand.pm.total(),
+            dram_util: outcome.dram.utilization,
+            pm_util: outcome.pm.utilization,
+            pm_read_latency_ns: outcome.pm.read_latency_ns,
+            dram_read_latency_ns: outcome.dram.read_latency_ns,
+            migrated_pages: migration.moves(),
+            migration_overhead_secs: migration.overhead_secs,
+            dram_occupancy,
+        });
+    }
+
+    fn steady(&self) -> &[EpochRecord] {
+        let skip = (self.warmup_epochs as usize).min(self.epochs.len());
+        &self.epochs[skip..]
+    }
+
+    /// Total simulated wall time (all epochs — the paper reports whole-run
+    /// execution time).
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_secs).sum()
+    }
+
+    pub fn total_app_bytes(&self) -> f64 {
+        self.epochs.iter().map(|e| e.app_bytes).sum()
+    }
+
+    /// Application throughput, B/s, over the whole run.
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_wall_secs();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.total_app_bytes() / t
+        }
+    }
+
+    /// Steady-state throughput (post-warmup), B/s.
+    pub fn steady_throughput(&self) -> f64 {
+        let s = self.steady();
+        let t: f64 = s.iter().map(|e| e.wall_secs).sum();
+        if t <= 0.0 {
+            0.0
+        } else {
+            s.iter().map(|e| e.app_bytes).sum::<f64>() / t
+        }
+    }
+
+    pub fn total_migrated_pages(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrated_pages).sum()
+    }
+
+    /// Fraction of app traffic served from a tier (post-warmup).
+    pub fn tier_traffic_share(&self, tier: Tier) -> f64 {
+        let s = self.steady();
+        let total: f64 = s.iter().map(|e| e.dram_bytes + e.pm_bytes).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let part: f64 = s
+            .iter()
+            .map(|e| match tier {
+                Tier::Dram => e.dram_bytes,
+                Tier::Pm => e.pm_bytes,
+            })
+            .sum();
+        part / total
+    }
+
+    pub fn mean_pm_read_latency_ns(&self) -> f64 {
+        let s = self.steady();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().map(|e| e.pm_read_latency_ns).sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::TierDemand;
+
+    fn rec(stats: &mut RunStats, epoch: u32, wall: f64, dram: f64, pm: f64) {
+        let mut d = EpochDemand::default();
+        d.dram = TierDemand::new(dram, 0.0, 0.0);
+        d.pm = TierDemand::new(pm, 0.0, 0.0);
+        d.app_bytes = dram + pm;
+        let mut out = EpochOutcome::default();
+        out.wall_secs = wall;
+        stats.record(epoch, &d, &out, &MigrationStats::default(), 0.5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut s = RunStats::new(1);
+        rec(&mut s, 0, 2.0, 10.0, 0.0); // warmup
+        rec(&mut s, 1, 1.0, 8.0, 2.0);
+        rec(&mut s, 2, 1.0, 6.0, 4.0);
+        assert!((s.total_wall_secs() - 4.0).abs() < 1e-12);
+        assert!((s.throughput() - 30.0 / 4.0).abs() < 1e-12);
+        assert!((s.steady_throughput() - 20.0 / 2.0).abs() < 1e-12);
+        // steady tier share skips the warmup epoch
+        assert!((s.tier_traffic_share(Tier::Dram) - 14.0 / 20.0).abs() < 1e-12);
+        assert!((s.tier_traffic_share(Tier::Pm) - 6.0 / 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = RunStats::new(0);
+        assert_eq!(s.throughput(), 0.0);
+        assert_eq!(s.steady_throughput(), 0.0);
+        assert_eq!(s.tier_traffic_share(Tier::Dram), 0.0);
+        assert_eq!(s.mean_pm_read_latency_ns(), 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Small self-contained utilities (this build is fully offline, so the
+//! usual crates.io helpers — `rand`, `proptest`, `criterion` — are
+//! replaced by the in-tree implementations in this module and
+//! [`crate::bench_harness`]).
+
+pub mod rng;
+pub mod topk;
+pub mod proptest;
+
+pub use rng::Rng64;
+pub use topk::top_k_indices;
+
+/// Geometric mean of a slice (ignores non-positive entries, as the paper's
+/// geomean speedup bars do).
+pub fn geomean(values: &[f64]) -> f64 {
+    let logs: Vec<f64> = values.iter().filter(|v| **v > 0.0).map(|v| v.ln()).collect();
+    if logs.is_empty() {
+        return 0.0;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Linear interpolation.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Clamp to [lo, hi].
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Bytes pretty-printer for reports ("39.1 GB").
+pub fn fmt_bytes(bytes: f64) -> String {
+    const GB: f64 = 1e9;
+    const MB: f64 = 1e6;
+    const KB: f64 = 1e3;
+    if bytes >= GB {
+        format!("{:.1} GB", bytes / GB)
+    } else if bytes >= MB {
+        format!("{:.1} MB", bytes / MB)
+    } else if bytes >= KB {
+        format!("{:.1} KB", bytes / KB)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        // non-positive entries ignored
+        assert!((geomean(&[2.0, 8.0, 0.0, -1.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_and_clamp() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(39.1e9), "39.1 GB");
+        assert_eq!(fmt_bytes(1.5e6), "1.5 MB");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KB");
+        assert_eq!(fmt_bytes(12.0), "12 B");
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal in-tree property-testing helper (the `proptest` crate is not
+//! available offline). Provides seeded case generation with failure
+//! reporting including the case seed, so a failing property is directly
+//! re-runnable. Used by coordinator/policy invariant tests.
+
+use crate::util::Rng64;
+
+/// Run `cases` random test cases of property `f`. On failure, panics with
+/// the reproducer seed. `f` receives a per-case RNG.
+pub fn check<F: Fn(&mut Rng64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    check_seeded(name, 0xC0FFEE, cases, f)
+}
+
+/// As [`check`] with an explicit base seed (use the seed printed by a
+/// failing run to reproduce it).
+pub fn check_seeded<F: Fn(&mut Rng64) -> Result<(), String>>(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    f: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (reproduce with \
+                 check_seeded(\"{name}\", {base_seed:#x}, starting at case {case})): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0u64);
+        let c = &mut count;
+        check("trivial", 25, |_rng| {
+            c.set(c.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            if rng.next_f64() < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Deterministic PRNG (xoshiro256**) used everywhere randomness is needed
+//! in the simulator. Determinism matters: every figure regeneration and
+//! every test must be exactly reproducible from a seed, and the `rand`
+//! crate is not available offline.
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    /// Seed via splitmix64 expansion (any seed, including 0, is fine).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng64 { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // multiply-shift; bias is negligible for simulator purposes
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Zipf-like rank draw over [0, n): P(k) ∝ 1/(k+1)^theta via inverse
+    /// transform on a precomputed-free approximation (rejection-less,
+    /// approximate for theta in (0,2]). Used by GAP graph workloads.
+    pub fn zipf(&mut self, n: u64, theta: f64) -> u64 {
+        debug_assert!(n > 0);
+        // inverse-CDF approximation of the continuous analogue
+        let u = self.next_f64().max(1e-12);
+        let one_minus = 1.0 - theta;
+        let k = if one_minus.abs() < 1e-9 {
+            ((n as f64).powf(u) - 1.0).max(0.0)
+        } else {
+            let h = |x: f64| (x.powf(one_minus) - 1.0) / one_minus;
+            let hinv = |y: f64| (1.0 + y * one_minus).powf(1.0 / one_minus);
+            hinv(u * h(n as f64 + 1.0)).max(1.0) - 1.0
+        };
+        (k as u64).min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng64::new(7);
+        let mut b = Rng64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng64::new(8);
+        assert_ne!(Rng64::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng64::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bound_respected() {
+        let mut r = Rng64::new(2);
+        for n in [1u64, 2, 3, 17, 1000] {
+            for _ in 0..1000 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Rng64::new(3);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.next_f64()).sum();
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn zipf_skews_low_ranks() {
+        let mut r = Rng64::new(4);
+        let mut lo = 0usize;
+        let n = 100_000;
+        for _ in 0..n {
+            if r.zipf(1000, 0.99) < 10 {
+                lo += 1;
+            }
+        }
+        // with theta≈1, the top-1% of ranks should get far more than 1% of draws
+        assert!(lo as f64 / n as f64 > 0.15, "zipf not skewed: {lo}");
+    }
+
+    #[test]
+    fn zipf_within_range() {
+        let mut r = Rng64::new(5);
+        for theta in [0.5, 0.99, 1.5] {
+            for _ in 0..5000 {
+                assert!(r.zipf(37, theta) < 37);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng64::new(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,131 @@
+//! Top-k selection over score arrays — the rust half of the PageFind
+//! response path. The AOT placement kernel emits per-page priority scores;
+//! SelMo needs the k highest-scoring page indices. A full sort of an
+//! 8M-entry score array per epoch would dominate the hot path, so this is
+//! a bounded binary-heap selection: O(n log k), no allocation beyond the
+//! k-entry heap, single pass, skips sentinel (-1.0) scores.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct MinEntry {
+    score: f32,
+    idx: u32,
+}
+
+impl Eq for MinEntry {}
+
+impl PartialOrd for MinEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for MinEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we need the *lowest* score on
+        // top so it can be evicted by better candidates. Tie-break on index
+        // for determinism.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+/// Indices of the `k` highest scores in `scores`, excluding entries with
+/// score < `floor` (the kernel marks ineligible pages with -1.0).
+/// Result is ordered highest-score-first; ties broken by lower index.
+pub fn top_k_indices(scores: &[f32], k: usize, floor: f32) -> Vec<u32> {
+    if k == 0 || scores.is_empty() {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<MinEntry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if s < floor || s.is_nan() {
+            continue;
+        }
+        if heap.len() < k {
+            heap.push(MinEntry { score: s, idx: i as u32 });
+        } else if let Some(worst) = heap.peek() {
+            if s > worst.score || (s == worst.score && (i as u32) < worst.idx) {
+                heap.pop();
+                heap.push(MinEntry { score: s, idx: i as u32 });
+            }
+        }
+    }
+    let mut out: Vec<MinEntry> = heap.into_vec();
+    out.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.idx.cmp(&b.idx))
+    });
+    out.into_iter().map(|e| e.idx).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    #[test]
+    fn selects_highest() {
+        let scores = [0.1f32, 0.9, 0.5, -1.0, 0.7];
+        assert_eq!(top_k_indices(&scores, 2, 0.0), vec![1, 4]);
+    }
+
+    #[test]
+    fn respects_floor() {
+        let scores = [0.1f32, -1.0, -1.0, 0.2];
+        assert_eq!(top_k_indices(&scores, 10, 0.0), vec![3, 0]);
+    }
+
+    #[test]
+    fn k_zero_and_empty() {
+        assert!(top_k_indices(&[1.0], 0, 0.0).is_empty());
+        assert!(top_k_indices(&[], 5, 0.0).is_empty());
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let scores = [0.5f32; 8];
+        assert_eq!(top_k_indices(&scores, 3, 0.0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nan_skipped() {
+        let scores = [f32::NAN, 0.3, f32::NAN, 0.1];
+        assert_eq!(top_k_indices(&scores, 4, 0.0), vec![1, 3]);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng64::new(99);
+        for trial in 0..50 {
+            let n = 1 + rng.next_below(2000) as usize;
+            let k = 1 + rng.next_below(64) as usize;
+            let scores: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.2) {
+                        -1.0
+                    } else {
+                        rng.next_f64() as f32
+                    }
+                })
+                .collect();
+            let got = top_k_indices(&scores, k, 0.0);
+            let mut idx: Vec<u32> = (0..n as u32).filter(|&i| scores[i as usize] >= 0.0).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
+                    .unwrap()
+                    .then_with(|| a.cmp(&b))
+            });
+            idx.truncate(k);
+            assert_eq!(got, idx, "trial {trial}");
+        }
+    }
+}

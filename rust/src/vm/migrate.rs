@@ -1,0 +1,238 @@
+//! Page-migration engine — the simulator's `move_pages(2)` plus the
+//! exchange-based technique HyPlacer layers on top of it (paper §4.2:
+//! "an equal number of pages are switched between both tiers, thus
+//! preserving their current allocation").
+//!
+//! Executing a plan updates the page table and produces the *cost* of the
+//! migration: copy traffic charged to both tiers (read on the source,
+//! write on the destination) and fixed per-page kernel overhead (PTE
+//! unmap/remap, TLB shootdown, page-struct management). The coordinator
+//! folds this into the epoch's [`crate::mem::EpochDemand`], so heavy
+//! migrators pay for it in wall-clock — the effect behind Fig. 7's
+//! small-footprint overheads.
+
+use crate::config::{MachineConfig, Tier};
+use crate::mem::TierDemand;
+
+use super::page_table::{PageId, PageTable};
+
+/// A placement decision: pages to promote (PM→DRAM), pages to demote
+/// (DRAM→PM), and exchange pairs (atomic switch).
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    pub promote: Vec<PageId>,
+    pub demote: Vec<PageId>,
+    pub exchange: Vec<(PageId, PageId)>, // (pm_page, dram_page)
+}
+
+impl MigrationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.promote.is_empty() && self.demote.is_empty() && self.exchange.is_empty()
+    }
+
+    pub fn page_moves(&self) -> u64 {
+        (self.promote.len() + self.demote.len() + 2 * self.exchange.len()) as u64
+    }
+}
+
+/// Cost and accounting of an executed plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationStats {
+    pub promoted: u64,
+    pub demoted: u64,
+    pub exchanged_pairs: u64,
+    /// Moves skipped (capacity exhausted / invalid / same tier).
+    pub skipped: u64,
+    /// Copy traffic to charge each tier this epoch.
+    pub dram_traffic: TierDemand,
+    pub pm_traffic: TierDemand,
+    /// Fixed kernel time (syscall + PTE + TLB) spent migrating.
+    pub overhead_secs: f64,
+}
+
+impl MigrationStats {
+    pub fn moves(&self) -> u64 {
+        self.promoted + self.demoted + 2 * self.exchanged_pairs
+    }
+    pub fn bytes_moved(&self, page_bytes: u64) -> f64 {
+        self.moves() as f64 * page_bytes as f64
+    }
+}
+
+/// Execute a migration plan against the page table, producing its cost.
+///
+/// Ordering matters and mirrors HyPlacer's Control: demotions first (they
+/// free DRAM), then exchanges (capacity-neutral), then promotions (they
+/// consume the freed space). Moves that cannot proceed are skipped and
+/// counted, never retried — the next epoch's PageFind will re-select.
+pub fn execute(pt: &mut PageTable, cfg: &MachineConfig, plan: &MigrationPlan) -> MigrationStats {
+    let mut stats = MigrationStats::default();
+    let page = cfg.page_bytes as f64;
+
+    for &p in &plan.demote {
+        if pt.migrate(p, Tier::Pm) {
+            stats.demoted += 1;
+            // copy: read page from DRAM, write page to PM (sequential copy)
+            stats.dram_traffic.read_bytes += page;
+            stats.pm_traffic.write_bytes += page;
+        } else {
+            stats.skipped += 1;
+        }
+    }
+    for &(pm_page, dram_page) in &plan.exchange {
+        if pt.flags(pm_page).valid()
+            && pt.flags(dram_page).valid()
+            && pt.flags(pm_page).tier() == Tier::Pm
+            && pt.flags(dram_page).tier() == Tier::Dram
+            && pt.exchange(pm_page, dram_page)
+        {
+            stats.exchanged_pairs += 1;
+            // both directions copied
+            stats.dram_traffic.read_bytes += page;
+            stats.dram_traffic.write_bytes += page;
+            stats.pm_traffic.read_bytes += page;
+            stats.pm_traffic.write_bytes += page;
+        } else {
+            stats.skipped += 2;
+        }
+    }
+    for &p in &plan.promote {
+        if pt.migrate(p, Tier::Dram) {
+            stats.promoted += 1;
+            stats.pm_traffic.read_bytes += page;
+            stats.dram_traffic.write_bytes += page;
+        } else {
+            stats.skipped += 1;
+        }
+    }
+
+    stats.overhead_secs = stats.moves() as f64 * cfg.migrate_page_overhead;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PageTable, MachineConfig) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        cfg.migrate_page_overhead = 1e-6;
+        // 4 DRAM pages, 16 PM page frames (8 used)
+        let mut pt = PageTable::new(12, 1024, 4 * 1024, 16 * 1024);
+        for p in 0..4 {
+            pt.allocate(p, Tier::Dram);
+        }
+        for p in 4..12 {
+            pt.allocate(p, Tier::Pm);
+        }
+        (pt, cfg)
+    }
+
+    #[test]
+    fn promote_demote_roundtrip() {
+        let (mut pt, cfg) = setup();
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![0, 1],
+            exchange: vec![],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.demoted, 2);
+        assert_eq!(pt.used_pages(Tier::Dram), 2);
+        // demote traffic: DRAM reads + PM writes
+        assert_eq!(s.dram_traffic.read_bytes, 2048.0);
+        assert_eq!(s.pm_traffic.write_bytes, 2048.0);
+        assert_eq!(s.pm_traffic.read_bytes, 0.0);
+
+        let plan2 = MigrationPlan {
+            promote: vec![0, 1],
+            demote: vec![],
+            exchange: vec![],
+        };
+        let s2 = execute(&mut pt, &cfg, &plan2);
+        assert_eq!(s2.promoted, 2);
+        assert_eq!(pt.used_pages(Tier::Dram), 4);
+        assert_eq!(s2.pm_traffic.read_bytes, 2048.0);
+        assert_eq!(s2.dram_traffic.write_bytes, 2048.0);
+    }
+
+    #[test]
+    fn demote_first_frees_room_for_promote() {
+        let (mut pt, cfg) = setup();
+        // DRAM full; a combined plan must still succeed because demotions
+        // execute before promotions
+        let plan = MigrationPlan {
+            promote: vec![4, 5],
+            demote: vec![0, 1],
+            exchange: vec![],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.demoted, 2);
+        assert_eq!(s.promoted, 2);
+        assert_eq!(s.skipped, 0);
+        assert_eq!(pt.used_pages(Tier::Dram), 4);
+    }
+
+    #[test]
+    fn promote_into_full_dram_skipped() {
+        let (mut pt, cfg) = setup();
+        let plan = MigrationPlan {
+            promote: vec![4],
+            demote: vec![],
+            exchange: vec![],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.promoted, 0);
+        assert_eq!(s.skipped, 1);
+    }
+
+    #[test]
+    fn exchange_is_capacity_neutral() {
+        let (mut pt, cfg) = setup();
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(4, 0), (5, 1)],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.exchanged_pairs, 2);
+        assert_eq!(pt.used_pages(Tier::Dram), 4);
+        assert_eq!(pt.used_pages(Tier::Pm), 8);
+        assert_eq!(pt.flags(4).tier(), Tier::Dram);
+        assert_eq!(pt.flags(0).tier(), Tier::Pm);
+        // exchange traffic hits both directions of both tiers
+        assert_eq!(s.dram_traffic.read_bytes, 2048.0);
+        assert_eq!(s.dram_traffic.write_bytes, 2048.0);
+        assert_eq!(s.pm_traffic.read_bytes, 2048.0);
+        assert_eq!(s.pm_traffic.write_bytes, 2048.0);
+    }
+
+    #[test]
+    fn malformed_exchange_skipped() {
+        let (mut pt, cfg) = setup();
+        // (dram, dram) and (pm, pm) pairs are rejected
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(0, 1), (4, 5)],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.exchanged_pairs, 0);
+        assert_eq!(s.skipped, 4);
+    }
+
+    #[test]
+    fn overhead_scales_with_moves() {
+        let (mut pt, cfg) = setup();
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![0, 1, 2],
+            exchange: vec![(4, 3)],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.moves(), 5);
+        assert!((s.overhead_secs - 5e-6).abs() < 1e-12);
+        assert_eq!(s.bytes_moved(1024), 5.0 * 1024.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Virtual-memory substrate: page tables with MMU-managed
+//! reference/dirty bits, the resumable page-table walker that SelMo's
+//! PageFind modes are built on (the analogue of Linux's
+//! `walk_page_range`, the one routine the paper exports with its
+//! single-line kernel change), and the page-migration engine (the
+//! analogue of `move_pages` plus HyPlacer's exchange-based migration).
+
+pub mod page_table;
+pub mod pagewalk;
+pub mod migrate;
+
+pub use page_table::{PageFlags, PageId, PageTable};
+pub use pagewalk::{PageWalker, WalkControl};
+pub use migrate::{MigrationPlan, MigrationStats};

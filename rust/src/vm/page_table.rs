@@ -1,0 +1,345 @@
+//! Page table: per-page tier placement + MMU-managed R/D bits.
+//!
+//! Stored as a dense struct-of-arrays keyed by [`PageId`] (the simulator
+//! equivalent of a virtual page number). The MMU side (the simulated
+//! workload setting accessed/dirty bits) and the kernel side (policies
+//! observing and clearing them through [`super::pagewalk`]) meet here —
+//! exactly the information surface HyPlacer's SelMo works with.
+
+use crate::config::Tier;
+
+pub type PageId = u32;
+
+/// PTE software-visible flag bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageFlags(pub u8);
+
+impl PageFlags {
+    pub const VALID: u8 = 1 << 0;
+    /// Accessed ("referenced") bit — set by the MMU on any access.
+    pub const REF: u8 = 1 << 1;
+    /// Dirty ("modified") bit — set by the MMU on stores.
+    pub const DIRTY: u8 = 1 << 2;
+    /// Tier bit: 0 = DRAM, 1 = DCPMM.
+    pub const TIER_PM: u8 = 1 << 3;
+    /// Delay-window accessed bit: set only for accesses falling inside
+    /// HyPlacer's post-DCPMM_CLEAR delay window (paper §4.4 — "pages that
+    /// are accessed or modified during the delay interval are considered
+    /// read- or write-intensive").
+    pub const WREF: u8 = 1 << 4;
+    /// Delay-window dirty bit.
+    pub const WDIRTY: u8 = 1 << 5;
+
+    pub fn valid(self) -> bool {
+        self.0 & Self::VALID != 0
+    }
+    pub fn referenced(self) -> bool {
+        self.0 & Self::REF != 0
+    }
+    pub fn dirty(self) -> bool {
+        self.0 & Self::DIRTY != 0
+    }
+    pub fn window_referenced(self) -> bool {
+        self.0 & Self::WREF != 0
+    }
+    pub fn window_dirty(self) -> bool {
+        self.0 & Self::WDIRTY != 0
+    }
+    pub fn tier(self) -> Tier {
+        if self.0 & Self::TIER_PM != 0 {
+            Tier::Pm
+        } else {
+            Tier::Dram
+        }
+    }
+}
+
+/// Dense page table for one bound process.
+#[derive(Clone, Debug)]
+pub struct PageTable {
+    flags: Vec<u8>,
+    page_bytes: u64,
+    dram_capacity_pages: u64,
+    pm_capacity_pages: u64,
+    dram_used: u64,
+    pm_used: u64,
+}
+
+impl PageTable {
+    pub fn new(num_pages: u32, page_bytes: u64, dram_capacity: u64, pm_capacity: u64) -> Self {
+        PageTable {
+            flags: vec![0; num_pages as usize],
+            page_bytes,
+            dram_capacity_pages: dram_capacity / page_bytes,
+            pm_capacity_pages: pm_capacity / page_bytes,
+            dram_used: 0,
+            pm_used: 0,
+        }
+    }
+
+    pub fn len(&self) -> u32 {
+        self.flags.len() as u32
+    }
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    #[inline]
+    pub fn flags(&self, page: PageId) -> PageFlags {
+        PageFlags(self.flags[page as usize])
+    }
+
+    /// Map a page to a tier (first touch). Returns false if that tier is
+    /// at capacity (caller must pick the other tier or fail).
+    pub fn allocate(&mut self, page: PageId, tier: Tier) -> bool {
+        let f = &mut self.flags[page as usize];
+        assert_eq!(*f & PageFlags::VALID, 0, "page {page} double-allocated");
+        match tier {
+            Tier::Dram => {
+                if self.dram_used >= self.dram_capacity_pages {
+                    return false;
+                }
+                self.dram_used += 1;
+                *f = PageFlags::VALID;
+            }
+            Tier::Pm => {
+                if self.pm_used >= self.pm_capacity_pages {
+                    return false;
+                }
+                self.pm_used += 1;
+                *f = PageFlags::VALID | PageFlags::TIER_PM;
+            }
+        }
+        true
+    }
+
+    /// MMU access path: set REF (and DIRTY for stores).
+    #[inline]
+    pub fn touch(&mut self, page: PageId, write: bool) {
+        let f = &mut self.flags[page as usize];
+        debug_assert!(*f & PageFlags::VALID != 0, "touch of unmapped page {page}");
+        *f |= PageFlags::REF;
+        if write {
+            *f |= PageFlags::DIRTY;
+        }
+    }
+
+    /// Kernel path: clear the R/D bits of one PTE (CLOCK hand /
+    /// DCPMM_CLEAR semantics).
+    #[inline]
+    pub fn clear_rd(&mut self, page: PageId) {
+        self.flags[page as usize] &= !(PageFlags::REF | PageFlags::DIRTY);
+    }
+
+    /// MMU access path for accesses inside the delay window (set by the
+    /// simulated MMU when an access lands between DCPMM_CLEAR and the
+    /// promotion walk).
+    #[inline]
+    pub fn touch_window(&mut self, page: PageId, write: bool) {
+        let f = &mut self.flags[page as usize];
+        *f |= PageFlags::WREF;
+        if write {
+            *f |= PageFlags::WDIRTY;
+        }
+    }
+
+    /// DCPMM_CLEAR: reset the delay-window bits of one PTE.
+    #[inline]
+    pub fn clear_window(&mut self, page: PageId) {
+        self.flags[page as usize] &= !(PageFlags::WREF | PageFlags::WDIRTY);
+    }
+
+    /// Move a page across tiers. Capacity-checked; R/D bits survive the
+    /// move (migration preserves content, and Linux transfers PTE state).
+    pub fn migrate(&mut self, page: PageId, to: Tier) -> bool {
+        let cur = self.flags(page);
+        if !cur.valid() || cur.tier() == to {
+            return false;
+        }
+        match to {
+            Tier::Dram => {
+                if self.dram_used >= self.dram_capacity_pages {
+                    return false;
+                }
+                self.dram_used += 1;
+                self.pm_used -= 1;
+                self.flags[page as usize] &= !PageFlags::TIER_PM;
+            }
+            Tier::Pm => {
+                if self.pm_used >= self.pm_capacity_pages {
+                    return false;
+                }
+                self.pm_used += 1;
+                self.dram_used -= 1;
+                self.flags[page as usize] |= PageFlags::TIER_PM;
+            }
+        }
+        true
+    }
+
+    /// Atomically exchange the tiers of two pages (Nimble-style exchange
+    /// primitive; never fails on capacity since occupancy is preserved).
+    pub fn exchange(&mut self, a: PageId, b: PageId) -> bool {
+        let fa = self.flags(a);
+        let fb = self.flags(b);
+        if !fa.valid() || !fb.valid() || fa.tier() == fb.tier() {
+            return false;
+        }
+        self.flags[a as usize] ^= PageFlags::TIER_PM;
+        self.flags[b as usize] ^= PageFlags::TIER_PM;
+        true
+    }
+
+    pub fn used_pages(&self, tier: Tier) -> u64 {
+        match tier {
+            Tier::Dram => self.dram_used,
+            Tier::Pm => self.pm_used,
+        }
+    }
+
+    pub fn capacity_pages(&self, tier: Tier) -> u64 {
+        match tier {
+            Tier::Dram => self.dram_capacity_pages,
+            Tier::Pm => self.pm_capacity_pages,
+        }
+    }
+
+    pub fn free_pages(&self, tier: Tier) -> u64 {
+        self.capacity_pages(tier) - self.used_pages(tier)
+    }
+
+    /// DRAM occupancy in [0,1] (Control's watermark input).
+    pub fn dram_occupancy(&self) -> f64 {
+        if self.dram_capacity_pages == 0 {
+            return 1.0;
+        }
+        self.dram_used as f64 / self.dram_capacity_pages as f64
+    }
+
+    /// Count valid pages per tier by scan (test/verification helper;
+    /// hot paths use the incremental counters).
+    pub fn recount(&self) -> (u64, u64) {
+        let mut dram = 0;
+        let mut pm = 0;
+        for &f in &self.flags {
+            let pf = PageFlags(f);
+            if pf.valid() {
+                match pf.tier() {
+                    Tier::Dram => dram += 1,
+                    Tier::Pm => pm += 1,
+                }
+            }
+        }
+        (dram, pm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt() -> PageTable {
+        // 4 pages of DRAM, 8 of PM, 1 KiB pages, 16 total pages
+        PageTable::new(16, 1024, 4 * 1024, 8 * 1024)
+    }
+
+    #[test]
+    fn allocate_respects_capacity() {
+        let mut t = pt();
+        for p in 0..4 {
+            assert!(t.allocate(p, Tier::Dram));
+        }
+        assert!(!t.allocate(4, Tier::Dram), "DRAM over capacity");
+        assert!(t.allocate(4, Tier::Pm));
+        assert_eq!(t.used_pages(Tier::Dram), 4);
+        assert_eq!(t.used_pages(Tier::Pm), 1);
+        assert_eq!(t.free_pages(Tier::Pm), 7);
+        assert_eq!(t.recount(), (4, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "double-allocated")]
+    fn double_allocate_panics() {
+        let mut t = pt();
+        t.allocate(0, Tier::Dram);
+        t.allocate(0, Tier::Pm);
+    }
+
+    #[test]
+    fn touch_sets_bits_and_clear_clears() {
+        let mut t = pt();
+        t.allocate(3, Tier::Dram);
+        t.touch(3, false);
+        assert!(t.flags(3).referenced());
+        assert!(!t.flags(3).dirty());
+        t.touch(3, true);
+        assert!(t.flags(3).dirty());
+        t.clear_rd(3);
+        assert!(!t.flags(3).referenced());
+        assert!(!t.flags(3).dirty());
+        assert!(t.flags(3).valid(), "clear_rd must not unmap");
+    }
+
+    #[test]
+    fn migrate_moves_between_tiers() {
+        let mut t = pt();
+        t.allocate(0, Tier::Pm);
+        assert_eq!(t.flags(0).tier(), Tier::Pm);
+        assert!(t.migrate(0, Tier::Dram));
+        assert_eq!(t.flags(0).tier(), Tier::Dram);
+        assert_eq!(t.used_pages(Tier::Dram), 1);
+        assert_eq!(t.used_pages(Tier::Pm), 0);
+        // no-op migration to same tier
+        assert!(!t.migrate(0, Tier::Dram));
+        // invalid page
+        assert!(!t.migrate(9, Tier::Dram));
+    }
+
+    #[test]
+    fn migrate_blocked_when_full() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Dram);
+        }
+        t.allocate(4, Tier::Pm);
+        assert!(!t.migrate(4, Tier::Dram), "DRAM full");
+        assert_eq!(t.flags(4).tier(), Tier::Pm);
+    }
+
+    #[test]
+    fn exchange_preserves_occupancy() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Dram);
+        }
+        t.allocate(4, Tier::Pm);
+        assert!(t.exchange(0, 4));
+        assert_eq!(t.flags(0).tier(), Tier::Pm);
+        assert_eq!(t.flags(4).tier(), Tier::Dram);
+        assert_eq!(t.used_pages(Tier::Dram), 4);
+        assert_eq!(t.used_pages(Tier::Pm), 1);
+        // exchange works even when DRAM is full — that is its point
+        assert!(t.exchange(4, 0));
+    }
+
+    #[test]
+    fn exchange_rejects_same_tier_or_invalid() {
+        let mut t = pt();
+        t.allocate(0, Tier::Dram);
+        t.allocate(1, Tier::Dram);
+        assert!(!t.exchange(0, 1));
+        assert!(!t.exchange(0, 9));
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let mut t = pt();
+        assert_eq!(t.dram_occupancy(), 0.0);
+        t.allocate(0, Tier::Dram);
+        t.allocate(1, Tier::Dram);
+        assert!((t.dram_occupancy() - 0.5).abs() < 1e-12);
+    }
+}

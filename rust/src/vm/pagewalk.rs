@@ -1,0 +1,191 @@
+//! Resumable page-table walker — the simulator's `walk_page_range()`.
+//!
+//! The paper's single kernel-code change is exporting this routine to
+//! modules; SelMo then drives it with per-mode PTE callbacks (paper
+//! §4.4). Two properties matter and are reproduced here:
+//!
+//!  1. **Budgeted, resumable scans.** A PageFind stops when it has
+//!     selected enough pages or walked the whole table; the walker stores
+//!     the last visited PTE so the *next* walk resumes there — "PTEs that
+//!     have not been inspected for longer are prioritized".
+//!  2. **Callback-driven.** The callback observes one PTE at a time and
+//!     may manipulate its R/D bits; it cannot see ahead. All policy logic
+//!     is expressible only through this interface (plus migration), which
+//!     is what keeps kernel-mode footprint minimal.
+
+use super::page_table::{PageFlags, PageId, PageTable};
+
+/// Callback verdict for each visited PTE.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalkControl {
+    /// Keep walking.
+    Continue,
+    /// Stop the walk after this PTE (selection quota reached).
+    Stop,
+}
+
+/// A resumable cursor over the page table. One per (tier, purpose) in
+/// SelMo; the cursor wraps around the address space like a CLOCK hand.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PageWalker {
+    cursor: PageId,
+    /// Total PTEs visited over the walker's lifetime (stats).
+    pub visited: u64,
+}
+
+impl PageWalker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cursor(&self) -> PageId {
+        self.cursor
+    }
+
+    /// Walk up to `budget` PTEs starting at the stored cursor, invoking
+    /// `f(page, flags, pt)` on each *valid* PTE. Wraps around the end of
+    /// the table at most once per call (so a full-budget walk visits each
+    /// PTE at most once). Returns the number of valid PTEs visited.
+    pub fn walk<F>(&mut self, pt: &mut PageTable, budget: usize, mut f: F) -> usize
+    where
+        F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
+    {
+        let n = pt.len();
+        if n == 0 || budget == 0 {
+            return 0;
+        }
+        let mut visited_valid = 0usize;
+        let mut steps = 0usize;
+        let max_steps = budget.min(n as usize);
+        while steps < max_steps {
+            let page = self.cursor;
+            self.cursor = (self.cursor + 1) % n;
+            steps += 1;
+            self.visited += 1;
+            let flags = pt.flags(page);
+            if !flags.valid() {
+                continue;
+            }
+            visited_valid += 1;
+            if f(page, flags, pt) == WalkControl::Stop {
+                break;
+            }
+        }
+        visited_valid
+    }
+
+    /// Full-table pass (budget = table size).
+    pub fn walk_all<F>(&mut self, pt: &mut PageTable, f: F) -> usize
+    where
+        F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
+    {
+        let n = pt.len() as usize;
+        self.walk(pt, n, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Tier;
+
+    fn table() -> PageTable {
+        let mut pt = PageTable::new(10, 1024, 100 * 1024, 100 * 1024);
+        for p in 0..10 {
+            // pages 0..6 valid, 6..10 unmapped
+            if p < 6 {
+                pt.allocate(p, if p % 2 == 0 { Tier::Dram } else { Tier::Pm });
+            }
+        }
+        pt
+    }
+
+    #[test]
+    fn visits_only_valid_pages() {
+        let mut pt = table();
+        let mut w = PageWalker::new();
+        let mut seen = Vec::new();
+        let n = w.walk_all(&mut pt, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(n, 6);
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn cursor_resumes_where_it_stopped() {
+        let mut pt = table();
+        let mut w = PageWalker::new();
+        let mut seen = Vec::new();
+        w.walk(&mut pt, 3, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(w.cursor(), 3);
+        w.walk(&mut pt, 3, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        // wraps around past the unmapped tail
+        let mut wrapped = Vec::new();
+        w.walk(&mut pt, 10, |p, _, _| {
+            wrapped.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(wrapped, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn stop_halts_early_and_keeps_cursor() {
+        let mut pt = table();
+        let mut w = PageWalker::new();
+        let mut count = 0;
+        w.walk_all(&mut pt, |_, _, _| {
+            count += 1;
+            if count == 2 {
+                WalkControl::Stop
+            } else {
+                WalkControl::Continue
+            }
+        });
+        assert_eq!(count, 2);
+        assert_eq!(w.cursor(), 2);
+    }
+
+    #[test]
+    fn callback_can_mutate_bits() {
+        let mut pt = table();
+        pt.touch(0, true);
+        pt.touch(2, false);
+        let mut w = PageWalker::new();
+        w.walk_all(&mut pt, |p, f, pt| {
+            if f.referenced() {
+                pt.clear_rd(p);
+            }
+            WalkControl::Continue
+        });
+        assert!(!pt.flags(0).referenced());
+        assert!(!pt.flags(0).dirty());
+        assert!(!pt.flags(2).referenced());
+    }
+
+    #[test]
+    fn budget_bounds_work_per_call() {
+        let mut pt = table();
+        let mut w = PageWalker::new();
+        let n = w.walk(&mut pt, 2, |_, _, _| WalkControl::Continue);
+        assert_eq!(n, 2);
+        assert_eq!(w.visited, 2);
+        // zero budget no-op
+        assert_eq!(w.walk(&mut pt, 0, |_, _, _| WalkControl::Continue), 0);
+    }
+
+    #[test]
+    fn empty_table_is_safe() {
+        let mut pt = PageTable::new(0, 1024, 1024, 1024);
+        let mut w = PageWalker::new();
+        assert_eq!(w.walk_all(&mut pt, |_, _, _| WalkControl::Continue), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! GAP-suite-style graph workloads (the paper lists GAP [4] among its
+//! realistic workloads). Modeled after PageRank and BFS on a power-law
+//! (Kronecker-like) graph: small, extremely hot vertex arrays plus a
+//! large edge array whose per-page intensity follows the degree skew.
+
+use crate::config::GB;
+use crate::util::Rng64;
+
+use super::{Region, Workload};
+use super::npb::SizeClass;
+
+/// Static degree-skew buckets for the edge array: a handful of regions
+/// with geometrically decaying weight approximates the zipfian per-page
+/// access density of a power-law graph's CSR edges.
+const EDGE_BUCKETS: usize = 6;
+
+fn footprint_bytes(class: SizeClass) -> f64 {
+    match class {
+        SizeClass::S => 24.0 * GB,
+        SizeClass::M => 48.0 * GB,
+        SizeClass::L => 120.0 * GB,
+    }
+}
+
+struct GraphLayout {
+    vertex: (u32, u32),
+    edges: Vec<(u32, u32)>,
+    footprint_pages: u32,
+}
+
+impl GraphLayout {
+    fn new(class: SizeClass, page_bytes: u64) -> Self {
+        let total = (footprint_bytes(class) / page_bytes as f64).ceil() as u32;
+        // vertices ~6% of footprint (rank/frontier/parent arrays)
+        let vpages = ((total as f64) * 0.06).ceil() as u32;
+        let mut edges = Vec::new();
+        let remaining = total - vpages;
+        let mut cursor = vpages;
+        // geometric bucket sizes 1/2, 1/4, ... of the edge space
+        let mut left = remaining;
+        for i in 0..EDGE_BUCKETS {
+            let p = if i + 1 == EDGE_BUCKETS { left } else { (left / 2).max(1) };
+            edges.push((cursor, p));
+            cursor += p;
+            left -= p;
+        }
+        GraphLayout { vertex: (0, vpages), edges, footprint_pages: total }
+    }
+}
+
+/// PageRank: every iteration streams all edges (weights by degree skew)
+/// and read-writes the rank arrays.
+pub struct PageRank {
+    class: SizeClass,
+    layout: GraphLayout,
+    offered: f64,
+}
+
+impl PageRank {
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        PageRank {
+            class,
+            layout: GraphLayout::new(class, page_bytes),
+            offered: 40.0 * GB * epoch_secs,
+        }
+    }
+}
+
+impl Workload for PageRank {
+    fn name(&self) -> String {
+        format!("PR-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        8.0
+    }
+    fn regions(&mut self, _epoch: u32) -> Vec<Region> {
+        let mut out = vec![Region {
+            name: "vertices",
+            start: self.layout.vertex.0,
+            pages: self.layout.vertex.1,
+            weight: 0.45,
+            write_frac: 0.35,
+            random_frac: 0.8,
+        }];
+        // hottest bucket gets ~1/2 the edge traffic, decaying geometrically
+        let mut w = 0.55 / (1.0 - 0.5f64.powi(EDGE_BUCKETS as i32)) * 0.5;
+        const NAMES: [&str; EDGE_BUCKETS] =
+            ["edges0", "edges1", "edges2", "edges3", "edges4", "edges5"];
+        for (i, &(start, pages)) in self.layout.edges.iter().enumerate() {
+            out.push(Region {
+                name: NAMES[i],
+                start,
+                pages,
+                weight: w,
+                write_frac: 0.0,
+                random_frac: 0.3,
+            });
+            w *= 0.5;
+        }
+        out
+    }
+}
+
+/// BFS: the frontier wanders — each epoch a different (deterministic
+/// pseudo-random) subset of edge buckets is hot. Stresses policies whose
+/// hotness estimate reacts slowly.
+pub struct Bfs {
+    class: SizeClass,
+    layout: GraphLayout,
+    offered: f64,
+    rng: Rng64,
+}
+
+impl Bfs {
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        Bfs {
+            class,
+            layout: GraphLayout::new(class, page_bytes),
+            offered: 30.0 * GB * epoch_secs,
+            rng: Rng64::new(0xBF5),
+        }
+    }
+}
+
+impl Workload for Bfs {
+    fn name(&self) -> String {
+        format!("BFS-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        12.0
+    }
+    fn regions(&mut self, epoch: u32) -> Vec<Region> {
+        // deterministic per-epoch frontier: reseed from epoch
+        let mut rng = Rng64::new(0xBF5_0000 ^ epoch as u64);
+        let _ = &self.rng; // struct rng reserved for future stateful frontier
+        let mut out = vec![Region {
+            name: "vertices",
+            start: self.layout.vertex.0,
+            pages: self.layout.vertex.1,
+            weight: 0.5,
+            write_frac: 0.4,
+            random_frac: 0.9,
+        }];
+        const NAMES: [&str; EDGE_BUCKETS] =
+            ["edges0", "edges1", "edges2", "edges3", "edges4", "edges5"];
+        for (i, &(start, pages)) in self.layout.edges.iter().enumerate() {
+            let hot = rng.chance(0.4);
+            out.push(Region {
+                name: NAMES[i],
+                start,
+                pages,
+                weight: if hot { 0.5 / 2.4 } else { 0.02 },
+                write_frac: 0.0,
+                random_frac: 0.5,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 2 * 1024 * 1024;
+
+    #[test]
+    fn layout_partitions_footprint() {
+        let l = GraphLayout::new(SizeClass::M, PAGE);
+        let mut total = l.vertex.1;
+        for &(start, pages) in &l.edges {
+            assert!(start >= l.vertex.1);
+            total += pages;
+        }
+        assert_eq!(total, l.footprint_pages);
+    }
+
+    #[test]
+    fn pagerank_vertices_hottest_per_page() {
+        let mut pr = PageRank::new(SizeClass::M, PAGE, 1.0);
+        let rs = pr.regions(0);
+        let per_page = |r: &Region| r.weight / r.pages as f64;
+        let v = per_page(&rs[0]);
+        for r in &rs[1..] {
+            assert!(v > per_page(r), "vertices must be hotter than {}", r.name);
+        }
+        // edge buckets decay
+        assert!(rs[1].weight > rs[2].weight);
+    }
+
+    #[test]
+    fn bfs_frontier_deterministic_but_wandering() {
+        let mut a = Bfs::new(SizeClass::M, PAGE, 1.0);
+        let mut b = Bfs::new(SizeClass::M, PAGE, 1.0);
+        assert_eq!(a.regions(3), b.regions(3), "same epoch same frontier");
+        // over many epochs the hot set must change at least once
+        let base = a.regions(0);
+        let changed = (1..10).any(|e| a.regions(e) != base);
+        assert!(changed);
+    }
+}

@@ -1,0 +1,140 @@
+//! Intel MLC-style microbenchmark workload (paper §3's insight study).
+//!
+//! Mirrors the paper's setup: a data set split into *active* pages
+//! (accessed by as many threads as HW threads, sequential,
+//! non-overlapping) and *inactive* pages (never accessed). Two knobs
+//! sweep the study's axes: **access demand** (offered bandwidth — the
+//! paper varies the inter-access stall) and **read/write ratio** (all
+//! reads … 2R:1W).
+
+use crate::config::GB;
+
+use super::{Region, Workload};
+
+pub struct Mlc {
+    /// Active (accessed) pages.
+    pub active_pages: u32,
+    /// Inactive (mapped, never touched) pages.
+    pub inactive_pages: u32,
+    /// Offered bandwidth, B/s.
+    pub offered_bw: f64,
+    pub write_frac: f64,
+    pub random_frac: f64,
+    epoch_secs: f64,
+}
+
+impl Mlc {
+    pub fn new(
+        active_pages: u32,
+        inactive_pages: u32,
+        offered_bw: f64,
+        write_frac: f64,
+        random_frac: f64,
+        epoch_secs: f64,
+    ) -> Self {
+        Mlc { active_pages, inactive_pages, offered_bw, write_frac, random_frac, epoch_secs }
+    }
+
+    /// The paper's workload grid: read/write ratios from all-reads to
+    /// 2R:1W (expressed as write fractions).
+    pub fn paper_write_fracs() -> [(&'static str, f64); 4] {
+        [
+            ("all reads", 0.0),
+            ("4R:1W", 0.2),
+            ("3R:1W", 0.25),
+            ("2R:1W", 1.0 / 3.0),
+        ]
+    }
+
+    /// Demand sweep points (offered B/s) used by the Fig. 2 harness.
+    pub fn demand_sweep() -> Vec<f64> {
+        // log-ish sweep 1 GB/s .. 80 GB/s
+        [1.0, 2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 20.0, 26.0, 32.0, 40.0, 50.0, 64.0, 80.0]
+            .iter()
+            .map(|g| g * GB)
+            .collect()
+    }
+}
+
+impl Workload for Mlc {
+    fn name(&self) -> String {
+        format!(
+            "MLC(active={},wf={:.2},bw={:.1}GB/s)",
+            self.active_pages,
+            self.write_frac,
+            self.offered_bw / GB
+        )
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.active_pages + self.inactive_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered_bw * self.epoch_secs
+    }
+    fn rw_ratio(&self) -> f64 {
+        if self.write_frac <= 0.0 {
+            f64::INFINITY
+        } else {
+            (1.0 - self.write_frac) / self.write_frac
+        }
+    }
+    fn regions(&mut self, _epoch: u32) -> Vec<Region> {
+        let mut out = vec![Region {
+            name: "active",
+            start: 0,
+            pages: self.active_pages,
+            weight: 1.0,
+            write_frac: self.write_frac,
+            random_frac: self.random_frac,
+        }];
+        if self.inactive_pages > 0 {
+            out.push(Region {
+                name: "inactive",
+                start: self.active_pages,
+                pages: self.inactive_pages,
+                weight: 0.0,
+                write_frac: 0.0,
+                random_frac: 0.0,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_pages_get_zero_weight() {
+        let mut m = Mlc::new(100, 50, 10.0 * GB, 0.25, 0.0, 1.0);
+        let rs = m.regions(0);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].weight, 1.0);
+        assert_eq!(rs[1].weight, 0.0);
+        assert_eq!(m.footprint_pages(), 150);
+    }
+
+    #[test]
+    fn rw_ratio_reporting() {
+        assert!(Mlc::new(1, 0, 1.0, 0.0, 0.0, 1.0).rw_ratio().is_infinite());
+        let m = Mlc::new(1, 0, 1.0, 0.2, 0.0, 1.0);
+        assert!((m.rw_ratio() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_grid_shape() {
+        let fracs = Mlc::paper_write_fracs();
+        assert_eq!(fracs[0].1, 0.0);
+        assert!((fracs[3].1 - 1.0 / 3.0).abs() < 1e-12);
+        let sweep = Mlc::demand_sweep();
+        assert!(sweep.len() >= 10);
+        assert!(sweep.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn offered_scales() {
+        let m = Mlc::new(1, 0, 10.0 * GB, 0.0, 0.0, 0.5);
+        assert!((m.offered_bytes() - 5.0 * GB).abs() < 1.0);
+    }
+}

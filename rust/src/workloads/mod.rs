@@ -1,0 +1,178 @@
+//! Workload engines.
+//!
+//! The paper evaluates NPB BT/FT/MG/CG (Table 3) plus MLC microbenchmarks
+//! for the §3 insight study and mentions the GAP suite. Running the real
+//! OpenMP binaries is impossible against a simulated memory system, so
+//! each workload is modeled as a set of **regions** — contiguous page
+//! ranges with an access weight, write fraction and randomness — whose
+//! weights evolve across epochs following the application's phase
+//! structure. This captures exactly the properties placement policies
+//! react to: footprint vs DRAM size, hotness skew, read/write mix,
+//! locality and phase changes (DESIGN.md §2 documents the substitution).
+
+pub mod npb;
+pub mod mlc;
+pub mod gap;
+pub mod trace;
+
+use crate::vm::PageId;
+
+/// A contiguous page range with homogeneous access behaviour this epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub name: &'static str,
+    pub start: PageId,
+    pub pages: u32,
+    /// Relative share of this epoch's traffic (normalized by consumer).
+    pub weight: f64,
+    /// Fraction of the region's traffic that is stores.
+    pub write_frac: f64,
+    /// Fraction of traffic that is random at device grain.
+    pub random_frac: f64,
+}
+
+impl Region {
+    pub fn end(&self) -> PageId {
+        self.start + self.pages
+    }
+    pub fn contains(&self, p: PageId) -> bool {
+        p >= self.start && p < self.end()
+    }
+}
+
+/// A workload bound to the simulator.
+pub trait Workload {
+    /// Display name, e.g. "CG-L".
+    fn name(&self) -> String;
+    /// Total mapped footprint in pages.
+    fn footprint_pages(&self) -> u32;
+    /// Bytes of application work offered per epoch (the fixed quantum).
+    fn offered_bytes(&self) -> f64;
+    /// Region activity for the given epoch. Weights need not sum to 1.
+    fn regions(&mut self, epoch: u32) -> Vec<Region>;
+    /// Overall read:write ratio (Table 3 column), for reporting.
+    fn rw_ratio(&self) -> f64;
+}
+
+/// Validation helper: region invariants every workload must satisfy.
+pub fn validate_regions(w: &mut dyn Workload, epochs: u32) -> Result<(), String> {
+    let fp = w.footprint_pages();
+    for e in 0..epochs {
+        let regions = w.regions(e);
+        if regions.is_empty() {
+            return Err(format!("epoch {e}: no regions"));
+        }
+        let mut total_w = 0.0;
+        for r in &regions {
+            if r.pages == 0 {
+                return Err(format!("epoch {e}: empty region {}", r.name));
+            }
+            if r.end() > fp {
+                return Err(format!(
+                    "epoch {e}: region {} [{}, {}) exceeds footprint {fp}",
+                    r.name,
+                    r.start,
+                    r.end()
+                ));
+            }
+            if !(0.0..=1.0).contains(&r.write_frac) || !(0.0..=1.0).contains(&r.random_frac) {
+                return Err(format!("epoch {e}: region {} fractions out of range", r.name));
+            }
+            if r.weight < 0.0 {
+                return Err(format!("epoch {e}: region {} negative weight", r.name));
+            }
+            total_w += r.weight;
+        }
+        if total_w <= 0.0 {
+            return Err(format!("epoch {e}: zero total weight"));
+        }
+    }
+    Ok(())
+}
+
+/// Build a named workload at a given size class. Central registry used by
+/// the CLI, benches and examples.
+pub fn by_name(
+    name: &str,
+    page_bytes: u64,
+    epoch_secs: f64,
+) -> Option<Box<dyn Workload>> {
+    let (base, class) = match name.rsplit_once('-') {
+        Some((b, c)) => (b.to_ascii_lowercase(), c.to_ascii_uppercase()),
+        None => (name.to_ascii_lowercase(), "M".to_string()),
+    };
+    let class = match class.as_str() {
+        "S" => npb::SizeClass::S,
+        "M" => npb::SizeClass::M,
+        "L" => npb::SizeClass::L,
+        _ => return None,
+    };
+    match base.as_str() {
+        "bt" => Some(Box::new(npb::Bt::new(class, page_bytes, epoch_secs))),
+        "ft" => Some(Box::new(npb::Ft::new(class, page_bytes, epoch_secs))),
+        "mg" => Some(Box::new(npb::Mg::new(class, page_bytes, epoch_secs))),
+        "cg" => Some(Box::new(npb::Cg::new(class, page_bytes, epoch_secs))),
+        "pr" => Some(Box::new(gap::PageRank::new(class, page_bytes, epoch_secs))),
+        "bfs" => Some(Box::new(gap::Bfs::new(class, page_bytes, epoch_secs))),
+        _ => None,
+    }
+}
+
+/// All workload names in the paper's evaluation (Fig. 5 matrix).
+pub const NPB_NAMES: [&str; 4] = ["BT", "FT", "MG", "CG"];
+pub const SIZE_CLASSES: [&str; 3] = ["S", "M", "L"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 2 * 1024 * 1024;
+
+    #[test]
+    fn registry_builds_all_names() {
+        for base in NPB_NAMES {
+            for class in SIZE_CLASSES {
+                let name = format!("{base}-{class}");
+                let w = by_name(&name, PAGE, 1.0);
+                assert!(w.is_some(), "missing {name}");
+                assert_eq!(w.unwrap().name(), name);
+            }
+        }
+        assert!(by_name("pr-M", PAGE, 1.0).is_some());
+        assert!(by_name("bfs-L", PAGE, 1.0).is_some());
+        assert!(by_name("nope-M", PAGE, 1.0).is_none());
+        assert!(by_name("bt-Q", PAGE, 1.0).is_none());
+    }
+
+    #[test]
+    fn default_class_is_m() {
+        let w = by_name("cg", PAGE, 1.0).unwrap();
+        assert_eq!(w.name(), "CG-M");
+    }
+
+    #[test]
+    fn all_workloads_pass_region_invariants() {
+        for base in ["bt", "ft", "mg", "cg", "pr", "bfs"] {
+            for class in SIZE_CLASSES {
+                let name = format!("{base}-{class}");
+                let mut w = by_name(&name, PAGE, 1.0).unwrap();
+                validate_regions(w.as_mut(), 30).unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn region_helpers() {
+        let r = Region {
+            name: "x",
+            start: 10,
+            pages: 5,
+            weight: 1.0,
+            write_frac: 0.0,
+            random_frac: 0.0,
+        };
+        assert_eq!(r.end(), 15);
+        assert!(r.contains(10) && r.contains(14));
+        assert!(!r.contains(15) && !r.contains(9));
+    }
+}

@@ -1,0 +1,444 @@
+//! NPB workload mimics (paper Table 3).
+//!
+//! Footprints, read/write ratios and qualitative access structure follow
+//! the paper's Table 3 and the NPB kernels' well-documented behaviour:
+//!
+//! | bench | R:W     | S / M / L footprint (GB) | structure |
+//! |-------|---------|--------------------------|-----------|
+//! | BT    | 3.5:1   | 28.4 / 39.1 / 53.9       | block-tridiagonal solver; x/y/z sweep phases over solver planes |
+//! | FT    | 1.7:1   | 20 / 40 / 80             | 3-D FFT; whole-array compute + transpose phases, write-heavy, low reuse |
+//! | MG    | 4:1     | 26.5 / 74.3 / 131        | multigrid V-cycle; hot coarse grids, huge cold-ish fine grid |
+//! | CG    | >60:1   | 18 / 39.8 / 150          | conjugate gradient; huge read-only sparse matrix + small hot vectors |
+//!
+//! The paper's DRAM tier is 32 GB: S fits in DRAM, M ≈ 1.5x, L ≈ 3.5x.
+
+use crate::config::GB;
+
+use super::{Region, Workload};
+
+/// Data-set size class (paper: S fits DRAM, M ~1.5x, L ~3.5x DRAM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeClass {
+    S,
+    M,
+    L,
+}
+
+impl SizeClass {
+    pub fn letter(self) -> &'static str {
+        match self {
+            SizeClass::S => "S",
+            SizeClass::M => "M",
+            SizeClass::L => "L",
+        }
+    }
+}
+
+fn pages(bytes: f64, page_bytes: u64) -> u32 {
+    (bytes / page_bytes as f64).ceil() as u32
+}
+
+/// Common NPB scaffolding: footprint partitioned into proportional
+/// regions, per-benchmark phase logic supplied by a closure table.
+struct Layout {
+    footprint_pages: u32,
+}
+
+impl Layout {
+    fn new(total_bytes: f64, page_bytes: u64) -> Self {
+        Layout { footprint_pages: pages(total_bytes, page_bytes) }
+    }
+
+    /// Carve `fracs` (must sum to <= 1.0) into adjacent regions.
+    fn carve(&self, fracs: &[f64]) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(fracs.len());
+        let mut cursor = 0u32;
+        for (i, f) in fracs.iter().enumerate() {
+            let p = if i + 1 == fracs.len() {
+                self.footprint_pages - cursor
+            } else {
+                ((self.footprint_pages as f64) * f).floor() as u32
+            };
+            out.push((cursor, p.max(1)));
+            cursor += p.max(1);
+        }
+        assert!(cursor <= self.footprint_pages + fracs.len() as u32);
+        out
+    }
+}
+
+// --------------------------------------------------------------------
+// BT — block tridiagonal solver
+// --------------------------------------------------------------------
+
+/// BT sweeps the 3-D grid along x, then y, then z each iteration. We
+/// model the grid as 6 solver planes; each phase drives 4 of them hard
+/// (the sweep direction's working set) while the rest idle warm. The
+/// whole footprint is touched every few epochs — BT has a *large* active
+/// set, which is why autonuma struggles on it (paper §5.2).
+pub struct Bt {
+    class: SizeClass,
+    layout: Layout,
+    regions: Vec<(u32, u32)>,
+    offered: f64,
+}
+
+impl Bt {
+    pub fn footprint_bytes(class: SizeClass) -> f64 {
+        match class {
+            SizeClass::S => 28.4 * GB,
+            SizeClass::M => 39.1 * GB,
+            SizeClass::L => 53.9 * GB,
+        }
+    }
+
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        let layout = Layout::new(Self::footprint_bytes(class), page_bytes);
+        let regions = layout.carve(&[1.0 / 6.0; 6]);
+        Bt { class, layout, regions, offered: 38.0 * GB * epoch_secs }
+    }
+}
+
+impl Workload for Bt {
+    fn name(&self) -> String {
+        format!("BT-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        3.5
+    }
+    fn regions(&mut self, epoch: u32) -> Vec<Region> {
+        // rotate the sweep direction every PHASE_EPOCHS epochs: x, y, z
+        // (a sweep direction persists for many solver steps)
+        const PHASE_EPOCHS: u32 = 12;
+        let phase = ((epoch / PHASE_EPOCHS) % 3) as usize;
+        const NAMES: [&str; 6] = ["plane0", "plane1", "plane2", "plane3", "plane4", "plane5"];
+        self.regions
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, pages))| {
+                // 4 of 6 planes hot per phase, rotating; writes follow the
+                // solver updates (3.5R:1W overall)
+                let hot = (i + phase) % 6 < 4;
+                Region {
+                    name: NAMES[i],
+                    start,
+                    pages,
+                    weight: if hot { 1.0 } else { 0.12 },
+                    write_frac: 1.0 / 4.5,
+                    // stencil sweeps stride across planes: substantial
+                    // non-sequential traffic at device grain
+                    random_frac: 0.3,
+                }
+            })
+            .collect()
+    }
+}
+
+// --------------------------------------------------------------------
+// FT — 3-D FFT
+// --------------------------------------------------------------------
+
+/// FT alternates butterfly compute passes (sequential, whole array) with
+/// all-to-all transposes (scattered). Nearly the entire footprint is
+/// touched every iteration with the suite's heaviest write share
+/// (1.7R:1W) — little locality for any placement policy to exploit.
+pub struct Ft {
+    class: SizeClass,
+    layout: Layout,
+    regions: Vec<(u32, u32)>,
+    offered: f64,
+}
+
+impl Ft {
+    pub fn footprint_bytes(class: SizeClass) -> f64 {
+        match class {
+            SizeClass::S => 20.0 * GB,
+            SizeClass::M => 40.0 * GB,
+            SizeClass::L => 80.0 * GB,
+        }
+    }
+
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        let layout = Layout::new(Self::footprint_bytes(class), page_bytes);
+        // main array (2/3) + scratch/transpose buffer (1/3)
+        let regions = layout.carve(&[2.0 / 3.0, 1.0 / 3.0]);
+        Ft { class, layout, regions, offered: 48.0 * GB * epoch_secs }
+    }
+}
+
+impl Workload for Ft {
+    fn name(&self) -> String {
+        format!("FT-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        1.7
+    }
+    fn regions(&mut self, epoch: u32) -> Vec<Region> {
+        let transpose = epoch % 2 == 1;
+        let (main, scratch) = (self.regions[0], self.regions[1]);
+        vec![
+            Region {
+                name: "array",
+                start: main.0,
+                pages: main.1,
+                weight: 2.0,
+                write_frac: 1.0 / 2.7,
+                random_frac: if transpose { 0.7 } else { 0.05 },
+            },
+            Region {
+                name: "scratch",
+                start: scratch.0,
+                pages: scratch.1,
+                weight: 1.0,
+                write_frac: 0.5,
+                random_frac: if transpose { 0.7 } else { 0.1 },
+            },
+        ]
+    }
+}
+
+// --------------------------------------------------------------------
+// MG — multigrid
+// --------------------------------------------------------------------
+
+/// MG's V-cycle walks a grid hierarchy: the finest grid is ~7/8 of the
+/// footprint but each coarser level is touched ~2x as often per cycle.
+/// The result is a strongly skewed hotness distribution — the classic
+/// beneficiary of hotness-aware fill-DRAM-first placement.
+pub struct Mg {
+    class: SizeClass,
+    layout: Layout,
+    regions: Vec<(u32, u32)>,
+    offered: f64,
+}
+
+impl Mg {
+    pub fn footprint_bytes(class: SizeClass) -> f64 {
+        match class {
+            SizeClass::S => 26.5 * GB,
+            SizeClass::M => 74.3 * GB,
+            SizeClass::L => 131.0 * GB,
+        }
+    }
+
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        let layout = Layout::new(Self::footprint_bytes(class), page_bytes);
+        // fine grid 0.875, then geometrically smaller levels
+        let regions = layout.carve(&[0.875, 0.0875, 0.0250, 0.0125]);
+        Mg { class, layout, regions, offered: 44.0 * GB * epoch_secs }
+    }
+}
+
+impl Workload for Mg {
+    fn name(&self) -> String {
+        format!("MG-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        4.0
+    }
+    fn regions(&mut self, epoch: u32) -> Vec<Region> {
+        // V-cycle position: descending (restriction) vs ascending
+        // (prolongation) halves shift weight slightly between levels.
+        let descending = epoch % 2 == 0;
+        const NAMES: [&str; 4] = ["fine", "mid", "coarse", "coarsest"];
+        // per-byte intensity doubles per level; weight = size x intensity
+        let intensity = [1.0, 4.0, 10.0, 20.0];
+        self.regions
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, pages))| Region {
+                name: NAMES[i],
+                start,
+                pages,
+                weight: pages as f64 * intensity[i] * if descending && i > 0 { 1.2 } else { 1.0 },
+                write_frac: 0.2,
+                random_frac: 0.1,
+            })
+            .collect()
+    }
+}
+
+// --------------------------------------------------------------------
+// CG — conjugate gradient
+// --------------------------------------------------------------------
+
+/// CG is a sparse mat-vec loop: a huge read-only matrix streamed every
+/// iteration plus a handful of small, hot, read-write vectors. Under
+/// first-touch the matrix is allocated before the solver's working
+/// vectors, so in M/L classes the vectors land in DCPMM — the pathology
+/// behind the paper's 11x ADM-default gap on CG-L.
+pub struct Cg {
+    class: SizeClass,
+    layout: Layout,
+    regions: Vec<(u32, u32)>,
+    offered: f64,
+}
+
+impl Cg {
+    pub fn footprint_bytes(class: SizeClass) -> f64 {
+        match class {
+            SizeClass::S => 18.0 * GB,
+            SizeClass::M => 39.8 * GB,
+            SizeClass::L => 150.0 * GB,
+        }
+    }
+
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        let layout = Layout::new(Self::footprint_bytes(class), page_bytes);
+        // matrix 94%, then x/p/q/r vectors
+        let regions = layout.carve(&[0.94, 0.015, 0.015, 0.015, 0.015]);
+        Cg { class, layout, regions, offered: 36.0 * GB * epoch_secs }
+    }
+}
+
+impl Workload for Cg {
+    fn name(&self) -> String {
+        format!("CG-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        60.0
+    }
+    fn regions(&mut self, _epoch: u32) -> Vec<Region> {
+        const NAMES: [&str; 5] = ["matrix", "vec_x", "vec_p", "vec_q", "vec_r"];
+        self.regions
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, pages))| {
+                if i == 0 {
+                    // streamed matrix: read-only, sequential, ~55% of bytes
+                    Region {
+                        name: NAMES[i],
+                        start,
+                        pages,
+                        weight: 1.25,
+                        write_frac: 0.0,
+                        random_frac: 0.05,
+                    }
+                } else {
+                    // hot vectors: indirect gather/scatter, read-write
+                    Region {
+                        name: NAMES[i],
+                        start,
+                        pages,
+                        weight: 0.25,
+                        write_frac: 0.18,
+                        random_frac: 0.8,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    const PAGE: u64 = 2 * 1024 * 1024;
+
+    #[test]
+    fn footprints_match_table3() {
+        let dram = MachineConfig::paper_machine().dram.capacity as f64;
+        // S fits in DRAM
+        for f in [
+            Bt::footprint_bytes(SizeClass::S),
+            Ft::footprint_bytes(SizeClass::S),
+            Mg::footprint_bytes(SizeClass::S),
+            Cg::footprint_bytes(SizeClass::S),
+        ] {
+            assert!(f < dram, "S class {f} must fit 32 GB DRAM");
+        }
+        // M exceeds DRAM, L is ~2-5x
+        for f in [
+            Bt::footprint_bytes(SizeClass::M),
+            Ft::footprint_bytes(SizeClass::M),
+            Mg::footprint_bytes(SizeClass::M),
+            Cg::footprint_bytes(SizeClass::M),
+        ] {
+            assert!(f > dram);
+        }
+        assert!((Cg::footprint_bytes(SizeClass::L) - 150.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn bt_phases_rotate() {
+        let mut bt = Bt::new(SizeClass::M, PAGE, 1.0);
+        let r0 = bt.regions(0);
+        let r1 = bt.regions(12);
+        assert_ne!(
+            r0.iter().map(|r| r.weight > 0.5).collect::<Vec<_>>(),
+            r1.iter().map(|r| r.weight > 0.5).collect::<Vec<_>>()
+        );
+        // periodicity 3 phases x 12 epochs
+        assert_eq!(bt.regions(0), bt.regions(36));
+    }
+
+    #[test]
+    fn ft_transpose_raises_randomness() {
+        let mut ft = Ft::new(SizeClass::M, PAGE, 1.0);
+        let compute = ft.regions(0);
+        let transpose = ft.regions(1);
+        assert!(transpose[0].random_frac > compute[0].random_frac);
+        assert!(ft.rw_ratio() < 2.0, "FT is the most write-heavy");
+    }
+
+    #[test]
+    fn mg_hotness_skew() {
+        let mut mg = Mg::new(SizeClass::L, PAGE, 1.0);
+        let rs = mg.regions(0);
+        // coarse grids: far higher weight per page than the fine grid
+        let per_page = |r: &Region| r.weight / r.pages as f64;
+        assert!(per_page(&rs[3]) > 10.0 * per_page(&rs[0]));
+        // fine grid is most of the footprint
+        assert!(rs[0].pages as f64 > 0.8 * mg.footprint_pages() as f64);
+    }
+
+    #[test]
+    fn cg_vectors_small_hot_and_written() {
+        let mut cg = Cg::new(SizeClass::L, PAGE, 1.0);
+        let rs = cg.regions(0);
+        let matrix = &rs[0];
+        let vec = &rs[1];
+        assert_eq!(matrix.write_frac, 0.0);
+        assert!(vec.write_frac > 0.0);
+        // vectors are an order of magnitude hotter per page
+        let per_page = |r: &Region| r.weight / r.pages as f64;
+        assert!(per_page(vec) > 8.0 * per_page(matrix));
+        // overall rw ratio is very read-heavy
+        let reads: f64 = rs.iter().map(|r| r.weight * (1.0 - r.write_frac)).sum();
+        let writes: f64 = rs.iter().map(|r| r.weight * r.write_frac).sum();
+        assert!(reads / writes > 8.0);
+    }
+
+    #[test]
+    fn offered_bytes_scale_with_epoch_secs() {
+        let a = Cg::new(SizeClass::M, PAGE, 1.0);
+        let b = Cg::new(SizeClass::M, PAGE, 2.0);
+        assert!((b.offered_bytes() / a.offered_bytes() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,63 @@
+//! Integration: the full three-layer stack — AOT artifacts through PJRT
+//! inside HyPlacer's Control loop — against the native path, plus
+//! figure-harness smoke. Skips (not fails) when artifacts are missing.
+
+use hyplacer::bench_harness::{fig2, fig3, tables};
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::run_pair;
+use hyplacer::policies::hyplacer::HyPlacer;
+use hyplacer::policies::{self, Policy};
+use hyplacer::runtime::default_artifacts_dir;
+use hyplacer::runtime::placement::AotClassifier;
+use hyplacer::workloads;
+
+#[test]
+fn aot_and_native_hyplacer_agree_end_to_end() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 25;
+    sim.warmup_epochs = 5;
+    let hp = HyPlacerConfig::default();
+    let wf = hp.delay_secs / sim.epoch_secs;
+
+    let run = |policy: Box<dyn Policy>| {
+        let w = workloads::by_name("cg-M", machine.page_bytes, sim.epoch_secs).unwrap();
+        run_pair(&machine, &sim, w, policy, wf)
+    };
+    let native = run(policies::by_name("hyplacer", &machine, &hp).unwrap());
+    let aot = run(Box::new(
+        HyPlacer::new(&machine, hp.clone())
+            .with_classifier(Box::new(AotClassifier::new(&dir).unwrap())),
+    ));
+    // identical math + identical seed => identical simulated outcome
+    let rel = (native.total_wall_secs - aot.total_wall_secs).abs() / native.total_wall_secs;
+    assert!(rel < 1e-6, "native {} vs aot {}", native.total_wall_secs, aot.total_wall_secs);
+    assert_eq!(native.migrated_pages, aot.migrated_pages);
+}
+
+#[test]
+fn figure_harnesses_smoke() {
+    let machine = MachineConfig::paper_machine();
+    assert!(fig2::report(&machine).render().contains("11.3x"));
+    assert!(fig3::report().render().contains("Observation 3"));
+    assert!(tables::table1().render().contains("HyPlacer"));
+    assert!(tables::table2().render().contains("SWITCH"));
+    assert!(tables::table3().render().contains("3.5R:1W"));
+}
+
+#[test]
+fn cli_binary_reports_tables() {
+    // exercise the launcher end-to-end through its public CLI
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out = std::process::Command::new(exe).arg("table3").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("CG") && text.contains("150.0"), "{text}");
+    let out = std::process::Command::new(exe).arg("nonsense").output().unwrap();
+    assert!(!out.status.success());
+}

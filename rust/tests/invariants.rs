@@ -1,0 +1,168 @@
+//! Cross-module property tests (in-tree proptest helper): conservation,
+//! capacity and determinism invariants of the coordinator/policy/vm
+//! stack under randomized workloads and policies.
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier, GB, GIB};
+use hyplacer::coordinator::Simulation;
+use hyplacer::policies;
+use hyplacer::util::proptest::check;
+use hyplacer::util::Rng64;
+use hyplacer::workloads::mlc::Mlc;
+use hyplacer::workloads::Workload;
+
+const POLICIES: [&str; 7] =
+    ["adm-default", "memm", "autonuma", "memos", "nimble", "hyplacer", "partitioned"];
+
+fn random_machine(rng: &mut Rng64) -> MachineConfig {
+    let mut m = MachineConfig::paper_machine();
+    // shrink the machine so tests are fast but ratios stay realistic
+    m.page_bytes = 2 * 1024 * 1024;
+    m.dram.capacity = (1 + rng.next_below(8)) * GIB;
+    m.pm.capacity = (8 + rng.next_below(32)) * GIB;
+    m
+}
+
+fn random_workload(rng: &mut Rng64, m: &MachineConfig) -> Box<dyn Workload> {
+    let total_pages = (m.dram.capacity + m.pm.capacity) / m.page_bytes;
+    let active = 1 + rng.next_below(total_pages.min(4000)) as u32;
+    let inactive = rng.next_below(1 + total_pages.saturating_sub(active as u64) / 2) as u32;
+    Box::new(Mlc::new(
+        active,
+        inactive,
+        (1.0 + rng.next_f64() * 40.0) * GB,
+        rng.next_f64() * 0.5,
+        rng.next_f64(),
+        1.0,
+    ))
+}
+
+#[test]
+fn pages_conserved_and_capacity_respected_across_all_policies() {
+    check("conservation", 40, |rng| {
+        let m = random_machine(rng);
+        let w = random_workload(rng, &m);
+        let footprint = w.footprint_pages() as u64;
+        if footprint > m.dram.capacity / m.page_bytes + m.pm.capacity / m.page_bytes {
+            return Ok(()); // cannot map; allocation would (rightly) panic
+        }
+        let pname = POLICIES[rng.next_below(POLICIES.len() as u64) as usize];
+        let policy = policies::by_name(pname, &m, &HyPlacerConfig::default()).unwrap();
+        let mut sim_cfg = SimConfig::default();
+        sim_cfg.epochs = 6;
+        sim_cfg.seed = rng.next_u64();
+        let mut sim = Simulation::new(m.clone(), sim_cfg, w, policy, 0.05);
+        for e in 0..6 {
+            let wall = sim.step();
+            if !(wall.is_finite() && wall >= 0.0) {
+                return Err(format!("{pname}: epoch {e} wall={wall}"));
+            }
+            let pt = sim.page_table();
+            let (dram, pm) = pt.recount();
+            if dram + pm != footprint {
+                return Err(format!(
+                    "{pname}: epoch {e}: {dram}+{pm} pages != footprint {footprint}"
+                ));
+            }
+            if dram != pt.used_pages(Tier::Dram) || pm != pt.used_pages(Tier::Pm) {
+                return Err(format!("{pname}: incremental counters drifted"));
+            }
+            if dram > pt.capacity_pages(Tier::Dram) || pm > pt.capacity_pages(Tier::Pm) {
+                return Err(format!("{pname}: capacity exceeded ({dram}, {pm})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    check("determinism", 10, |rng| {
+        let m = random_machine(rng);
+        let seed = rng.next_u64();
+        let pname = POLICIES[rng.next_below(POLICIES.len() as u64) as usize];
+        let mut run = || {
+            let w = {
+                let mut r2 = Rng64::new(seed);
+                random_workload(&mut r2, &m)
+            };
+            let policy = policies::by_name(pname, &m, &HyPlacerConfig::default()).unwrap();
+            let mut sim_cfg = SimConfig::default();
+            sim_cfg.epochs = 5;
+            sim_cfg.seed = seed;
+            let w_pages = w.footprint_pages() as u64;
+            if w_pages > m.dram.capacity / m.page_bytes + m.pm.capacity / m.page_bytes {
+                return None;
+            }
+            Some(Simulation::new(m.clone(), sim_cfg, w, policy, 0.05).run())
+        };
+        match (run(), run()) {
+            (Some(a), Some(b)) => {
+                if a.total_wall_secs.to_bits() != b.total_wall_secs.to_bits() {
+                    return Err(format!(
+                        "{pname}: {} vs {}",
+                        a.total_wall_secs, b.total_wall_secs
+                    ));
+                }
+                if a.migrated_pages != b.migrated_pages {
+                    return Err(format!("{pname}: migrations diverged"));
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn perfmodel_service_time_monotone_under_random_demands() {
+    use hyplacer::mem::{EpochDemand, PerfModel, TierDemand};
+    let model = PerfModel::new(&MachineConfig::paper_machine());
+    check("service-monotone", 200, |rng| {
+        let mk = |rng: &mut Rng64| TierDemand {
+            read_bytes: rng.next_f64() * 40.0 * GB,
+            write_bytes: rng.next_f64() * 20.0 * GB,
+            random_frac: rng.next_f64(),
+        };
+        let mut d = EpochDemand::default();
+        d.dram = mk(rng);
+        d.pm = mk(rng);
+        d.app_bytes = d.dram.total() + d.pm.total();
+        let t0 = model.service(&d).wall_secs;
+        // adding bytes to either tier never speeds the epoch up...
+        // but NOTE: adding *read* bytes can raise the harmonic-mix
+        // ceiling, so monotonicity is asserted for proportional growth.
+        let mut bigger = d;
+        bigger.dram.read_bytes *= 1.3;
+        bigger.dram.write_bytes *= 1.3;
+        bigger.pm.read_bytes *= 1.3;
+        bigger.pm.write_bytes *= 1.3;
+        bigger.app_bytes *= 1.3;
+        let t1 = model.service(&bigger).wall_secs;
+        if t1 + 1e-12 < t0 {
+            return Err(format!("scaling demand 1.3x reduced time: {t0} -> {t1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn closed_loop_throughput_bounded_by_ceilings() {
+    use hyplacer::mem::PerfModel;
+    let m = MachineConfig::paper_machine();
+    let model = PerfModel::new(&m);
+    check("closed-loop-bounds", 100, |rng| {
+        let threads = 1 + rng.next_below(32) as u32;
+        let wf = rng.next_f64() * 0.5;
+        let rf = rng.next_f64();
+        let share = rng.next_f64();
+        let tp = model.closed_loop_throughput(threads, wf, rf, share);
+        if !(tp.is_finite() && tp > 0.0) {
+            return Err(format!("tp={tp}"));
+        }
+        let sum_peaks = m.dram.peak_read_bw() + m.pm.peak_read_bw();
+        if tp > sum_peaks {
+            return Err(format!("tp {tp} above aggregate nominal peak {sum_peaks}"));
+        }
+        Ok(())
+    });
+}
