@@ -1,0 +1,35 @@
+# HyPlacer reproduction — build/verify entry points.
+#
+# The rust workspace is fully offline (vendored stub deps, see
+# DESIGN.md §7). `artifacts` needs the python image (jax + pallas) and
+# is only required for the AOT/PJRT classifier path; everything else
+# falls back to the native classifier when artifacts are absent.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test verify bench sweep artifacts clean-artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Tier-1 verify (ROADMAP.md).
+verify: build test
+
+bench:
+	$(CARGO) bench --bench hotpath
+	$(CARGO) bench --bench sweep
+
+sweep:
+	$(CARGO) run --release --bin hyplacer -- sweep
+
+# AOT-lower the L1/L2 placement model to rust/artifacts/*.hlo.txt.
+# Requires jax; see python/compile/aot.py.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts
+
+clean-artifacts:
+	rm -rf rust/artifacts

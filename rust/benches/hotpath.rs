@@ -2,9 +2,11 @@
 //! stage of HyPlacer's per-epoch decision path at realistic page counts,
 //! for both the native and the AOT/PJRT classifier, plus the simulator's
 //! end-to-end epoch step rate.
+
+#![allow(clippy::field_reassign_with_default)]
 mod common;
 
-use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier};
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier, GB};
 use hyplacer::coordinator::Simulation;
 use hyplacer::policies::hyplacer::classifier::{Classifier, NativeClassifier};
 use hyplacer::policies::hyplacer::native::PageStats;
@@ -90,5 +92,18 @@ fn main() {
     let mut sim = Simulation::new(cfg.clone(), sim_cfg, w, p, 0.05);
     common::bench("simulation/epoch_step/cg-L", 50, || {
         sim.step();
+    });
+
+    // --- O(touched) regression instrument: a 240 GiB footprint touched
+    // sparsely (~500 pages/epoch). With gap-sampled R/D bits this step is
+    // footprint-independent; a per-page loop would be ~250x slower here.
+    use hyplacer::workloads::mlc::Mlc;
+    let mut sparse_cfg = SimConfig::default();
+    sparse_cfg.epochs = 1;
+    let w = Box::new(Mlc::new(120_000, 0, 1.0 * GB, 0.2, 0.3, 1.0));
+    let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+    let mut sparse = Simulation::new(cfg.clone(), sparse_cfg, w, p, 0.05);
+    common::bench("simulation/epoch_step/sparse-240GiB", 200, || {
+        sparse.step();
     });
 }

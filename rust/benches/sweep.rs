@@ -1,0 +1,43 @@
+//! `cargo bench --bench sweep` — wall-clock scaling of the parallel
+//! experiment engine: the same 8-cell (workload × policy) grid run with
+//! one worker and then one worker per core, asserting bit-identical
+//! simulated results and reporting the speedup (the acceptance target is
+//! > 2x on a 4-core runner).
+
+
+#![allow(clippy::field_reassign_with_default)]
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::exec::{default_jobs, SweepSpec};
+
+fn main() {
+    let mut sim = SimConfig::default();
+    sim.epochs = 60;
+    sim.warmup_epochs = 10;
+    let mut spec =
+        SweepSpec::new(MachineConfig::paper_machine(), sim, HyPlacerConfig::default());
+    spec.workloads = ["bt-M", "ft-M", "mg-M", "cg-M"].iter().map(|s| s.to_string()).collect();
+    spec.policies = ["adm-default", "hyplacer"].iter().map(|s| s.to_string()).collect();
+
+    let serial = spec.run(1).unwrap();
+    let par = spec.run(0).unwrap();
+    for (a, b) in serial.results.iter().zip(par.results.iter()) {
+        assert_eq!(
+            a.sim.total_wall_secs.to_bits(),
+            b.sim.total_wall_secs.to_bits(),
+            "{}/{} diverged across thread counts",
+            a.workload,
+            a.policy
+        );
+    }
+    let speedup = serial.wall_secs / par.wall_secs.max(1e-9);
+    println!(
+        "bench sweep/8-cells: serial {:.2}s | {} jobs {:.2}s | speedup {:.2}x (results identical)",
+        serial.wall_secs, par.jobs, par.wall_secs, speedup
+    );
+    if default_jobs() >= 4 {
+        println!(
+            "  >2x-on-4-cores target: {}",
+            if speedup > 2.0 { "MET" } else { "MISSED" }
+        );
+    }
+}

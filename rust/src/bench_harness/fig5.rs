@@ -10,7 +10,8 @@
 
 use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
 use crate::coordinator::{run_pair, SimResult};
-use crate::policies::{self, FIG5_POLICIES};
+use crate::exec;
+use crate::policies::FIG5_POLICIES;
 use crate::report::Table;
 use crate::util::geomean;
 use crate::workloads::{self, NPB_NAMES};
@@ -64,7 +65,10 @@ impl Matrix {
     }
 }
 
-/// Run the evaluation matrix for the given size classes.
+/// Run the evaluation matrix for the given size classes. Cells fan out
+/// across the [`exec::parallel_map`] worker pool (`opts.jobs`, 0 = one
+/// per core); every cell is an independent simulation with its own seed,
+/// so the matrix is bit-identical to the serial loop it replaced.
 pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
     let cfg = MachineConfig::paper_machine();
     let mut sim = SimConfig::default();
@@ -76,45 +80,22 @@ pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
     let mut hp = HyPlacerConfig::default();
     hp.use_aot = opts.use_aot;
 
-    let mut runs = Vec::new();
+    let mut cells: Vec<(String, &'static str)> = Vec::new();
     for base in NPB_NAMES {
         for size in sizes {
-            let wname = format!("{base}-{size}");
             for pname in FIG5_POLICIES {
-                let w = workloads::by_name(&wname, cfg.page_bytes, sim.epoch_secs)
-                    .unwrap_or_else(|| panic!("workload {wname}"));
-                let mut p = policies::by_name(pname, &cfg, &hp)
-                    .unwrap_or_else(|| panic!("policy {pname}"));
-                if pname == "hyplacer" && opts.use_aot {
-                    p = build_aot_hyplacer(&cfg, &hp).unwrap_or(p);
-                }
-                runs.push(run_pair(&cfg, &sim, w, p, opts.window_frac));
+                cells.push((format!("{base}-{size}"), pname));
             }
         }
     }
+    let runs = exec::parallel_map(&cells, opts.jobs, |_, (wname, pname)| {
+        let w = workloads::by_name(wname, cfg.page_bytes, sim.epoch_secs)
+            .unwrap_or_else(|| panic!("workload {wname}"));
+        let p = exec::build_policy(pname, &cfg, &hp)
+            .unwrap_or_else(|| panic!("policy {pname}"));
+        run_pair(&cfg, &sim, w, p, opts.window_frac)
+    });
     Matrix { sizes: sizes.to_vec(), runs }
-}
-
-/// HyPlacer with the AOT/PJRT classifier (falls back to native if the
-/// artifacts are missing).
-fn build_aot_hyplacer(
-    cfg: &MachineConfig,
-    hp: &HyPlacerConfig,
-) -> Option<Box<dyn policies::Policy>> {
-    let dir = if hp.artifacts_dir == "artifacts" {
-        crate::runtime::default_artifacts_dir()
-    } else {
-        std::path::PathBuf::from(&hp.artifacts_dir)
-    };
-    match crate::runtime::placement::AotClassifier::new(dir) {
-        Ok(c) => Some(Box::new(
-            policies::hyplacer::HyPlacer::new(cfg, hp.clone()).with_classifier(Box::new(c)),
-        )),
-        Err(e) => {
-            eprintln!("AOT classifier unavailable ({e:#}); using native");
-            None
-        }
-    }
 }
 
 fn matrix_table(m: &Matrix, metric: &str) -> Table {

@@ -67,17 +67,20 @@ pub struct BenchOpts {
     pub window_frac: f64,
     /// use the AOT/PJRT classifier for HyPlacer when artifacts exist.
     pub use_aot: bool,
+    /// worker threads for matrix runs (0 = one per core; see
+    /// [`crate::exec::parallel_map`]).
+    pub jobs: usize,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { epochs: 150, seed: 42, window_frac: 0.05, use_aot: false }
+        BenchOpts { epochs: 150, seed: 42, window_frac: 0.05, use_aot: false, jobs: 0 }
     }
 }
 
 impl BenchOpts {
     /// Quick mode for tests/CI.
     pub fn quick() -> Self {
-        BenchOpts { epochs: 50, seed: 42, window_frac: 0.05, use_aot: false }
+        BenchOpts { epochs: 50, ..BenchOpts::default() }
     }
 }

@@ -1,0 +1,488 @@
+//! Parallel experiment engine.
+//!
+//! The paper's evaluation is a grid: (workload × policy × machine-config
+//! × seed). Every cell is an independent [`Simulation`] with its own RNG,
+//! page table and policy state, so the grid is embarrassingly parallel —
+//! yet the seed harness ran it as a serial loop of serial runs. This
+//! module provides:
+//!
+//! * [`parallel_map`] — a scoped-thread work queue (std only, no extra
+//!   dependencies) mapping a closure over a slice with results returned
+//!   in input order,
+//! * [`SweepSpec`] — a declarative grid description that expands to
+//!   [`SweepCell`]s and runs them across a thread pool, collecting
+//!   [`SimResult`]s into the existing `Report`/`Table`/JSON reporting
+//!   infrastructure,
+//! * [`build_policy`] — the policy factory shared by the figure
+//!   harnesses and the sweep engine (including the AOT/PJRT HyPlacer
+//!   variant with native fallback).
+//!
+//! Determinism: a cell's simulated outcome is a pure function of its
+//! `(machine, workload, policy, seed)` tuple — cells share no mutable
+//! state — so results are bit-identical regardless of thread count or
+//! completion order. `exec::tests` and `tests/sweep.rs` assert this.
+//!
+//! [`Simulation`]: crate::coordinator::Simulation
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::coordinator::{run_pair, SimResult};
+use crate::policies::{self, Policy};
+use crate::report::json::Json;
+use crate::report::Table;
+use crate::workloads;
+
+/// Worker threads to use when the caller passes `jobs = 0`.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing jobs knob: `0` means one worker per core.
+pub fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        default_jobs()
+    } else {
+        jobs
+    }
+}
+
+/// Map `f` over `items` on up to `jobs` scoped worker threads (`0` = one
+/// per core), returning results in input order.
+///
+/// Workers pull indices from a shared atomic counter, so uneven cell
+/// costs (an L-size CG run vs an S-size MG run) balance automatically. A
+/// panic in any worker propagates to the caller once the scope joins.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut done = done.into_inner().unwrap();
+    done.sort_unstable_by_key(|e| e.0);
+    debug_assert_eq!(done.len(), items.len());
+    done.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Build a policy by registry name, swapping in the AOT/PJRT classifier
+/// for HyPlacer when `hp.use_aot` is set (with graceful fallback to the
+/// native classifier if the artifacts or the PJRT backend are missing).
+pub fn build_policy(
+    name: &str,
+    cfg: &MachineConfig,
+    hp: &HyPlacerConfig,
+) -> Option<Box<dyn Policy>> {
+    let p = policies::by_name(name, cfg, hp)?;
+    if hp.use_aot && p.name() == "hyplacer" {
+        let dir = if hp.artifacts_dir == "artifacts" {
+            crate::runtime::default_artifacts_dir()
+        } else {
+            std::path::PathBuf::from(&hp.artifacts_dir)
+        };
+        match crate::runtime::placement::AotClassifier::new(dir) {
+            Ok(c) => {
+                return Some(Box::new(
+                    policies::hyplacer::HyPlacer::new(cfg, hp.clone())
+                        .with_classifier(Box::new(c)),
+                ))
+            }
+            Err(e) => eprintln!("AOT classifier unavailable ({e:#}); using native"),
+        }
+    }
+    Some(p)
+}
+
+/// One cell of a sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Index into [`SweepSpec::machines`].
+    pub machine_idx: usize,
+    pub machine: String,
+    pub workload: String,
+    pub policy: String,
+    pub seed: u64,
+}
+
+/// Declarative description of an experiment grid.
+///
+/// Expansion order is machines → workloads → policies → seeds (row-major),
+/// which fixes cell indices and therefore report ordering independent of
+/// execution interleaving.
+#[derive(Clone)]
+pub struct SweepSpec {
+    pub workloads: Vec<String>,
+    pub policies: Vec<String>,
+    /// Named machine configurations (the paper's channel-split study uses
+    /// several).
+    pub machines: Vec<(String, MachineConfig)>,
+    /// Each seed is one replicate of the full (machine × workload ×
+    /// policy) grid; every cell's simulation derives all of its
+    /// randomness from its own seed.
+    pub seeds: Vec<u64>,
+    /// Epoch count / warmup / epoch length shared by every cell (the
+    /// per-cell seed overrides `sim.seed`).
+    pub sim: SimConfig,
+    pub hyplacer: HyPlacerConfig,
+    /// Delay-window fraction of the epoch (HyPlacer's 50 ms / 1 s).
+    pub window_frac: f64,
+}
+
+impl SweepSpec {
+    /// A single-machine spec with the Fig. 5 policy set and one seed,
+    /// ready for the caller to override axes.
+    pub fn new(machine: MachineConfig, sim: SimConfig, hyplacer: HyPlacerConfig) -> Self {
+        let window_frac = hyplacer.delay_secs / sim.epoch_secs;
+        SweepSpec {
+            workloads: vec!["cg-M".to_string()],
+            policies: policies::FIG5_POLICIES.iter().map(|s| s.to_string()).collect(),
+            machines: vec![("paper".to_string(), machine)],
+            seeds: vec![sim.seed],
+            sim,
+            hyplacer,
+            window_frac,
+        }
+    }
+
+    /// Expand the grid to its cells in canonical (row-major) order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(
+            self.machines.len() * self.workloads.len() * self.policies.len() * self.seeds.len(),
+        );
+        for (machine_idx, (mname, _)) in self.machines.iter().enumerate() {
+            for w in &self.workloads {
+                for p in &self.policies {
+                    for &seed in &self.seeds {
+                        out.push(SweepCell {
+                            machine_idx,
+                            machine: mname.clone(),
+                            workload: w.clone(),
+                            policy: p.clone(),
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Check every axis value resolves before any thread spawns, so a
+    /// typo fails fast with a message instead of panicking mid-sweep.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.machines.is_empty() {
+            return Err("sweep has no machine configurations".to_string());
+        }
+        if self.workloads.is_empty() {
+            return Err("sweep has no workloads".to_string());
+        }
+        if self.policies.is_empty() {
+            return Err("sweep has no policies".to_string());
+        }
+        if self.seeds.is_empty() {
+            return Err("sweep has no seeds".to_string());
+        }
+        for (mname, machine) in &self.machines {
+            for w in &self.workloads {
+                if workloads::by_name(w, machine.page_bytes, self.sim.epoch_secs).is_none() {
+                    return Err(format!("unknown workload {w:?} (machine {mname:?})"));
+                }
+            }
+            for p in &self.policies {
+                if policies::by_name(p, machine, &self.hyplacer).is_none() {
+                    return Err(format!("unknown policy {p:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the whole grid on up to `jobs` worker threads (`0` = one per
+    /// core). Results come back in canonical cell order and are
+    /// bit-identical for any `jobs` value.
+    pub fn run(&self, jobs: usize) -> Result<SweepRun, String> {
+        self.validate()?;
+        let cells = self.cells();
+        let jobs = resolve_jobs(jobs).min(cells.len().max(1));
+        let t0 = Instant::now();
+        let results = parallel_map(&cells, jobs, |_, cell| self.run_cell(cell));
+        Ok(SweepRun { results, jobs, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Run one cell (names were validated up front).
+    fn run_cell(&self, cell: &SweepCell) -> CellResult {
+        let (_, machine) = &self.machines[cell.machine_idx];
+        let mut sim = self.sim.clone();
+        sim.seed = cell.seed;
+        let w = workloads::by_name(&cell.workload, machine.page_bytes, sim.epoch_secs)
+            .expect("workload validated");
+        let p = build_policy(&cell.policy, machine, &self.hyplacer).expect("policy validated");
+        CellResult {
+            machine: cell.machine.clone(),
+            workload: cell.workload.clone(),
+            policy: cell.policy.clone(),
+            seed: cell.seed,
+            sim: run_pair(machine, &sim, w, p, self.window_frac),
+        }
+    }
+}
+
+/// One completed cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub machine: String,
+    pub workload: String,
+    pub policy: String,
+    pub seed: u64,
+    pub sim: SimResult,
+}
+
+/// A completed sweep: results in canonical cell order plus run metadata.
+pub struct SweepRun {
+    pub results: Vec<CellResult>,
+    /// Worker threads actually used.
+    pub jobs: usize,
+    /// Host wall-clock of the whole sweep, seconds.
+    pub wall_secs: f64,
+}
+
+/// Baseline lookup key: the (machine, workload, seed) group a cell is
+/// normalized within.
+type BaselineKey<'a> = (&'a str, &'a str, u64);
+
+impl SweepRun {
+    /// One map lookup per cell instead of a linear scan: index every
+    /// `adm-default` cell by its (machine, workload, seed) group.
+    fn baselines(&self) -> HashMap<BaselineKey<'_>, &CellResult> {
+        self.results
+            .iter()
+            .filter(|c| c.policy == "adm-default")
+            .map(|c| ((c.machine.as_str(), c.workload.as_str(), c.seed), c))
+            .collect()
+    }
+
+    fn baseline_of<'a>(
+        baselines: &HashMap<BaselineKey<'a>, &'a CellResult>,
+        cell: &'a CellResult,
+    ) -> Option<&'a CellResult> {
+        baselines.get(&(cell.machine.as_str(), cell.workload.as_str(), cell.seed)).copied()
+    }
+
+    /// Steady-state speedup of a cell vs the `adm-default` cell of the
+    /// same (machine, workload, seed) group, if the sweep contains one —
+    /// the normalization of the paper's Fig. 5.
+    pub fn speedup_vs_baseline(&self, cell: &CellResult) -> Option<f64> {
+        let baselines = self.baselines();
+        Some(cell.sim.steady_speedup_vs(&Self::baseline_of(&baselines, cell)?.sim))
+    }
+
+    /// Energy gain vs the same baseline group.
+    pub fn energy_gain_vs_baseline(&self, cell: &CellResult) -> Option<f64> {
+        let baselines = self.baselines();
+        Some(cell.sim.energy_gain_vs(&Self::baseline_of(&baselines, cell)?.sim))
+    }
+
+    /// Render the per-cell results table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "machine",
+            "workload",
+            "policy",
+            "seed",
+            "wall_s",
+            "steady_GBs",
+            "speedup",
+            "energy_gain",
+            "migrated",
+        ]);
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.2}x"),
+            None => "-".to_string(),
+        };
+        let baselines = self.baselines();
+        for cell in &self.results {
+            let base = Self::baseline_of(&baselines, cell);
+            t.row(vec![
+                cell.machine.clone(),
+                cell.sim.workload.clone(),
+                cell.sim.policy.clone(),
+                cell.seed.to_string(),
+                format!("{:.1}", cell.sim.total_wall_secs),
+                format!("{:.2}", cell.sim.steady_throughput / 1e9),
+                fmt_opt(base.map(|b| cell.sim.steady_speedup_vs(&b.sim))),
+                fmt_opt(base.map(|b| cell.sim.energy_gain_vs(&b.sim))),
+                cell.sim.migrated_pages.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Full results as a JSON document (for downstream tooling; the
+    /// in-tree parser round-trips it). `seed` is emitted as a string so
+    /// the full u64 range survives JSON's f64 numbers losslessly.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let num = Json::Num;
+        let baselines = self.baselines();
+        let cells: Vec<Json> = self
+            .results
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("machine".to_string(), Json::Str(c.machine.clone()));
+                m.insert("workload".to_string(), Json::Str(c.sim.workload.clone()));
+                m.insert("policy".to_string(), Json::Str(c.sim.policy.clone()));
+                m.insert("seed".to_string(), Json::Str(c.seed.to_string()));
+                m.insert("wall_secs".to_string(), num(c.sim.total_wall_secs));
+                m.insert("throughput".to_string(), num(c.sim.throughput));
+                m.insert("steady_throughput".to_string(), num(c.sim.steady_throughput));
+                m.insert("energy_j_per_byte".to_string(), num(c.sim.energy_j_per_byte));
+                m.insert("migrated_pages".to_string(), num(c.sim.migrated_pages as f64));
+                m.insert("dram_traffic_share".to_string(), num(c.sim.dram_traffic_share));
+                m.insert(
+                    "speedup_vs_adm".to_string(),
+                    match Self::baseline_of(&baselines, c) {
+                        Some(b) => num(c.sim.steady_speedup_vs(&b.sim)),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("jobs".to_string(), num(self.jobs as f64));
+        root.insert("wall_secs".to_string(), num(self.wall_secs));
+        root.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+
+    fn quick_spec() -> SweepSpec {
+        let mut sim = SimConfig::default();
+        sim.epochs = 6;
+        sim.warmup_epochs = 2;
+        let mut spec =
+            SweepSpec::new(MachineConfig::paper_machine(), sim, HyPlacerConfig::default());
+        spec.workloads = vec!["cg-S".to_string(), "mg-S".to_string()];
+        spec.policies = vec!["adm-default".to_string(), "hyplacer".to_string()];
+        spec.seeds = vec![42, 7];
+        spec
+    }
+
+    #[test]
+    fn parallel_map_preserves_input_order() {
+        let items: Vec<u64> = (0..100).collect();
+        for jobs in [1, 2, 7, 64] {
+            let out = parallel_map(&items, jobs, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * 3 + 1
+            });
+            assert_eq!(out.len(), items.len());
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as u64 * 3 + 1, "jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_degenerate_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 8, |_, &x| x).is_empty());
+        let one = [5u32];
+        assert_eq!(parallel_map(&one, 0, |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn grid_expands_row_major() {
+        let spec = quick_spec();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        assert_eq!(cells[0].workload, "cg-S");
+        assert_eq!(cells[0].policy, "adm-default");
+        assert_eq!(cells[0].seed, 42);
+        assert_eq!(cells[1].seed, 7);
+        assert_eq!(cells[2].policy, "hyplacer");
+        assert_eq!(cells[4].workload, "mg-S");
+        assert!(cells.iter().all(|c| c.machine == "paper"));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_axes() {
+        let mut spec = quick_spec();
+        spec.workloads.push("nope-Q".to_string());
+        assert!(spec.validate().unwrap_err().contains("nope-Q"));
+        let mut spec = quick_spec();
+        spec.policies.push("bogus".to_string());
+        assert!(spec.validate().unwrap_err().contains("bogus"));
+        let mut spec = quick_spec();
+        spec.seeds.clear();
+        assert!(spec.run(1).is_err());
+    }
+
+    #[test]
+    fn sweep_results_identical_across_thread_counts() {
+        let spec = quick_spec();
+        let serial = spec.run(1).unwrap();
+        let par = spec.run(4).unwrap();
+        assert_eq!(serial.results.len(), 8);
+        assert_eq!(par.results.len(), 8);
+        for (a, b) in serial.results.iter().zip(par.results.iter()) {
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(
+                a.sim.total_wall_secs.to_bits(),
+                b.sim.total_wall_secs.to_bits(),
+                "{}/{}/{}",
+                a.workload,
+                a.policy,
+                a.seed
+            );
+            assert_eq!(a.sim.migrated_pages, b.sim.migrated_pages);
+        }
+    }
+
+    #[test]
+    fn sweep_reporting_surfaces() {
+        let spec = quick_spec();
+        let run = spec.run(0).unwrap();
+        // baselines resolve within their own (workload, seed) group
+        let hyp = run
+            .results
+            .iter()
+            .find(|c| c.policy == "hyplacer" && c.workload == "cg-S" && c.seed == 7)
+            .unwrap();
+        assert!(run.speedup_vs_baseline(hyp).is_some());
+        let rendered = run.table().render();
+        assert!(rendered.contains("CG-S") && rendered.contains("hyplacer"));
+        let json = run.to_json().render();
+        let doc = crate::report::json::parse(&json).unwrap();
+        assert_eq!(doc.get("cells").unwrap().as_arr().unwrap().len(), 8);
+    }
+}

@@ -8,17 +8,19 @@
 //! hyplacer table1|table2|table3            # regenerate a table
 //! hyplacer run --workload cg-L --policy hyplacer [--epochs N]
 //! hyplacer compare --workload cg-L         # all policies on one workload
+//! hyplacer sweep -w cg-M,cg-L -p all       # parallel experiment grid
 //! hyplacer all                             # everything (EXPERIMENTS.md data)
 //! ```
 //!
-//! Common flags: `--epochs N --seed N --csv DIR --aot --quick
-//! --config FILE` (TOML-subset, see rust/src/config/parse.rs).
+//! Common flags: `--epochs N --seed N --jobs N --csv DIR --json FILE
+//! --aot --quick --config FILE` (TOML-subset, see rust/src/config/parse.rs).
 
 use std::process::ExitCode;
 
 use hyplacer::bench_harness::{fig2, fig3, fig5, tables, BenchOpts, Report};
 use hyplacer::config::{parse::Doc, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;
+use hyplacer::exec::SweepSpec;
 use hyplacer::policies::{self, FIG5_POLICIES};
 use hyplacer::report::Table;
 use hyplacer::workloads;
@@ -28,10 +30,19 @@ struct Args {
     epochs: Option<u32>,
     seed: Option<u64>,
     csv: Option<String>,
+    json: Option<String>,
     aot: bool,
     quick: bool,
-    workload: String,
-    policy: String,
+    /// `-w`: one name for run/compare, a comma list for sweep.
+    workload: Option<String>,
+    /// `-p`: one name for run, a comma list (or "all") for sweep.
+    policy: Option<String>,
+    /// sweep seed axis, comma list.
+    seeds: Option<String>,
+    /// sweep machine axis: "paper" and/or "D:P" channel splits.
+    machines: Option<String>,
+    /// worker threads (0 = one per core).
+    jobs: usize,
     config: Option<String>,
 }
 
@@ -41,10 +52,14 @@ fn parse_args() -> Result<Args, String> {
         epochs: None,
         seed: None,
         csv: None,
+        json: None,
         aot: false,
         quick: false,
-        workload: "cg-M".to_string(),
-        policy: "hyplacer".to_string(),
+        workload: None,
+        policy: None,
+        seeds: None,
+        machines: None,
+        jobs: 0,
         config: None,
     };
     let mut it = std::env::args().skip(1);
@@ -55,9 +70,13 @@ fn parse_args() -> Result<Args, String> {
         match a.as_str() {
             "--epochs" => args.epochs = Some(take("--epochs")?.parse().map_err(|e| format!("--epochs: {e}"))?),
             "--seed" => args.seed = Some(take("--seed")?.parse().map_err(|e| format!("--seed: {e}"))?),
+            "--jobs" | "-j" => args.jobs = take("--jobs")?.parse().map_err(|e| format!("--jobs: {e}"))?,
             "--csv" => args.csv = Some(take("--csv")?),
-            "--workload" | "-w" => args.workload = take("--workload")?,
-            "--policy" | "-p" => args.policy = take("--policy")?,
+            "--json" => args.json = Some(take("--json")?),
+            "--workload" | "-w" => args.workload = Some(take("--workload")?),
+            "--policy" | "-p" => args.policy = Some(take("--policy")?),
+            "--seeds" => args.seeds = Some(take("--seeds")?),
+            "--machines" => args.machines = Some(take("--machines")?),
             "--config" => args.config = Some(take("--config")?),
             "--aot" => args.aot = true,
             "--quick" => args.quick = true,
@@ -93,18 +112,28 @@ COMMANDS
   table3    workload summary (paper Table 3)
   run       one (workload, policy) pair    [-w cg-L -p hyplacer]
   compare   all policies on one workload   [-w cg-L]
+  sweep     parallel (machine x workload x policy x seed) grid
+            [-w bt-M,ft-M,mg-M,cg-M -p all --seeds 42 --machines paper]
   all       every figure and table in sequence
 
 FLAGS
   --epochs N     epochs per run (default 60; figures use their own)
   --seed N       RNG seed (default 42)
+  -j, --jobs N   worker threads for fig5/6/7 + sweep (default: one per core)
   --csv DIR      also write each table as CSV under DIR
+  --json FILE    (sweep) also write full results as JSON
+  --seeds A,B    (sweep) seed axis — replicates the grid per seed
+  --machines M   (sweep) machine axis: paper and/or D:P channel splits,
+                 e.g. paper,3:3,2:4,1:5
   --aot          use the AOT/PJRT classifier for HyPlacer (needs artifacts/)
   --quick        short runs (CI)
   --config FILE  TOML-subset config overriding machine/sim/hyplacer knobs
-  -w, --workload NAME   bt|ft|mg|cg|pr|bfs + -S/-M/-L  (default cg-M)
+  -w, --workload NAME   bt|ft|mg|cg|pr|bfs + -S/-M/-L  (default cg-M;
+                        sweep accepts a comma list)
   -p, --policy NAME     adm-default|memm|autonuma|memos|nimble|hyplacer|
-                        partitioned|interleave-<pct>   (default hyplacer)
+                        partitioned|interleave-<pct>   (default hyplacer;
+                        sweep accepts a comma list, or \"all\" for the
+                        Fig. 5 policy set)
 ";
 
 fn opts_from(args: &Args) -> BenchOpts {
@@ -116,6 +145,7 @@ fn opts_from(args: &Args) -> BenchOpts {
         o.seed = s;
     }
     o.use_aot = args.aot;
+    o.jobs = args.jobs;
     o
 }
 
@@ -156,10 +186,12 @@ fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
-    let w = workloads::by_name(&args.workload, machine.page_bytes, sim.epoch_secs)
-        .ok_or_else(|| format!("unknown workload {:?}", args.workload))?;
-    let p = policies::by_name(&args.policy, &machine, &hp)
-        .ok_or_else(|| format!("unknown policy {:?}", args.policy))?;
+    let wname = args.workload.as_deref().unwrap_or("cg-M");
+    let pname = args.policy.as_deref().unwrap_or("hyplacer");
+    let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs)
+        .ok_or_else(|| format!("unknown workload {wname:?}"))?;
+    let p = policies::by_name(pname, &machine, &hp)
+        .ok_or_else(|| format!("unknown policy {pname:?}"))?;
     let window_frac = hp.delay_secs / sim.epoch_secs;
     let r = run_pair(&machine, &sim, w, p, window_frac);
     let mut t = Table::new(vec!["metric", "value"]);
@@ -183,6 +215,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
+    let wname = args.workload.as_deref().unwrap_or("cg-M");
     let window_frac = hp.delay_secs / sim.epoch_secs;
     let mut t = Table::new(vec![
         "policy",
@@ -195,8 +228,8 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     let mut base: Option<f64> = None;
     let mut base_energy: Option<f64> = None;
     for pname in FIG5_POLICIES {
-        let w = workloads::by_name(&args.workload, machine.page_bytes, sim.epoch_secs)
-            .ok_or_else(|| format!("unknown workload {:?}", args.workload))?;
+        let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs)
+            .ok_or_else(|| format!("unknown workload {wname:?}"))?;
         let p = policies::by_name(pname, &machine, &hp).unwrap();
         let r = run_pair(&machine, &sim, w, p, window_frac);
         let speedup = base.map(|b| b / r.total_wall_secs).unwrap_or(1.0);
@@ -214,7 +247,82 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
             r.migrated_pages.to_string(),
         ]);
     }
-    println!("workload: {}\n{}", args.workload, t.render());
+    println!("workload: {wname}\n{}", t.render());
+    Ok(())
+}
+
+fn split_list(s: &str) -> Vec<String> {
+    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+}
+
+/// Parse the sweep machine axis: "paper" or a "D:P" channel split
+/// (1 <= D, 1 <= P, D + P <= 6 — the socket has six channels).
+fn parse_machines(spec: &str) -> Result<Vec<(String, MachineConfig)>, String> {
+    let mut out = Vec::new();
+    for name in split_list(spec) {
+        if name.eq_ignore_ascii_case("paper") {
+            out.push(("paper".to_string(), MachineConfig::paper_machine()));
+            continue;
+        }
+        let (d, p) = name
+            .split_once(':')
+            .ok_or_else(|| format!("machine {name:?}: expected \"paper\" or \"D:P\""))?;
+        let d: u32 = d.trim().parse().map_err(|e| format!("machine {name:?}: {e}"))?;
+        let p: u32 = p.trim().parse().map_err(|e| format!("machine {name:?}: {e}"))?;
+        // bound each side before summing so absurd values can't overflow
+        if !(1..=5).contains(&d) || !(1..=5).contains(&p) || d + p > 6 {
+            return Err(format!("machine {name:?}: need 1 <= D, 1 <= P, D+P <= 6"));
+        }
+        out.push((format!("{d}:{p}"), MachineConfig::channel_split(d, p)));
+    }
+    if out.is_empty() {
+        return Err("empty --machines list".to_string());
+    }
+    Ok(out)
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let (machine, sim, hp) = load_configs(args)?;
+    let mut spec = SweepSpec::new(machine, sim, hp);
+    spec.workloads = match &args.workload {
+        Some(w) => split_list(w),
+        None => ["bt-M", "ft-M", "mg-M", "cg-M"].iter().map(|s| s.to_string()).collect(),
+    };
+    if let Some(p) = &args.policy {
+        if !p.eq_ignore_ascii_case("all") {
+            spec.policies = split_list(p);
+        }
+    }
+    if let Some(seeds) = &args.seeds {
+        spec.seeds = split_list(seeds)
+            .iter()
+            .map(|s| s.parse::<u64>().map_err(|e| format!("--seeds {s:?}: {e}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(machines) = &args.machines {
+        spec.machines = parse_machines(machines)?;
+    }
+    let run = spec.run(args.jobs)?;
+    let mut rep = Report::new("sweep", "Parallel experiment sweep");
+    rep.tables.push(("cells".to_string(), run.table()));
+    rep.notes.push(format!(
+        "{} cells x {} epochs on {} worker thread(s) in {:.1}s ({:.2} cells/s)",
+        run.results.len(),
+        spec.sim.epochs,
+        run.jobs,
+        run.wall_secs,
+        run.results.len() as f64 / run.wall_secs.max(1e-9),
+    ));
+    rep.notes.push(
+        "speedup/energy_gain are vs the adm-default cell of the same \
+         (machine, workload, seed) group"
+            .to_string(),
+    );
+    emit(&rep, &args.csv);
+    if let Some(path) = &args.json {
+        std::fs::write(path, run.to_json().render()).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -271,6 +379,7 @@ fn main() -> ExitCode {
         }
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "sweep" => cmd_sweep(&args),
         "all" => {
             emit(&fig2::report(&machine), &args.csv);
             emit(&fig3::report(), &args.csv);

@@ -62,6 +62,71 @@ impl Json {
     pub fn as_i64_vec(&self) -> Option<Vec<i64>> {
         self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as i64)).collect()
     }
+
+    /// Serialize to a compact JSON string — the inverse of [`parse`]
+    /// (non-finite numbers become `null`, which has no JSON encoding).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -299,5 +364,26 @@ mod tests {
     fn unicode_escape() {
         let v = parse("\"a\\u0041b\"").unwrap();
         assert_eq!(v.as_str(), Some("aAb"));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let doc = parse(
+            r#"{"n": 3.5, "xs": [1, -2, 0], "s": "say \"hi\"\nthere", "ok": true,
+               "none": null, "inner": {"deep": [false]}}"#,
+        )
+        .unwrap();
+        let rendered = doc.render();
+        assert_eq!(parse(&rendered).unwrap(), doc);
+    }
+
+    #[test]
+    fn render_escapes_and_nonfinite() {
+        assert_eq!(Json::Str("a\"b\\c\nd".to_string()).render(), r#""a\"b\\c\nd""#);
+        assert_eq!(Json::Str("\u{1}".to_string()).render(), "\"\\u0001\"");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(2.0).render(), "2");
+        assert_eq!(Json::Arr(vec![Json::Bool(true), Json::Null]).render(), "[true,null]");
     }
 }

@@ -7,6 +7,10 @@
 #[derive(Clone, Debug)]
 pub struct Rng64 {
     s: [u64; 4],
+    /// Draws consumed since construction. The per-epoch hot path is
+    /// required to be O(pages touched), not O(footprint); this counter is
+    /// the cheap, deterministic instrument the regression tests assert on.
+    draws: u64,
 }
 
 impl Rng64 {
@@ -20,7 +24,12 @@ impl Rng64 {
             z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
             z ^ (z >> 31)
         };
-        Rng64 { s: [next(), next(), next(), next()] }
+        Rng64 { s: [next(), next(), next(), next()], draws: 0 }
+    }
+
+    /// Number of `next_u64` draws consumed so far.
+    pub fn draw_count(&self) -> u64 {
+        self.draws
     }
 
     #[inline]
@@ -33,6 +42,7 @@ impl Rng64 {
         self.s[0] ^= self.s[3];
         self.s[2] ^= t;
         self.s[3] = self.s[3].rotate_left(45);
+        self.draws += 1;
         result
     }
 
@@ -79,6 +89,54 @@ impl Rng64 {
         for i in (1..xs.len()).rev() {
             let j = self.next_below(i as u64 + 1) as usize;
             xs.swap(i, j);
+        }
+    }
+}
+
+/// Visit, in increasing order, every index of `[start, end)` selected by
+/// an independent Bernoulli(p) draw — *without* drawing per index.
+///
+/// Gaps between hits follow the geometric distribution, sampled by
+/// inversion (`floor(ln u / ln(1-p))`), so the cost is O(hits) uniform
+/// draws instead of O(end - start): the simulator's epoch hot path stays
+/// proportional to the pages actually touched, not the region footprint.
+/// The produced hit set is distributed exactly like the per-index loop
+/// (same process in law, different realization for a given seed), and a
+/// single code path serves every density — there is no sparse/dense
+/// crossover that could double-count or skip indices.
+///
+/// The callback receives the RNG back so per-hit decisions (e.g. the
+/// dirty-bit draw) come from the same deterministic stream.
+pub fn bernoulli_hits<F: FnMut(&mut Rng64, u64)>(
+    rng: &mut Rng64,
+    start: u64,
+    end: u64,
+    p: f64,
+    mut hit: F,
+) {
+    if p <= 0.0 || start >= end {
+        return;
+    }
+    if p >= 1.0 {
+        for i in start..end {
+            hit(rng, i);
+        }
+        return;
+    }
+    let ln1p = (1.0 - p).ln(); // < 0, finite since 0 < p < 1
+    let mut i = start;
+    loop {
+        let u = rng.next_f64().max(1e-300);
+        // Saturating float->int cast: a huge gap simply ends the scan.
+        let gap = (u.ln() / ln1p) as u64;
+        if gap >= end - i {
+            return;
+        }
+        i += gap;
+        hit(rng, i);
+        i += 1;
+        if i >= end {
+            return;
         }
     }
 }
@@ -147,6 +205,68 @@ mod tests {
                 assert!(r.zipf(37, theta) < 37);
             }
         }
+    }
+
+    #[test]
+    fn draw_count_tracks_consumption() {
+        let mut r = Rng64::new(11);
+        assert_eq!(r.draw_count(), 0);
+        r.next_u64();
+        r.next_f64();
+        r.chance(0.5);
+        assert_eq!(r.draw_count(), 3);
+    }
+
+    #[test]
+    fn bernoulli_hits_ordered_in_range_no_duplicates() {
+        // sweep across the old sparse/dense crossover (p = 0.2) to show the
+        // single gap-sampled path has no seam
+        for p in [0.001, 0.05, 0.19, 0.2, 0.21, 0.5, 0.95, 1.0] {
+            let mut r = Rng64::new((p * 1000.0) as u64);
+            let mut last: Option<u64> = None;
+            bernoulli_hits(&mut r, 100, 10_100, p, |_, i| {
+                assert!((100..10_100).contains(&i), "p={p}: out of range {i}");
+                if let Some(prev) = last {
+                    assert!(i > prev, "p={p}: not strictly increasing");
+                }
+                last = Some(i);
+            });
+        }
+    }
+
+    #[test]
+    fn bernoulli_hits_rate_matches_p() {
+        let n = 200_000u64;
+        for p in [0.01, 0.1, 0.3, 0.7] {
+            let mut r = Rng64::new(99);
+            let mut hits = 0u64;
+            bernoulli_hits(&mut r, 0, n, p, |_, _| hits += 1);
+            let rate = hits as f64 / n as f64;
+            assert!((rate - p).abs() < 0.01, "p={p}: rate {rate}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_hits_cost_is_o_hits() {
+        let mut r = Rng64::new(5);
+        let mut hits = 0u64;
+        bernoulli_hits(&mut r, 0, 1_000_000, 0.001, |_, _| hits += 1);
+        // one draw per hit (+ the terminating draw), not one per index
+        assert!(hits > 500, "hits {hits}");
+        assert!(r.draw_count() <= hits + 1, "draws {} hits {hits}", r.draw_count());
+    }
+
+    #[test]
+    fn bernoulli_hits_degenerate_inputs() {
+        let mut r = Rng64::new(1);
+        let mut count = 0;
+        bernoulli_hits(&mut r, 10, 10, 0.5, |_, _| count += 1);
+        bernoulli_hits(&mut r, 10, 5, 0.5, |_, _| count += 1);
+        bernoulli_hits(&mut r, 0, 100, 0.0, |_, _| count += 1);
+        bernoulli_hits(&mut r, 0, 100, -1.0, |_, _| count += 1);
+        assert_eq!(count, 0);
+        bernoulli_hits(&mut r, 0, 64, 1.0, |_, _| count += 1);
+        assert_eq!(count, 64);
     }
 
     #[test]

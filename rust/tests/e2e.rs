@@ -2,6 +2,8 @@
 //! inside HyPlacer's Control loop — against the native path, plus
 //! figure-harness smoke. Skips (not fails) when artifacts are missing.
 
+
+#![allow(clippy::field_reassign_with_default)]
 use hyplacer::bench_harness::{fig2, fig3, tables};
 use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;

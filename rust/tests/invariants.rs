@@ -2,6 +2,8 @@
 //! capacity and determinism invariants of the coordinator/policy/vm
 //! stack under randomized workloads and policies.
 
+
+#![allow(clippy::field_reassign_with_default)]
 use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier, GB, GIB};
 use hyplacer::coordinator::Simulation;
 use hyplacer::policies;

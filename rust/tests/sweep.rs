@@ -1,0 +1,84 @@
+//! Integration: the parallel experiment engine through its public API
+//! and the `hyplacer sweep` CLI (table + JSON emission, fast failure on
+//! bad axes).
+
+
+#![allow(clippy::field_reassign_with_default)]
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::exec::SweepSpec;
+use hyplacer::report::json;
+
+fn quick_spec() -> SweepSpec {
+    let mut sim = SimConfig::default();
+    sim.epochs = 5;
+    sim.warmup_epochs = 1;
+    let mut spec = SweepSpec::new(MachineConfig::paper_machine(), sim, HyPlacerConfig::default());
+    spec.workloads = vec!["cg-S".to_string()];
+    spec.policies = vec!["adm-default".to_string(), "memm".to_string()];
+    spec.seeds = vec![1, 2];
+    spec
+}
+
+#[test]
+fn sweep_is_thread_count_invariant_via_public_api() {
+    let spec = quick_spec();
+    let a = spec.run(1).unwrap();
+    let b = spec.run(3).unwrap();
+    assert_eq!(a.results.len(), 4);
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.policy, y.policy);
+        assert_eq!(x.seed, y.seed);
+        assert_eq!(x.sim.total_wall_secs.to_bits(), y.sim.total_wall_secs.to_bits());
+        assert_eq!(x.sim.migrated_pages, y.sim.migrated_pages);
+    }
+}
+
+#[test]
+fn cli_sweep_reports_table_and_json() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let json_path = std::env::temp_dir().join("hyplacer_sweep_cli_test.json");
+    let out = std::process::Command::new(exe)
+        .args([
+            "sweep",
+            "-w",
+            "cg-S",
+            "-p",
+            "adm-default,memm",
+            "--seeds",
+            "1,2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "4",
+            "--json",
+            json_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cells") && text.contains("memm"), "{text}");
+
+    let doc = json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4);
+    assert!(cells[0].get("policy").unwrap().as_str().is_some());
+    std::fs::remove_file(&json_path).ok();
+}
+
+#[test]
+fn cli_sweep_fails_fast_on_bad_axes() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "-w", "nope-Q"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("nope-Q"));
+
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "--machines", "4:4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
