@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify bench sweep artifacts clean-artifacts
+.PHONY: build test verify bench bench-baselines bench-check sweep artifacts clean-artifacts
 
 build:
 	$(CARGO) build --release
@@ -22,6 +22,19 @@ verify: build test
 bench:
 	$(CARGO) bench --bench hotpath
 	$(CARGO) bench --bench sweep
+
+# Recapture the committed perf baselines (BENCH_hotpath.json /
+# BENCH_sweep.json at the repo root) on this machine, in the same smoke
+# mode CI gates with. Commit the refreshed files when metrics change
+# intentionally.
+bench-baselines: build
+	$(CARGO) run --release --bin hyplacer -- bench --quick --json .
+
+# Gate the current tree against the committed baselines (what CI runs,
+# recomputing metrics live).
+bench-check: build
+	$(CARGO) run --release --bin hyplacer -- bench-check \
+		--baseline BENCH_hotpath.json,BENCH_sweep.json --tolerance 0.25
 
 sweep:
 	$(CARGO) run --release --bin hyplacer -- sweep

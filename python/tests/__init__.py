@@ -1,0 +1,2 @@
+# Marks tests/ as a package so pytest imports modules as tests.<name>,
+# which is what test_golden.py's relative import (.test_kernel) needs.

@@ -1,0 +1,15 @@
+# Graceful degradation for environments without jax/pallas (e.g. the
+# rust-only CI runner): the kernel/model/aot/golden test modules import
+# jax at module scope, so they must be skipped at *collection* time —
+# otherwise pytest dies on ImportError before any skip marker runs.
+# test_bench_baselines.py is stdlib-only and always collected, so the
+# suite never reports "no tests ran".
+import importlib.util
+
+if importlib.util.find_spec("jax") is None:
+    collect_ignore = [
+        "test_aot.py",
+        "test_golden.py",
+        "test_kernel.py",
+        "test_model.py",
+    ]

@@ -1,0 +1,49 @@
+# Schema guard for the committed perf baselines (BENCH_*.json at the
+# repo root) — stdlib-only, so it runs even where jax/numpy are absent
+# and keeps the python suite from collecting zero tests there.
+#
+# The rust side owns the semantics (bench_harness/baseline.rs); this
+# guard catches hand-edits that would silently disable the CI gate:
+# unknown metric kinds, non-numeric values, a wrong mode, or docs that
+# no longer gate on anything.
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+BASELINES = ["BENCH_hotpath.json", "BENCH_sweep.json"]
+KINDS = {"exact", "ratio", "info"}
+
+
+@pytest.mark.parametrize("name", BASELINES)
+def test_baseline_doc_schema(name):
+    path = os.path.join(REPO_ROOT, name)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == 1
+    assert doc["bench"] in {"hotpath", "sweep"}
+    assert name == f"BENCH_{doc['bench']}.json"
+    # CI regenerates in smoke mode; a full-mode baseline would never match
+    assert doc["mode"] == "quick"
+    assert isinstance(doc["metrics"], dict) and doc["metrics"]
+    gating = 0
+    for metric, m in doc["metrics"].items():
+        assert m["kind"] in KINDS, f"{name}: {metric}: bad kind {m['kind']!r}"
+        assert isinstance(m["value"], (int, float)), f"{name}: {metric}"
+        if m["kind"] != "info":
+            gating += 1
+    assert gating > 0, f"{name} gates on nothing"
+    assert all(isinstance(k, str) for k in doc.get("cell_keys", []))
+
+
+def test_baselines_never_gate_on_wall_clock():
+    # the whole point of ratio baselines: host timings stay informational
+    for name in BASELINES:
+        with open(os.path.join(REPO_ROOT, name)) as f:
+            doc = json.load(f)
+        for metric, m in doc["metrics"].items():
+            if metric.startswith("host/"):
+                assert m["kind"] == "info", f"{name}: {metric} must not gate"

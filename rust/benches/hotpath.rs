@@ -2,10 +2,15 @@
 //! stage of HyPlacer's per-epoch decision path at realistic page counts,
 //! for both the native and the AOT/PJRT classifier, plus the simulator's
 //! end-to-end epoch step rate.
+//!
+//! `-- --json PATH [--quick]` additionally emits the machine-readable
+//! `BENCH_hotpath.json` baseline doc (see `bench_harness::perf`) that
+//! `hyplacer bench-check` gates CI on.
 
 #![allow(clippy::field_reassign_with_default)]
 mod common;
 
+use hyplacer::bench_harness::perf;
 use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier, GB};
 use hyplacer::coordinator::Simulation;
 use hyplacer::policies::hyplacer::classifier::{Classifier, NativeClassifier};
@@ -17,26 +22,14 @@ use hyplacer::util::{top_k_indices, Rng64};
 use hyplacer::vm::PageTable;
 use hyplacer::{policies, workloads};
 
-fn stats_for(n: usize, seed: u64) -> PageStats {
-    let mut rng = Rng64::new(seed);
-    let mut s = PageStats::with_len(n);
-    for i in 0..n {
-        s.refd[i] = if rng.chance(0.4) { 1.0 } else { 0.0 };
-        s.dirty[i] = if rng.chance(0.15) { 1.0 } else { 0.0 };
-        s.hot_ewma[i] = rng.next_f64() as f32;
-        s.wr_ewma[i] = rng.next_f64() as f32;
-        s.tier[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
-        s.valid[i] = 1.0;
-    }
-    s
-}
-
 fn main() {
+    let (json_out, quick) = perf::parse_bench_args();
+
     let params: [f32; 8] = [0.35, 0.25, 0.4, 0.6, 0.2, 0.65, 0.0, 0.0];
 
     // --- classifier: native vs AOT at the evaluation's page counts ---
     for n in [8192usize, 65536, 262144] {
-        let stats = stats_for(n, n as u64);
+        let stats = perf::synthetic_stats(n, n as u64);
         let mut native = NativeClassifier;
         common::bench(&format!("classify/native/{n}"), 20, || {
             let out = native.classify(&stats, &params).unwrap();
@@ -46,7 +39,7 @@ fn main() {
     match AotClassifier::new(default_artifacts_dir()) {
         Ok(mut aot) => {
             for n in [8192usize, 65536, 262144] {
-                let stats = stats_for(n, n as u64);
+                let stats = perf::synthetic_stats(n, n as u64);
                 common::bench(&format!("classify/aot-pjrt/{n}"), 10, || {
                     let out = aot.classify(&stats, &params).unwrap();
                     assert_eq!(out.new_hot.len(), n);
@@ -106,4 +99,12 @@ fn main() {
     common::bench("simulation/epoch_step/sparse-240GiB", 200, || {
         sparse.step();
     });
+
+    // --- machine-readable baseline doc (shared collector with
+    // `hyplacer bench`; scale-free metrics, no absolute wall-clock).
+    if let Some(path) = json_out {
+        let doc = perf::collect_hotpath(quick);
+        doc.save(&path).expect("write BENCH_hotpath.json");
+        println!("wrote {path} ({} metrics)", doc.metrics.len());
+    }
 }

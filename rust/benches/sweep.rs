@@ -3,13 +3,20 @@
 //! one worker and then one worker per core, asserting bit-identical
 //! simulated results and reporting the speedup (the acceptance target is
 //! > 2x on a 4-core runner).
-
+//!
+//! `-- --json PATH [--quick]` additionally emits the machine-readable
+//! `BENCH_sweep.json` baseline doc (see `bench_harness::perf`) — grid
+//! shape, deterministic counters and sweep-cell content keys — that
+//! `hyplacer bench-check` gates CI on.
 
 #![allow(clippy::field_reassign_with_default)]
+use hyplacer::bench_harness::perf;
 use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::exec::{default_jobs, SweepSpec};
 
 fn main() {
+    let (json_out, quick) = perf::parse_bench_args();
+
     let mut sim = SimConfig::default();
     sim.epochs = 60;
     sim.warmup_epochs = 10;
@@ -21,6 +28,7 @@ fn main() {
     let serial = spec.run(1).unwrap();
     let par = spec.run(0).unwrap();
     for (a, b) in serial.results.iter().zip(par.results.iter()) {
+        assert_eq!(a.key, b.key, "{}/{} cell keys diverged", a.workload, a.policy);
         assert_eq!(
             a.sim.total_wall_secs.to_bits(),
             b.sim.total_wall_secs.to_bits(),
@@ -38,6 +46,16 @@ fn main() {
         println!(
             "  >2x-on-4-cores target: {}",
             if speedup > 2.0 { "MET" } else { "MISSED" }
+        );
+    }
+
+    if let Some(path) = json_out {
+        let doc = perf::collect_sweep(quick);
+        doc.save(&path).expect("write BENCH_sweep.json");
+        println!(
+            "wrote {path} ({} metrics, {} cell keys)",
+            doc.metrics.len(),
+            doc.cell_keys.len()
         );
     }
 }

@@ -1,0 +1,334 @@
+//! Machine-readable perf baselines (`BENCH_*.json`) and the comparator
+//! behind `hyplacer bench-check`.
+//!
+//! A [`BaselineDoc`] is a named set of *scale-free* metrics — RNG draws
+//! per epoch, migrated-page counts, speedup ratios, grid shapes, cell
+//! keys — never absolute host wall-clock. Each metric carries a
+//! [`MetricKind`] that tells the comparator how to treat it:
+//!
+//! * `exact`  — must match bit-for-bit (deterministic counters),
+//! * `ratio`  — relative difference must stay within `--tolerance`
+//!   (deterministic in principle, but allowed to drift as models evolve;
+//!   comparison is symmetric, so an *inflated* baseline fails too),
+//! * `info`   — recorded for humans/trend dashboards, never compared
+//!   (host-dependent timings like cells/sec or parallel speedup).
+//!
+//! CI regenerates the docs in smoke mode every run (`hyplacer bench
+//! --quick --json DIR`), uploads them as artifacts, and gates on
+//! `hyplacer bench-check --baseline BENCH_*.json` against the committed
+//! files. `make bench-baselines` refreshes the committed files on a
+//! reference runner.
+
+use std::collections::BTreeMap;
+
+use crate::report::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Exact,
+    Ratio,
+    Info,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Exact => "exact",
+            MetricKind::Ratio => "ratio",
+            MetricKind::Info => "info",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MetricKind, String> {
+        match s {
+            "exact" => Ok(MetricKind::Exact),
+            "ratio" => Ok(MetricKind::Ratio),
+            "info" => Ok(MetricKind::Info),
+            other => Err(format!("unknown metric kind {other:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub value: f64,
+    pub kind: MetricKind,
+}
+
+/// One `BENCH_<name>.json` document.
+#[derive(Clone, Debug)]
+pub struct BaselineDoc {
+    /// Which bench produced it ("hotpath" | "sweep").
+    pub bench: String,
+    /// Run-length preset ("quick" for CI smoke, "full" otherwise). A
+    /// baseline only compares against a current doc of the same mode.
+    pub mode: String,
+    pub metrics: BTreeMap<String, Metric>,
+    /// Sweep-cell content keys (hex), compared exactly when the baseline
+    /// carries any — the cross-process/cross-commit proof that resume
+    /// keys are stable.
+    pub cell_keys: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl BaselineDoc {
+    pub fn new(bench: &str, mode: &str) -> Self {
+        BaselineDoc {
+            bench: bench.to_string(),
+            mode: mode.to_string(),
+            metrics: BTreeMap::new(),
+            cell_keys: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn put(&mut self, name: &str, value: f64, kind: MetricKind) {
+        self.metrics.insert(name.to_string(), Metric { value, kind });
+    }
+
+    /// Metrics the comparator would actually gate on.
+    pub fn compared_len(&self) -> usize {
+        self.metrics.values().filter(|m| m.kind != MetricKind::Info).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut metrics = BTreeMap::new();
+        for (name, m) in &self.metrics {
+            let mut obj = BTreeMap::new();
+            obj.insert("value".to_string(), Json::Num(m.value));
+            obj.insert("kind".to_string(), Json::Str(m.kind.as_str().to_string()));
+            metrics.insert(name.clone(), Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Num(1.0));
+        root.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        root.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        root.insert("metrics".to_string(), Json::Obj(metrics));
+        root.insert(
+            "cell_keys".to_string(),
+            Json::Arr(self.cell_keys.iter().map(|k| Json::Str(k.clone())).collect()),
+        );
+        root.insert(
+            "notes".to_string(),
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<BaselineDoc, String> {
+        let text = |k: &str| -> Result<String, String> {
+            doc.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing string field {k:?}"))
+        };
+        let mut out = BaselineDoc::new(&text("bench")?, &text("mode")?);
+        let metrics = doc
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| "missing \"metrics\" object".to_string())?;
+        for (name, m) in metrics {
+            let value = m
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("metric {name:?}: missing value"))?;
+            let kind = m
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("metric {name:?}: missing kind"))?;
+            let kind = MetricKind::parse(kind).map_err(|e| format!("metric {name:?}: {e}"))?;
+            out.metrics.insert(name.clone(), Metric { value, kind });
+        }
+        if let Some(keys) = doc.get("cell_keys").and_then(Json::as_arr) {
+            for k in keys {
+                out.cell_keys.push(
+                    k.as_str()
+                        .ok_or_else(|| "cell_keys entries must be strings".to_string())?
+                        .to_string(),
+                );
+            }
+        }
+        if let Some(notes) = doc.get("notes").and_then(Json::as_arr) {
+            for n in notes {
+                if let Some(s) = n.as_str() {
+                    out.notes.push(s.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &str) -> Result<BaselineDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&doc).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Atomic write (tmp + rename), newline-terminated for clean diffs.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        crate::util::write_atomic(path, &text)
+    }
+}
+
+/// Compare `current` against `baseline`; every returned string is one
+/// gating failure (empty = pass). Only metrics present in the baseline
+/// gate — a freshly added metric in `current` is not a regression, it
+/// just isn't covered until the baselines are recaptured.
+pub fn compare(baseline: &BaselineDoc, current: &BaselineDoc, tolerance: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    if baseline.bench != current.bench {
+        fails.push(format!(
+            "bench mismatch: baseline {:?} vs current {:?}",
+            baseline.bench, current.bench
+        ));
+        return fails;
+    }
+    if baseline.mode != current.mode {
+        fails.push(format!(
+            "mode mismatch: baseline {:?} vs current {:?} (regenerate with the same preset)",
+            baseline.mode, current.mode
+        ));
+        return fails;
+    }
+    for (name, b) in &baseline.metrics {
+        if b.kind == MetricKind::Info {
+            continue;
+        }
+        let Some(c) = current.metrics.get(name) else {
+            fails.push(format!("metric {name:?} missing from current run"));
+            continue;
+        };
+        match b.kind {
+            MetricKind::Exact => {
+                if b.value.to_bits() != c.value.to_bits() {
+                    fails.push(format!(
+                        "metric {name:?} (exact): baseline {} vs current {}",
+                        b.value, c.value
+                    ));
+                }
+            }
+            MetricKind::Ratio => {
+                let rel = (c.value - b.value).abs() / b.value.abs().max(1e-12);
+                if rel > tolerance {
+                    fails.push(format!(
+                        "metric {name:?} (ratio): baseline {} vs current {} \
+                         ({:.1}% off, tolerance {:.1}%)",
+                        b.value,
+                        c.value,
+                        rel * 100.0,
+                        tolerance * 100.0
+                    ));
+                }
+            }
+            MetricKind::Info => unreachable!(),
+        }
+    }
+    if !baseline.cell_keys.is_empty() && baseline.cell_keys != current.cell_keys {
+        fails.push(format!(
+            "cell keys diverged: baseline has {} key(s), current {} — \
+             resolved sweep config changed (recapture baselines if intended)",
+            baseline.cell_keys.len(),
+            current.cell_keys.len()
+        ));
+    }
+    fails
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> BaselineDoc {
+        let mut d = BaselineDoc::new("sweep", "quick");
+        d.put("grid/cells", 8.0, MetricKind::Exact);
+        d.put("speedup/geomean", 2.5, MetricKind::Ratio);
+        d.put("host/cells_per_sec", 123.4, MetricKind::Info);
+        d.cell_keys = vec!["00ff".to_string(), "abcd".to_string()];
+        d.notes.push("test doc".to_string());
+        d
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let d = doc();
+        let rendered = d.to_json().render();
+        let back = BaselineDoc::from_json(&json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(back.bench, "sweep");
+        assert_eq!(back.mode, "quick");
+        assert_eq!(back.metrics.len(), 3);
+        assert_eq!(back.metrics["grid/cells"].kind, MetricKind::Exact);
+        assert_eq!(back.metrics["speedup/geomean"].value, 2.5);
+        assert_eq!(back.cell_keys, d.cell_keys);
+        assert_eq!(back.to_json().render(), rendered);
+        assert_eq!(back.compared_len(), 2);
+    }
+
+    #[test]
+    fn identical_docs_pass() {
+        assert!(compare(&doc(), &doc(), 0.25).is_empty());
+    }
+
+    #[test]
+    fn ratio_within_tolerance_passes_beyond_fails() {
+        let base = doc();
+        let mut cur = doc();
+        cur.put("speedup/geomean", 2.5 * 1.2, MetricKind::Ratio); // 20% < 25%
+        assert!(compare(&base, &cur, 0.25).is_empty());
+        cur.put("speedup/geomean", 2.5 * 1.3, MetricKind::Ratio); // 30% > 25%
+        let fails = compare(&base, &cur, 0.25);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("speedup/geomean"), "{}", fails[0]);
+        // symmetric: an inflated *baseline* fails the same way
+        let mut inflated = doc();
+        inflated.put("speedup/geomean", 2.5 * 1.4, MetricKind::Ratio);
+        assert_eq!(compare(&inflated, &doc(), 0.25).len(), 1);
+    }
+
+    #[test]
+    fn exact_mismatch_and_missing_metric_fail() {
+        let base = doc();
+        let mut cur = doc();
+        cur.put("grid/cells", 9.0, MetricKind::Exact);
+        assert_eq!(compare(&base, &cur, 0.25).len(), 1);
+        let mut cur = doc();
+        cur.metrics.remove("grid/cells");
+        let fails = compare(&base, &cur, 0.25);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("missing"), "{}", fails[0]);
+    }
+
+    #[test]
+    fn info_metrics_never_gate() {
+        let base = doc();
+        let mut cur = doc();
+        cur.put("host/cells_per_sec", 9999.0, MetricKind::Info);
+        assert!(compare(&base, &cur, 0.25).is_empty());
+        // and an info metric missing entirely is fine too
+        cur.metrics.remove("host/cells_per_sec");
+        assert!(compare(&base, &cur, 0.25).is_empty());
+    }
+
+    #[test]
+    fn cell_key_divergence_fails_when_baseline_has_keys() {
+        let base = doc();
+        let mut cur = doc();
+        cur.cell_keys[1] = "beef".to_string();
+        assert_eq!(compare(&base, &cur, 0.25).len(), 1);
+        // an empty baseline key set doesn't gate (hand-seeded baselines)
+        let mut no_keys = doc();
+        no_keys.cell_keys.clear();
+        assert!(compare(&no_keys, &cur, 0.25).is_empty());
+    }
+
+    #[test]
+    fn mode_and_bench_mismatch_fail_fast() {
+        let mut cur = doc();
+        cur.mode = "full".to_string();
+        assert_eq!(compare(&doc(), &cur, 0.25).len(), 1);
+        let mut cur = doc();
+        cur.bench = "hotpath".to_string();
+        assert_eq!(compare(&doc(), &cur, 0.25).len(), 1);
+    }
+}

@@ -9,12 +9,12 @@
 //! One matrix run serves all three figures (the paper's runs do too).
 
 use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
-use crate::coordinator::{run_pair, SimResult};
+use crate::coordinator::SimResult;
 use crate::exec;
 use crate::policies::FIG5_POLICIES;
 use crate::report::Table;
 use crate::util::geomean;
-use crate::workloads::{self, NPB_NAMES};
+use crate::workloads::NPB_NAMES;
 
 use super::{BenchOpts, Report};
 
@@ -65,12 +65,10 @@ impl Matrix {
     }
 }
 
-/// Run the evaluation matrix for the given size classes. Cells fan out
-/// across the [`exec::parallel_map`] worker pool (`opts.jobs`, 0 = one
-/// per core); every cell is an independent simulation with its own seed,
-/// so the matrix is bit-identical to the serial loop it replaced.
-pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
-    let cfg = MachineConfig::paper_machine();
+/// The [`exec::SweepSpec`] behind one evaluation matrix: the paper
+/// machine, the Fig. 5 policy set, one seed, and (workload × size) cells
+/// in presentation order.
+pub fn matrix_spec(sizes: &[&'static str], opts: &BenchOpts) -> exec::SweepSpec {
     let mut sim = SimConfig::default();
     sim.epochs = opts.epochs;
     sim.seed = opts.seed;
@@ -79,23 +77,54 @@ pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
     sim.warmup_epochs = (opts.epochs / 3).max(2);
     let mut hp = HyPlacerConfig::default();
     hp.use_aot = opts.use_aot;
-
-    let mut cells: Vec<(String, &'static str)> = Vec::new();
+    let mut spec = exec::SweepSpec::new(MachineConfig::paper_machine(), sim, hp);
+    spec.window_frac = opts.window_frac;
+    let mut workloads = Vec::new();
     for base in NPB_NAMES {
         for size in sizes {
-            for pname in FIG5_POLICIES {
-                cells.push((format!("{base}-{size}"), pname));
-            }
+            workloads.push(format!("{base}-{size}"));
         }
     }
-    let runs = exec::parallel_map(&cells, opts.jobs, |_, (wname, pname)| {
-        let w = workloads::by_name(wname, cfg.page_bytes, sim.epoch_secs)
-            .unwrap_or_else(|| panic!("workload {wname}"));
-        let p = exec::build_policy(pname, &cfg, &hp)
-            .unwrap_or_else(|| panic!("policy {pname}"));
-        run_pair(&cfg, &sim, w, p, opts.window_frac)
-    });
-    Matrix { sizes: sizes.to_vec(), runs }
+    spec.workloads = workloads;
+    spec
+}
+
+/// Run the evaluation matrix for the given size classes on the sweep
+/// engine. Cells fan out across the worker pool (`opts.jobs`, 0 = one
+/// per core); every cell is an independent simulation with its own seed,
+/// so the matrix is bit-identical to the serial loop it replaced — and,
+/// with `opts.out`/`opts.resume`, incremental: cells whose content key
+/// already exists in the results file are loaded instead of re-run.
+pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
+    match try_run_matrix(sizes, opts) {
+        Ok(m) => m,
+        Err(e) => panic!("evaluation matrix failed: {e}"),
+    }
+}
+
+/// Fallible form of [`run_matrix`] with the checkpoint plumbing. A prior
+/// `--out` file is always loaded and merged into the rewrite (so e.g.
+/// `hyplacer all --out r.json` accumulates the fig5 and fig7 matrices
+/// instead of the later one clobbering the earlier); `--resume`
+/// additionally skips cells whose content key is already present.
+pub fn try_run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Result<Matrix, String> {
+    if opts.resume && opts.out.is_none() {
+        return Err("--resume requires --out FILE".to_string());
+    }
+    let spec = matrix_spec(sizes, opts);
+    let prior = match &opts.out {
+        Some(path) => exec::load_results(path)?,
+        None => None,
+    };
+    let cache = if opts.resume { prior.as_ref() } else { None };
+    let outcome = spec.run_with_cache(opts.jobs, cache)?;
+    if let Some(path) = &opts.out {
+        exec::save_results(path, &outcome.run, prior.as_ref())?;
+    }
+    Ok(Matrix {
+        sizes: sizes.to_vec(),
+        runs: outcome.run.results.into_iter().map(|c| c.sim).collect(),
+    })
 }
 
 fn matrix_table(m: &Matrix, metric: &str) -> Table {

@@ -7,9 +7,11 @@
 //! integration tests (which assert the *shape* of each result: who wins,
 //! orderings, crossover locations).
 
+pub mod baseline;
 pub mod fig2;
 pub mod fig3;
 pub mod fig5;
+pub mod perf;
 pub mod tables;
 
 use crate::report::Table;
@@ -59,7 +61,7 @@ impl Report {
 }
 
 /// Shared run-length knobs for the evaluation matrix.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct BenchOpts {
     pub epochs: u32,
     pub seed: u64,
@@ -70,11 +72,25 @@ pub struct BenchOpts {
     /// worker threads for matrix runs (0 = one per core; see
     /// [`crate::exec::parallel_map`]).
     pub jobs: usize,
+    /// Persist matrix results to this JSON file (atomic rewrite; see
+    /// [`crate::exec::save_results`]).
+    pub out: Option<String>,
+    /// With `out`: load prior results first and skip every cell whose
+    /// content key matches — incremental paper matrices.
+    pub resume: bool,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { epochs: 150, seed: 42, window_frac: 0.05, use_aot: false, jobs: 0 }
+        BenchOpts {
+            epochs: 150,
+            seed: 42,
+            window_frac: 0.05,
+            use_aot: false,
+            jobs: 0,
+            out: None,
+            resume: false,
+        }
     }
 }
 

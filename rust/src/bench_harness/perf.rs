@@ -1,0 +1,290 @@
+//! Perf-metric collectors behind `hyplacer bench` / `hyplacer
+//! bench-check` and the `--json` mode of the cargo bench binaries
+//! (`benches/hotpath.rs`, `benches/sweep.rs`).
+//!
+//! Each collector produces a [`BaselineDoc`] of *scale-free* metrics:
+//! deterministic counters (RNG draws/epoch — the O(touched-pages)
+//! regression instrument, migrated pages, grid shapes, sweep-cell
+//! content keys) that gate CI, plus host-dependent timings
+//! (cells/sec, parallel speedup) recorded as `info` and never compared.
+//! Absolute wall-clock never gates.
+
+use std::time::Instant;
+
+use crate::bench_harness::baseline::{BaselineDoc, MetricKind};
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig, GB};
+use crate::coordinator::{run_pair, Simulation};
+use crate::exec::SweepSpec;
+use crate::policies;
+use crate::policies::hyplacer::classifier::{Classifier, NativeClassifier};
+use crate::policies::hyplacer::native::PageStats;
+use crate::util::{geomean, Rng64};
+use crate::workloads;
+use crate::workloads::mlc::Mlc;
+use crate::workloads::Workload;
+
+fn mode_name(quick: bool) -> &'static str {
+    if quick {
+        "quick"
+    } else {
+        "full"
+    }
+}
+
+/// Parse the bench binaries' trailing CLI args (`cargo bench --bench X
+/// -- --json PATH [--quick]`) — shared so both emitters accept the same
+/// flags. Unknown args are ignored (cargo may pass filter strings).
+pub fn parse_bench_args() -> (Option<String>, bool) {
+    let mut json_out = None;
+    let mut quick = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json_out = it.next(),
+            "--quick" => quick = true,
+            _ => {}
+        }
+    }
+    (json_out, quick)
+}
+
+/// Deterministic synthetic page-statistics block (the classifier input
+/// distribution the hotpath bench uses).
+pub fn synthetic_stats(n: usize, seed: u64) -> PageStats {
+    let mut rng = Rng64::new(seed);
+    let mut s = PageStats::with_len(n);
+    for i in 0..n {
+        s.refd[i] = if rng.chance(0.4) { 1.0 } else { 0.0 };
+        s.dirty[i] = if rng.chance(0.15) { 1.0 } else { 0.0 };
+        s.hot_ewma[i] = rng.next_f64() as f32;
+        s.wr_ewma[i] = rng.next_f64() as f32;
+        s.tier[i] = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        s.valid[i] = 1.0;
+    }
+    s
+}
+
+/// `BENCH_hotpath.json`: the per-epoch decision path. Gating metrics are
+/// the RNG draw counter of the sparse O(touched) instrument and the
+/// deterministic outcome counters of a short CG-M run; timings are info.
+pub fn collect_hotpath(quick: bool) -> BaselineDoc {
+    let mut doc = BaselineDoc::new("hotpath", mode_name(quick));
+    let cfg = MachineConfig::paper_machine();
+    let hp = HyPlacerConfig::default();
+
+    // --- sparse 240 GiB footprint, ~500 touched pages/epoch: the
+    // O(touched-pages) instrument PR 1 bought. Draws/epoch is a
+    // deterministic, host-independent proxy for hot-path work.
+    let mut sim_cfg = SimConfig::default();
+    sim_cfg.epochs = 1;
+    sim_cfg.warmup_epochs = 0;
+    let footprint: u32 = 120_000;
+    let w = Box::new(Mlc::new(footprint, 0, 1.0 * GB, 0.2, 0.3, 1.0));
+    let offered_gb_per_epoch = w.offered_bytes() / 1e9;
+    let p = policies::by_name("adm-default", &cfg, &hp).expect("adm-default registered");
+    let mut sparse = Simulation::new(cfg.clone(), sim_cfg, w, p, 0.05);
+    let epochs: u32 = if quick { 8 } else { 32 };
+    let t0 = Instant::now();
+    for _ in 0..epochs {
+        sparse.step();
+    }
+    let sparse_secs = t0.elapsed().as_secs_f64();
+    doc.put("sparse/footprint_pages", footprint as f64, MetricKind::Exact);
+    doc.put("sparse/offered_gb_per_epoch", offered_gb_per_epoch, MetricKind::Ratio);
+    doc.put(
+        "sparse/rng_draws_per_epoch",
+        sparse.rng_draws() as f64 / epochs as f64,
+        MetricKind::Ratio,
+    );
+    doc.put(
+        "host/sparse_epoch_ms",
+        sparse_secs * 1e3 / epochs as f64,
+        MetricKind::Info,
+    );
+
+    // --- native classifier pass at a fixed page count: timing is info;
+    // the hot-page count is a deterministic output checksum.
+    let n = 8192usize;
+    let stats = synthetic_stats(n, n as u64);
+    let params: [f32; 8] = [0.35, 0.25, 0.4, 0.6, 0.2, 0.65, 0.0, 0.0];
+    let mut native = NativeClassifier;
+    let t0 = Instant::now();
+    let out = native.classify(&stats, &params).expect("native classify");
+    let classify_secs = t0.elapsed().as_secs_f64();
+    let hot: f64 = out.new_hot.iter().map(|x| *x as f64).sum();
+    doc.put("classify/native/8192/hot_pages", hot, MetricKind::Exact);
+    doc.put("host/classify_native_8192_ms", classify_secs * 1e3, MetricKind::Info);
+
+    // --- a short CG-M pair: deterministic outcome counters + the
+    // headline steady-state ratio (simulated, so host-independent).
+    let mut sim2 = SimConfig::default();
+    sim2.epochs = if quick { 12 } else { 40 };
+    sim2.warmup_epochs = 2;
+    let run_one = |pname: &str| {
+        let w = workloads::by_name("cg-M", cfg.page_bytes, sim2.epoch_secs)
+            .expect("cg-M registered");
+        let p = policies::by_name(pname, &cfg, &hp).expect("policy registered");
+        run_pair(&cfg, &sim2, w, p, 0.05)
+    };
+    let t0 = Instant::now();
+    let adm = run_one("adm-default");
+    let hyp = run_one("hyplacer");
+    let pair_secs = t0.elapsed().as_secs_f64();
+    doc.put("cg-M/epochs", sim2.epochs as f64, MetricKind::Exact);
+    doc.put(
+        "cg-M/hyplacer/migrated_pages",
+        hyp.migrated_pages as f64,
+        MetricKind::Exact,
+    );
+    doc.put(
+        "cg-M/hyplacer/dram_traffic_share",
+        hyp.dram_traffic_share,
+        MetricKind::Ratio,
+    );
+    doc.put(
+        "cg-M/hyplacer/steady_speedup_vs_adm",
+        hyp.steady_speedup_vs(&adm),
+        MetricKind::Ratio,
+    );
+    doc.put("host/cg-M_pair_ms", pair_secs * 1e3, MetricKind::Info);
+
+    doc.notes.push(
+        "gating metrics are scale-free and deterministic (RNG draws, page counts, \
+         simulated ratios); host/* timings are informational only"
+            .to_string(),
+    );
+    doc
+}
+
+/// The sweep spec the `sweep` baseline measures (also what `cargo bench
+/// --bench sweep --json` emits): a 2x2x2 smoke grid on the paper machine.
+pub fn sweep_bench_spec(quick: bool) -> SweepSpec {
+    let mut sim = SimConfig::default();
+    sim.epochs = if quick { 6 } else { 30 };
+    sim.warmup_epochs = 2;
+    let mut spec = SweepSpec::new(MachineConfig::paper_machine(), sim, HyPlacerConfig::default());
+    spec.workloads = vec!["cg-S".to_string(), "mg-S".to_string()];
+    spec.policies = vec!["adm-default".to_string(), "hyplacer".to_string()];
+    spec.seeds = vec![42, 7];
+    spec
+}
+
+/// `BENCH_sweep.json`: the experiment engine. Gating metrics are the grid
+/// shape, per-epoch offered bytes, deterministic outcome counters, the
+/// geomean steady speedup, and the sweep-cell content keys (the
+/// cross-process proof resume depends on); parallel speedup and cells/sec
+/// are host-dependent info.
+pub fn collect_sweep(quick: bool) -> BaselineDoc {
+    let mut doc = BaselineDoc::new("sweep", mode_name(quick));
+    let spec = sweep_bench_spec(quick);
+    let epochs = spec.sim.epochs;
+
+    let t0 = Instant::now();
+    let serial = spec.run(1).expect("sweep spec validates");
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let par = spec.run(0).expect("sweep spec validates");
+    let par_secs = t0.elapsed().as_secs_f64();
+
+    let identical = serial
+        .results
+        .iter()
+        .zip(par.results.iter())
+        .all(|(a, b)| a.sim.total_wall_secs.to_bits() == b.sim.total_wall_secs.to_bits());
+
+    doc.put("grid/cells", serial.results.len() as f64, MetricKind::Exact);
+    doc.put("grid/workloads", spec.workloads.len() as f64, MetricKind::Exact);
+    doc.put("grid/policies", spec.policies.len() as f64, MetricKind::Exact);
+    doc.put("grid/seeds", spec.seeds.len() as f64, MetricKind::Exact);
+    doc.put(
+        "determinism/thread_invariant",
+        if identical { 1.0 } else { 0.0 },
+        MetricKind::Exact,
+    );
+
+    let cg_adm = serial
+        .results
+        .iter()
+        .find(|c| c.workload == "cg-S" && c.policy == "adm-default")
+        .expect("cg-S adm cell present");
+    doc.put(
+        "app_gb_per_epoch/cg-S",
+        cg_adm.sim.total_app_bytes / epochs as f64 / 1e9,
+        MetricKind::Ratio,
+    );
+    let migrated: u64 = serial.results.iter().map(|c| c.sim.migrated_pages).sum();
+    doc.put("migrated_pages/total", migrated as f64, MetricKind::Exact);
+
+    let speedups: Vec<f64> = serial
+        .results
+        .iter()
+        .filter(|c| c.policy == "hyplacer")
+        .filter_map(|c| serial.speedup_vs_baseline(c))
+        .collect();
+    doc.put(
+        "speedup/hyplacer_geomean_vs_adm",
+        geomean(&speedups),
+        MetricKind::Ratio,
+    );
+
+    doc.put("host/jobs", par.jobs as f64, MetricKind::Info);
+    doc.put(
+        "host/cells_per_sec_serial",
+        serial.results.len() as f64 / serial_secs.max(1e-9),
+        MetricKind::Info,
+    );
+    doc.put(
+        "host/parallel_speedup",
+        serial_secs / par_secs.max(1e-9),
+        MetricKind::Info,
+    );
+
+    doc.cell_keys = serial.results.iter().map(|c| format!("{:016x}", c.key)).collect();
+    doc.notes.push(
+        "cell_keys pin the resolved sweep configuration across processes and commits; \
+         host/* timings are informational only"
+            .to_string(),
+    );
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::baseline::compare;
+
+    #[test]
+    fn hotpath_collector_is_deterministic_across_runs() {
+        let a = collect_hotpath(true);
+        let b = collect_hotpath(true);
+        // every gating metric agrees run-to-run at zero tolerance
+        assert!(compare(&a, &b, 0.0).is_empty(), "{:?}", compare(&a, &b, 0.0));
+        assert_eq!(a.mode, "quick");
+        assert!(a.metrics["sparse/rng_draws_per_epoch"].value > 0.0);
+        // the sparse instrument stays O(touched): far below one draw/page
+        assert!(
+            a.metrics["sparse/rng_draws_per_epoch"].value
+                < a.metrics["sparse/footprint_pages"].value / 4.0
+        );
+    }
+
+    #[test]
+    fn sweep_collector_is_deterministic_and_keyed() {
+        let a = collect_sweep(true);
+        let b = collect_sweep(true);
+        assert!(compare(&a, &b, 0.0).is_empty(), "{:?}", compare(&a, &b, 0.0));
+        assert_eq!(a.metrics["grid/cells"].value, 8.0);
+        assert_eq!(a.metrics["determinism/thread_invariant"].value, 1.0);
+        assert_eq!(a.cell_keys.len(), 8);
+        assert_eq!(a.cell_keys, b.cell_keys);
+        assert!((a.metrics["app_gb_per_epoch/cg-S"].value - 36.0).abs() < 1e-9);
+        // a tampered (inflated) baseline fails the comparator
+        let mut inflated = a.clone();
+        inflated.put(
+            "speedup/hyplacer_geomean_vs_adm",
+            a.metrics["speedup/hyplacer_geomean_vs_adm"].value * 2.0,
+            MetricKind::Ratio,
+        );
+        assert!(!compare(&inflated, &b, 0.25).is_empty());
+    }
+}

@@ -275,6 +275,83 @@ impl SimConfig {
     }
 }
 
+/// Per-cell [`SimConfig`] override for sweep grids: cells whose axis
+/// names match every present pattern get the present fields applied.
+/// This is what lets one grid give L-size workloads longer runs without
+/// forking the shared `SimConfig` (paper runs scale epoch budget with
+/// footprint). Patterns: `*suffix` / `prefix*` globs or an exact
+/// (case-insensitive) name; `None` matches everything on that axis.
+#[derive(Clone, Debug, Default)]
+pub struct CellOverride {
+    pub workload: Option<String>,
+    pub policy: Option<String>,
+    pub machine: Option<String>,
+    pub epochs: Option<u32>,
+    pub warmup_epochs: Option<u32>,
+    pub epoch_secs: Option<f64>,
+}
+
+impl CellOverride {
+    /// Case-insensitive name match with a single leading or trailing `*`.
+    pub fn name_matches(pattern: &str, name: &str) -> bool {
+        let pat = pattern.to_ascii_lowercase();
+        let name = name.to_ascii_lowercase();
+        if let Some(suffix) = pat.strip_prefix('*') {
+            name.ends_with(suffix)
+        } else if let Some(prefix) = pat.strip_suffix('*') {
+            name.starts_with(prefix)
+        } else {
+            pat == name
+        }
+    }
+
+    /// Does this override apply to the (machine, workload, policy) cell?
+    pub fn applies(&self, machine: &str, workload: &str, policy: &str) -> bool {
+        let ok = |pat: &Option<String>, name: &str| match pat {
+            Some(p) => Self::name_matches(p, name),
+            None => true,
+        };
+        ok(&self.machine, machine) && ok(&self.workload, workload) && ok(&self.policy, policy)
+    }
+
+    /// Apply the present fields to a resolved per-cell config.
+    pub fn apply(&self, sim: &mut SimConfig) {
+        if let Some(e) = self.epochs {
+            sim.epochs = e;
+        }
+        if let Some(w) = self.warmup_epochs {
+            sim.warmup_epochs = w;
+        }
+        if let Some(s) = self.epoch_secs {
+            sim.epoch_secs = s;
+        }
+    }
+
+    /// Parse a CLI `--epochs-for` rule, `WORKLOAD_PATTERN=EPOCHS`
+    /// (e.g. `*-L=240`), into a workload-matched epochs override.
+    pub fn parse_epochs_rule(rule: &str) -> Result<CellOverride, String> {
+        let (pat, epochs) = rule
+            .split_once('=')
+            .ok_or_else(|| format!("override {rule:?}: expected PATTERN=EPOCHS"))?;
+        let pat = pat.trim();
+        if pat.is_empty() {
+            return Err(format!("override {rule:?}: empty workload pattern"));
+        }
+        let epochs: u32 = epochs
+            .trim()
+            .parse()
+            .map_err(|e| format!("override {rule:?}: {e}"))?;
+        if epochs == 0 {
+            return Err(format!("override {rule:?}: epochs must be >= 1"));
+        }
+        Ok(CellOverride {
+            workload: Some(pat.to_string()),
+            epochs: Some(epochs),
+            ..CellOverride::default()
+        })
+    }
+}
+
 /// HyPlacer tunables (paper §5.1 defaults).
 #[derive(Clone, Debug)]
 pub struct HyPlacerConfig {
@@ -407,6 +484,30 @@ mod tests {
         let mut h = HyPlacerConfig::default();
         h.apply_doc(&doc);
         assert!((h.delay_secs - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cell_override_matching_and_apply() {
+        assert!(CellOverride::name_matches("*-L", "cg-L"));
+        assert!(CellOverride::name_matches("*-L", "CG-L"));
+        assert!(!CellOverride::name_matches("*-L", "cg-M"));
+        assert!(CellOverride::name_matches("cg-*", "CG-S"));
+        assert!(CellOverride::name_matches("paper", "PAPER"));
+        assert!(!CellOverride::name_matches("paper", "3:3"));
+
+        let ov = CellOverride::parse_epochs_rule("*-L=240").unwrap();
+        assert!(ov.applies("paper", "cg-L", "hyplacer"));
+        assert!(!ov.applies("paper", "cg-M", "hyplacer"));
+        let mut sim = SimConfig::default();
+        ov.apply(&mut sim);
+        assert_eq!(sim.epochs, 240);
+        // untouched fields keep their values
+        assert_eq!(sim.warmup_epochs, SimConfig::default().warmup_epochs);
+
+        assert!(CellOverride::parse_epochs_rule("no-equals").is_err());
+        assert!(CellOverride::parse_epochs_rule("=5").is_err());
+        assert!(CellOverride::parse_epochs_rule("*-L=zero").is_err());
+        assert!(CellOverride::parse_epochs_rule("*-L=0").is_err());
     }
 
     #[test]

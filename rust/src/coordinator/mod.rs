@@ -222,6 +222,14 @@ impl Simulation {
         self.policy.name()
     }
 
+    /// RNG draws consumed so far — a deterministic, scale-free proxy for
+    /// epoch hot-path work (O(touched pages) with gap sampling). The
+    /// in-tree regression test and the `BENCH_hotpath.json` baseline
+    /// pipeline both watch this counter.
+    pub fn rng_draws(&self) -> u64 {
+        self.rng.draw_count()
+    }
+
     /// Run one epoch; returns its wall-clock seconds.
     pub fn step(&mut self) -> f64 {
         let epoch = self.clock.epoch();

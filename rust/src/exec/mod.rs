@@ -1,4 +1,4 @@
-//! Parallel experiment engine.
+//! Parallel, checkpointed experiment engine.
 //!
 //! The paper's evaluation is a grid: (workload × policy × machine-config
 //! × seed). Every cell is an independent [`Simulation`] with its own RNG,
@@ -13,27 +13,38 @@
 //!   [`SweepCell`]s and runs them across a thread pool, collecting
 //!   [`SimResult`]s into the existing `Report`/`Table`/JSON reporting
 //!   infrastructure,
+//! * **resume**: every cell carries a stable content key (FNV-1a over its
+//!   fully-resolved configuration — machine, sim, policy tunables, seed,
+//!   per-cell overrides). [`SweepSpec::run_with_cache`] skips cells whose
+//!   key appears in a prior [`SweepRun`], so `hyplacer sweep --out
+//!   results.json --resume` (and the fig5/6/7 matrices) only execute
+//!   missing or changed cells. [`load_results`]/[`save_results`]
+//!   round-trip runs through `report::json` ([`SweepRun::from_json`] is
+//!   the inverse of [`SweepRun::to_json`]) with atomic rewrites,
 //! * [`build_policy`] — the policy factory shared by the figure
 //!   harnesses and the sweep engine (including the AOT/PJRT HyPlacer
 //!   variant with native fallback).
 //!
 //! Determinism: a cell's simulated outcome is a pure function of its
-//! `(machine, workload, policy, seed)` tuple — cells share no mutable
-//! state — so results are bit-identical regardless of thread count or
-//! completion order. `exec::tests` and `tests/sweep.rs` assert this.
+//! `(machine, workload, policy, resolved sim config)` tuple — cells share
+//! no mutable state — so results are bit-identical regardless of thread
+//! count, completion order, or whether they were computed fresh or loaded
+//! from a results file. `exec::tests` and `tests/sweep.rs` assert this.
 //!
 //! [`Simulation`]: crate::coordinator::Simulation
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::config::{CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 use crate::coordinator::{run_pair, SimResult};
 use crate::policies::{self, Policy};
-use crate::report::json::Json;
+use crate::report::json::{self, Json};
 use crate::report::Table;
+use crate::sim::RunStats;
+use crate::util::fnv1a64;
 use crate::workloads;
 
 /// Worker threads to use when the caller passes `jobs = 0`.
@@ -123,6 +134,10 @@ pub struct SweepCell {
     pub workload: String,
     pub policy: String,
     pub seed: u64,
+    /// Stable content key: FNV-1a over the cell's fully-resolved
+    /// configuration (see [`SweepSpec::cell_key`]). Equal keys ⇒ equal
+    /// simulated results, which is what resume relies on.
+    pub key: u64,
 }
 
 /// Declarative description of an experiment grid.
@@ -142,8 +157,12 @@ pub struct SweepSpec {
     /// randomness from its own seed.
     pub seeds: Vec<u64>,
     /// Epoch count / warmup / epoch length shared by every cell (the
-    /// per-cell seed overrides `sim.seed`).
+    /// per-cell seed overrides `sim.seed`; [`Self::overrides`] can
+    /// specialize further).
     pub sim: SimConfig,
+    /// Per-cell `SimConfig` overrides, applied in order to every cell
+    /// they match (e.g. longer epochs for `*-L` workloads only).
+    pub overrides: Vec<CellOverride>,
     pub hyplacer: HyPlacerConfig,
     /// Delay-window fraction of the epoch (HyPlacer's 50 ms / 1 s).
     pub window_frac: f64,
@@ -160,9 +179,45 @@ impl SweepSpec {
             machines: vec![("paper".to_string(), machine)],
             seeds: vec![sim.seed],
             sim,
+            overrides: Vec::new(),
             hyplacer,
             window_frac,
         }
+    }
+
+    /// The cell's effective `SimConfig`: the shared config with the
+    /// cell's seed and every matching override applied in order.
+    pub fn resolved_sim(
+        &self,
+        machine: &str,
+        workload: &str,
+        policy: &str,
+        seed: u64,
+    ) -> SimConfig {
+        let mut sim = self.sim.clone();
+        sim.seed = seed;
+        for ov in &self.overrides {
+            if ov.applies(machine, workload, policy) {
+                ov.apply(&mut sim);
+            }
+        }
+        sim
+    }
+
+    /// Stable content key for one cell: FNV-1a (fixed constants, no
+    /// per-process salt) over the fully-resolved configuration that the
+    /// cell's simulation is a pure function of. Any change to the machine
+    /// calibration, sim parameters (incl. per-cell overrides), policy
+    /// tunables, window fraction, workload, policy or seed changes the
+    /// key — and only cells whose inputs changed get new keys.
+    pub fn cell_key(&self, machine_idx: usize, workload: &str, policy: &str, seed: u64) -> u64 {
+        let (mname, machine) = &self.machines[machine_idx];
+        let sim = self.resolved_sim(mname, workload, policy, seed);
+        let fp = format!(
+            "v1|machine={mname}:{machine:?}|sim={sim:?}|hp={:?}|wf={}|w={workload}|p={policy}",
+            self.hyplacer, self.window_frac
+        );
+        fnv1a64(fp.as_bytes())
     }
 
     /// Expand the grid to its cells in canonical (row-major) order.
@@ -180,6 +235,7 @@ impl SweepSpec {
                             workload: w.clone(),
                             policy: p.clone(),
                             seed,
+                            key: self.cell_key(machine_idx, w, p, seed),
                         });
                     }
                 }
@@ -188,8 +244,10 @@ impl SweepSpec {
         out
     }
 
-    /// Check every axis value resolves before any thread spawns, so a
-    /// typo fails fast with a message instead of panicking mid-sweep.
+    /// Check every axis value resolves — and is unique — before any
+    /// thread spawns, so a typo fails fast with a message instead of
+    /// panicking mid-sweep. Duplicates are rejected because they expand
+    /// to colliding cells, which silently breaks resume-key uniqueness.
     pub fn validate(&self) -> Result<(), String> {
         if self.machines.is_empty() {
             return Err("sweep has no machine configurations".to_string());
@@ -202,6 +260,29 @@ impl SweepSpec {
         }
         if self.seeds.is_empty() {
             return Err("sweep has no seeds".to_string());
+        }
+        let dup = |names: &[String]| -> Option<String> {
+            let mut seen = HashSet::new();
+            names
+                .iter()
+                .find(|n| !seen.insert(n.to_ascii_lowercase()))
+                .cloned()
+        };
+        if let Some(d) = dup(&self.workloads) {
+            return Err(format!("duplicate workload {d:?} in sweep axes"));
+        }
+        if let Some(d) = dup(&self.policies) {
+            return Err(format!("duplicate policy {d:?} in sweep axes"));
+        }
+        let mnames: Vec<String> = self.machines.iter().map(|(n, _)| n.clone()).collect();
+        if let Some(d) = dup(&mnames) {
+            return Err(format!("duplicate machine {d:?} in sweep axes"));
+        }
+        let mut seen_seeds = HashSet::new();
+        for &s in &self.seeds {
+            if !seen_seeds.insert(s) {
+                return Err(format!("duplicate seed {s} in sweep axes"));
+            }
         }
         for (mname, machine) in &self.machines {
             for w in &self.workloads {
@@ -222,19 +303,55 @@ impl SweepSpec {
     /// core). Results come back in canonical cell order and are
     /// bit-identical for any `jobs` value.
     pub fn run(&self, jobs: usize) -> Result<SweepRun, String> {
+        Ok(self.run_with_cache(jobs, None)?.run)
+    }
+
+    /// Run the grid, reusing any prior cell whose content key matches
+    /// (the checkpoint/resume primitive). Only missing or changed cells
+    /// execute on the worker pool; cached cells are spliced back in
+    /// canonical order, so the returned run is indistinguishable from a
+    /// cold one (`exec::tests` asserts byte-identical JSON).
+    pub fn run_with_cache(
+        &self,
+        jobs: usize,
+        prior: Option<&SweepRun>,
+    ) -> Result<SweepOutcome, String> {
         self.validate()?;
         let cells = self.cells();
-        let jobs = resolve_jobs(jobs).min(cells.len().max(1));
+        let cache: HashMap<u64, &CellResult> = match prior {
+            Some(p) => p.results.iter().map(|c| (c.key, c)).collect(),
+            None => HashMap::new(),
+        };
+        let todo: Vec<&SweepCell> =
+            cells.iter().filter(|c| !cache.contains_key(&c.key)).collect();
         let t0 = Instant::now();
-        let results = parallel_map(&cells, jobs, |_, cell| self.run_cell(cell));
-        Ok(SweepRun { results, jobs, wall_secs: t0.elapsed().as_secs_f64() })
+        let jobs = resolve_jobs(jobs).min(todo.len().max(1));
+        let fresh = parallel_map(&todo, jobs, |_, cell| self.run_cell(cell));
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let executed = todo.len();
+        let mut fresh = fresh.into_iter();
+        let mut results = Vec::with_capacity(cells.len());
+        let mut cached = 0usize;
+        for cell in &cells {
+            match cache.get(&cell.key) {
+                Some(prev) => {
+                    cached += 1;
+                    results.push((*prev).clone());
+                }
+                None => results.push(fresh.next().expect("one fresh result per missing cell")),
+            }
+        }
+        Ok(SweepOutcome {
+            run: SweepRun { results, jobs, wall_secs },
+            executed,
+            cached,
+        })
     }
 
     /// Run one cell (names were validated up front).
     fn run_cell(&self, cell: &SweepCell) -> CellResult {
-        let (_, machine) = &self.machines[cell.machine_idx];
-        let mut sim = self.sim.clone();
-        sim.seed = cell.seed;
+        let (mname, machine) = &self.machines[cell.machine_idx];
+        let sim = self.resolved_sim(mname, &cell.workload, &cell.policy, cell.seed);
         let w = workloads::by_name(&cell.workload, machine.page_bytes, sim.epoch_secs)
             .expect("workload validated");
         let p = build_policy(&cell.policy, machine, &self.hyplacer).expect("policy validated");
@@ -243,6 +360,7 @@ impl SweepSpec {
             workload: cell.workload.clone(),
             policy: cell.policy.clone(),
             seed: cell.seed,
+            key: cell.key,
             sim: run_pair(machine, &sim, w, p, self.window_frac),
         }
     }
@@ -255,16 +373,72 @@ pub struct CellResult {
     pub workload: String,
     pub policy: String,
     pub seed: u64,
+    /// Content key of the cell that produced this result (see
+    /// [`SweepSpec::cell_key`]).
+    pub key: u64,
     pub sim: SimResult,
+}
+
+impl CellResult {
+    /// Inverse of the per-cell object in [`SweepRun::to_json`]. Epoch
+    /// traces (`SimResult::stats`) are summary-only in JSON, so a loaded
+    /// cell carries an empty trace; every field the sweep reports — and
+    /// every derived ratio — round-trips exactly (f64 shortest-form
+    /// rendering is lossless).
+    pub fn from_json(c: &Json) -> Result<CellResult, String> {
+        let text = |k: &str| -> Result<String, String> {
+            c.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing string field {k:?}"))
+        };
+        let num = |k: &str| -> Result<f64, String> {
+            c.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("missing numeric field {k:?}"))
+        };
+        let seed: u64 = text("seed")?
+            .parse()
+            .map_err(|e| format!("bad seed: {e}"))?;
+        let key = u64::from_str_radix(&text("key")?, 16).map_err(|e| format!("bad key: {e}"))?;
+        Ok(CellResult {
+            machine: text("machine")?,
+            workload: text("workload_axis")?,
+            policy: text("policy_axis")?,
+            seed,
+            key,
+            sim: SimResult {
+                workload: text("workload")?,
+                policy: text("policy")?,
+                total_wall_secs: num("wall_secs")?,
+                total_app_bytes: num("app_bytes")?,
+                throughput: num("throughput")?,
+                steady_throughput: num("steady_throughput")?,
+                energy_j_per_byte: num("energy_j_per_byte")?,
+                total_energy_j: num("total_energy_j")?,
+                migrated_pages: num("migrated_pages")? as u64,
+                dram_traffic_share: num("dram_traffic_share")?,
+                stats: RunStats::new(0),
+            },
+        })
+    }
 }
 
 /// A completed sweep: results in canonical cell order plus run metadata.
 pub struct SweepRun {
     pub results: Vec<CellResult>,
-    /// Worker threads actually used.
+    /// Worker threads actually used (host metadata — not persisted).
     pub jobs: usize,
-    /// Host wall-clock of the whole sweep, seconds.
+    /// Host wall-clock of the executed cells, seconds (not persisted).
     pub wall_secs: f64,
+}
+
+/// What [`SweepSpec::run_with_cache`] did: the merged run plus how many
+/// cells actually executed vs came from the prior results file.
+pub struct SweepOutcome {
+    pub run: SweepRun,
+    pub executed: usize,
+    pub cached: usize,
 }
 
 /// Baseline lookup key: the (machine, workload, seed) group a cell is
@@ -273,20 +447,27 @@ type BaselineKey<'a> = (&'a str, &'a str, u64);
 
 impl SweepRun {
     /// One map lookup per cell instead of a linear scan: index every
-    /// `adm-default` cell by its (machine, workload, seed) group.
+    /// `adm-default` cell by its (machine, workload, seed) group. The
+    /// match is on the canonical display name (`sim.policy`), so alias
+    /// axis spellings ("adm") still resolve. First occurrence wins: in a
+    /// merged checkpoint the current run's cells come first, so fresh
+    /// cells always normalize against the fresh baseline, never a stale
+    /// prior-config one appended by [`SweepRun::merged_with`].
     fn baselines(&self) -> HashMap<BaselineKey<'_>, &CellResult> {
-        self.results
-            .iter()
-            .filter(|c| c.policy == "adm-default")
-            .map(|c| ((c.machine.as_str(), c.workload.as_str(), c.seed), c))
-            .collect()
+        let mut map: HashMap<BaselineKey<'_>, &CellResult> = HashMap::new();
+        for c in self.results.iter().filter(|c| c.sim.policy == "adm-default") {
+            map.entry((c.machine.as_str(), c.sim.workload.as_str(), c.seed)).or_insert(c);
+        }
+        map
     }
 
     fn baseline_of<'a>(
         baselines: &HashMap<BaselineKey<'a>, &'a CellResult>,
         cell: &'a CellResult,
     ) -> Option<&'a CellResult> {
-        baselines.get(&(cell.machine.as_str(), cell.workload.as_str(), cell.seed)).copied()
+        baselines
+            .get(&(cell.machine.as_str(), cell.sim.workload.as_str(), cell.seed))
+            .copied()
     }
 
     /// Steady-state speedup of a cell vs the `adm-default` cell of the
@@ -301,6 +482,24 @@ impl SweepRun {
     pub fn energy_gain_vs_baseline(&self, cell: &CellResult) -> Option<f64> {
         let baselines = self.baselines();
         Some(cell.sim.energy_gain_vs(&Self::baseline_of(&baselines, cell)?.sim))
+    }
+
+    /// Union of this run with a prior one: this run's cells in canonical
+    /// order, then any prior cell whose key this run does not contain (in
+    /// prior order). This is what `--out --resume` persists, so a results
+    /// file accumulates the full paper matrix incrementally while re-runs
+    /// of an identical spec rewrite it byte-identically.
+    pub fn merged_with(&self, prior: Option<&SweepRun>) -> SweepRun {
+        let mut results = self.results.clone();
+        if let Some(p) = prior {
+            let have: HashSet<u64> = results.iter().map(|c| c.key).collect();
+            for c in &p.results {
+                if !have.contains(&c.key) {
+                    results.push(c.clone());
+                }
+            }
+        }
+        SweepRun { results, jobs: self.jobs, wall_secs: self.wall_secs }
     }
 
     /// Render the per-cell results table.
@@ -338,9 +537,19 @@ impl SweepRun {
         t
     }
 
-    /// Full results as a JSON document (for downstream tooling; the
-    /// in-tree parser round-trips it). `seed` is emitted as a string so
-    /// the full u64 range survives JSON's f64 numbers losslessly.
+    /// Full results as a JSON document; [`SweepRun::from_json`] is the
+    /// inverse (the persisted schema is exactly the reproducible content:
+    /// host metadata like worker count and host wall-clock is *not*
+    /// emitted, so identical specs rewrite identical bytes). `seed` is a
+    /// string so the full u64 range survives JSON's f64 numbers; `key` is
+    /// the cell's content key in hex.
+    ///
+    /// `speedup_vs_adm` is derived at render time against the document's
+    /// *first* matching `adm-default` cell per (machine, workload, seed)
+    /// group — i.e. the current generation in a merged checkpoint. For
+    /// superseded cells an archive still carries, the ratio is advisory
+    /// only; recompute from the per-cell metrics when comparing across
+    /// generations.
     pub fn to_json(&self) -> Json {
         use std::collections::BTreeMap;
         let num = Json::Num;
@@ -351,13 +560,22 @@ impl SweepRun {
             .map(|c| {
                 let mut m = BTreeMap::new();
                 m.insert("machine".to_string(), Json::Str(c.machine.clone()));
+                // display name (Workload::name()/Policy::name()) and the
+                // axis spelling both persist — the axis name is what spec
+                // filters and resume semantics key on ("cg-S" vs "CG-S",
+                // "interleave-90" vs "interleave")
                 m.insert("workload".to_string(), Json::Str(c.sim.workload.clone()));
+                m.insert("workload_axis".to_string(), Json::Str(c.workload.clone()));
                 m.insert("policy".to_string(), Json::Str(c.sim.policy.clone()));
+                m.insert("policy_axis".to_string(), Json::Str(c.policy.clone()));
                 m.insert("seed".to_string(), Json::Str(c.seed.to_string()));
+                m.insert("key".to_string(), Json::Str(format!("{:016x}", c.key)));
                 m.insert("wall_secs".to_string(), num(c.sim.total_wall_secs));
+                m.insert("app_bytes".to_string(), num(c.sim.total_app_bytes));
                 m.insert("throughput".to_string(), num(c.sim.throughput));
                 m.insert("steady_throughput".to_string(), num(c.sim.steady_throughput));
                 m.insert("energy_j_per_byte".to_string(), num(c.sim.energy_j_per_byte));
+                m.insert("total_energy_j".to_string(), num(c.sim.total_energy_j));
                 m.insert("migrated_pages".to_string(), num(c.sim.migrated_pages as f64));
                 m.insert("dram_traffic_share".to_string(), num(c.sim.dram_traffic_share));
                 m.insert(
@@ -371,17 +589,56 @@ impl SweepRun {
             })
             .collect();
         let mut root = BTreeMap::new();
-        root.insert("jobs".to_string(), num(self.jobs as f64));
-        root.insert("wall_secs".to_string(), num(self.wall_secs));
+        root.insert("schema".to_string(), num(1.0));
         root.insert("cells".to_string(), Json::Arr(cells));
         Json::Obj(root)
     }
+
+    /// Inverse of [`SweepRun::to_json`]: rebuild a run from a parsed
+    /// results document. Host metadata (jobs, host wall-clock) is not
+    /// persisted, so it comes back zeroed.
+    pub fn from_json(doc: &Json) -> Result<SweepRun, String> {
+        let cells = doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "results document has no \"cells\" array".to_string())?;
+        let mut results = Vec::with_capacity(cells.len());
+        for (i, c) in cells.iter().enumerate() {
+            results.push(CellResult::from_json(c).map_err(|e| format!("cell {i}: {e}"))?);
+        }
+        Ok(SweepRun { results, jobs: 0, wall_secs: 0.0 })
+    }
+}
+
+/// Load a prior sweep-results file. `Ok(None)` when the file does not
+/// exist yet (a cold `--resume` run), `Err` on unreadable or malformed
+/// content — a corrupt checkpoint should fail loudly, not silently
+/// recompute everything.
+pub fn load_results(path: &str) -> Result<Option<SweepRun>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("{path}: {e}")),
+    };
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    SweepRun::from_json(&doc)
+        .map(Some)
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+/// Atomically write `run` merged with `prior` to `path` (tmp file +
+/// rename, so a crash mid-write never corrupts the checkpoint).
+pub fn save_results(path: &str, run: &SweepRun, prior: Option<&SweepRun>) -> Result<(), String> {
+    let merged = run.merged_with(prior);
+    let mut text = merged.to_json().render();
+    text.push('\n');
+    crate::util::write_atomic(path, &text)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+    use crate::config::{CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 
     fn quick_spec() -> SweepSpec {
         let mut sim = SimConfig::default();
@@ -446,6 +703,56 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_duplicate_axes() {
+        // duplicates expand to colliding cells, which breaks resume keys
+        let mut spec = quick_spec();
+        spec.workloads.push("CG-S".to_string()); // case-insensitive dup
+        assert!(spec.validate().unwrap_err().contains("duplicate workload"));
+        let mut spec = quick_spec();
+        spec.policies.push("hyplacer".to_string());
+        assert!(spec.validate().unwrap_err().contains("duplicate policy"));
+        let mut spec = quick_spec();
+        spec.seeds.push(42);
+        assert!(spec.validate().unwrap_err().contains("duplicate seed"));
+        let mut spec = quick_spec();
+        let m = spec.machines[0].1.clone();
+        spec.machines.push(("paper".to_string(), m));
+        assert!(spec.validate().unwrap_err().contains("duplicate machine"));
+    }
+
+    #[test]
+    fn cell_keys_stable_and_config_sensitive() {
+        // stable: two identical spec constructions agree key-for-key
+        let a = quick_spec().cells();
+        let b = quick_spec().cells();
+        assert!(a.iter().zip(b.iter()).all(|(x, y)| x.key == y.key));
+        // unique within the grid
+        let mut seen = std::collections::HashSet::new();
+        assert!(a.iter().all(|c| seen.insert(c.key)));
+        // sensitive: any config input changes the key
+        let mut spec = quick_spec();
+        spec.sim.epochs += 1;
+        assert_ne!(spec.cells()[0].key, a[0].key);
+        let mut spec = quick_spec();
+        spec.hyplacer.alpha += 0.01;
+        assert_ne!(spec.cells()[0].key, a[0].key);
+        // an override changes exactly the cells it matches
+        let mut spec = quick_spec();
+        spec.overrides.push(CellOverride {
+            workload: Some("mg-S".to_string()),
+            epochs: Some(4),
+            ..CellOverride::default()
+        });
+        for (c, orig) in spec.cells().iter().zip(a.iter()) {
+            if c.workload == "mg-S" {
+                assert_ne!(c.key, orig.key, "{}/{}", c.workload, c.policy);
+            } else {
+                assert_eq!(c.key, orig.key, "{}/{}", c.workload, c.policy);
+            }
+        }
+    }
+
+    #[test]
     fn sweep_results_identical_across_thread_counts() {
         let spec = quick_spec();
         let serial = spec.run(1).unwrap();
@@ -456,6 +763,7 @@ mod tests {
             assert_eq!(a.workload, b.workload);
             assert_eq!(a.policy, b.policy);
             assert_eq!(a.seed, b.seed);
+            assert_eq!(a.key, b.key);
             assert_eq!(
                 a.sim.total_wall_secs.to_bits(),
                 b.sim.total_wall_secs.to_bits(),
@@ -484,5 +792,172 @@ mod tests {
         let json = run.to_json().render();
         let doc = crate::report::json::parse(&json).unwrap();
         assert_eq!(doc.get("cells").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let spec = quick_spec();
+        let run = spec.run(2).unwrap();
+        let rendered = run.to_json().render();
+        let back = SweepRun::from_json(&json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(back.results.len(), run.results.len());
+        for (a, b) in run.results.iter().zip(back.results.iter()) {
+            assert_eq!(a.machine, b.machine);
+            // both the axis spelling and the display name survive
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.sim.workload, b.sim.workload);
+            assert_eq!(a.sim.policy, b.sim.policy);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.sim.total_wall_secs.to_bits(), b.sim.total_wall_secs.to_bits());
+            assert_eq!(a.sim.total_app_bytes.to_bits(), b.sim.total_app_bytes.to_bits());
+            assert_eq!(a.sim.throughput.to_bits(), b.sim.throughput.to_bits());
+            assert_eq!(
+                a.sim.steady_throughput.to_bits(),
+                b.sim.steady_throughput.to_bits()
+            );
+            assert_eq!(
+                a.sim.energy_j_per_byte.to_bits(),
+                b.sim.energy_j_per_byte.to_bits()
+            );
+            assert_eq!(a.sim.total_energy_j.to_bits(), b.sim.total_energy_j.to_bits());
+            assert_eq!(a.sim.migrated_pages, b.sim.migrated_pages);
+            assert_eq!(
+                a.sim.dram_traffic_share.to_bits(),
+                b.sim.dram_traffic_share.to_bits()
+            );
+        }
+        // re-rendering the round-tripped run reproduces identical bytes
+        assert_eq!(back.to_json().render(), rendered);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        assert!(SweepRun::from_json(&json::parse("{}").unwrap()).is_err());
+        let missing_field = r#"{"cells": [{"machine": "paper"}]}"#;
+        let err = SweepRun::from_json(&json::parse(missing_field).unwrap()).unwrap_err();
+        assert!(err.contains("cell 0"), "{err}");
+    }
+
+    #[test]
+    fn resume_cache_skips_unchanged_cells() {
+        let spec = quick_spec();
+        let first = spec.run_with_cache(2, None).unwrap();
+        assert_eq!(first.executed, 8);
+        assert_eq!(first.cached, 0);
+
+        // identical spec: everything cached, byte-identical output
+        let second = spec.run_with_cache(2, Some(&first.run)).unwrap();
+        assert_eq!(second.executed, 0);
+        assert_eq!(second.cached, 8);
+        assert_eq!(
+            second.run.to_json().render(),
+            first.run.to_json().render()
+        );
+
+        // resume from a JSON round trip (what --resume does across
+        // processes): still zero executed cells
+        let prior =
+            SweepRun::from_json(&json::parse(&first.run.to_json().render()).unwrap()).unwrap();
+        let resumed = spec.run_with_cache(1, Some(&prior)).unwrap();
+        assert_eq!(resumed.executed, 0);
+        assert_eq!(resumed.run.to_json().render(), first.run.to_json().render());
+    }
+
+    #[test]
+    fn resume_invalidates_exactly_the_changed_cells() {
+        let spec = quick_spec();
+        let first = spec.run_with_cache(2, None).unwrap();
+
+        // an epochs override for mg-S re-executes only mg-S cells
+        let mut spec2 = quick_spec();
+        spec2.overrides.push(CellOverride {
+            workload: Some("mg-S".to_string()),
+            epochs: Some(4),
+            ..CellOverride::default()
+        });
+        let out = spec2.run_with_cache(1, Some(&first.run)).unwrap();
+        assert_eq!(out.executed, 4, "mg-S x 2 policies x 2 seeds");
+        assert_eq!(out.cached, 4);
+        // cached cg-S cells are bitwise the first run's results
+        for (c, orig) in out.run.results.iter().zip(first.run.results.iter()) {
+            if c.workload == "cg-S" {
+                assert_eq!(
+                    c.sim.total_wall_secs.to_bits(),
+                    orig.sim.total_wall_secs.to_bits()
+                );
+            }
+        }
+
+        // a new seed on the axis executes only that seed's replicate
+        let mut spec3 = quick_spec();
+        spec3.seeds = vec![42, 9];
+        let out = spec3.run_with_cache(1, Some(&first.run)).unwrap();
+        assert_eq!(out.executed, 4, "2 workloads x 2 policies x 1 new seed");
+        assert_eq!(out.cached, 4);
+    }
+
+    #[test]
+    fn merged_with_unions_by_key() {
+        let spec = quick_spec();
+        let full = spec.run(2).unwrap();
+        let mut narrow = quick_spec();
+        narrow.workloads = vec!["cg-S".to_string()];
+        let part = narrow.run_with_cache(1, Some(&full)).unwrap();
+        assert_eq!(part.executed, 0);
+        assert_eq!(part.run.results.len(), 4);
+        // persisting the narrow run merged with the full prior keeps all 8
+        let merged = part.run.merged_with(Some(&full));
+        assert_eq!(merged.results.len(), 8);
+        let mut keys: Vec<u64> = merged.results.iter().map(|c| c.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn merged_checkpoint_normalizes_against_fresh_baselines() {
+        let spec = quick_spec();
+        let first = spec.run(2).unwrap();
+        // change the shared config: every cell gets a new key, and the
+        // merged checkpoint carries both generations
+        let mut spec2 = quick_spec();
+        spec2.sim.epochs = 4;
+        let out = spec2.run_with_cache(1, Some(&first)).unwrap();
+        assert_eq!(out.executed, 8);
+        let merged = out.run.merged_with(Some(&first));
+        assert_eq!(merged.results.len(), 16);
+        // the first match in merged order is the fresh generation
+        let hyp = merged
+            .results
+            .iter()
+            .find(|c| c.policy == "hyplacer" && c.workload == "cg-S" && c.seed == 42)
+            .unwrap();
+        let adm = merged
+            .results
+            .iter()
+            .find(|c| c.sim.policy == "adm-default" && c.workload == "cg-S" && c.seed == 42)
+            .unwrap();
+        // fresh cells normalize against the fresh adm-default baseline,
+        // not the stale prior-config one appended at the back
+        let expect = hyp.sim.steady_speedup_vs(&adm.sim);
+        assert_eq!(
+            merged.speedup_vs_baseline(hyp).unwrap().to_bits(),
+            expect.to_bits()
+        );
+    }
+
+    #[test]
+    fn save_and_load_round_trip_via_disk() {
+        let spec = quick_spec();
+        let run = spec.run(2).unwrap();
+        let path = std::env::temp_dir().join("hyplacer_exec_save_load_test.json");
+        let path = path.to_str().unwrap().to_string();
+        save_results(&path, &run, None).unwrap();
+        let loaded = load_results(&path).unwrap().unwrap();
+        assert_eq!(loaded.to_json().render(), run.to_json().render());
+        std::fs::remove_file(&path).ok();
+        assert!(load_results(&path).unwrap().is_none(), "missing file is Ok(None)");
     }
 }

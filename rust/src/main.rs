@@ -17,10 +17,11 @@
 
 use std::process::ExitCode;
 
-use hyplacer::bench_harness::{fig2, fig3, fig5, tables, BenchOpts, Report};
-use hyplacer::config::{parse::Doc, HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::bench_harness::baseline::{self, BaselineDoc};
+use hyplacer::bench_harness::{fig2, fig3, fig5, perf, tables, BenchOpts, Report};
+use hyplacer::config::{parse::Doc, CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;
-use hyplacer::exec::SweepSpec;
+use hyplacer::exec::{self, SweepSpec};
 use hyplacer::policies::{self, FIG5_POLICIES};
 use hyplacer::report::Table;
 use hyplacer::workloads;
@@ -44,6 +45,18 @@ struct Args {
     /// worker threads (0 = one per core).
     jobs: usize,
     config: Option<String>,
+    /// checkpoint file for sweep/fig5/6/7 results (atomic rewrite).
+    out: Option<String>,
+    /// with --out: skip cells whose content key is already in the file.
+    resume: bool,
+    /// per-cell epoch overrides, comma list of WORKLOAD_PATTERN=EPOCHS.
+    epochs_for: Option<String>,
+    /// bench-check: committed baseline file(s), comma list.
+    baseline: Option<String>,
+    /// bench-check: directory holding fresh BENCH_*.json (else recompute).
+    current: Option<String>,
+    /// bench-check: relative tolerance for ratio metrics.
+    tolerance: f64,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -61,6 +74,12 @@ fn parse_args() -> Result<Args, String> {
         machines: None,
         jobs: 0,
         config: None,
+        out: None,
+        resume: false,
+        epochs_for: None,
+        baseline: None,
+        current: None,
+        tolerance: 0.25,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -78,6 +97,15 @@ fn parse_args() -> Result<Args, String> {
             "--seeds" => args.seeds = Some(take("--seeds")?),
             "--machines" => args.machines = Some(take("--machines")?),
             "--config" => args.config = Some(take("--config")?),
+            "--out" => args.out = Some(take("--out")?),
+            "--epochs-for" => args.epochs_for = Some(take("--epochs-for")?),
+            "--baseline" => args.baseline = Some(take("--baseline")?),
+            "--current" => args.current = Some(take("--current")?),
+            "--tolerance" => {
+                args.tolerance =
+                    take("--tolerance")?.parse().map_err(|e| format!("--tolerance: {e}"))?
+            }
+            "--resume" => args.resume = true,
             "--aot" => args.aot = true,
             "--quick" => args.quick = true,
             "--help" | "-h" => {
@@ -114,6 +142,10 @@ COMMANDS
   compare   all policies on one workload   [-w cg-L]
   sweep     parallel (machine x workload x policy x seed) grid
             [-w bt-M,ft-M,mg-M,cg-M -p all --seeds 42 --machines paper]
+  bench     scale-free perf metrics for the baseline pipeline
+            [--quick] [--json DIR]  -> DIR/BENCH_hotpath.json + BENCH_sweep.json
+  bench-check  gate fresh metrics against committed BENCH_*.json baselines
+            [--baseline F[,F...] --current DIR --tolerance 0.25]
   all       every figure and table in sequence
 
 FLAGS
@@ -122,6 +154,17 @@ FLAGS
   -j, --jobs N   worker threads for fig5/6/7 + sweep (default: one per core)
   --csv DIR      also write each table as CSV under DIR
   --json FILE    (sweep) also write full results as JSON
+                 (bench) directory for the emitted BENCH_*.json docs
+  --out FILE     (sweep, fig5/6/7) checkpoint results to FILE (atomic rewrite)
+  --resume       with --out: load FILE first and execute only cells whose
+                 content key is missing or changed (incremental matrices)
+  --epochs-for PAT=N[,PAT=N]
+                 (sweep) per-cell epoch overrides by workload pattern,
+                 e.g. '*-L=240' gives L-size workloads longer runs
+  --baseline F   (bench-check) committed baseline file(s), comma list
+  --current DIR  (bench-check) compare against DIR/BENCH_*.json from a
+                 fresh `bench --json DIR` run (default: recompute live)
+  --tolerance T  (bench-check) relative tolerance for ratio metrics (0.25)
   --seeds A,B    (sweep) seed axis — replicates the grid per seed
   --machines M   (sweep) machine axis: paper and/or D:P channel splits,
                  e.g. paper,3:3,2:4,1:5
@@ -146,6 +189,8 @@ fn opts_from(args: &Args) -> BenchOpts {
     }
     o.use_aot = args.aot;
     o.jobs = args.jobs;
+    o.out = args.out.clone();
+    o.resume = args.resume;
     o
 }
 
@@ -302,16 +347,33 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(machines) = &args.machines {
         spec.machines = parse_machines(machines)?;
     }
-    let run = spec.run(args.jobs)?;
+    if let Some(rules) = &args.epochs_for {
+        for rule in split_list(rules) {
+            spec.overrides.push(CellOverride::parse_epochs_rule(&rule)?);
+        }
+    }
+    // a prior --out file always merges into the rewrite; --resume
+    // additionally skips cells whose content key is already present
+    let prior = match (&args.out, args.resume) {
+        (Some(path), _) => exec::load_results(path)?,
+        (None, true) => return Err("--resume requires --out FILE".to_string()),
+        (None, false) => None,
+    };
+    let cache = if args.resume { prior.as_ref() } else { None };
+    let outcome = spec.run_with_cache(args.jobs, cache)?;
+    let run = &outcome.run;
     let mut rep = Report::new("sweep", "Parallel experiment sweep");
     rep.tables.push(("cells".to_string(), run.table()));
     rep.notes.push(format!(
-        "{} cells x {} epochs on {} worker thread(s) in {:.1}s ({:.2} cells/s)",
+        "executed {} of {} cells ({} cached) x {} epochs on {} worker thread(s) \
+         in {:.1}s ({:.2} cells/s)",
+        outcome.executed,
         run.results.len(),
+        outcome.cached,
         spec.sim.epochs,
         run.jobs,
         run.wall_secs,
-        run.results.len() as f64 / run.wall_secs.max(1e-9),
+        outcome.executed as f64 / run.wall_secs.max(1e-9),
     ));
     rep.notes.push(
         "speedup/energy_gain are vs the adm-default cell of the same \
@@ -319,11 +381,92 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .to_string(),
     );
     emit(&rep, &args.csv);
+    // machine-greppable resume proof (CI's resume smoke keys on it)
+    println!(
+        "sweep: executed {} of {} cells ({} cached)",
+        outcome.executed,
+        run.results.len(),
+        outcome.cached
+    );
+    if let Some(path) = &args.out {
+        exec::save_results(path, run, prior.as_ref())?;
+        println!("wrote {path}");
+    }
     if let Some(path) = &args.json {
         std::fs::write(path, run.to_json().render()).map_err(|e| format!("{path}: {e}"))?;
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// `hyplacer bench`: collect the scale-free perf metrics of both bench
+/// suites and (with `--json DIR`) emit the machine-readable
+/// `BENCH_hotpath.json` / `BENCH_sweep.json` docs CI gates on.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let docs = [perf::collect_hotpath(args.quick), perf::collect_sweep(args.quick)];
+    for doc in &docs {
+        println!("== BENCH_{} ({} mode) ==", doc.bench, doc.mode);
+        for (name, m) in &doc.metrics {
+            println!("  {name:<44} {:>16.6}  [{}]", m.value, m.kind.as_str());
+        }
+        if !doc.cell_keys.is_empty() {
+            println!("  cell keys: {}", doc.cell_keys.len());
+        }
+    }
+    if let Some(dir) = &args.json {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{dir}: {e}"))?;
+        for doc in &docs {
+            let path = format!("{dir}/BENCH_{}.json", doc.bench);
+            doc.save(&path)?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// `hyplacer bench-check`: compare fresh metrics (from `--current DIR`,
+/// else recomputed live in the baseline's own mode) against each
+/// committed baseline; any gating regression beyond tolerance fails.
+fn cmd_bench_check(args: &Args) -> Result<(), String> {
+    let baselines = args
+        .baseline
+        .as_deref()
+        .ok_or_else(|| "bench-check requires --baseline FILE[,FILE...]".to_string())?;
+    let mut total_fails = 0usize;
+    for path in split_list(baselines) {
+        let base = BaselineDoc::load(&path)?;
+        let current = match &args.current {
+            Some(dir) => BaselineDoc::load(&format!("{dir}/BENCH_{}.json", base.bench))?,
+            None => match base.bench.as_str() {
+                "hotpath" => perf::collect_hotpath(base.mode == "quick"),
+                "sweep" => perf::collect_sweep(base.mode == "quick"),
+                other => return Err(format!("{path}: unknown bench kind {other:?}")),
+            },
+        };
+        let fails = baseline::compare(&base, &current, args.tolerance);
+        if fails.is_empty() {
+            let keys = if base.cell_keys.is_empty() {
+                String::new()
+            } else {
+                format!(" + {} cell key(s)", base.cell_keys.len())
+            };
+            println!(
+                "bench-check {path}: OK ({} gating metric(s){keys} within {:.0}% tolerance)",
+                base.compared_len(),
+                args.tolerance * 100.0
+            );
+        } else {
+            for f in &fails {
+                eprintln!("bench-check {path}: FAIL {f}");
+            }
+            total_fails += fails.len();
+        }
+    }
+    if total_fails == 0 {
+        Ok(())
+    } else {
+        Err(format!("{total_fails} perf-baseline regression(s)"))
+    }
 }
 
 fn main() -> ExitCode {
@@ -380,6 +523,8 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
+        "bench-check" => cmd_bench_check(&args),
         "all" => {
             emit(&fig2::report(&machine), &args.csv);
             emit(&fig3::report(), &args.csv);

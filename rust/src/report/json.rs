@@ -53,6 +53,20 @@ impl Json {
         }
     }
 
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// Numeric array → Vec<f32>.
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
@@ -342,6 +356,9 @@ mod tests {
             vec![1.5, -2000.0, 0.0]
         );
         assert_eq!(doc.get("xs").unwrap().as_i64_vec().unwrap(), vec![1, -2000, 0]);
+        assert_eq!(doc.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.as_obj().unwrap().len(), 5);
+        assert!(doc.get("xs").unwrap().as_obj().is_none());
     }
 
     #[test]

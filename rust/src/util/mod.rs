@@ -10,6 +10,27 @@ pub mod proptest;
 pub use rng::Rng64;
 pub use topk::top_k_indices;
 
+/// 64-bit FNV-1a over a byte string. Used for sweep-cell content keys:
+/// the algorithm is fixed by constants (no per-process salt, unlike
+/// `std::hash`), so keys are stable across processes, platforms and
+/// compiler versions — the property resumable sweeps depend on.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Atomic file write: tmp file + rename, so a crash mid-write never
+/// leaves a truncated artifact (sweep checkpoints, BENCH_*.json docs).
+pub fn write_atomic(path: &str, text: &str) -> Result<(), String> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, text).map_err(|e| format!("{tmp}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{path}: {e}"))
+}
+
 /// Geometric mean of a slice (ignores non-positive entries, as the paper's
 /// geomean speedup bars do).
 pub fn geomean(values: &[f64]) -> f64 {
@@ -73,6 +94,16 @@ mod tests {
         assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
         assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
         assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // distinct inputs hash apart
+        assert_ne!(fnv1a64(b"cg-M|42"), fnv1a64(b"cg-M|43"));
     }
 
     #[test]

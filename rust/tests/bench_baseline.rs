@@ -1,0 +1,113 @@
+//! Integration: the perf-baseline pipeline end-to-end — `hyplacer bench
+//! --json DIR` emitting `BENCH_*.json`, `hyplacer bench-check` passing
+//! against the committed repo baselines, and failing on a baseline
+//! inflated beyond tolerance.
+
+use std::path::Path;
+use std::process::Command;
+
+use hyplacer::bench_harness::baseline::{BaselineDoc, MetricKind};
+
+fn exe() -> &'static str {
+    env!("CARGO_BIN_EXE_hyplacer")
+}
+
+/// Path of a committed repo-root baseline (tests run inside rust/).
+fn committed(name: &str) -> String {
+    format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), name)
+}
+
+fn fresh_docs(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    let out = Command::new(exe())
+        .args(["bench", "--quick", "--json", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn bench_emits_docs_and_check_passes_against_committed_baselines() {
+    let dir = std::env::temp_dir().join("hyplacer_bench_emit_test");
+    fresh_docs(&dir);
+    for name in ["BENCH_hotpath.json", "BENCH_sweep.json"] {
+        assert!(dir.join(name).exists(), "{name} not emitted");
+        // emitted docs parse back through the baseline model
+        let doc = BaselineDoc::load(dir.join(name).to_str().unwrap()).unwrap();
+        assert_eq!(doc.mode, "quick");
+        assert!(doc.compared_len() > 0, "{name} has no gating metrics");
+    }
+    // the committed baselines gate cleanly against a fresh smoke run
+    let baselines = format!(
+        "{},{}",
+        committed("BENCH_hotpath.json"),
+        committed("BENCH_sweep.json")
+    );
+    let out = Command::new(exe())
+        .args([
+            "bench-check",
+            "--baseline",
+            &baselines,
+            "--current",
+            dir.to_str().unwrap(),
+            "--tolerance",
+            "0.25",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench-check failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.matches(": OK").count(), 2, "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_check_fails_on_baseline_inflated_beyond_tolerance() {
+    let dir = std::env::temp_dir().join("hyplacer_bench_tamper_test");
+    fresh_docs(&dir);
+    // inflate one ratio metric of the fresh sweep doc by 2x and use that
+    // as the "baseline": the comparator must reject it
+    let fresh =
+        BaselineDoc::load(dir.join("BENCH_sweep.json").to_str().unwrap()).unwrap();
+    let mut tampered = fresh.clone();
+    let v = tampered.metrics["app_gb_per_epoch/cg-S"].value;
+    tampered.put("app_gb_per_epoch/cg-S", v * 2.0, MetricKind::Ratio);
+    let tampered_path = dir.join("TAMPERED_sweep.json");
+    tampered.save(tampered_path.to_str().unwrap()).unwrap();
+
+    let out = Command::new(exe())
+        .args([
+            "bench-check",
+            "--baseline",
+            tampered_path.to_str().unwrap(),
+            "--current",
+            dir.to_str().unwrap(),
+            "--tolerance",
+            "0.25",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "inflated baseline must fail the gate");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("app_gb_per_epoch/cg-S"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_check_recomputes_live_without_current_dir() {
+    let out = Command::new(exe())
+        .args(["bench-check", "--baseline", &committed("BENCH_hotpath.json")])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

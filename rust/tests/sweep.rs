@@ -67,6 +67,119 @@ fn cli_sweep_reports_table_and_json() {
 }
 
 #[test]
+fn public_api_json_round_trip_and_resume() {
+    use hyplacer::exec::SweepRun;
+    let spec = quick_spec();
+    let first = spec.run_with_cache(2, None).unwrap();
+    assert_eq!(first.executed, 4);
+    // to_json -> parse -> from_json == original (byte-identical re-render)
+    let rendered = first.run.to_json().render();
+    let prior = SweepRun::from_json(&json::parse(&rendered).unwrap()).unwrap();
+    assert_eq!(prior.to_json().render(), rendered);
+    // resuming from the round-tripped document executes nothing
+    let resumed = spec.run_with_cache(2, Some(&prior)).unwrap();
+    assert_eq!(resumed.executed, 0);
+    assert_eq!(resumed.cached, 4);
+    assert_eq!(resumed.run.to_json().render(), rendered);
+}
+
+#[test]
+fn cli_sweep_resume_executes_zero_cells_and_rewrites_identical_bytes() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out_path = std::env::temp_dir().join("hyplacer_sweep_resume_test.json");
+    let out_str = out_path.to_str().unwrap().to_string();
+    std::fs::remove_file(&out_path).ok();
+    let run = |resume: bool| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args([
+            "sweep",
+            "-w",
+            "cg-S",
+            "-p",
+            "adm-default,memm",
+            "--seeds",
+            "1,2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "4",
+            "--out",
+            &out_str,
+        ]);
+        if resume {
+            cmd.arg("--resume");
+        }
+        cmd.output().unwrap()
+    };
+    let first = run(false);
+    assert!(first.status.success(), "stderr: {}", String::from_utf8_lossy(&first.stderr));
+    assert!(
+        String::from_utf8_lossy(&first.stdout).contains("executed 4 of 4 cells"),
+        "{}",
+        String::from_utf8_lossy(&first.stdout)
+    );
+    let bytes_first = std::fs::read(&out_path).unwrap();
+
+    let second = run(true);
+    assert!(second.status.success(), "stderr: {}", String::from_utf8_lossy(&second.stderr));
+    assert!(
+        String::from_utf8_lossy(&second.stdout).contains("executed 0 of 4 cells (4 cached)"),
+        "{}",
+        String::from_utf8_lossy(&second.stdout)
+    );
+    let bytes_second = std::fs::read(&out_path).unwrap();
+    assert_eq!(bytes_first, bytes_second, "resumed rewrite must be byte-identical");
+    std::fs::remove_file(&out_path).ok();
+}
+
+#[test]
+fn cli_sweep_epochs_for_override_invalidates_matching_cells_only() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out_path = std::env::temp_dir().join("hyplacer_sweep_override_test.json");
+    let out_str = out_path.to_str().unwrap().to_string();
+    std::fs::remove_file(&out_path).ok();
+    let run = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args([
+            "sweep", "-w", "cg-S,mg-S", "-p", "adm-default", "--seeds", "1", "--epochs", "4",
+            "--out", &out_str,
+        ]);
+        cmd.args(extra);
+        let out = cmd.output().unwrap();
+        assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    // cold run with a per-cell override: everything executes
+    let s = run(&["--epochs-for", "mg-*=3"]);
+    assert!(s.contains("executed 2 of 2 cells"), "{s}");
+    // identical spec resumes fully cached
+    let s = run(&["--epochs-for", "mg-*=3", "--resume"]);
+    assert!(s.contains("executed 0 of 2 cells (2 cached)"), "{s}");
+    // dropping the override changes exactly the mg-S cell's key
+    let s = run(&["--resume"]);
+    assert!(s.contains("executed 1 of 2 cells (1 cached)"), "{s}");
+    std::fs::remove_file(&out_path).ok();
+}
+
+#[test]
+fn cli_sweep_rejects_duplicate_axes_and_lone_resume() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "-w", "cg-S,cg-S", "-p", "adm-default"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("duplicate"));
+
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "--resume"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--out"));
+}
+
+#[test]
 fn cli_sweep_fails_fast_on_bad_axes() {
     let exe = env!("CARGO_BIN_EXE_hyplacer");
     let out = std::process::Command::new(exe)
