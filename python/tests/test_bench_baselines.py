@@ -39,6 +39,22 @@ def test_baseline_doc_schema(name):
     assert all(isinstance(k, str) for k in doc.get("cell_keys", []))
 
 
+def test_hotpath_carries_the_decision_tick_instruments():
+    # PR 1's MMU-side proxy (RNG draws) gained a kernel-side twin in the
+    # activity-index PR: the decision tick's PTE-visit metrics must stay
+    # in the committed doc so bench-check keeps gating the O(touched +
+    # selected) guarantee.
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    assert "sparse/pte_visits_per_epoch" in metrics
+    flag = metrics["sparse/pte_visits_scale_free"]
+    # the scale-free property is a hand-derivable exact boolean: it must
+    # gate (not info) and hold (value 1)
+    assert flag["kind"] == "exact"
+    assert flag["value"] == 1
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

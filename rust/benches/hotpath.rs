@@ -14,7 +14,6 @@ use hyplacer::bench_harness::perf;
 use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier, GB};
 use hyplacer::coordinator::Simulation;
 use hyplacer::policies::hyplacer::classifier::{Classifier, NativeClassifier};
-use hyplacer::policies::hyplacer::native::PageStats;
 use hyplacer::policies::hyplacer::selmo::SelMo;
 use hyplacer::runtime::default_artifacts_dir;
 use hyplacer::runtime::placement::AotClassifier;
@@ -61,10 +60,20 @@ fn main() {
         }
     }
     let mut selmo = SelMo::new(0.25);
-    let mut stats = PageStats::with_len(n as usize);
-    common::bench("selmo/gather_stats/76800", 50, || {
-        selmo.gather_stats(&mut pt, &mut stats);
+    let mut pages = Vec::new();
+    let mut bits = Vec::new();
+    // the timed region includes the MMU-side re-arm (gather clears the
+    // bits it reads, so each iteration must re-touch to gather the same
+    // set) — the label says so; the re-touch costs about as much as the
+    // gather itself
+    common::bench("selmo/gather_touched+rearm/76800", 50, || {
+        selmo.gather_touched(&mut pt, &mut pages, &mut bits);
+        for p in (0..n).step_by(3) {
+            pt.touch(p, p % 6 == 0);
+        }
     });
+    // the sparse gather emits a compact candidate list, not a dense array
+    assert!(pages.len() <= (n as usize / 3) + 1);
 
     // --- top-k selection ---
     let scores: Vec<f32> = {
@@ -95,10 +104,27 @@ fn main() {
     sparse_cfg.epochs = 1;
     let w = Box::new(Mlc::new(120_000, 0, 1.0 * GB, 0.2, 0.3, 1.0));
     let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
-    let mut sparse = Simulation::new(cfg.clone(), sparse_cfg, w, p, 0.05);
+    let mut sparse = Simulation::new(cfg.clone(), sparse_cfg.clone(), w, p, 0.05);
     common::bench("simulation/epoch_step/sparse-240GiB", 200, || {
         sparse.step();
     });
+
+    // --- the kernel-side twin: hyplacer's full decision tick on the
+    // same sparse footprint. With the hierarchical activity index the
+    // tick visits O(touched + selected) PTEs; a full-table walk would
+    // visit 120k per epoch.
+    let w = Box::new(Mlc::new(120_000, 0, 1.0 * GB, 0.2, 0.3, 1.0));
+    let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+    let mut sparse_hyp = Simulation::new(cfg.clone(), sparse_cfg, w, p, 0.05);
+    let mut hyp_epochs = 0u64;
+    common::bench("simulation/epoch_step/sparse-240GiB-hyplacer", 200, || {
+        sparse_hyp.step();
+        hyp_epochs += 1;
+    });
+    println!(
+        "  (pte visits/epoch: {:.0} of 120000 footprint pages)",
+        sparse_hyp.pte_visits() as f64 / hyp_epochs.max(1) as f64
+    );
 
     // --- machine-readable baseline doc (shared collector with
     // `hyplacer bench`; scale-free metrics, no absolute wall-clock).

@@ -82,7 +82,7 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
     let w = Box::new(Mlc::new(footprint, 0, 1.0 * GB, 0.2, 0.3, 1.0));
     let offered_gb_per_epoch = w.offered_bytes() / 1e9;
     let p = policies::by_name("adm-default", &cfg, &hp).expect("adm-default registered");
-    let mut sparse = Simulation::new(cfg.clone(), sim_cfg, w, p, 0.05);
+    let mut sparse = Simulation::new(cfg.clone(), sim_cfg.clone(), w, p, 0.05);
     let epochs: u32 = if quick { 8 } else { 32 };
     let t0 = Instant::now();
     for _ in 0..epochs {
@@ -100,6 +100,38 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
         "host/sparse_epoch_ms",
         sparse_secs * 1e3 / epochs as f64,
         MetricKind::Info,
+    );
+
+    // --- the kernel-side twin: hyplacer's full decision tick (sparse
+    // gather + candidate classify + pool-merged selection + word-wise
+    // DCPMM_CLEAR + migration) on the same sparse footprint vs a
+    // 15x-smaller one. `pte_visits` is the O(touched + selected)
+    // instrument; the boolean pins the scale-free property itself, so
+    // even the hand-seeded baseline gates on it (exact, deterministic,
+    // host-independent).
+    let tick_epochs = 4u32;
+    let tick_visits = |fp: u32| {
+        let w = Box::new(Mlc::new(fp, 0, 1.0 * GB, 0.2, 0.3, 1.0));
+        let p = policies::by_name("hyplacer", &cfg, &hp).expect("hyplacer registered");
+        let mut sim = Simulation::new(cfg.clone(), sim_cfg.clone(), w, p, 0.05);
+        for _ in 0..tick_epochs {
+            sim.step();
+        }
+        sim.pte_visits()
+    };
+    let small_visits = tick_visits(8_000);
+    let large_visits = tick_visits(footprint);
+    doc.put(
+        "sparse/pte_visits_per_epoch",
+        large_visits as f64 / tick_epochs as f64,
+        MetricKind::Ratio,
+    );
+    let scale_free = large_visits < footprint as u64 * tick_epochs as u64 / 4
+        && large_visits < 4 * small_visits + 8192;
+    doc.put(
+        "sparse/pte_visits_scale_free",
+        if scale_free { 1.0 } else { 0.0 },
+        MetricKind::Exact,
     );
 
     // --- native classifier pass at a fixed page count: timing is info;
@@ -266,6 +298,12 @@ mod tests {
             a.metrics["sparse/rng_draws_per_epoch"].value
                 < a.metrics["sparse/footprint_pages"].value / 4.0
         );
+        // the kernel-side twin: the decision tick's PTE visits are
+        // scale-free too (and far below one visit per footprint page)
+        assert_eq!(a.metrics["sparse/pte_visits_scale_free"].value, 1.0);
+        let visits = a.metrics["sparse/pte_visits_per_epoch"].value;
+        assert!(visits > 0.0);
+        assert!(visits < a.metrics["sparse/footprint_pages"].value / 4.0);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx};
 use crate::sim::{RunStats, SimClock};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
-use crate::vm::{migrate, PageTable};
+use crate::vm::{migrate, PageTable, PlaneQuery};
 use crate::workloads::Workload;
 
 /// Result summary of one simulated run.
@@ -147,18 +147,16 @@ impl Simulation {
         this
     }
 
-    /// (Re)build the per-region DRAM counters by scanning once.
+    /// (Re)build the per-region DRAM counters in one pass over the
+    /// activity index (word popcounts: O(footprint/64), not O(footprint)
+    /// flag reads — cheap enough that trace workloads changing their
+    /// region boundaries every epoch stay affordable).
     fn rebuild_region_counts(&mut self, regions: &[crate::workloads::Region]) {
         self.region_bounds = regions.iter().map(|r| (r.start, r.pages)).collect();
         self.region_dram.clear();
+        let dram = PlaneQuery::tier(Tier::Dram);
         for r in regions {
-            let mut dram = 0u64;
-            for page in r.start..r.end() {
-                if self.pt.flags(page).tier() == Tier::Dram {
-                    dram += 1;
-                }
-            }
-            self.region_dram.push(dram);
+            self.region_dram.push(self.pt.count_matching_in(r.start, r.end(), dram));
         }
     }
 
@@ -223,11 +221,27 @@ impl Simulation {
     }
 
     /// RNG draws consumed so far — a deterministic, scale-free proxy for
-    /// epoch hot-path work (O(touched pages) with gap sampling). The
-    /// in-tree regression test and the `BENCH_hotpath.json` baseline
-    /// pipeline both watch this counter.
+    /// the *MMU side* of the epoch hot path (O(touched pages) with gap
+    /// sampling). Its *kernel-side* twin is [`Simulation::pte_visits`]:
+    /// together the two proxies instrument both halves of the epoch
+    /// loop, and the in-tree regression tests plus the
+    /// `BENCH_hotpath.json` baseline pipeline watch both counters.
     pub fn rng_draws(&self) -> u64 {
         self.rng.draw_count()
+    }
+
+    /// PTE-state inspections consumed so far by the policy decision
+    /// ticks (walker visits, candidate classifications, selection-pool
+    /// draws, DCPMM_CLEAR word pops, migration execution) — the
+    /// kernel-side twin of
+    /// [`Simulation::rng_draws`]. With the hierarchical activity index
+    /// this stays O(touched + selected) per epoch regardless of
+    /// footprint; the regression test
+    /// `decision_tick_pte_visits_scale_with_touched_not_footprint` and
+    /// the `pte_visits_per_epoch` metric of `BENCH_hotpath.json` both
+    /// pin it.
+    pub fn pte_visits(&self) -> u64 {
+        self.pt.pte_visits()
     }
 
     /// Run one epoch; returns its wall-clock seconds.
@@ -501,6 +515,52 @@ mod tests {
         assert!(
             large_draws < 4 * small_draws + 1024,
             "draws grew with footprint: small {small_draws}, large {large_draws}"
+        );
+    }
+
+    #[test]
+    fn decision_tick_pte_visits_scale_with_touched_not_footprint() {
+        use crate::workloads::mlc::Mlc;
+        // The kernel-side twin of the RNG-draw test above: with the
+        // hierarchical activity index, hyplacer's full decision tick
+        // (gather + classify + select + DCPMM_CLEAR + migrate) inspects
+        // O(touched + selected) PTEs. Same offered bytes over footprints
+        // 15x apart => roughly the same touched-page count, so the visit
+        // counter must stay flat instead of scaling with the footprint —
+        // a full-table walk would visit every PTE every epoch.
+        let cfg = MachineConfig::paper_machine();
+        let mut sim_cfg = SimConfig::default();
+        sim_cfg.epochs = 1;
+        sim_cfg.warmup_epochs = 0;
+        let hp = HyPlacerConfig::default();
+        let epochs = 3u32;
+        let mk = |footprint: u32| {
+            let w = Box::new(Mlc::new(footprint, 0, 1.0 * GB, 0.2, 0.3, 1.0));
+            let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+            Simulation::new(cfg.clone(), sim_cfg.clone(), w, p, 0.05)
+        };
+        let mut small = mk(8_000);
+        for _ in 0..epochs {
+            small.step();
+        }
+        let small_visits = small.pte_visits();
+        let mut large = mk(120_000);
+        for _ in 0..epochs {
+            large.step();
+        }
+        let large_visits = large.pte_visits();
+        assert!(small_visits > 0 && large_visits > 0);
+        // flat in footprint: nowhere near one visit per page per epoch...
+        assert!(
+            large_visits < 120_000u64 * epochs as u64 / 4,
+            "decision tick O(footprint): {large_visits} visits"
+        );
+        // ...and within a small factor of the 15x-smaller footprint's
+        // cost (slack covers the selection + migration work the spilled
+        // footprint legitimately does and the 8k one does not)
+        assert!(
+            large_visits < 4 * small_visits + 8192,
+            "visits grew with footprint: small {small_visits}, large {large_visits}"
         );
     }
 

@@ -143,6 +143,8 @@ COMMANDS
   sweep     parallel (machine x workload x policy x seed) grid
             [-w bt-M,ft-M,mg-M,cg-M -p all --seeds 42 --machines paper]
   bench     scale-free perf metrics for the baseline pipeline
+            (incl. the O(touched) epoch instruments: RNG draws/epoch and
+            decision-tick PTE visits/epoch)
             [--quick] [--json DIR]  -> DIR/BENCH_hotpath.json + BENCH_sweep.json
   bench-check  gate fresh metrics against committed BENCH_*.json baselines
             [--baseline F[,F...] --current DIR --tolerance 0.25]
@@ -171,8 +173,9 @@ FLAGS
   --aot          use the AOT/PJRT classifier for HyPlacer (needs artifacts/)
   --quick        short runs (CI)
   --config FILE  TOML-subset config overriding machine/sim/hyplacer knobs
-  -w, --workload NAME   bt|ft|mg|cg|pr|bfs + -S/-M/-L  (default cg-M;
-                        sweep accepts a comma list)
+  -w, --workload NAME   bt|ft|mg|cg (NPB) or pr|bfs (GAP) + -S/-M/-L
+                        (default cg-M; sweep accepts a comma list and the
+                        suite aliases \"npb\" / \"gap\" = whole suite at -M)
   -p, --policy NAME     adm-default|memm|autonuma|memos|nimble|hyplacer|
                         partitioned|interleave-<pct>   (default hyplacer;
                         sweep accepts a comma list, or \"all\" for the
@@ -300,6 +303,25 @@ fn split_list(s: &str) -> Vec<String> {
     s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
 }
 
+/// Expand suite aliases on the sweep workload axis: "npb" / "gap" name
+/// the whole suite at the default -M size class (so `-w gap` unlocks the
+/// ROADMAP's GAP evaluation matrix without spelling every member).
+fn expand_workloads(spec: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for name in split_list(spec) {
+        match name.to_ascii_lowercase().as_str() {
+            "npb" => out.extend(
+                workloads::NPB_NAMES.iter().map(|n| format!("{}-M", n.to_ascii_lowercase())),
+            ),
+            "gap" => out.extend(
+                workloads::GAP_NAMES.iter().map(|n| format!("{}-M", n.to_ascii_lowercase())),
+            ),
+            _ => out.push(name),
+        }
+    }
+    out
+}
+
 /// Parse the sweep machine axis: "paper" or a "D:P" channel split
 /// (1 <= D, 1 <= P, D + P <= 6 — the socket has six channels).
 fn parse_machines(spec: &str) -> Result<Vec<(String, MachineConfig)>, String> {
@@ -330,7 +352,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
     let mut spec = SweepSpec::new(machine, sim, hp);
     spec.workloads = match &args.workload {
-        Some(w) => split_list(w),
+        Some(w) => expand_workloads(w),
         None => ["bt-M", "ft-M", "mg-M", "cg-M"].iter().map(|s| s.to_string()).collect(),
     };
     if let Some(p) = &args.policy {

@@ -16,7 +16,7 @@
 //! observes on BT ("autonuma fails to improve ADM-default on BT").
 
 use crate::config::{MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PageWalker, WalkControl};
+use crate::vm::{MigrationPlan, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
@@ -24,8 +24,8 @@ const PROMOTE_THRESHOLD: u8 = 2;
 const PROOF_DECAY_EPOCHS: u32 = 24;
 
 pub struct AutoNuma {
-    scanner: PageWalker,
-    demote_hand: PageWalker,
+    scanner: SparseWalker,
+    demote_hand: SparseWalker,
     /// access proof counters, lazily sized
     proof: Vec<u8>,
     last_decay: u32,
@@ -39,8 +39,8 @@ pub struct AutoNuma {
 impl AutoNuma {
     pub fn new(cfg: &MachineConfig) -> Self {
         AutoNuma {
-            scanner: PageWalker::new(),
-            demote_hand: PageWalker::new(),
+            scanner: SparseWalker::new(),
+            demote_hand: SparseWalker::new(),
             proof: Vec::new(),
             last_decay: 0,
             // PTE scanning is cheap: cover 16 GiB of address space per
@@ -72,11 +72,15 @@ impl Policy for AutoNuma {
         }
 
         // Sampling scan: observe R bits in the window, count proof, then
-        // clear (the "protect" step of the next sampling round).
+        // clear (the "protect" step of the next sampling round). The
+        // budget still covers `scan_window` table *slots* — preserving
+        // AutoNUMA's sluggish profiling of large footprints — but only
+        // the touched PTEs inside the window cost work (clearing an
+        // untouched PTE is a no-op).
         let mut promote = Vec::new();
         let budget = self.promote_budget;
         let proof = &mut self.proof;
-        self.scanner.walk(pt, self.scan_window, |page, flags, pt| {
+        self.scanner.walk(pt, self.scan_window, PlaneQuery::epoch_touched(), |page, flags, pt| {
             if flags.referenced() {
                 let c = &mut proof[page as usize];
                 *c = c.saturating_add(1);
@@ -100,14 +104,14 @@ impl Policy for AutoNuma {
             let proof = &self.proof;
             // kswapd-style second chance: referenced pages get their bit
             // cleared and survive this pass; unreferenced, proof-less
-            // pages are reclaim victims
-            self.demote_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
-                if flags.tier() == Tier::Dram {
-                    if flags.referenced() {
-                        pt.clear_rd(page);
-                    } else if proof[page as usize] == 0 {
-                        demote.push(page);
-                    }
+            // pages are reclaim victims. DRAM-tier scan with early stop:
+            // O(selected) on mostly-idle DRAM.
+            let dram = PlaneQuery::tier(Tier::Dram);
+            self.demote_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
+                if flags.referenced() {
+                    pt.clear_rd(page);
+                } else if proof[page as usize] == 0 {
+                    demote.push(page);
                 }
                 if demote.len() >= need {
                     WalkControl::Stop

@@ -15,6 +15,17 @@
 //! Epoch flow (mirroring §4.4): gather PTE stats → classify → Control
 //! decides a mode → SelMo selects pages → migration plan (exchange-based
 //! for SWITCH) → DCPMM_CLEAR to open the next delay window.
+//!
+//! The whole tick is **O(touched + selected)**, not O(footprint): the
+//! gather is a sparse walk over set activity bits, classification runs
+//! only over the epoch's *candidates* — pages touched this epoch plus
+//! pages still carrying nonzero EWMA state (`active`) — and selection
+//! merges the candidates' scores with lazily drawn settled pools (every
+//! untouched zero-EWMA page shares one constant score per tier). Since a
+//! settled page's classifier outputs are exactly the zero-input
+//! constants, the sparse tick reproduces the dense full-footprint pass
+//! bit-for-bit (`selmo::tests::sparse_candidate_selection_matches_dense_
+//! reference` pins this).
 
 pub mod classifier;
 pub mod control;
@@ -22,11 +33,11 @@ pub mod native;
 pub mod selmo;
 
 use crate::config::{HyPlacerConfig, MachineConfig};
-use crate::vm::MigrationPlan;
+use crate::vm::{MigrationPlan, PageId};
 
 use classifier::{Classifier, NativeClassifier};
 use native::{PageStats, N_PARAMS};
-use selmo::{PageFindMode, SelMo};
+use selmo::{Candidates, PageFindMode, SelMo};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
@@ -35,9 +46,20 @@ pub struct HyPlacer {
     selmo: SelMo,
     classifier: Box<dyn Classifier>,
     /// Persistent per-page EWMAs (classifier state), lazily sized.
+    /// Settled pages hold exactly 0.0; the `active` list tracks the rest.
     hot: Vec<f32>,
     wr: Vec<f32>,
-    /// Scratch stats buffer reused across epochs.
+    /// Pages with nonzero EWMA state, ascending (the classifier's
+    /// carry-over work set; always a subset of the epoch's candidates).
+    active: Vec<PageId>,
+    active_next: Vec<PageId>,
+    /// Per-epoch scratch (reused; no steady-state allocation): the
+    /// sparse gather's touched pages + their sampled bits, the merged
+    /// candidate list, and the compact classifier input buffer.
+    touched: Vec<PageId>,
+    touched_bits: Vec<(f32, f32)>,
+    candidates: Vec<PageId>,
+    cand_bits: Vec<(f32, f32)>,
     stats: PageStats,
     /// PM write bytes our own migrations caused last epoch. PCMon cannot
     /// distinguish app stores from migration copies, so Control discounts
@@ -73,6 +95,12 @@ impl HyPlacer {
             classifier,
             hot: Vec::new(),
             wr: Vec::new(),
+            active: Vec::new(),
+            active_next: Vec::new(),
+            touched: Vec::new(),
+            touched_bits: Vec::new(),
+            candidates: Vec::new(),
+            cand_bits: Vec::new(),
             stats: PageStats::default(),
             self_pm_write_bytes: 0.0,
             self_pm_read_bytes: 0.0,
@@ -111,9 +139,6 @@ impl HyPlacer {
             self.hot.resize(n, 0.0);
             self.wr.resize(n, 0.0);
         }
-        if self.stats.len() < n {
-            self.stats = PageStats::with_len(n);
-        }
     }
 }
 
@@ -132,23 +157,66 @@ impl Policy for HyPlacer {
         }
         self.ensure_buffers(n);
 
-        // 1. SelMo walk: snapshot R/D (+ window) bits into stats.
-        self.selmo.gather_stats(ctx.pt, &mut self.stats);
-        self.stats.hot_ewma[..n].copy_from_slice(&self.hot[..n]);
-        self.stats.wr_ewma[..n].copy_from_slice(&self.wr[..n]);
+        // 1. SelMo sparse walk: snapshot R/D (+ window) bits of touched
+        // pages only, then fold in the active EWMA carry-overs.
+        self.selmo.gather_touched(ctx.pt, &mut self.touched, &mut self.touched_bits);
+        selmo::merge_candidates(
+            &self.touched,
+            &self.touched_bits,
+            &self.active,
+            &mut self.candidates,
+            &mut self.cand_bits,
+        );
+        let m = self.candidates.len();
 
-        // 2. Classification pass (native or AOT/PJRT).
+        // 2. Classification pass over the compact candidate stats
+        // (native or AOT/PJRT — the kernel is elementwise, so a compact
+        // batch classifies identically to the dense footprint scan).
+        self.stats.resize(m);
+        for ci in 0..m {
+            let page = self.candidates[ci] as usize;
+            let (refd, dirty) = self.cand_bits[ci];
+            self.stats.refd[ci] = refd;
+            self.stats.dirty[ci] = dirty;
+            self.stats.hot_ewma[ci] = self.hot[page];
+            self.stats.wr_ewma[ci] = self.wr[page];
+            self.stats.tier[ci] = match ctx.pt.flags(page as u32).tier() {
+                crate::config::Tier::Pm => 1.0,
+                crate::config::Tier::Dram => 0.0,
+            };
+            self.stats.valid[ci] = 1.0;
+        }
+        ctx.pt.count_pte_visits(m as u64);
         let params = self.params();
-        let out = match self.classifier.classify(&self.stats, &params) {
-            Ok(o) => o,
-            Err(e) => {
-                // AOT failure degrades to a no-op epoch, never a crash.
-                eprintln!("hyplacer: classifier error, skipping epoch: {e:#}");
-                return MigrationPlan::default();
+        let out = if m == 0 {
+            // nothing touched, no EWMA carry-over: the classifier has no
+            // work (selection may still draw from the settled pools)
+            native::ClassifyOutput::default()
+        } else {
+            match self.classifier.classify(&self.stats, &params) {
+                Ok(o) => o,
+                Err(e) => {
+                    // AOT failure degrades to a no-op epoch, never a crash.
+                    eprintln!("hyplacer: classifier error, skipping epoch: {e:#}");
+                    return MigrationPlan::default();
+                }
             }
         };
-        self.hot[..n].copy_from_slice(&out.new_hot[..n]);
-        self.wr[..n].copy_from_slice(&out.new_wr[..n]);
+        // Sparse EWMA write-back; pages decayed to exactly zero leave
+        // the active set (settled pages never need touching — their
+        // dense update would have been 0.0 → 0.0).
+        self.active_next.clear();
+        for ci in 0..m {
+            let page = self.candidates[ci];
+            let nh = out.new_hot[ci];
+            let nw = out.new_wr[ci];
+            self.hot[page as usize] = nh;
+            self.wr[page as usize] = nw;
+            if nh != 0.0 || nw != 0.0 {
+                self.active_next.push(page);
+            }
+        }
+        std::mem::swap(&mut self.active, &mut self.active_next);
 
         // 3. Control decision from occupancy + PCMon, with our own
         // last-epoch migration traffic discounted from the PM write
@@ -188,7 +256,9 @@ impl Policy for HyPlacer {
         let decision = control::decide(&self.cfg, ctx.pt, &pcmon);
         self.last_decision = decision;
 
-        // 4. SelMo PageFind reply → migration plan.
+        // 4. SelMo PageFind reply → migration plan. Selection merges the
+        // candidates' scores with the settled pools (constant zero-input
+        // scores, drawn ascending from the activity index).
         let mut plan = MigrationPlan::default();
         if let Some(d) = decision {
             let mut count = d.count;
@@ -197,14 +267,17 @@ impl Policy for HyPlacer {
                 self.last_was_switch = true;
                 self.pm_bytes_at_switch = pm_app_bytes;
             }
-            let reply = self.selmo.page_find(
-                d.mode,
-                count,
-                &out.demote_score,
-                &out.promote_score,
-                &out.new_hot,
-                0.0,
-            );
+            let settled_dram = native::classify_page(0.0, 0.0, 0.0, 0.0, 0.0, 1.0, &params);
+            let settled_pm = native::classify_page(0.0, 0.0, 0.0, 0.0, 1.0, 1.0, &params);
+            let cand = Candidates {
+                pages: &self.candidates,
+                demote_score: &out.demote_score,
+                promote_score: &out.promote_score,
+                hot: &self.hot,
+                settled_demote: settled_dram.demote_score,
+                settled_promote: settled_pm.promote_score,
+            };
+            let reply = self.selmo.page_find(ctx.pt, d.mode, count, &cand, 0.0);
             match d.mode {
                 PageFindMode::Switch => {
                     for (p, q) in reply.promote.iter().zip(reply.demote.iter()) {
@@ -226,7 +299,8 @@ impl Policy for HyPlacer {
         self.self_pm_read_bytes =
             (plan.promote.len() + plan.exchange.len()) as f64 * page_bytes;
 
-        // 5. DCPMM_CLEAR: open the next delay window for PM pages.
+        // 5. DCPMM_CLEAR: open the next delay window for PM pages
+        // (word-granular through the activity index).
         self.selmo.dcpmm_clear(ctx.pt);
         plan
     }
@@ -378,9 +452,33 @@ mod tests {
         let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 0);
         let after_one = h.hot[0];
         assert!(after_one > 0.0);
+        assert_eq!(h.active, vec![0], "nonzero EWMA keeps the page active");
         // second epoch without touches: decays but persists
         let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 1);
         assert!(h.hot[0] > 0.0 && h.hot[0] < after_one);
+        assert_eq!(h.active, vec![0]);
+    }
+
+    #[test]
+    fn untouched_footprint_yields_no_candidates() {
+        // the decision tick's O(active) promise in miniature: nothing
+        // touched + no EWMA state => zero candidates classified
+        let (m, hp, mut pt) = setup(100, 64);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..32 {
+            pt.allocate(p, Tier::Pm);
+        }
+        let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 0);
+        assert!(h.candidates.is_empty());
+        assert!(h.active.is_empty());
+        // (epoch 0's eager PROMOTE pulled the settled PM pool into DRAM)
+        // touch two now-DRAM pages: only the epoch-touched one becomes a
+        // candidate — a stale window bit on a DRAM page samples all-zero
+        // inputs and must stay settled
+        pt.touch_window(3, false);
+        pt.touch(9, true);
+        let _ = tick(&mut h, &m, &mut pt, PcmonSnapshot::default(), 1);
+        assert_eq!(h.candidates, vec![9]);
     }
 
     #[test]

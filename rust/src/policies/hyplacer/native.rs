@@ -67,6 +67,84 @@ impl PageStats {
     pub fn is_empty(&self) -> bool {
         self.refd.is_empty()
     }
+    /// Resize every stat array to `n` (new entries zeroed). Capacity is
+    /// retained, so the sparse candidate path reuses one buffer across
+    /// epochs without reallocating once the high-water mark is reached.
+    pub fn resize(&mut self, n: usize) {
+        self.refd.resize(n, 0.0);
+        self.dirty.resize(n, 0.0);
+        self.hot_ewma.resize(n, 0.0);
+        self.wr_ewma.resize(n, 0.0);
+        self.tier.resize(n, 0.0);
+        self.valid.resize(n, 0.0);
+    }
+}
+
+/// Per-page classification outputs — the scalar core shared by the dense
+/// pass ([`classify`]) and HyPlacer's sparse candidate path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PageScore {
+    pub new_hot: f32,
+    pub new_wr: f32,
+    pub class: f32,
+    pub demote_score: f32,
+    pub promote_score: f32,
+}
+
+/// Classify one page. Inputs use the kernel's float encodings (`tier`
+/// 0.0 = DRAM / 1.0 = PM, `valid` 0.0/1.0). This is exactly one
+/// iteration of [`classify`]'s loop — the dense pass calls it per index,
+/// so the sparse path (which calls it only for candidate pages and reads
+/// the zero-input constants for settled pages) is bit-identical to the
+/// full-array scan by construction.
+#[inline]
+pub fn classify_page(
+    refd: f32,
+    dirty: f32,
+    hot: f32,
+    wr: f32,
+    tier: f32,
+    valid: f32,
+    params: &[f32; N_PARAMS],
+) -> PageScore {
+    let alpha = params[PARAM_ALPHA];
+    let hot_thresh = params[PARAM_HOT_THRESH];
+    let wr_thresh = params[PARAM_WR_THRESH];
+    let wr_weight = params[PARAM_WR_WEIGHT];
+    let cold_bias = params[PARAM_COLD_BIAS];
+    let age_weight = params[PARAM_AGE_WEIGHT];
+
+    let touched = refd.max(dirty);
+    let new_hot = alpha * touched.min(1.0) + (1.0 - alpha) * hot;
+    let new_wr = alpha * dirty.min(1.0) + (1.0 - alpha) * wr;
+
+    let is_hot = new_hot > hot_thresh;
+    let is_write = is_hot && new_wr > wr_thresh;
+    let class = if is_write {
+        CLASS_WRITE
+    } else if is_hot {
+        CLASS_READ
+    } else {
+        CLASS_COLD
+    };
+
+    let valid = valid > 0.5;
+    let in_dram = tier < 0.5;
+    let never = touched < 0.5 && new_hot <= hot_thresh;
+    let demote = age_weight * (1.0 - new_hot)
+        + (1.0 - age_weight) * (1.0 - new_wr)
+        + if never { cold_bias } else { 0.0 };
+    let demote_score = if in_dram && valid { demote } else { -1.0 };
+    let promote = new_hot + wr_weight * new_wr;
+    let promote_score = if !in_dram && valid { promote } else { -1.0 };
+
+    PageScore {
+        new_hot: if valid { new_hot } else { 0.0 },
+        new_wr: if valid { new_wr } else { 0.0 },
+        class: if valid { class } else { CLASS_COLD },
+        demote_score,
+        promote_score,
+    }
 }
 
 /// Per-page outputs + epoch aggregates.
@@ -84,13 +162,6 @@ pub struct ClassifyOutput {
 /// the aggregate reduction of model.py).
 pub fn classify(stats: &PageStats, params: &[f32; N_PARAMS]) -> ClassifyOutput {
     let n = stats.len();
-    let alpha = params[PARAM_ALPHA];
-    let hot_thresh = params[PARAM_HOT_THRESH];
-    let wr_thresh = params[PARAM_WR_THRESH];
-    let wr_weight = params[PARAM_WR_WEIGHT];
-    let cold_bias = params[PARAM_COLD_BIAS];
-    let age_weight = params[PARAM_AGE_WEIGHT];
-
     let mut out = ClassifyOutput {
         new_hot: vec![0.0; n],
         new_wr: vec![0.0; n],
@@ -108,48 +179,27 @@ pub fn classify(stats: &PageStats, params: &[f32; N_PARAMS]) -> ClassifyOutput {
     let (tier_s, valid_s) = (&stats.tier[..n], &stats.valid[..n]);
 
     for i in 0..n {
-        let refd = refd_s[i];
-        let dirty = dirty_s[i];
-        let touched = refd.max(dirty);
-        let new_hot = alpha * touched.min(1.0) + (1.0 - alpha) * hot_s[i];
-        let new_wr = alpha * dirty.min(1.0) + (1.0 - alpha) * wr_s[i];
+        let s = classify_page(
+            refd_s[i], dirty_s[i], hot_s[i], wr_s[i], tier_s[i], valid_s[i], params,
+        );
+        out.new_hot[i] = s.new_hot;
+        out.new_wr[i] = s.new_wr;
+        out.class[i] = s.class;
+        out.demote_score[i] = s.demote_score;
+        out.promote_score[i] = s.promote_score;
 
-        let is_hot = new_hot > hot_thresh;
-        let is_write = is_hot && new_wr > wr_thresh;
-        let class = if is_write {
-            CLASS_WRITE
-        } else if is_hot {
-            CLASS_READ
-        } else {
-            CLASS_COLD
-        };
-
-        let valid = valid_s[i] > 0.5;
-        let in_dram = tier_s[i] < 0.5;
-        let never = touched < 0.5 && new_hot <= hot_thresh;
-        let demote = age_weight * (1.0 - new_hot)
-            + (1.0 - age_weight) * (1.0 - new_wr)
-            + if never { cold_bias } else { 0.0 };
-        let demote_score = if in_dram && valid { demote } else { -1.0 };
-        let promote = new_hot + wr_weight * new_wr;
-        let promote_score = if !in_dram && valid { promote } else { -1.0 };
-
-        out.new_hot[i] = if valid { new_hot } else { 0.0 };
-        out.new_wr[i] = if valid { new_wr } else { 0.0 };
-        out.class[i] = if valid { class } else { CLASS_COLD };
-        out.demote_score[i] = demote_score;
-        out.promote_score[i] = promote_score;
-
-        if valid {
-            let (v_idx, c_base, hot_idx, wr_idx) = if in_dram {
+        if valid_s[i] > 0.5 {
+            // masked == unmasked for valid pages, so the aggregates read
+            // the PageScore outputs directly
+            let (v_idx, c_base, hot_idx, wr_idx) = if tier_s[i] < 0.5 {
                 (AGG_DRAM_VALID, AGG_DRAM_COLD, AGG_DRAM_HOT_SUM, AGG_DRAM_WR_SUM)
             } else {
                 (AGG_PM_VALID, AGG_PM_COLD, AGG_PM_HOT_SUM, AGG_PM_WR_SUM)
             };
             agg[v_idx] += 1.0;
-            agg[c_base + class as usize] += 1.0;
-            agg[hot_idx] += new_hot as f64;
-            agg[wr_idx] += new_wr as f64;
+            agg[c_base + s.class as usize] += 1.0;
+            agg[hot_idx] += s.new_hot as f64;
+            agg[wr_idx] += s.new_wr as f64;
         }
     }
     for (o, a) in out.aggregates.iter_mut().zip(agg.iter()) {

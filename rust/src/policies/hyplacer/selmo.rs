@@ -3,22 +3,30 @@
 //! On a real system SelMo is a kernel module that drives the exported
 //! `walk_page_range()` with one PTE callback per PageFind mode, observes
 //! and manipulates R/D bits, and replies with the selected page array.
-//! Here it plays exactly that role against the [`crate::vm`] substrate:
+//! Here it plays exactly that role against the [`crate::vm`] substrate —
+//! but every pass rides the page table's hierarchical activity index, so
+//! a decision tick costs O(touched + selected) PTE visits instead of
+//! O(footprint):
 //!
-//!  * [`SelMo::gather_stats`] — the walk that snapshots every PTE's
-//!    R/D (+ delay-window) bits into the dense f32 arrays handed to the
-//!    classifier (the vectorized form of the per-PTE callbacks; the AOT
-//!    kernel then computes per-mode scores in one fused pass),
-//!  * [`SelMo::page_find`] — mode-specific selection on the score arrays
-//!    (the reply-back phase), with the budget semantics of Table 2,
-//!  * [`SelMo::dcpmm_clear`] — the DCPMM_CLEAR walk resetting the delay
-//!    window before a promotion decision.
+//!  * [`SelMo::gather_touched`] — two [`SparseWalker`] passes (epoch
+//!    R/D-touched pages of both tiers, plus PM pages with delay-window
+//!    bits), emitting a compact candidate list (ascending page order)
+//!    with per-page classifier inputs instead of zero-filling
+//!    footprint-sized f32 arrays,
+//!  * [`SelMo::page_find`] — mode-specific selection (the reply-back
+//!    phase, budget semantics of Table 2) over the candidates' scores
+//!    *merged with the settled pools*: every valid page that is neither
+//!    touched nor carrying EWMA state shares one constant score per
+//!    tier, so the pools are drawn lazily in ascending page order from
+//!    the index and at most k pool pages are ever examined. The merged
+//!    result equals the dense full-array top-k bit-for-bit (same strict
+//!    total order: score desc, page asc),
+//!  * [`SelMo::dcpmm_clear`] — the DCPMM_CLEAR pass resetting the delay
+//!    window, whole 64-page index words at a time.
 
 use crate::config::Tier;
-use crate::util::top_k_indices;
-use crate::vm::{PageId, PageTable, PageWalker, WalkControl};
-
-use super::native::PageStats;
+use crate::util::TopK;
+use crate::vm::{PageId, PageTable, PlaneQuery, SparseWalker, WalkControl};
 
 /// PageFind modes (paper Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,70 +76,243 @@ pub struct PageFindReply {
     pub demote: Vec<PageId>,
 }
 
+/// The compact classifier view of one epoch handed to [`SelMo::page_find`]:
+/// candidate pages (ascending page id — touched this epoch or carrying
+/// EWMA state) with their per-candidate scores, the dense hotness array
+/// for SWITCH benefit checks (settled pages hold 0.0), and the constant
+/// scores every *settled* page (valid, untouched, zero EWMAs) of each
+/// tier shares — the zero-input classifier outputs.
+pub struct Candidates<'a> {
+    pub pages: &'a [PageId],
+    pub demote_score: &'a [f32],
+    pub promote_score: &'a [f32],
+    /// Dense per-page hotness estimates (post-update EWMAs).
+    pub hot: &'a [f32],
+    /// `classify_page(0,0,0,0, tier=DRAM, valid=1).demote_score`.
+    pub settled_demote: f32,
+    /// `classify_page(0,0,0,0, tier=PM, valid=1).promote_score`.
+    pub settled_promote: f32,
+}
+
+/// Merge two ascending page streams into `pages` / `bits`,
+/// deduplicating equal pages (stream `a` wins — on a duplicate both
+/// streams sampled the same PTE, so the bits agree). Stream `a` carries
+/// explicit per-page bits; stream `b`'s bits come from `b_bit(index)`.
+fn merge_ascending(
+    a_pages: &[PageId],
+    a_bits: &[(f32, f32)],
+    b_pages: &[PageId],
+    b_bit: impl Fn(usize) -> (f32, f32),
+    pages: &mut Vec<PageId>,
+    bits: &mut Vec<(f32, f32)>,
+) {
+    pages.clear();
+    bits.clear();
+    let (mut ai, mut bi) = (0usize, 0usize);
+    while ai < a_pages.len() || bi < b_pages.len() {
+        let (page, bit) = match (a_pages.get(ai), b_pages.get(bi)) {
+            (Some(&a), Some(&b)) if a < b => {
+                ai += 1;
+                (a, a_bits[ai - 1])
+            }
+            (Some(&a), Some(&b)) if b < a => {
+                bi += 1;
+                (b, b_bit(bi - 1))
+            }
+            (Some(&a), Some(_)) => {
+                ai += 1;
+                bi += 1;
+                (a, a_bits[ai - 1])
+            }
+            (Some(&a), None) => {
+                ai += 1;
+                (a, a_bits[ai - 1])
+            }
+            (None, Some(&b)) => {
+                bi += 1;
+                (b, b_bit(bi - 1))
+            }
+            (None, None) => unreachable!("loop condition"),
+        };
+        pages.push(page);
+        bits.push(bit);
+    }
+}
+
+/// Merge the gather's touched pages (ascending, with their sampled
+/// classifier bits) with the ascending `active` EWMA carry-over set into
+/// the deduplicated candidate list — an untouched active page samples
+/// zero bits. Shared by [`crate::policies::hyplacer::HyPlacer`]'s epoch
+/// tick and the dense-equivalence test, so the bit-identity proof
+/// exercises the production merge.
+pub fn merge_candidates(
+    touched: &[PageId],
+    touched_bits: &[(f32, f32)],
+    active: &[PageId],
+    pages: &mut Vec<PageId>,
+    bits: &mut Vec<(f32, f32)>,
+) {
+    merge_ascending(touched, touched_bits, active, |_| (0.0, 0.0), pages, bits);
+}
+
+/// Top-`k` selection for one tier: explicit candidate entries merged
+/// with the tier's settled pool at `pool_score`. The pool is drawn in
+/// ascending page order, and pool entries rank strictly downward, so
+/// the draw stops at the first rejection — at most k pool pages (plus
+/// candidate skips) are examined, never the tier population. Every pool
+/// draw is charged to the table's `pte_visits` counter, so the metric
+/// would expose a regression that defeats the early stop.
+#[allow(clippy::too_many_arguments)]
+fn select_into(
+    topk: &mut TopK,
+    pt: &mut PageTable,
+    tier: Tier,
+    k: usize,
+    floor: f32,
+    cand_pages: &[PageId],
+    cand_scores: &[f32],
+    pool_score: f32,
+    out: &mut Vec<PageId>,
+) {
+    topk.begin(k, floor);
+    for (i, &page) in cand_pages.iter().enumerate() {
+        topk.offer(page, cand_scores[i]);
+    }
+    if pool_score >= floor && !pool_score.is_nan() {
+        let mut drawn = 0u64;
+        let mut ci = 0usize; // merge cursor — pool and candidates both ascend
+        for page in pt.iter_matching(PlaneQuery::tier(tier)) {
+            drawn += 1;
+            while ci < cand_pages.len() && cand_pages[ci] < page {
+                ci += 1;
+            }
+            if ci < cand_pages.len() && cand_pages[ci] == page {
+                continue; // already offered with its own score
+            }
+            if !topk.offer(page, pool_score) {
+                break; // later pool pages rank even lower
+            }
+        }
+        pt.count_pte_visits(drawn);
+    }
+    topk.drain_into(out);
+}
+
+/// Per-tier classifier sample of one PTE: DRAM pages report their
+/// full-epoch R/D bits (demotion wants "was this touched at all since
+/// the last clear"); DCPMM pages report the **delay-window** bits
+/// (promotion wants "accessed within the 50 ms window after
+/// DCPMM_CLEAR" — the paper's frequency filter).
+fn sample_bits(flags: crate::vm::PageFlags) -> (f32, f32) {
+    match flags.tier() {
+        Tier::Dram => (
+            if flags.referenced() { 1.0 } else { 0.0 },
+            if flags.dirty() { 1.0 } else { 0.0 },
+        ),
+        Tier::Pm => (
+            if flags.window_referenced() { 1.0 } else { 0.0 },
+            if flags.window_dirty() { 1.0 } else { 0.0 },
+        ),
+    }
+}
+
 pub struct SelMo {
-    stats_hand: PageWalker,
-    clear_hand: PageWalker,
+    /// Sparse hands for the candidate gather. Every gather is a full
+    /// wrap, so they always start at page 0 and emit ascending pages.
+    epoch_hand: SparseWalker,
+    window_hand: SparseWalker,
+    /// Gather scratch (reused across epochs): pass-1 epoch-touched pages
+    /// and pass-2 PM window-touched pages, merged into the caller's out.
+    epoch_pages: Vec<PageId>,
+    epoch_bits: Vec<(f32, f32)>,
+    window_pages: Vec<PageId>,
+    window_bits: Vec<(f32, f32)>,
     /// Promotion candidates must score above this (an "intensive"
     /// floor for PROMOTE_INT/SWITCH, derived from classifier params).
     pub intensive_floor: f32,
+    /// Reusable selection scratch (no per-tick heap allocation).
+    promote_topk: TopK,
+    demote_topk: TopK,
 }
 
 impl SelMo {
     pub fn new(intensive_floor: f32) -> Self {
-        SelMo { stats_hand: PageWalker::new(), clear_hand: PageWalker::new(), intensive_floor }
+        SelMo {
+            epoch_hand: SparseWalker::new(),
+            window_hand: SparseWalker::new(),
+            epoch_pages: Vec::new(),
+            epoch_bits: Vec::new(),
+            window_pages: Vec::new(),
+            window_bits: Vec::new(),
+            intensive_floor,
+            promote_topk: TopK::new(),
+            demote_topk: TopK::new(),
+        }
     }
 
-    /// Snapshot PTE state into classifier input arrays.
+    /// The stats walk, in two sparse passes over the activity index:
     ///
-    /// DRAM pages report their full-epoch R/D bits (demotion wants "was
-    /// this touched at all since the last clear"); DCPMM pages report the
-    /// **delay-window** bits (promotion wants "accessed within the 50 ms
-    /// window after DCPMM_CLEAR" — the paper's frequency filter). The
-    /// walk also clears full-epoch bits behind itself (CLOCK behaviour).
-    pub fn gather_stats(&mut self, pt: &mut PageTable, stats: &mut PageStats) {
+    ///  1. every page with an epoch R/D bit set (both tiers), sampling
+    ///     by the tier rule of [`sample_bits`] and clearing the epoch
+    ///     bits behind the walk (CLOCK behaviour — clearing untouched
+    ///     PTEs is a no-op, which is why skipping them is exact),
+    ///  2. every **PM** page with a delay-window bit set (the promotion
+    ///     filter input).
+    ///
+    /// The merged, deduplicated result lands in `pages`/`bits`
+    /// (ascending). A DRAM page carrying only stale delay-window bits is
+    /// deliberately *not* gathered: its classifier inputs are all zero
+    /// (DRAM samples epoch bits), so it scores exactly like a settled
+    /// page — gathering it would only grow the candidate list without
+    /// changing any decision, eroding the O(touched + selected) bound
+    /// (window bits on DRAM pages are never cleared, by the same
+    /// semantics the dense walk had).
+    pub fn gather_touched(
+        &mut self,
+        pt: &mut PageTable,
+        pages: &mut Vec<PageId>,
+        bits: &mut Vec<(f32, f32)>,
+    ) {
         let n = pt.len() as usize;
-        debug_assert!(stats.len() >= n, "stats buffer too small");
-        // zero only the prefix in use
-        for v in [
-            &mut stats.refd[..n],
-            &mut stats.dirty[..n],
-            &mut stats.tier[..n],
-            &mut stats.valid[..n],
-        ] {
-            v.fill(0.0);
-        }
-        self.stats_hand.walk(pt, n, |page, flags, pt| {
-            let i = page as usize;
-            stats.valid[i] = 1.0;
-            match flags.tier() {
-                Tier::Dram => {
-                    stats.tier[i] = 0.0;
-                    stats.refd[i] = if flags.referenced() { 1.0 } else { 0.0 };
-                    stats.dirty[i] = if flags.dirty() { 1.0 } else { 0.0 };
-                }
-                Tier::Pm => {
-                    stats.tier[i] = 1.0;
-                    stats.refd[i] = if flags.window_referenced() { 1.0 } else { 0.0 };
-                    stats.dirty[i] = if flags.window_dirty() { 1.0 } else { 0.0 };
-                }
-            }
+        self.epoch_pages.clear();
+        self.epoch_bits.clear();
+        self.window_pages.clear();
+        self.window_bits.clear();
+        let (epages, ebits) = (&mut self.epoch_pages, &mut self.epoch_bits);
+        self.epoch_hand.walk(pt, n, PlaneQuery::epoch_touched(), |page, flags, pt| {
+            epages.push(page);
+            ebits.push(sample_bits(flags));
             pt.clear_rd(page);
             WalkControl::Continue
         });
-    }
-
-    /// DCPMM_CLEAR: reset delay-window bits on all resident PM pages.
-    pub fn dcpmm_clear(&mut self, pt: &mut PageTable) -> usize {
-        let n = pt.len() as usize;
-        let mut cleared = 0;
-        self.clear_hand.walk(pt, n, |page, flags, pt| {
-            if flags.tier() == Tier::Pm {
-                pt.clear_window(page);
-                cleared += 1;
-            }
+        let wq = PlaneQuery::any_of(
+            crate::vm::PageFlags::WREF | crate::vm::PageFlags::WDIRTY,
+        )
+        .in_tier(Tier::Pm);
+        let (wpages, wbits) = (&mut self.window_pages, &mut self.window_bits);
+        self.window_hand.walk(pt, n, wq, |page, flags, _pt| {
+            wpages.push(page);
+            wbits.push(sample_bits(flags));
             WalkControl::Continue
         });
-        cleared
+        let window_bits = &self.window_bits;
+        merge_ascending(
+            &self.epoch_pages,
+            &self.epoch_bits,
+            &self.window_pages,
+            |i| window_bits[i],
+            pages,
+            bits,
+        );
+    }
+
+    /// DCPMM_CLEAR: reset delay-window bits on all resident PM pages,
+    /// whole index words at a time. Returns the PM-resident page count
+    /// (every resident page's delay window re-arms), matching the
+    /// per-page walk this replaces.
+    pub fn dcpmm_clear(&mut self, pt: &mut PageTable) -> usize {
+        pt.clear_window_pm();
+        pt.used_pages(Tier::Pm) as usize
     }
 
     /// Minimum hotness advantage an intensive PM page must have over the
@@ -141,41 +322,91 @@ impl SelMo {
     /// zero benefit.
     pub const SWITCH_MARGIN: f32 = 0.10;
 
-    /// The selection (reply-back) phase: given the classifier's score
-    /// arrays (and the hotness estimates for SWITCH benefit checks),
-    /// answer a PageFind request for up to `count` pages.
+    /// The selection (reply-back) phase: answer a PageFind request for up
+    /// to `count` pages from the candidate scores merged with the settled
+    /// pools (see [`Candidates`]). Takes the table mutably only to charge
+    /// pool draws to its `pte_visits` instrument.
     pub fn page_find(
-        &self,
+        &mut self,
+        pt: &mut PageTable,
         mode: PageFindMode,
         count: usize,
-        demote_score: &[f32],
-        promote_score: &[f32],
-        new_hot: &[f32],
+        cand: &Candidates<'_>,
         switch_floor: f32,
     ) -> PageFindReply {
         let mut reply = PageFindReply::default();
         match mode {
             PageFindMode::Demote => {
-                reply.demote = top_k_indices(demote_score, count, 0.0);
+                select_into(
+                    &mut self.demote_topk,
+                    pt,
+                    Tier::Dram,
+                    count,
+                    0.0,
+                    cand.pages,
+                    cand.demote_score,
+                    cand.settled_demote,
+                    &mut reply.demote,
+                );
             }
             PageFindMode::Promote => {
                 // eager promotion: any resident PM page qualifies,
-                // hottest first
-                reply.promote = top_k_indices(promote_score, count, 0.0);
+                // hottest first (the settled pool scores 0.0 ≥ floor)
+                select_into(
+                    &mut self.promote_topk,
+                    pt,
+                    Tier::Pm,
+                    count,
+                    0.0,
+                    cand.pages,
+                    cand.promote_score,
+                    cand.settled_promote,
+                    &mut reply.promote,
+                );
             }
             PageFindMode::PromoteInt => {
-                reply.promote = top_k_indices(promote_score, count, self.intensive_floor);
+                select_into(
+                    &mut self.promote_topk,
+                    pt,
+                    Tier::Pm,
+                    count,
+                    self.intensive_floor,
+                    cand.pages,
+                    cand.promote_score,
+                    cand.settled_promote,
+                    &mut reply.promote,
+                );
             }
             PageFindMode::Switch => {
-                let promote = top_k_indices(promote_score, count, self.intensive_floor);
-                let demote = top_k_indices(demote_score, promote.len(), 0.0);
+                select_into(
+                    &mut self.promote_topk,
+                    pt,
+                    Tier::Pm,
+                    count,
+                    self.intensive_floor,
+                    cand.pages,
+                    cand.promote_score,
+                    cand.settled_promote,
+                    &mut reply.promote,
+                );
+                select_into(
+                    &mut self.demote_topk,
+                    pt,
+                    Tier::Dram,
+                    reply.promote.len(),
+                    0.0,
+                    cand.pages,
+                    cand.demote_score,
+                    cand.settled_demote,
+                    &mut reply.demote,
+                );
                 // promote is hottest-first, demote is coldest-first: the
                 // first pair failing the benefit margin means every later
                 // pair fails too.
                 let mut pairs = 0;
-                for (p, d) in promote.iter().zip(demote.iter()) {
-                    let hp = new_hot[*p as usize];
-                    let hd = new_hot[*d as usize];
+                for (p, d) in reply.promote.iter().zip(reply.demote.iter()) {
+                    let hp = cand.hot[*p as usize];
+                    let hd = cand.hot[*d as usize];
                     // per-pair margin AND population floor: the candidate
                     // must beat the victim *and* the average DRAM page —
                     // otherwise EWMA noise outliers of uniformly hot
@@ -186,8 +417,8 @@ impl SelMo {
                         break;
                     }
                 }
-                reply.promote = promote[..pairs].to_vec();
-                reply.demote = demote[..pairs].to_vec();
+                reply.promote.truncate(pairs);
+                reply.demote.truncate(pairs);
             }
             PageFindMode::DcpmmClear => {}
         }
@@ -198,6 +429,8 @@ impl SelMo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policies::hyplacer::native::{classify, classify_page, PageStats, N_PARAMS};
+    use crate::util::{top_k_indices, Rng64};
 
     fn table() -> PageTable {
         let mut pt = PageTable::new(8, 1024, 100 * 1024, 100 * 1024);
@@ -227,17 +460,63 @@ mod tests {
         pt.touch(0, true); // DRAM epoch-dirty
         pt.touch(5, true); // PM epoch-dirty, but NO window access
         pt.touch_window(6, false); // PM window-read
-        let mut stats = PageStats::with_len(8);
-        selmo.gather_stats(&mut pt, &mut stats);
-        assert_eq!(stats.dirty[0], 1.0);
-        assert_eq!(stats.tier[0], 0.0);
+        let mut pages = Vec::new();
+        let mut bits = Vec::new();
+        selmo.gather_touched(&mut pt, &mut pages, &mut bits);
+        // ascending candidate order; untouched pages never show up
+        assert_eq!(pages, vec![0, 5, 6]);
+        // DRAM page 0: epoch bits
+        assert_eq!(bits[0], (1.0, 1.0));
         // PM page 5: epoch bit ignored for PM (delay filter)
-        assert_eq!(stats.refd[5], 0.0);
-        assert_eq!(stats.refd[6], 1.0);
-        assert_eq!(stats.dirty[6], 0.0);
-        assert_eq!(stats.valid.iter().sum::<f32>(), 8.0);
-        // walk cleared the epoch bits
+        assert_eq!(bits[1], (0.0, 0.0));
+        // PM page 6: window-read, not window-dirty
+        assert_eq!(bits[2], (1.0, 0.0));
+        // walk cleared the epoch bits behind itself
         assert!(!pt.flags(0).dirty());
+        assert!(!pt.flags(5).referenced());
+        // ...but not the delay-window bits (DCPMM_CLEAR owns those)
+        assert!(pt.flags(6).window_referenced());
+        pt.check_index_consistent().unwrap();
+    }
+
+    #[test]
+    fn dram_window_only_pages_are_not_candidates() {
+        // A stale delay-window bit on a DRAM page must not make it a
+        // perpetual candidate: DRAM samples epoch bits, so its
+        // classifier inputs would be all-zero anyway (settled scores) —
+        // gathering it would erode the O(touched + selected) bound.
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        pt.touch_window(2, true); // DRAM, window-only
+        pt.touch_window(6, true); // PM, window-only: a real candidate
+        let mut pages = Vec::new();
+        let mut bits = Vec::new();
+        selmo.gather_touched(&mut pt, &mut pages, &mut bits);
+        assert_eq!(pages, vec![6]);
+        assert_eq!(bits, vec![(1.0, 1.0)]);
+        // the stale DRAM bit survives (same as the dense walk) but keeps
+        // being skipped on every later gather
+        assert!(pt.flags(2).window_dirty());
+        selmo.gather_touched(&mut pt, &mut pages, &mut bits);
+        assert_eq!(pages, vec![6], "PM window bits persist until DCPMM_CLEAR");
+        selmo.dcpmm_clear(&mut pt);
+        selmo.gather_touched(&mut pt, &mut pages, &mut bits);
+        assert!(pages.is_empty());
+    }
+
+    #[test]
+    fn merge_candidates_dedups_and_keeps_touched_bits() {
+        let touched = [2u32, 5, 9];
+        let tbits = [(1.0f32, 0.0f32), (0.0, 1.0), (1.0, 1.0)];
+        let active = [1u32, 5, 12];
+        let mut pages = Vec::new();
+        let mut bits = Vec::new();
+        merge_candidates(&touched, &tbits, &active, &mut pages, &mut bits);
+        assert_eq!(pages, vec![1, 2, 5, 9, 12]);
+        assert_eq!(
+            bits,
+            vec![(0.0, 0.0), (1.0, 0.0), (0.0, 1.0), (1.0, 1.0), (0.0, 0.0)]
+        );
     }
 
     #[test]
@@ -252,37 +531,89 @@ mod tests {
         assert!(!pt.flags(5).window_dirty());
     }
 
+    /// Candidate view helper: pages 0..4 DRAM, 4..8 PM; explicit scores
+    /// for the candidate subset, constant scores for the settled rest.
+    fn cand<'a>(
+        pages: &'a [PageId],
+        demote: &'a [f32],
+        promote: &'a [f32],
+        hot: &'a [f32],
+        settled_demote: f32,
+        settled_promote: f32,
+    ) -> Candidates<'a> {
+        Candidates {
+            pages,
+            demote_score: demote,
+            promote_score: promote,
+            hot,
+            settled_demote,
+            settled_promote,
+        }
+    }
+
     #[test]
-    fn page_find_demote_selects_top_scores() {
-        let selmo = SelMo::new(0.3);
-        let demote = vec![0.9, -1.0, 0.5, 0.7, -1.0, -1.0, -1.0, -1.0];
-        let promote = vec![-1.0; 8];
-        let hot = vec![0.0f32; 8];
-        let r = selmo.page_find(PageFindMode::Demote, 2, &demote, &promote, &hot, 0.0);
+    fn page_find_demote_merges_candidates_with_settled_pool() {
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        let pages = [0u32, 2, 3];
+        let demote = [0.9f32, 0.5, 0.7];
+        let promote = [-1.0f32; 3];
+        let hot = [0.0f32; 8];
+        let c = cand(&pages, &demote, &promote, &hot, 0.1, 0.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Demote, 2, &c, 0.0);
         assert_eq!(r.demote, vec![0, 3]);
         assert!(r.promote.is_empty());
+        // a larger budget reaches past the candidates into the settled
+        // pool (page 1 is the only settled DRAM page, at score 0.1)
+        let r = selmo.page_find(&mut pt, PageFindMode::Demote, 5, &c, 0.0);
+        assert_eq!(r.demote, vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn eager_promote_includes_settled_pm_pages_after_hot_ones() {
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.5);
+        // only page 6 is a candidate (window-hot); 4, 5, 7 are settled
+        let pages = [6u32];
+        let promote = [0.9f32];
+        let demote = [-1.0f32];
+        let hot = [0.0f32; 8];
+        let c = cand(&pages, &demote, &promote, &hot, 0.2, 0.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Promote, 3, &c, 0.0);
+        // hottest first, then the settled pool ascending by page id
+        assert_eq!(r.promote, vec![6, 4, 5]);
+        // PROMOTE_INT's intensive floor excludes the settled pool
+        let r = selmo.page_find(&mut pt, PageFindMode::PromoteInt, 3, &c, 0.0);
+        assert_eq!(r.promote, vec![6]);
     }
 
     #[test]
     fn promote_int_respects_floor() {
-        let selmo = SelMo::new(0.5);
-        let promote = vec![-1.0, -1.0, -1.0, -1.0, 0.9, 0.2, 0.6, 0.1];
-        let demote = vec![-1.0; 8];
-        let hot = vec![0.0f32; 8];
-        let eager = selmo.page_find(PageFindMode::Promote, 10, &demote, &promote, &hot, 0.0);
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.5);
+        let pages = [4u32, 5, 6, 7];
+        let promote = [0.9f32, 0.2, 0.6, 0.1];
+        let demote = [-1.0f32; 4];
+        let hot = [0.0f32; 8];
+        let c = cand(&pages, &demote, &promote, &hot, 0.0, 0.0);
+        let eager = selmo.page_find(&mut pt, PageFindMode::Promote, 10, &c, 0.0);
         assert_eq!(eager.promote, vec![4, 6, 5, 7]);
-        let intensive = selmo.page_find(PageFindMode::PromoteInt, 10, &demote, &promote, &hot, 0.0);
+        let intensive = selmo.page_find(&mut pt, PageFindMode::PromoteInt, 10, &c, 0.0);
         assert_eq!(intensive.promote, vec![4, 6]);
     }
 
     #[test]
     fn switch_pairs_equal_counts() {
-        let selmo = SelMo::new(0.5);
-        let promote = vec![-1.0, -1.0, -1.0, -1.0, 0.9, 0.8, 0.7, 0.1];
-        let demote = vec![0.9, 0.8, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0];
-        // PM candidates much hotter than the DRAM victims
-        let hot = vec![0.1, 0.2, 0.0, 0.0, 0.9, 0.8, 0.7, 0.0];
-        let r = selmo.page_find(PageFindMode::Switch, 3, &demote, &promote, &hot, 0.0);
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.5);
+        let pages = [0u32, 1, 4, 5, 6];
+        let demote = [0.9f32, 0.8, -1.0, -1.0, -1.0];
+        let promote = [-1.0f32, -1.0, 0.9, 0.8, 0.7];
+        // PM candidates much hotter than the DRAM victims; settled pool
+        // scores below zero keep pages 2, 3, 7 out
+        let hot = [0.1f32, 0.2, 0.0, 0.0, 0.9, 0.8, 0.7, 0.0];
+        let c = cand(&pages, &demote, &promote, &hot, -1.0, -1.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Switch, 3, &c, 0.0);
         // 3 intensive PM pages but only 2 cold DRAM victims => 2 pairs
         assert_eq!(r.promote.len(), 2);
         assert_eq!(r.demote.len(), 2);
@@ -291,26 +622,185 @@ mod tests {
 
     #[test]
     fn switch_requires_hotness_margin() {
-        let selmo = SelMo::new(0.5);
-        let promote = vec![-1.0, -1.0, 0.9, 0.8];
-        let demote = vec![0.9, 0.8, -1.0, -1.0];
+        let mut pt = PageTable::new(4, 1024, 100 * 1024, 100 * 1024);
+        pt.allocate(0, Tier::Dram);
+        pt.allocate(1, Tier::Dram);
+        pt.allocate(2, Tier::Pm);
+        pt.allocate(3, Tier::Pm);
+        let mut selmo = SelMo::new(0.5);
+        let pages = [0u32, 1, 2, 3];
+        let demote = [0.9f32, 0.8, -1.0, -1.0];
+        let promote = [-1.0f32, -1.0, 0.9, 0.8];
         // PM pages no hotter than the DRAM victims: churn guard kicks in
-        let hot = vec![0.5, 0.5, 0.55, 0.5];
-        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.0);
+        let hot = [0.5f32, 0.5, 0.55, 0.5];
+        let c = cand(&pages, &demote, &promote, &hot, -1.0, -1.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Switch, 2, &c, 0.0);
         assert!(r.promote.is_empty(), "equal-hotness switch must be refused");
         // give the PM pages a real advantage
-        let hot = vec![0.2, 0.2, 0.9, 0.9];
-        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.0);
+        let hot = [0.2f32, 0.2, 0.9, 0.9];
+        let c = cand(&pages, &demote, &promote, &hot, -1.0, -1.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Switch, 2, &c, 0.0);
         assert_eq!(r.promote.len(), 2);
         // ...but a high population floor (hot average DRAM) refuses it
-        let r = selmo.page_find(PageFindMode::Switch, 2, &demote, &promote, &hot, 0.95);
+        let r = selmo.page_find(&mut pt, PageFindMode::Switch, 2, &c, 0.95);
         assert!(r.promote.is_empty(), "population floor must block noise switches");
     }
 
     #[test]
     fn clear_mode_selects_nothing() {
-        let selmo = SelMo::new(0.5);
-        let r = selmo.page_find(PageFindMode::DcpmmClear, 5, &[0.5], &[0.5], &[0.5], 0.0);
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.5);
+        let pages = [0u32];
+        let demote = [0.5f32];
+        let promote = [0.5f32];
+        let hot = [0.5f32; 8];
+        let c = cand(&pages, &demote, &promote, &hot, 0.5, 0.5);
+        let r = selmo.page_find(&mut pt, PageFindMode::DcpmmClear, 5, &c, 0.0);
         assert!(r.promote.is_empty() && r.demote.is_empty());
+    }
+
+    /// The bit-identity contract behind the whole sparse refactor: for a
+    /// random page table (valid/invalid, mixed tiers, epoch + window
+    /// bits) and random EWMA state confined to a tracked active set, the
+    /// sparse candidate path — gather_touched ∪ active, compact classify,
+    /// pool-merged page_find — must reproduce the dense reference
+    /// (footprint-sized stats, dense classify, full-array top-k) exactly,
+    /// for every PageFind mode.
+    #[test]
+    fn sparse_candidate_selection_matches_dense_reference() {
+        let mut rng = Rng64::new(4242);
+        let params: [f32; N_PARAMS] = [0.35, 0.25, 0.4, 0.6, 0.2, 0.65, 0.0, 0.0];
+        for trial in 0..25 {
+            let n = 1 + rng.next_below(400) as u32;
+            let mut pt = PageTable::new(n, 1024, 1_000_000 * 1024, 1_000_000 * 1024);
+            let mut hot = vec![0.0f32; n as usize];
+            let mut wr = vec![0.0f32; n as usize];
+            let mut active: Vec<PageId> = Vec::new();
+            for p in 0..n {
+                if rng.chance(0.85) {
+                    let t = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
+                    pt.allocate(p, t);
+                    if rng.chance(0.3) {
+                        pt.touch(p, rng.chance(0.4));
+                    }
+                    if rng.chance(0.25) {
+                        pt.touch_window(p, rng.chance(0.4));
+                    }
+                    if rng.chance(0.3) {
+                        hot[p as usize] = rng.next_f64() as f32;
+                        wr[p as usize] = (rng.next_f64() * 0.5) as f32;
+                        active.push(p);
+                    }
+                }
+            }
+
+            // --- dense reference (before gather clears the epoch bits)
+            let mut dense = PageStats::with_len(n as usize);
+            for p in 0..n as usize {
+                let f = pt.flags(p as u32);
+                if !f.valid() {
+                    continue;
+                }
+                dense.valid[p] = 1.0;
+                match f.tier() {
+                    Tier::Dram => {
+                        dense.refd[p] = if f.referenced() { 1.0 } else { 0.0 };
+                        dense.dirty[p] = if f.dirty() { 1.0 } else { 0.0 };
+                    }
+                    Tier::Pm => {
+                        dense.tier[p] = 1.0;
+                        dense.refd[p] = if f.window_referenced() { 1.0 } else { 0.0 };
+                        dense.dirty[p] = if f.window_dirty() { 1.0 } else { 0.0 };
+                    }
+                }
+                dense.hot_ewma[p] = hot[p];
+                dense.wr_ewma[p] = wr[p];
+            }
+            let dense_out = classify(&dense, &params);
+
+            // --- sparse path: touched ∪ active, compact classify
+            let mut selmo = SelMo::new(0.3);
+            let mut touched = Vec::new();
+            let mut tbits = Vec::new();
+            selmo.gather_touched(&mut pt, &mut touched, &mut tbits);
+            // the production merge (same code HyPlacer's tick runs)
+            let mut cand_pages: Vec<PageId> = Vec::new();
+            let mut cand_bits: Vec<(f32, f32)> = Vec::new();
+            merge_candidates(&touched, &tbits, &active, &mut cand_pages, &mut cand_bits);
+            let m = cand_pages.len();
+            let mut compact = PageStats::with_len(m);
+            for ci in 0..m {
+                let p = cand_pages[ci] as usize;
+                compact.refd[ci] = cand_bits[ci].0;
+                compact.dirty[ci] = cand_bits[ci].1;
+                compact.hot_ewma[ci] = hot[p];
+                compact.wr_ewma[ci] = wr[p];
+                compact.tier[ci] =
+                    if pt.flags(p as u32).tier() == Tier::Pm { 1.0 } else { 0.0 };
+                compact.valid[ci] = 1.0;
+            }
+            let out = classify(&compact, &params);
+
+            // sparse EWMA write-back reproduces the dense new_hot array
+            let mut hot_upd = hot.clone();
+            for ci in 0..m {
+                hot_upd[cand_pages[ci] as usize] = out.new_hot[ci];
+            }
+            for p in 0..n as usize {
+                assert_eq!(
+                    hot_upd[p].to_bits(),
+                    dense_out.new_hot[p].to_bits(),
+                    "trial {trial}: new_hot[{p}] diverged"
+                );
+            }
+
+            let settled_d = classify_page(0.0, 0.0, 0.0, 0.0, 0.0, 1.0, &params);
+            let settled_p = classify_page(0.0, 0.0, 0.0, 0.0, 1.0, 1.0, &params);
+            let c = Candidates {
+                pages: &cand_pages,
+                demote_score: &out.demote_score,
+                promote_score: &out.promote_score,
+                hot: &hot_upd,
+                settled_demote: settled_d.demote_score,
+                settled_promote: settled_p.promote_score,
+            };
+
+            for count in [1usize, 3, 17] {
+                let r = selmo.page_find(&mut pt, PageFindMode::Demote, count, &c, 0.0);
+                assert_eq!(
+                    r.demote,
+                    top_k_indices(&dense_out.demote_score, count, 0.0),
+                    "trial {trial}: DEMOTE count {count}"
+                );
+                let r = selmo.page_find(&mut pt, PageFindMode::Promote, count, &c, 0.0);
+                assert_eq!(
+                    r.promote,
+                    top_k_indices(&dense_out.promote_score, count, 0.0),
+                    "trial {trial}: PROMOTE count {count}"
+                );
+                let r = selmo.page_find(&mut pt, PageFindMode::PromoteInt, count, &c, 0.0);
+                assert_eq!(
+                    r.promote,
+                    top_k_indices(&dense_out.promote_score, count, selmo.intensive_floor),
+                    "trial {trial}: PROMOTE_INT count {count}"
+                );
+                // SWITCH: dense reference pairing on the dense arrays
+                let dp = top_k_indices(&dense_out.promote_score, count, selmo.intensive_floor);
+                let dd = top_k_indices(&dense_out.demote_score, dp.len(), 0.0);
+                let mut pairs = 0;
+                for (p, d) in dp.iter().zip(dd.iter()) {
+                    let hp = dense_out.new_hot[*p as usize];
+                    let hd = dense_out.new_hot[*d as usize];
+                    if hp > hd + SelMo::SWITCH_MARGIN && hp > 0.0 {
+                        pairs += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let r = selmo.page_find(&mut pt, PageFindMode::Switch, count, &c, 0.0);
+                assert_eq!(r.promote, dp[..pairs].to_vec(), "trial {trial}: SWITCH promote");
+                assert_eq!(r.demote, dd[..pairs].to_vec(), "trial {trial}: SWITCH demote");
+            }
+        }
     }
 }

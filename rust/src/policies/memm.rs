@@ -35,34 +35,57 @@ const MAX_HIT: f64 = 0.98;
 
 pub struct MemoryMode {
     dram_pages: u64,
+    /// Reusable per-epoch scratch for `route_demand` (density ordering +
+    /// hit fractions) — no steady-state allocation in the epoch loop.
+    order_scratch: Vec<usize>,
+    hits_scratch: Vec<f64>,
+}
+
+/// Core of the cache model, writing into caller-provided buffers: the
+/// cache effectively retains the hottest (densest) regions first; a
+/// region partially resident hits in proportion to its cached share,
+/// derated for direct-mapped conflicts.
+fn hit_fractions_into(
+    dram_pages: u64,
+    regions: &[ActiveRegion],
+    order: &mut Vec<usize>,
+    out: &mut Vec<f64>,
+) {
+    order.clear();
+    order.extend(0..regions.len());
+    order.sort_by(|&a, &b| {
+        regions[b].density().partial_cmp(&regions[a].density()).unwrap()
+    });
+    out.clear();
+    out.resize(regions.len(), 0.0);
+    let mut room = dram_pages as f64;
+    for &idx in order.iter() {
+        let r = &regions[idx];
+        if r.total() <= 0.0 || r.pages == 0 {
+            out[idx] = 1.0; // no traffic: vacuously all-hit
+            continue;
+        }
+        let take = (r.pages as f64).min(room.max(0.0));
+        out[idx] = ((take / r.pages as f64) * CONFLICT_DERATE).min(MAX_HIT);
+        room -= take;
+    }
 }
 
 impl MemoryMode {
     pub fn new(cfg: &MachineConfig) -> Self {
-        MemoryMode { dram_pages: cfg.dram_pages() }
+        MemoryMode {
+            dram_pages: cfg.dram_pages(),
+            order_scratch: Vec::new(),
+            hits_scratch: Vec::new(),
+        }
     }
 
-    /// Per-region hit fractions: the cache effectively retains the
-    /// hottest (densest) regions first; a region partially resident hits
-    /// in proportion to its cached share, derated for direct-mapped
-    /// conflicts.
+    /// Per-region hit fractions (allocating convenience wrapper over
+    /// [`hit_fractions_into`]; the epoch hot path uses the scratch form).
     pub fn hit_fractions(&self, regions: &[ActiveRegion]) -> Vec<f64> {
-        let mut order: Vec<usize> = (0..regions.len()).collect();
-        order.sort_by(|&a, &b| {
-            regions[b].density().partial_cmp(&regions[a].density()).unwrap()
-        });
-        let mut out = vec![0.0; regions.len()];
-        let mut room = self.dram_pages as f64;
-        for idx in order {
-            let r = &regions[idx];
-            if r.total() <= 0.0 || r.pages == 0 {
-                out[idx] = 1.0; // no traffic: vacuously all-hit
-                continue;
-            }
-            let take = (r.pages as f64).min(room.max(0.0));
-            out[idx] = ((take / r.pages as f64) * CONFLICT_DERATE).min(MAX_HIT);
-            room -= take;
-        }
+        let mut order = Vec::new();
+        let mut out = Vec::new();
+        hit_fractions_into(self.dram_pages, regions, &mut order, &mut out);
         out
     }
 
@@ -93,10 +116,16 @@ impl Policy for MemoryMode {
         // All app traffic arrives aimed at PM (pages live there). Route
         // each region through the cache at its own hit rate — the hot
         // vector arrays of a CG-like workload stay cached even while a
-        // huge matrix streams past them.
-        let hits = self.hit_fractions(ctx.regions);
+        // huge matrix streams past them. (Scratch-buffer form: the epoch
+        // loop allocates nothing here at steady state.)
+        hit_fractions_into(
+            self.dram_pages,
+            ctx.regions,
+            &mut self.order_scratch,
+            &mut self.hits_scratch,
+        );
         let mut routed = EpochDemand { app_bytes: demand.app_bytes, ..Default::default() };
-        for (r, &h) in ctx.regions.iter().zip(hits.iter()) {
+        for (r, &h) in ctx.regions.iter().zip(self.hits_scratch.iter()) {
             if r.total() <= 0.0 {
                 continue;
             }

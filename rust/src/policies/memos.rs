@@ -18,13 +18,13 @@
 //!    10x the original 10,000 pages / 40 s cycle, at 4 s periodicity).
 
 use crate::config::{HyPlacerConfig, MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PageId, PageTable, PageWalker, WalkControl};
+use crate::vm::{MigrationPlan, PageId, PageTable, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
 pub struct Memos {
-    pm_hand: PageWalker,
-    dram_hand: PageWalker,
+    pm_hand: SparseWalker,
+    dram_hand: SparseWalker,
     /// pages per epoch (100 MB/s rate limit, paper-adjusted)
     migrate_budget: usize,
     /// activate every `period_epochs` epochs (paper-adjusted 4 s)
@@ -45,8 +45,8 @@ impl Memos {
         let dram_bw = cfg.dram.peak_read_bw();
         let pm_bw = cfg.pm.peak_read_bw();
         Memos {
-            pm_hand: PageWalker::new(),
-            dram_hand: PageWalker::new(),
+            pm_hand: SparseWalker::new(),
+            dram_hand: SparseWalker::new(),
             migrate_budget: 2500,
             period_epochs: 4,
             target_dram_share: dram_bw / (dram_bw + pm_bw),
@@ -88,22 +88,21 @@ impl Policy for Memos {
             // DRAM under-used for the target balance: promote hot PM
             // pages, read-dominated last (they are PM's best tenants),
             // i.e. prefer promoting *written* pages.
-            // scan the whole PM tier, then rank: written pages first
-            // (they hurt PM bandwidth the most), reads as filler
+            // scan the PM tier's *touched* pages only (the activity
+            // index skips idle spans; clearing untouched PTEs is a
+            // no-op), then rank: written pages first (they hurt PM
+            // bandwidth the most), reads as filler
             let budget = self.migrate_budget;
             let mut hot_written = Vec::new();
             let mut hot_read = Vec::new();
-            self.pm_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
-                if flags.tier() == Tier::Pm {
-                    if flags.referenced() || flags.dirty() {
-                        if flags.dirty() {
-                            hot_written.push(page);
-                        } else {
-                            hot_read.push(page);
-                        }
-                    }
-                    pt.clear_rd(page);
+            let touched_pm = PlaneQuery::epoch_touched().in_tier(Tier::Pm);
+            self.pm_hand.walk(pt, pt.len() as usize, touched_pm, |page, flags, pt| {
+                if flags.dirty() {
+                    hot_written.push(page);
+                } else {
+                    hot_read.push(page);
                 }
+                pt.clear_rd(page);
                 WalkControl::Continue
             });
             hot_written.extend(hot_read);
@@ -118,13 +117,12 @@ impl Policy for Memos {
             .saturating_sub((self.dram_watermark * cap as f64) as u64);
         if over > 0 {
             let need = over as usize;
-            self.dram_hand.walk(pt, pt.len() as usize, |page, flags, pt| {
-                if flags.tier() == Tier::Dram {
-                    if !flags.referenced() {
-                        plan.demote.push(page);
-                    } else {
-                        pt.clear_rd(page);
-                    }
+            let dram = PlaneQuery::tier(Tier::Dram);
+            self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
+                if !flags.referenced() {
+                    plan.demote.push(page);
+                } else {
+                    pt.clear_rd(page);
                 }
                 if plan.demote.len() >= need {
                     WalkControl::Stop

@@ -15,13 +15,13 @@
 //! than ADM-default").
 
 use crate::config::{MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PageWalker, WalkControl};
+use crate::vm::{MigrationPlan, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
 pub struct Nimble {
-    pm_hand: PageWalker,
-    dram_hand: PageWalker,
+    pm_hand: SparseWalker,
+    dram_hand: SparseWalker,
     /// Max pages moved per epoch (tuned-for-DRAM default: generous).
     migrate_budget_pages: usize,
     /// Keep a little DRAM headroom like kswapd watermarks.
@@ -34,8 +34,8 @@ impl Nimble {
         // epoch that is 1 GB worth of pages.
         let budget_bytes = 1024u64 * 1024 * 1024;
         Nimble {
-            pm_hand: PageWalker::new(),
-            dram_hand: PageWalker::new(),
+            pm_hand: SparseWalker::new(),
+            dram_hand: SparseWalker::new(),
             migrate_budget_pages: (budget_bytes / cfg.page_bytes).max(1) as usize,
             watermark: 0.98,
         }
@@ -52,16 +52,17 @@ impl Policy for Nimble {
         let pt = &mut *ctx.pt;
 
         // Pass 1: collect "active" PM pages (R bit set), clearing bits as
-        // the hand passes (second chance).
+        // the hand passes (second chance). The sparse hand visits only
+        // touched PM pages — clearing an untouched PTE is a no-op, so
+        // skipping idle spans through the activity index is exact.
         let mut promote = Vec::new();
         let scan_budget = pt.len() as usize;
-        self.pm_hand.walk(pt, scan_budget, |page, flags, pt| {
-            if flags.tier() == Tier::Pm {
-                if flags.referenced() {
-                    promote.push(page);
-                }
-                pt.clear_rd(page);
+        let touched_pm = PlaneQuery::epoch_touched().in_tier(Tier::Pm);
+        self.pm_hand.walk(pt, scan_budget, touched_pm, |page, flags, pt| {
+            if flags.referenced() {
+                promote.push(page);
             }
+            pt.clear_rd(page);
             if promote.len() >= budget {
                 WalkControl::Stop
             } else {
@@ -82,13 +83,13 @@ impl Policy for Nimble {
 
         let mut victims = Vec::new();
         if need_exchange > 0 {
-            self.dram_hand.walk(pt, scan_budget, |page, flags, pt| {
-                if flags.tier() == Tier::Dram {
-                    if !flags.referenced() {
-                        victims.push(page);
-                    } else {
-                        pt.clear_rd(page); // second chance
-                    }
+            // DRAM-tier scan (word-level skip of PM/invalid spans); the
+            // early stop keeps it O(selected) on mostly-idle DRAM.
+            self.dram_hand.walk(pt, scan_budget, PlaneQuery::tier(Tier::Dram), |page, flags, pt| {
+                if !flags.referenced() {
+                    victims.push(page);
+                } else {
+                    pt.clear_rd(page); // second chance
                 }
                 if victims.len() >= need_exchange {
                     WalkControl::Stop

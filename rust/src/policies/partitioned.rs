@@ -11,7 +11,7 @@
 //! it to regenerate that analysis (and as an ablation bench).
 
 use crate::config::{MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PageId, PageTable, PageWalker, WalkControl};
+use crate::vm::{MigrationPlan, PageId, PageTable, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
@@ -19,7 +19,8 @@ use super::{Policy, PolicyCtx, Table1Row};
 const WRITE_IDLE_LIMIT: u8 = 3;
 
 pub struct Partitioned {
-    hand: PageWalker,
+    pm_hand: SparseWalker,
+    dram_hand: SparseWalker,
     /// consecutive write-idle epochs per page
     write_idle: Vec<u8>,
     migrate_budget: usize,
@@ -28,7 +29,8 @@ pub struct Partitioned {
 impl Partitioned {
     pub fn new(cfg: &MachineConfig) -> Self {
         Partitioned {
-            hand: PageWalker::new(),
+            pm_hand: SparseWalker::new(),
+            dram_hand: SparseWalker::new(),
             write_idle: Vec::new(),
             migrate_budget: (512u64 * 1024 * 1024 / cfg.page_bytes).max(1) as usize,
         }
@@ -60,27 +62,33 @@ impl Policy for Partitioned {
         let write_idle = &mut self.write_idle;
         let mut promote = Vec::new();
         let mut demote = Vec::new();
-        self.hand.walk(pt, pt.len() as usize, |page, flags, pt| {
-            match flags.tier() {
-                Tier::Pm => {
-                    // write detected => DRAM-bound
-                    if flags.dirty() && promote.len() < budget {
-                        promote.push(page);
-                        write_idle[page as usize] = 0;
-                    }
-                }
-                Tier::Dram => {
-                    // read-dominated for several epochs => PM-bound
-                    let idle = &mut write_idle[page as usize];
-                    if flags.dirty() {
-                        *idle = 0;
-                    } else {
-                        *idle = idle.saturating_add(1);
-                        if *idle >= WRITE_IDLE_LIMIT && demote.len() < budget {
-                            demote.push(page);
-                            *idle = 0;
-                        }
-                    }
+        // Pass 1 — PM side, O(dirty pages): a write detected on a PM page
+        // makes it DRAM-bound. (PM pages touched read-only keep their R
+        // bit; CLOCK-DWF never reads it, so there is nothing to clear.)
+        let dirty_pm = PlaneQuery::all_of(crate::vm::PageFlags::DIRTY).in_tier(Tier::Pm);
+        self.pm_hand.walk(pt, pt.len() as usize, dirty_pm, |page, _flags, pt| {
+            if promote.len() < budget {
+                promote.push(page);
+                write_idle[page as usize] = 0;
+            }
+            pt.clear_rd(page);
+            WalkControl::Continue
+        });
+        // Pass 2 — DRAM side: the per-page write-idle counters advance
+        // every epoch by design (an untouched page *ages*), so this scan
+        // is inherently O(DRAM-resident pages); the index still skips
+        // invalid/PM spans word-wise.
+        let dram = PlaneQuery::tier(Tier::Dram);
+        self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
+            // read-dominated for several epochs => PM-bound
+            let idle = &mut write_idle[page as usize];
+            if flags.dirty() {
+                *idle = 0;
+            } else {
+                *idle = idle.saturating_add(1);
+                if *idle >= WRITE_IDLE_LIMIT && demote.len() < budget {
+                    demote.push(page);
+                    *idle = 0;
                 }
             }
             pt.clear_rd(page);

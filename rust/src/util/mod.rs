@@ -8,7 +8,7 @@ pub mod topk;
 pub mod proptest;
 
 pub use rng::Rng64;
-pub use topk::top_k_indices;
+pub use topk::{top_k_indices, top_k_into, TopK};
 
 /// 64-bit FNV-1a over a byte string. Used for sweep-cell content keys:
 /// the algorithm is fixed by constants (no per-process salt, unlike

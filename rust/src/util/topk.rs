@@ -2,8 +2,17 @@
 //! response path. The AOT placement kernel emits per-page priority scores;
 //! SelMo needs the k highest-scoring page indices. A full sort of an
 //! 8M-entry score array per epoch would dominate the hot path, so this is
-//! a bounded binary-heap selection: O(n log k), no allocation beyond the
-//! k-entry heap, single pass, skips sentinel (-1.0) scores.
+//! a bounded binary-heap selection: O(n log k), single pass, skips
+//! entries below the floor (the kernel marks ineligible pages with -1.0).
+//!
+//! [`TopK`] is the reusable form: SelMo holds one per selection side and
+//! re-`begin`s it every epoch, so the hot path performs no per-tick heap
+//! allocation once the k-entry high-water mark is reached. The selection
+//! is the k best entries under the strict total order (score desc, index
+//! asc) *regardless of offer order* — which is what lets the sparse
+//! candidate path merge explicit candidate scores with an
+//! ascending-index pool of constant-score settled pages and still
+//! reproduce the dense array scan bit-for-bit.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -35,35 +44,85 @@ impl Ord for MinEntry {
     }
 }
 
+/// Reusable bounded top-k selector (see module docs).
+#[derive(Default)]
+pub struct TopK {
+    heap: BinaryHeap<MinEntry>,
+    scratch: Vec<MinEntry>,
+    k: usize,
+    floor: f32,
+}
+
+impl TopK {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset for a fresh selection of up to `k` entries scoring ≥ `floor`.
+    pub fn begin(&mut self, k: usize, floor: f32) {
+        self.heap.clear();
+        self.k = k;
+        self.floor = floor;
+    }
+
+    /// Offer one `(index, score)` entry; returns whether it entered the
+    /// current top-k. Entries below the floor (or NaN) never enter. Since
+    /// entries ranking below the current worst never enter either, a
+    /// caller feeding entries in strictly *descending* priority — e.g. a
+    /// constant-score pool in ascending index order — may stop at the
+    /// first `false`.
+    pub fn offer(&mut self, idx: u32, score: f32) -> bool {
+        if self.k == 0 || score < self.floor || score.is_nan() {
+            return false;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(MinEntry { score, idx });
+            return true;
+        }
+        let worst = self.heap.peek().expect("k > 0 and heap full");
+        if score > worst.score || (score == worst.score && idx < worst.idx) {
+            self.heap.pop();
+            self.heap.push(MinEntry { score, idx });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain the selection into `out` (cleared first), highest score
+    /// first, ties broken by lower index.
+    pub fn drain_into(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        self.scratch.clear();
+        self.scratch.extend(self.heap.drain());
+        self.scratch.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.idx.cmp(&b.idx))
+        });
+        out.extend(self.scratch.iter().map(|e| e.idx));
+    }
+}
+
+/// Scratch-reusing form of [`top_k_indices`]: select into `out` using
+/// `sel`'s buffers (no allocation at steady state).
+pub fn top_k_into(sel: &mut TopK, scores: &[f32], k: usize, floor: f32, out: &mut Vec<u32>) {
+    sel.begin(k, floor);
+    for (i, &s) in scores.iter().enumerate() {
+        sel.offer(i as u32, s);
+    }
+    sel.drain_into(out);
+}
+
 /// Indices of the `k` highest scores in `scores`, excluding entries with
 /// score < `floor` (the kernel marks ineligible pages with -1.0).
 /// Result is ordered highest-score-first; ties broken by lower index.
 pub fn top_k_indices(scores: &[f32], k: usize, floor: f32) -> Vec<u32> {
-    if k == 0 || scores.is_empty() {
-        return Vec::new();
-    }
-    let mut heap: BinaryHeap<MinEntry> = BinaryHeap::with_capacity(k + 1);
-    for (i, &s) in scores.iter().enumerate() {
-        if s < floor || s.is_nan() {
-            continue;
-        }
-        if heap.len() < k {
-            heap.push(MinEntry { score: s, idx: i as u32 });
-        } else if let Some(worst) = heap.peek() {
-            if s > worst.score || (s == worst.score && (i as u32) < worst.idx) {
-                heap.pop();
-                heap.push(MinEntry { score: s, idx: i as u32 });
-            }
-        }
-    }
-    let mut out: Vec<MinEntry> = heap.into_vec();
-    out.sort_by(|a, b| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| a.idx.cmp(&b.idx))
-    });
-    out.into_iter().map(|e| e.idx).collect()
+    let mut sel = TopK::new();
+    let mut out = Vec::new();
+    top_k_into(&mut sel, scores, k, floor, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -99,6 +158,58 @@ mod tests {
     fn nan_skipped() {
         let scores = [f32::NAN, 0.3, f32::NAN, 0.1];
         assert_eq!(top_k_indices(&scores, 4, 0.0), vec![1, 3]);
+    }
+
+    #[test]
+    fn reused_selector_matches_fresh_runs() {
+        let mut sel = TopK::new();
+        let mut out = Vec::new();
+        let a = [0.3f32, 0.9, 0.1, 0.5];
+        let b = [0.2f32, -1.0, 0.8];
+        top_k_into(&mut sel, &a, 2, 0.0, &mut out);
+        assert_eq!(out, top_k_indices(&a, 2, 0.0));
+        top_k_into(&mut sel, &b, 5, 0.0, &mut out);
+        assert_eq!(out, top_k_indices(&b, 5, 0.0));
+        // zero-k reuse leaves the selector clean
+        top_k_into(&mut sel, &a, 0, 0.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn offer_order_does_not_change_the_selection() {
+        // the merged candidate+pool path relies on order independence
+        let mut rng = Rng64::new(7);
+        for _ in 0..30 {
+            let n = 1 + rng.next_below(300) as usize;
+            let k = 1 + rng.next_below(16) as usize;
+            let scores: Vec<f32> =
+                (0..n).map(|_| (rng.next_below(8) as f32) / 8.0).collect();
+            let forward = top_k_indices(&scores, k, 0.0);
+            let mut sel = TopK::new();
+            sel.begin(k, 0.0);
+            for i in (0..n).rev() {
+                sel.offer(i as u32, scores[i]);
+            }
+            let mut reversed = Vec::new();
+            sel.drain_into(&mut reversed);
+            assert_eq!(forward, reversed);
+        }
+    }
+
+    #[test]
+    fn descending_pool_can_stop_at_first_rejection() {
+        // entries offered in descending priority: once one is rejected,
+        // all later ones would be too
+        let mut sel = TopK::new();
+        sel.begin(2, 0.0);
+        assert!(sel.offer(10, 0.5));
+        assert!(sel.offer(11, 0.5));
+        assert!(sel.offer(3, 0.5), "lower index evicts the tie");
+        assert!(!sel.offer(12, 0.5), "heap full of better-or-equal ties");
+        assert!(!sel.offer(13, 0.5));
+        let mut out = Vec::new();
+        sel.drain_into(&mut out);
+        assert_eq!(out, vec![3, 10]);
     }
 
     #[test]

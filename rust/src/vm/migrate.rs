@@ -68,6 +68,8 @@ impl MigrationStats {
 pub fn execute(pt: &mut PageTable, cfg: &MachineConfig, plan: &MigrationPlan) -> MigrationStats {
     let mut stats = MigrationStats::default();
     let page = cfg.page_bytes as f64;
+    // every planned move inspects (and possibly rewrites) its PTE(s)
+    pt.count_pte_visits(plan.page_moves());
 
     for &p in &plan.demote {
         if pt.migrate(p, Tier::Pm) {

@@ -1,14 +1,17 @@
 //! Virtual-memory substrate: page tables with MMU-managed
-//! reference/dirty bits, the resumable page-table walker that SelMo's
-//! PageFind modes are built on (the analogue of Linux's
-//! `walk_page_range`, the one routine the paper exports with its
-//! single-line kernel change), and the page-migration engine (the
-//! analogue of `move_pages` plus HyPlacer's exchange-based migration).
+//! reference/dirty bits and a hierarchical **activity index** (per-bit
+//! bitmap planes + summary words) over them, the resumable page-table
+//! walkers that SelMo's PageFind modes are built on (the analogue of
+//! Linux's `walk_page_range`, the one routine the paper exports with its
+//! single-line kernel change — [`SparseWalker`] additionally skips idle
+//! spans through the index so decision ticks are O(touched + selected)),
+//! and the page-migration engine (the analogue of `move_pages` plus
+//! HyPlacer's exchange-based migration).
 
 pub mod page_table;
 pub mod pagewalk;
 pub mod migrate;
 
-pub use page_table::{PageFlags, PageId, PageTable};
-pub use pagewalk::{PageWalker, WalkControl};
+pub use page_table::{MatchingPages, PageFlags, PageId, PageTable, PlaneQuery};
+pub use pagewalk::{PageWalker, SparseWalker, WalkControl};
 pub use migrate::{MigrationPlan, MigrationStats};

@@ -1,10 +1,20 @@
-//! Page table: per-page tier placement + MMU-managed R/D bits.
+//! Page table: per-page tier placement + MMU-managed R/D bits, backed by
+//! a two-level **activity index**.
 //!
 //! Stored as a dense struct-of-arrays keyed by [`PageId`] (the simulator
 //! equivalent of a virtual page number). The MMU side (the simulated
 //! workload setting accessed/dirty bits) and the kernel side (policies
 //! observing and clearing them through [`super::pagewalk`]) meet here —
 //! exactly the information surface HyPlacer's SelMo works with.
+//!
+//! Alongside the flag bytes the table maintains one bitmap **plane** per
+//! PTE flag bit (64 pages per `u64` leaf word) plus a summary level (one
+//! bit per leaf word, 4096 pages per summary word), updated incrementally
+//! by every mutator. Walkers and selection pools evaluate a
+//! [`PlaneQuery`] word-wise against the planes, so a kernel-side pass
+//! over a multi-100-GiB footprint skips idle spans in O(words) instead of
+//! inspecting every PTE — the llfree-style fix for the scan overhead that
+//! otherwise dominates tiered-memory daemons (see DESIGN.md §8).
 
 use crate::config::Tier;
 
@@ -54,26 +64,184 @@ impl PageFlags {
     }
 }
 
+/// One bit-plane per PTE flag bit (plane index == flag bit position).
+const NUM_PLANES: usize = 6;
+/// Every flag bit the activity index mirrors.
+const ALL_BITS: u8 = (1 << NUM_PLANES) - 1;
+
+/// The two-level bitmap index over the flag bytes: `leaves[b]` holds one
+/// bit per page for flag bit `b` (64 pages per word); `summaries[b]`
+/// holds one bit per leaf word (set ⇔ the word is nonzero). Maintained
+/// incrementally by [`PageTable::write_flags`]; a dense rebuild exists
+/// only for verification ([`PageTable::check_index_consistent`]).
+#[derive(Clone, Debug, PartialEq)]
+struct ActivityIndex {
+    leaves: [Vec<u64>; NUM_PLANES],
+    summaries: [Vec<u64>; NUM_PLANES],
+}
+
+impl ActivityIndex {
+    fn new(num_pages: u32) -> Self {
+        let nw = (num_pages as usize).div_ceil(64);
+        let ns = nw.div_ceil(64);
+        ActivityIndex {
+            leaves: std::array::from_fn(|_| vec![0u64; nw]),
+            summaries: std::array::from_fn(|_| vec![0u64; ns]),
+        }
+    }
+
+    /// Dense rebuild from flag bytes (verification only).
+    fn build(flags: &[u8]) -> Self {
+        let mut idx = Self::new(flags.len() as u32);
+        for (i, &f) in flags.iter().enumerate() {
+            if f & ALL_BITS != 0 {
+                idx.set_bits(i, f & ALL_BITS);
+            }
+        }
+        idx
+    }
+
+    fn num_words(&self) -> usize {
+        self.leaves[0].len()
+    }
+
+    #[inline]
+    fn leaf(&self, plane: usize, wi: usize) -> u64 {
+        self.leaves[plane][wi]
+    }
+
+    #[inline]
+    fn summary(&self, plane: usize, si: usize) -> u64 {
+        self.summaries[plane][si]
+    }
+
+    #[inline]
+    fn set_bits(&mut self, page: usize, mut bits: u8) {
+        let (wi, bit) = (page / 64, 1u64 << (page % 64));
+        let (si, sbit) = (page / 4096, 1u64 << ((page / 64) % 64));
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.leaves[b][wi] |= bit;
+            self.summaries[b][si] |= sbit;
+        }
+    }
+
+    #[inline]
+    fn clear_bits(&mut self, page: usize, mut bits: u8) {
+        let (wi, bit) = (page / 64, 1u64 << (page % 64));
+        let (si, sbit) = (page / 4096, 1u64 << ((page / 64) % 64));
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.leaves[b][wi] &= !bit;
+            if self.leaves[b][wi] == 0 {
+                self.summaries[b][si] &= !sbit;
+            }
+        }
+    }
+
+    /// Clear `mask` from every plane in `bits` of leaf word `wi` (the
+    /// word-granular path behind DCPMM_CLEAR).
+    #[inline]
+    fn clear_word_bits(&mut self, mut bits: u8, wi: usize, mask: u64) {
+        let (si, sbit) = (wi / 64, 1u64 << (wi % 64));
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.leaves[b][wi] &= !mask;
+            if self.leaves[b][wi] == 0 {
+                self.summaries[b][si] &= !sbit;
+            }
+        }
+    }
+}
+
+/// A word-wise predicate over the activity index's bit-planes. A page
+/// matches iff it is VALID (always implied), has **every** bit of
+/// `all_of`, **at least one** bit of `any_of` (when nonzero), and **no**
+/// bit of `none_of`. Evaluated 64 pages at a time by
+/// [`PageTable::query_word`]; `all_of`/`any_of` planes also prune whole
+/// 4096-page blocks through the summary level (exclusions cannot prune —
+/// "¬REF" is mostly-set — but still skip at word granularity).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneQuery {
+    pub any_of: u8,
+    pub all_of: u8,
+    pub none_of: u8,
+}
+
+impl PlaneQuery {
+    /// Valid pages with every bit of `bits` set.
+    pub fn all_of(bits: u8) -> Self {
+        PlaneQuery { any_of: 0, all_of: bits, none_of: 0 }
+    }
+    /// Valid pages with at least one bit of `bits` set.
+    pub fn any_of(bits: u8) -> Self {
+        PlaneQuery { any_of: bits, all_of: 0, none_of: 0 }
+    }
+    /// Additionally require every bit of `bits`.
+    pub fn and_all(mut self, bits: u8) -> Self {
+        self.all_of |= bits;
+        self
+    }
+    /// Additionally exclude pages with any bit of `bits`.
+    pub fn and_none(mut self, bits: u8) -> Self {
+        self.none_of |= bits;
+        self
+    }
+    /// Restrict to pages resident in `tier`.
+    pub fn in_tier(self, tier: Tier) -> Self {
+        match tier {
+            Tier::Pm => self.and_all(PageFlags::TIER_PM),
+            Tier::Dram => self.and_none(PageFlags::TIER_PM),
+        }
+    }
+    /// All valid pages of `tier`.
+    pub fn tier(tier: Tier) -> Self {
+        Self::all_of(0).in_tier(tier)
+    }
+    /// Pages with the epoch R or D bit set.
+    pub fn epoch_touched() -> Self {
+        Self::any_of(PageFlags::REF | PageFlags::DIRTY)
+    }
+    /// Pages with any activity bit — epoch R/D or delay-window — set.
+    pub fn any_activity() -> Self {
+        Self::any_of(
+            PageFlags::REF | PageFlags::DIRTY | PageFlags::WREF | PageFlags::WDIRTY,
+        )
+    }
+}
+
 /// Dense page table for one bound process.
 #[derive(Clone, Debug)]
 pub struct PageTable {
     flags: Vec<u8>,
+    index: ActivityIndex,
     page_bytes: u64,
     dram_capacity_pages: u64,
     pm_capacity_pages: u64,
     dram_used: u64,
     pm_used: u64,
+    /// Lifetime count of per-PTE state inspections (walker callbacks,
+    /// candidate classifications, selection-pool draws, word-clears,
+    /// migration execution). The decision-tick twin of
+    /// [`crate::util::Rng64::draw_count`]: a deterministic, scale-free
+    /// proxy proving the tick is O(touched + selected), not O(footprint).
+    pte_visits: u64,
 }
 
 impl PageTable {
     pub fn new(num_pages: u32, page_bytes: u64, dram_capacity: u64, pm_capacity: u64) -> Self {
         PageTable {
             flags: vec![0; num_pages as usize],
+            index: ActivityIndex::new(num_pages),
             page_bytes,
             dram_capacity_pages: dram_capacity / page_bytes,
             pm_capacity_pages: pm_capacity / page_bytes,
             dram_used: 0,
             pm_used: 0,
+            pte_visits: 0,
         }
     }
 
@@ -92,25 +260,57 @@ impl PageTable {
         PageFlags(self.flags[page as usize])
     }
 
+    /// Lifetime PTE-inspection counter (see the field docs).
+    pub fn pte_visits(&self) -> u64 {
+        self.pte_visits
+    }
+
+    /// Record `k` PTE-state inspections.
+    #[inline]
+    pub fn count_pte_visits(&mut self, k: u64) {
+        self.pte_visits += k;
+    }
+
+    /// The single mutation point: store the new flag byte and feed the
+    /// bit diff to the activity index. Every mutator below routes through
+    /// here, which is what keeps the planes consistent by construction.
+    #[inline]
+    fn write_flags(&mut self, page: PageId, new: u8) {
+        let i = page as usize;
+        let old = self.flags[i];
+        if old == new {
+            return;
+        }
+        self.flags[i] = new;
+        let set = new & !old;
+        if set != 0 {
+            self.index.set_bits(i, set);
+        }
+        let cleared = old & !new;
+        if cleared != 0 {
+            self.index.clear_bits(i, cleared);
+        }
+    }
+
     /// Map a page to a tier (first touch). Returns false if that tier is
     /// at capacity (caller must pick the other tier or fail).
     pub fn allocate(&mut self, page: PageId, tier: Tier) -> bool {
-        let f = &mut self.flags[page as usize];
-        assert_eq!(*f & PageFlags::VALID, 0, "page {page} double-allocated");
+        let old = self.flags[page as usize];
+        assert_eq!(old & PageFlags::VALID, 0, "page {page} double-allocated");
         match tier {
             Tier::Dram => {
                 if self.dram_used >= self.dram_capacity_pages {
                     return false;
                 }
                 self.dram_used += 1;
-                *f = PageFlags::VALID;
+                self.write_flags(page, PageFlags::VALID);
             }
             Tier::Pm => {
                 if self.pm_used >= self.pm_capacity_pages {
                     return false;
                 }
                 self.pm_used += 1;
-                *f = PageFlags::VALID | PageFlags::TIER_PM;
+                self.write_flags(page, PageFlags::VALID | PageFlags::TIER_PM);
             }
         }
         true
@@ -119,19 +319,21 @@ impl PageTable {
     /// MMU access path: set REF (and DIRTY for stores).
     #[inline]
     pub fn touch(&mut self, page: PageId, write: bool) {
-        let f = &mut self.flags[page as usize];
-        debug_assert!(*f & PageFlags::VALID != 0, "touch of unmapped page {page}");
-        *f |= PageFlags::REF;
+        let old = self.flags[page as usize];
+        debug_assert!(old & PageFlags::VALID != 0, "touch of unmapped page {page}");
+        let mut new = old | PageFlags::REF;
         if write {
-            *f |= PageFlags::DIRTY;
+            new |= PageFlags::DIRTY;
         }
+        self.write_flags(page, new);
     }
 
     /// Kernel path: clear the R/D bits of one PTE (CLOCK hand /
     /// DCPMM_CLEAR semantics).
     #[inline]
     pub fn clear_rd(&mut self, page: PageId) {
-        self.flags[page as usize] &= !(PageFlags::REF | PageFlags::DIRTY);
+        let old = self.flags[page as usize];
+        self.write_flags(page, old & !(PageFlags::REF | PageFlags::DIRTY));
     }
 
     /// MMU access path for accesses inside the delay window (set by the
@@ -139,17 +341,47 @@ impl PageTable {
     /// promotion walk).
     #[inline]
     pub fn touch_window(&mut self, page: PageId, write: bool) {
-        let f = &mut self.flags[page as usize];
-        *f |= PageFlags::WREF;
+        let old = self.flags[page as usize];
+        let mut new = old | PageFlags::WREF;
         if write {
-            *f |= PageFlags::WDIRTY;
+            new |= PageFlags::WDIRTY;
         }
+        self.write_flags(page, new);
     }
 
     /// DCPMM_CLEAR: reset the delay-window bits of one PTE.
     #[inline]
     pub fn clear_window(&mut self, page: PageId) {
-        self.flags[page as usize] &= !(PageFlags::WREF | PageFlags::WDIRTY);
+        let old = self.flags[page as usize];
+        self.write_flags(page, old & !(PageFlags::WREF | PageFlags::WDIRTY));
+    }
+
+    /// DCPMM_CLEAR fast path: reset the delay-window bits of every valid
+    /// PM-resident page, whole 64-page index words at a time. Returns the
+    /// number of pages whose bits were actually cleared; cost (and the
+    /// `pte_visits` charge) is O(words with window activity), not
+    /// O(footprint). DRAM pages' window bits survive, as in the per-page
+    /// walk this replaces.
+    pub fn clear_window_pm(&mut self) -> u64 {
+        const WBITS: u8 = PageFlags::WREF | PageFlags::WDIRTY;
+        let q = PlaneQuery::any_of(WBITS).in_tier(Tier::Pm);
+        let nw = self.index.num_words();
+        let mut cleared = 0u64;
+        let mut wi = 0usize;
+        while let Some((w, m)) = self.next_match_word(wi, nw, q) {
+            self.index.clear_word_bits(WBITS, w, m);
+            let base = w * 64;
+            let mut mm = m;
+            while mm != 0 {
+                let b = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                self.flags[base + b] &= !WBITS;
+            }
+            cleared += m.count_ones() as u64;
+            wi = w + 1;
+        }
+        self.pte_visits += cleared;
+        cleared
     }
 
     /// Move a page across tiers. Capacity-checked; R/D bits survive the
@@ -166,7 +398,7 @@ impl PageTable {
                 }
                 self.dram_used += 1;
                 self.pm_used -= 1;
-                self.flags[page as usize] &= !PageFlags::TIER_PM;
+                self.write_flags(page, cur.0 & !PageFlags::TIER_PM);
             }
             Tier::Pm => {
                 if self.pm_used >= self.pm_capacity_pages {
@@ -174,7 +406,7 @@ impl PageTable {
                 }
                 self.pm_used += 1;
                 self.dram_used -= 1;
-                self.flags[page as usize] |= PageFlags::TIER_PM;
+                self.write_flags(page, cur.0 | PageFlags::TIER_PM);
             }
         }
         true
@@ -188,8 +420,8 @@ impl PageTable {
         if !fa.valid() || !fb.valid() || fa.tier() == fb.tier() {
             return false;
         }
-        self.flags[a as usize] ^= PageFlags::TIER_PM;
-        self.flags[b as usize] ^= PageFlags::TIER_PM;
+        self.write_flags(a, fa.0 ^ PageFlags::TIER_PM);
+        self.write_flags(b, fb.0 ^ PageFlags::TIER_PM);
         true
     }
 
@@ -219,6 +451,142 @@ impl PageTable {
         self.dram_used as f64 / self.dram_capacity_pages as f64
     }
 
+    // --- activity-index queries ---------------------------------------
+
+    /// Number of 64-page leaf words in the index.
+    pub fn num_index_words(&self) -> usize {
+        self.index.num_words()
+    }
+
+    /// The 64-page leaf word `wi` filtered by `q` (bit p set ⇔ page
+    /// `wi*64 + p` matches; validity always required).
+    pub fn query_word(&self, wi: usize, q: PlaneQuery) -> u64 {
+        let idx = &self.index;
+        let mut m = idx.leaf(0, wi); // VALID plane
+        let mut all = q.all_of & ALL_BITS & !PageFlags::VALID;
+        while all != 0 {
+            let b = all.trailing_zeros() as usize;
+            all &= all - 1;
+            m &= idx.leaf(b, wi);
+        }
+        if q.any_of != 0 {
+            let mut a = 0u64;
+            let mut any = q.any_of & ALL_BITS;
+            while any != 0 {
+                let b = any.trailing_zeros() as usize;
+                any &= any - 1;
+                a |= idx.leaf(b, wi);
+            }
+            m &= a;
+        }
+        let mut none = q.none_of & ALL_BITS;
+        while none != 0 {
+            let b = none.trailing_zeros() as usize;
+            none &= none - 1;
+            m &= !idx.leaf(b, wi);
+        }
+        m
+    }
+
+    /// Summary word `si` (one bit per leaf word) filtered by `q` —
+    /// conservative: a clear bit proves the 4096-page block has no match;
+    /// a set bit only means it may have one (exclusions are ignored).
+    pub fn summary_word(&self, si: usize, q: PlaneQuery) -> u64 {
+        let idx = &self.index;
+        let mut m = idx.summary(0, si);
+        let mut all = q.all_of & ALL_BITS & !PageFlags::VALID;
+        while all != 0 {
+            let b = all.trailing_zeros() as usize;
+            all &= all - 1;
+            m &= idx.summary(b, si);
+        }
+        if q.any_of != 0 {
+            let mut a = 0u64;
+            let mut any = q.any_of & ALL_BITS;
+            while any != 0 {
+                let b = any.trailing_zeros() as usize;
+                any &= any - 1;
+                a |= idx.summary(b, si);
+            }
+            m &= a;
+        }
+        m
+    }
+
+    /// Find the first leaf word with index in `[wi, hi)` holding any
+    /// match for `q`, fast-forwarding over empty 4096-page summary
+    /// blocks (only from aligned positions — an unaligned start scans
+    /// word-wise to the next block boundary). Returns the word index and
+    /// its match mask. This is the one copy of the skip logic that the
+    /// sparse walker, the matching-page iterator and the DCPMM_CLEAR
+    /// word pass all share.
+    pub fn next_match_word(&self, mut wi: usize, hi: usize, q: PlaneQuery) -> Option<(usize, u64)> {
+        while wi < hi {
+            if wi % 64 == 0 {
+                while wi < hi && self.summary_word(wi / 64, q) == 0 {
+                    wi += 64;
+                }
+                if wi >= hi {
+                    return None;
+                }
+            }
+            let m = self.query_word(wi, q);
+            if m != 0 {
+                return Some((wi, m));
+            }
+            wi += 1;
+        }
+        None
+    }
+
+    /// Ascending iterator over the pages matching `q`; idle summary
+    /// blocks are skipped in O(1) per 4096 pages. Selection pools (the
+    /// settled-page side of SelMo's merged top-k) draw from this.
+    pub fn iter_matching(&self, q: PlaneQuery) -> MatchingPages<'_> {
+        MatchingPages { pt: self, q, wi: 0, word: 0 }
+    }
+
+    /// Count the pages matching `q` in `[lo, hi)` by word popcounts —
+    /// O(range/64), used by the coordinator's per-region tier recounts.
+    pub fn count_matching_in(&self, lo: PageId, hi: PageId, q: PlaneQuery) -> u64 {
+        if lo >= hi {
+            return 0;
+        }
+        let lo_w = (lo / 64) as usize;
+        let hi_w = ((hi - 1) / 64) as usize;
+        let mut total = 0u64;
+        for wi in lo_w..=hi_w {
+            let mut m = self.query_word(wi, q);
+            let base = (wi as u32) * 64;
+            if base < lo {
+                m &= !0u64 << (lo - base);
+            }
+            let keep = hi - base;
+            if keep < 64 {
+                m &= (1u64 << keep) - 1;
+            }
+            total += m.count_ones() as u64;
+        }
+        total
+    }
+
+    /// Verification helper: rebuild the whole index from the flag bytes
+    /// and compare plane-for-plane (the hierarchical analogue of
+    /// [`PageTable::recount`]). Hot paths rely on the incremental
+    /// maintenance this checks.
+    pub fn check_index_consistent(&self) -> Result<(), String> {
+        let fresh = ActivityIndex::build(&self.flags);
+        for b in 0..NUM_PLANES {
+            if fresh.leaves[b] != self.index.leaves[b] {
+                return Err(format!("leaf plane {b} diverged from the flag bytes"));
+            }
+            if fresh.summaries[b] != self.index.summaries[b] {
+                return Err(format!("summary plane {b} diverged from its leaves"));
+            }
+        }
+        Ok(())
+    }
+
     /// Count valid pages per tier by scan (test/verification helper;
     /// hot paths use the incremental counters).
     pub fn recount(&self) -> (u64, u64) {
@@ -234,6 +602,34 @@ impl PageTable {
             }
         }
         (dram, pm)
+    }
+}
+
+/// See [`PageTable::iter_matching`].
+pub struct MatchingPages<'a> {
+    pt: &'a PageTable,
+    q: PlaneQuery,
+    /// Next leaf word to load.
+    wi: usize,
+    /// Unconsumed matches of word `wi - 1`.
+    word: u64,
+}
+
+impl Iterator for MatchingPages<'_> {
+    type Item = PageId;
+
+    fn next(&mut self) -> Option<PageId> {
+        if self.word != 0 {
+            let b = self.word.trailing_zeros();
+            self.word &= self.word - 1;
+            return Some(((self.wi - 1) as u32) * 64 + b);
+        }
+        let nw = self.pt.num_index_words();
+        let (w, m) = self.pt.next_match_word(self.wi, nw, self.q)?;
+        self.wi = w + 1;
+        let b = m.trailing_zeros();
+        self.word = m & (m - 1);
+        Some((w as u32) * 64 + b)
     }
 }
 
@@ -341,5 +737,146 @@ mod tests {
         t.allocate(0, Tier::Dram);
         t.allocate(1, Tier::Dram);
         assert!((t.dram_occupancy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn query_word_filters_by_planes() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Dram);
+        }
+        for p in 4..8 {
+            t.allocate(p, Tier::Pm);
+        }
+        t.touch(1, false);
+        t.touch(5, true);
+        t.touch_window(6, false);
+        // epoch-touched: pages 1 (DRAM) and 5 (PM)
+        let q = PlaneQuery::epoch_touched();
+        assert_eq!(t.query_word(0, q), (1 << 1) | (1 << 5));
+        // epoch-touched PM only
+        assert_eq!(t.query_word(0, q.in_tier(Tier::Pm)), 1 << 5);
+        // any activity includes the window-touched page 6
+        assert_eq!(
+            t.query_word(0, PlaneQuery::any_activity()),
+            (1 << 1) | (1 << 5) | (1 << 6)
+        );
+        // tier scans see exactly the valid pages of the tier
+        assert_eq!(t.query_word(0, PlaneQuery::tier(Tier::Dram)), 0b1111);
+        assert_eq!(t.query_word(0, PlaneQuery::tier(Tier::Pm)), 0b1111_0000);
+        // summary is conservative: nonzero whenever a match may exist
+        assert_ne!(t.summary_word(0, q), 0);
+    }
+
+    #[test]
+    fn iter_matching_is_ascending_and_skips_idle_blocks() {
+        let mut t = PageTable::new(10_000, 1024, 100_000 * 1024, 100_000 * 1024);
+        for p in [3u32, 64, 4097, 9999] {
+            t.allocate(p, Tier::Pm);
+            t.touch(p, false);
+        }
+        let got: Vec<PageId> = t.iter_matching(PlaneQuery::epoch_touched()).collect();
+        assert_eq!(got, vec![3, 64, 4097, 9999]);
+        // empty query result / empty table are safe
+        let none: Vec<PageId> = t.iter_matching(PlaneQuery::all_of(PageFlags::DIRTY)).collect();
+        assert!(none.is_empty());
+        let empty = PageTable::new(0, 1024, 1024, 1024);
+        assert_eq!(empty.iter_matching(PlaneQuery::tier(Tier::Dram)).count(), 0);
+    }
+
+    #[test]
+    fn count_matching_in_respects_range_edges() {
+        let mut t = PageTable::new(300, 1024, 1000 * 1024, 1000 * 1024);
+        for p in 0..300 {
+            t.allocate(p, if p % 2 == 0 { Tier::Dram } else { Tier::Pm });
+        }
+        let dram = PlaneQuery::tier(Tier::Dram);
+        assert_eq!(t.count_matching_in(0, 300, dram), 150);
+        assert_eq!(t.count_matching_in(10, 10, dram), 0);
+        assert_eq!(t.count_matching_in(0, 1, dram), 1);
+        assert_eq!(t.count_matching_in(1, 2, dram), 0);
+        // an unaligned interior range: even pages in [63, 130) are
+        // 64, 66, ..., 128 — 33 of them
+        assert_eq!(t.count_matching_in(63, 130, dram), 33);
+    }
+
+    #[test]
+    fn clear_window_pm_clears_whole_words_but_spares_dram() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Dram);
+        }
+        for p in 4..8 {
+            t.allocate(p, Tier::Pm);
+        }
+        t.touch_window(0, true); // DRAM — must survive
+        t.touch_window(5, true);
+        t.touch_window(6, false);
+        t.touch(5, true); // epoch bits must survive DCPMM_CLEAR
+        assert_eq!(t.clear_window_pm(), 2);
+        assert!(t.flags(0).window_dirty(), "DRAM window bits survive");
+        assert!(!t.flags(5).window_referenced());
+        assert!(!t.flags(5).window_dirty());
+        assert!(!t.flags(6).window_referenced());
+        assert!(t.flags(5).dirty(), "epoch bits survive");
+        t.check_index_consistent().unwrap();
+        // idempotent: nothing left to clear
+        assert_eq!(t.clear_window_pm(), 0);
+    }
+
+    #[test]
+    fn index_matches_dense_rescan_under_random_ops() {
+        use crate::util::proptest::check;
+        check("activity index consistency", 40, |rng| {
+            let pages = 1 + rng.next_below(3000) as u32;
+            let dram_cap = 1 + rng.next_below(pages as u64 + 8);
+            let pm_cap = 1 + rng.next_below(pages as u64 + 8);
+            let mut t = PageTable::new(pages, 1024, dram_cap * 1024, pm_cap * 1024);
+            for _ in 0..500 {
+                let page = rng.next_below(pages as u64) as u32;
+                match rng.next_below(7) {
+                    0 => {
+                        if !t.flags(page).valid() {
+                            let tier = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
+                            let _ = t.allocate(page, tier) || t.allocate(page, tier.other());
+                        }
+                    }
+                    1 => {
+                        if t.flags(page).valid() {
+                            t.touch(page, rng.chance(0.4));
+                        }
+                    }
+                    2 => t.touch_window(page, rng.chance(0.4)),
+                    3 => t.clear_rd(page),
+                    4 => t.clear_window(page),
+                    5 => {
+                        let to = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
+                        let _ = t.migrate(page, to);
+                    }
+                    _ => {
+                        let other = rng.next_below(pages as u64) as u32;
+                        let _ = t.exchange(page, other);
+                    }
+                }
+            }
+            if rng.chance(0.5) {
+                t.clear_window_pm();
+            }
+            t.check_index_consistent()?;
+            let (dram, pm) = t.recount();
+            crate::prop_assert!(
+                dram == t.used_pages(Tier::Dram) && pm == t.used_pages(Tier::Pm),
+                "occupancy counters diverged from the dense rescan"
+            );
+            crate::prop_assert!(
+                t.count_matching_in(0, pages, PlaneQuery::tier(Tier::Dram)) == dram,
+                "index-derived DRAM count diverged"
+            );
+            crate::prop_assert!(
+                t.count_matching_in(0, pages, PlaneQuery::tier(Tier::Pm)) == pm,
+                "index-derived PM count diverged"
+            );
+            Ok(())
+        });
     }
 }

@@ -1,4 +1,4 @@
-//! Resumable page-table walker — the simulator's `walk_page_range()`.
+//! Resumable page-table walkers — the simulator's `walk_page_range()`.
 //!
 //! The paper's single kernel-code change is exporting this routine to
 //! modules; SelMo then drives it with per-mode PTE callbacks (paper
@@ -12,8 +12,18 @@
 //!     may manipulate its R/D bits; it cannot see ahead. All policy logic
 //!     is expressible only through this interface (plus migration), which
 //!     is what keeps kernel-mode footprint minimal.
+//!
+//! Two walkers share those semantics:
+//!
+//!  * [`PageWalker`] — the dense reference walk: every slot in the budget
+//!    window is stepped, every *valid* PTE reaches the callback. O(slots).
+//!  * [`SparseWalker`] — the production walk: only PTEs matching a
+//!    [`PlaneQuery`] reach the callback; dead spans are skipped through
+//!    the page table's hierarchical activity index in O(words), which is
+//!    what makes kernel-side decision ticks O(touched + selected) instead
+//!    of O(footprint).
 
-use super::page_table::{PageFlags, PageId, PageTable};
+use super::page_table::{PageFlags, PageId, PageTable, PlaneQuery};
 
 /// Callback verdict for each visited PTE.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,9 +53,20 @@ impl PageWalker {
     }
 
     /// Walk up to `budget` PTEs starting at the stored cursor, invoking
-    /// `f(page, flags, pt)` on each *valid* PTE. Wraps around the end of
-    /// the table at most once per call (so a full-budget walk visits each
-    /// PTE at most once). Returns the number of valid PTEs visited.
+    /// `f(page, flags, pt)` on each *valid* PTE. Returns the number of
+    /// valid PTEs visited.
+    ///
+    /// **Budget/wrap invariant** (relied on by every consumer, and
+    /// reproduced exactly by [`SparseWalker::walk`]): `budget` is counted
+    /// in *table slots*, valid or not — each step consumes one slot and
+    /// advances the cursor, so a walk covers exactly `min(budget, n)`
+    /// consecutive slots and wraps around the end of the table at most
+    /// once per call. A budget-`n` walk starting mid-table therefore
+    /// stops right back at its starting slot, revisiting nothing after
+    /// the wrap. Only the *return value* is filtered to valid PTEs —
+    /// invalid slots still consume budget (`tests::
+    /// budget_counts_slots_not_valid_ptes` pins this on a table with an
+    /// invalid tail).
     pub fn walk<F>(&mut self, pt: &mut PageTable, budget: usize, mut f: F) -> usize
     where
         F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
@@ -62,6 +83,7 @@ impl PageWalker {
             self.cursor = (self.cursor + 1) % n;
             steps += 1;
             self.visited += 1;
+            pt.count_pte_visits(1);
             let flags = pt.flags(page);
             if !flags.valid() {
                 continue;
@@ -82,6 +104,132 @@ impl PageWalker {
         let n = pt.len() as usize;
         self.walk(pt, n, f)
     }
+}
+
+/// A resumable CLOCK hand that only visits PTEs matching a
+/// [`PlaneQuery`], skipping idle spans word- (64 pages) and summary-
+/// block- (4096 pages) wise through the page table's activity index.
+///
+/// Budget and cursor semantics mirror [`PageWalker::walk`] **exactly**:
+/// `budget` counts table slots covered (matching or not), the walk spans
+/// `min(budget, n)` consecutive slots from the stored cursor wrapping at
+/// most once, `Stop` leaves the cursor just past the stopping page, and a
+/// full-budget walk returns the cursor to its starting slot. A policy
+/// converted from `PageWalker` + an in-callback filter to `SparseWalker`
+/// + the equivalent query therefore sees the same pages in the same
+/// order with the same resume points — only the skipped (non-matching)
+/// slots stop costing work.
+///
+/// The callback must mutate no page other than the one it is handed:
+/// match words are snapshotted before the callbacks run (all policy
+/// callbacks — bit clears on the visited PTE — satisfy this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparseWalker {
+    cursor: PageId,
+    /// Total matching PTEs visited over the walker's lifetime (stats).
+    pub visited: u64,
+}
+
+impl SparseWalker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cursor(&self) -> PageId {
+        self.cursor
+    }
+
+    /// Walk `min(budget, n)` slots from the cursor, invoking `f` on every
+    /// PTE matching `q`. Returns the number of matching PTEs visited.
+    pub fn walk<F>(
+        &mut self,
+        pt: &mut PageTable,
+        budget: usize,
+        q: PlaneQuery,
+        mut f: F,
+    ) -> usize
+    where
+        F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
+    {
+        let n = pt.len() as u64;
+        if n == 0 || budget == 0 {
+            return 0;
+        }
+        let span = (budget as u64).min(n);
+        let start = (self.cursor as u64) % n;
+        let first_hi = n.min(start + span);
+        let mut matches = 0usize;
+        if let Some(stopped) =
+            scan_segment(pt, start as u32, first_hi as u32, q, &mut matches, &mut f)
+        {
+            self.visited += matches as u64;
+            self.cursor = ((stopped as u64 + 1) % n) as u32;
+            return matches;
+        }
+        let rem = span - (first_hi - start);
+        if rem > 0 {
+            if let Some(stopped) = scan_segment(pt, 0, rem as u32, q, &mut matches, &mut f) {
+                self.visited += matches as u64;
+                self.cursor = ((stopped as u64 + 1) % n) as u32;
+                return matches;
+            }
+        }
+        self.visited += matches as u64;
+        self.cursor = ((start + span) % n) as u32;
+        matches
+    }
+
+    /// Full-table pass (budget = table size).
+    pub fn walk_all<F>(&mut self, pt: &mut PageTable, q: PlaneQuery, f: F) -> usize
+    where
+        F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
+    {
+        let n = pt.len() as usize;
+        self.walk(pt, n, q, f)
+    }
+}
+
+/// Visit the pages of `[lo, hi)` matching `q` in ascending order; returns
+/// the page the callback stopped on, if any.
+fn scan_segment<F>(
+    pt: &mut PageTable,
+    lo: u32,
+    hi: u32,
+    q: PlaneQuery,
+    matches: &mut usize,
+    f: &mut F,
+) -> Option<PageId>
+where
+    F: FnMut(PageId, PageFlags, &mut PageTable) -> WalkControl,
+{
+    if lo >= hi {
+        return None;
+    }
+    let mut wi = (lo / 64) as usize;
+    let hi_words = ((hi - 1) / 64) as usize + 1;
+    while let Some((w, mut m)) = pt.next_match_word(wi, hi_words, q) {
+        let base = (w as u32) * 64;
+        if base < lo {
+            m &= !0u64 << (lo - base);
+        }
+        let keep = hi - base;
+        if keep < 64 {
+            m &= (1u64 << keep) - 1;
+        }
+        while m != 0 {
+            let b = m.trailing_zeros();
+            m &= m - 1;
+            let page = base + b;
+            *matches += 1;
+            pt.count_pte_visits(1);
+            let flags = pt.flags(page);
+            if f(page, flags, pt) == WalkControl::Stop {
+                return Some(page);
+            }
+        }
+        wi = w + 1;
+    }
+    None
 }
 
 #[cfg(test)]
@@ -187,5 +335,158 @@ mod tests {
         let mut pt = PageTable::new(0, 1024, 1024, 1024);
         let mut w = PageWalker::new();
         assert_eq!(w.walk_all(&mut pt, |_, _, _| WalkControl::Continue), 0);
+        let mut s = SparseWalker::new();
+        assert_eq!(
+            s.walk_all(&mut pt, PlaneQuery::any_activity(), |_, _, _| WalkControl::Continue),
+            0
+        );
+    }
+
+    #[test]
+    fn budget_counts_slots_not_valid_ptes() {
+        // The wrap-accounting invariant: budget consumes *slots* (valid
+        // or not), so a budget-n walk starting mid-table covers each slot
+        // exactly once and ends back at its starting cursor — the
+        // invalid tail is paid for in budget but never reaches the
+        // callback or the return count.
+        let mut pt = table(); // pages 0..6 valid, 6..10 invalid
+        let mut w = PageWalker::new();
+        w.walk(&mut pt, 4, |_, _, _| WalkControl::Continue);
+        assert_eq!(w.cursor(), 4, "cursor mid-table");
+        let mut seen = Vec::new();
+        let valid = w.walk(&mut pt, 10, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        // slots 4..10 (two valid, four invalid) then wrap to 0..4
+        assert_eq!(seen, vec![4, 5, 0, 1, 2, 3]);
+        assert_eq!(valid, 6, "return counts valid PTEs only");
+        assert_eq!(w.cursor(), 4, "full-budget walk returns to its start");
+        // lifetime `visited` counts every slot stepped, not just valid
+        assert_eq!(w.visited, 4 + 10);
+    }
+
+    #[test]
+    fn sparse_walker_reproduces_dense_walk_behaviour() {
+        // A SparseWalker with query Q must see exactly the pages a
+        // PageWalker sees when its callback filters on Q — same order,
+        // same resume points — on tables with invalid tails and wrapped,
+        // budgeted, early-stopped walks alike.
+        use crate::util::Rng64;
+        let mut rng = Rng64::new(1234);
+        for trial in 0..40 {
+            let n = 1 + rng.next_below(700) as u32;
+            let mut dense_pt = PageTable::new(n, 1024, 10_000 * 1024, 10_000 * 1024);
+            for p in 0..n {
+                if rng.chance(0.8) {
+                    let t = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
+                    dense_pt.allocate(p, t);
+                    if rng.chance(0.3) {
+                        dense_pt.touch(p, rng.chance(0.5));
+                    }
+                    if rng.chance(0.2) {
+                        dense_pt.touch_window(p, rng.chance(0.5));
+                    }
+                }
+            }
+            let mut sparse_pt = dense_pt.clone();
+            let q = match rng.next_below(3) {
+                0 => PlaneQuery::epoch_touched(),
+                1 => PlaneQuery::epoch_touched().in_tier(Tier::Pm),
+                _ => PlaneQuery::tier(Tier::Dram),
+            };
+            let mut dense = PageWalker::new();
+            let mut sparse = SparseWalker::new();
+            for _ in 0..4 {
+                let budget = 1 + rng.next_below(2 * n as u64) as usize;
+                let quota = 1 + rng.next_below(8) as usize;
+                let matches = |flags: PageFlags| -> bool {
+                    let f = flags.0;
+                    (q.any_of == 0 || f & q.any_of != 0)
+                        && f & q.all_of == q.all_of
+                        && f & q.none_of == 0
+                };
+                let mut dense_seen = Vec::new();
+                dense.walk(&mut dense_pt, budget, |p, flags, _| {
+                    if matches(flags) {
+                        dense_seen.push(p);
+                        if dense_seen.len() >= quota {
+                            return WalkControl::Stop;
+                        }
+                    }
+                    WalkControl::Continue
+                });
+                let mut sparse_seen = Vec::new();
+                sparse.walk(&mut sparse_pt, budget, q, |p, _, _| {
+                    sparse_seen.push(p);
+                    if sparse_seen.len() >= quota {
+                        WalkControl::Stop
+                    } else {
+                        WalkControl::Continue
+                    }
+                });
+                assert_eq!(sparse_seen, dense_seen, "trial {trial}");
+                // cursors agree unless the dense walk ran out of budget
+                // without stopping: then both advanced by exactly span
+                assert_eq!(sparse.cursor(), dense.cursor(), "trial {trial} cursor");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_walker_budget_window_and_stop_semantics() {
+        let mut pt = PageTable::new(20, 1024, 100 * 1024, 100 * 1024);
+        for p in 0..20 {
+            pt.allocate(p, Tier::Pm);
+        }
+        for p in [1u32, 5, 9, 13] {
+            pt.touch(p, false);
+        }
+        let q = PlaneQuery::epoch_touched();
+        let mut w = SparseWalker::new();
+        // budget window of 8 slots sees only the matches inside it and
+        // advances the cursor by the full window
+        let mut seen = Vec::new();
+        let m = w.walk(&mut pt, 8, q, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(seen, vec![1, 5]);
+        assert_eq!(m, 2);
+        assert_eq!(w.cursor(), 8);
+        // early stop parks the cursor just past the stopping page
+        let m = w.walk(&mut pt, 20, q, |_, _, _| WalkControl::Stop);
+        assert_eq!(m, 1);
+        assert_eq!(w.cursor(), 10, "stopped on page 9");
+        // wrap: remaining matches come in cursor order
+        let mut seen = Vec::new();
+        w.walk(&mut pt, 20, q, |p, _, _| {
+            seen.push(p);
+            WalkControl::Continue
+        });
+        assert_eq!(seen, vec![13, 1, 5, 9]);
+        assert_eq!(w.cursor(), 10);
+        assert_eq!(w.visited, 2 + 1 + 4);
+    }
+
+    #[test]
+    fn sparse_walker_callback_sees_flags_and_can_clear() {
+        let mut pt = table();
+        pt.touch(0, true);
+        pt.touch(1, false);
+        let mut w = SparseWalker::new();
+        let n = w.walk_all(&mut pt, PlaneQuery::epoch_touched(), |p, f, pt| {
+            assert!(f.referenced());
+            pt.clear_rd(p);
+            WalkControl::Continue
+        });
+        assert_eq!(n, 2);
+        assert!(!pt.flags(0).referenced() && !pt.flags(1).referenced());
+        // nothing left to visit
+        assert_eq!(
+            w.walk_all(&mut pt, PlaneQuery::epoch_touched(), |_, _, _| WalkControl::Continue),
+            0
+        );
+        pt.check_index_consistent().unwrap();
     }
 }

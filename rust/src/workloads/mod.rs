@@ -120,6 +120,9 @@ pub fn by_name(
 
 /// All workload names in the paper's evaluation (Fig. 5 matrix).
 pub const NPB_NAMES: [&str; 4] = ["BT", "FT", "MG", "CG"];
+/// GAP-suite workloads (paper §5.1 mentions the suite; on the sweep
+/// allowlist for the ROADMAP's GAP evaluation figure).
+pub const GAP_NAMES: [&str; 2] = ["PR", "BFS"];
 pub const SIZE_CLASSES: [&str; 3] = ["S", "M", "L"];
 
 #[cfg(test)]
@@ -138,8 +141,14 @@ mod tests {
                 assert_eq!(w.unwrap().name(), name);
             }
         }
-        assert!(by_name("pr-M", PAGE, 1.0).is_some());
-        assert!(by_name("bfs-L", PAGE, 1.0).is_some());
+        for base in GAP_NAMES {
+            for class in SIZE_CLASSES {
+                let name = format!("{base}-{class}");
+                let w = by_name(&name, PAGE, 1.0);
+                assert!(w.is_some(), "missing {name}");
+                assert_eq!(w.unwrap().name(), name);
+            }
+        }
         assert!(by_name("nope-M", PAGE, 1.0).is_none());
         assert!(by_name("bt-Q", PAGE, 1.0).is_none());
     }

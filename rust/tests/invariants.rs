@@ -59,6 +59,8 @@ fn pages_conserved_and_capacity_respected_across_all_policies() {
                 return Err(format!("{pname}: epoch {e} wall={wall}"));
             }
             let pt = sim.page_table();
+            pt.check_index_consistent()
+                .map_err(|err| format!("{pname}: epoch {e}: activity index: {err}"))?;
             let (dram, pm) = pt.recount();
             if dram + pm != footprint {
                 return Err(format!(

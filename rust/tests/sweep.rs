@@ -162,6 +162,60 @@ fn cli_sweep_epochs_for_override_invalidates_matching_cells_only() {
 }
 
 #[test]
+fn sweep_accepts_gap_workloads_via_public_api() {
+    // the GAP suite (PageRank/BFS) is on the sweep allowlist alongside
+    // the NPB set — the prerequisite for the ROADMAP's GAP evaluation
+    // figure
+    let mut spec = quick_spec();
+    spec.workloads = vec!["pr-S".to_string(), "bfs-S".to_string()];
+    spec.policies = vec!["adm-default".to_string(), "hyplacer".to_string()];
+    spec.seeds = vec![1];
+    spec.validate().unwrap();
+    let run = spec.run(2).unwrap();
+    assert_eq!(run.results.len(), 4);
+    for cell in &run.results {
+        assert!(cell.sim.total_wall_secs > 0.0, "{}/{}", cell.workload, cell.policy);
+        assert!(cell.sim.total_app_bytes > 0.0);
+    }
+    // display names resolve through the registry
+    assert!(run.results.iter().any(|c| c.sim.workload == "PR-S"));
+    assert!(run.results.iter().any(|c| c.sim.workload == "BFS-S"));
+    // hyplacer cells normalize against their adm-default baseline
+    let hyp = run
+        .results
+        .iter()
+        .find(|c| c.policy == "hyplacer" && c.workload == "pr-S")
+        .unwrap();
+    assert!(run.speedup_vs_baseline(hyp).is_some());
+}
+
+#[test]
+fn cli_sweep_accepts_gap_workloads() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out = std::process::Command::new(exe)
+        .args([
+            "sweep", "-w", "pr-S,bfs-S", "-p", "adm-default", "--seeds", "1", "--jobs", "2",
+            "--epochs", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("PR-S") && text.contains("BFS-S"), "{text}");
+    assert!(text.contains("executed 2 of 2 cells"), "{text}");
+
+    // the "gap" suite alias expands to the whole suite at -M
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "-w", "gap", "-p", "adm-default", "--seeds", "1", "--jobs", "2",
+               "--epochs", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("PR-M") && text.contains("BFS-M"), "{text}");
+}
+
+#[test]
 fn cli_sweep_rejects_duplicate_axes_and_lone_resume() {
     let exe = env!("CARGO_BIN_EXE_hyplacer");
     let out = std::process::Command::new(exe)
