@@ -55,6 +55,28 @@ def test_hotpath_carries_the_decision_tick_instruments():
     assert flag["value"] == 1
 
 
+def test_hotpath_carries_the_migration_engine_metrics():
+    # The bandwidth-throttled migration engine (DESIGN.md §9) must keep
+    # its queue telemetry in the committed doc so bench-check covers the
+    # pipeline: budget compliance and zero stale drops gate exactly (both
+    # hold by construction); queue depth / deferral gate after the first
+    # reference-runner recapture.
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    for name in (
+        "migrate/queue_depth_peak",
+        "migrate/deferred_ratio",
+        "migrate/stale_drop_ratio",
+        "migrate/throttle_respected",
+    ):
+        assert name in metrics, f"missing {name}"
+    assert metrics["migrate/stale_drop_ratio"]["kind"] == "exact"
+    assert metrics["migrate/stale_drop_ratio"]["value"] == 0
+    assert metrics["migrate/throttle_respected"]["kind"] == "exact"
+    assert metrics["migrate/throttle_respected"]["value"] == 1
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

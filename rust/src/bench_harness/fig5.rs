@@ -21,6 +21,9 @@ use super::{BenchOpts, Report};
 /// All runs for one size class, keyed (workload, policy).
 pub struct Matrix {
     pub sizes: Vec<&'static str>,
+    /// Workload-suite base names in presentation order (NPB for
+    /// fig5/6/7, GAP for fig-gap).
+    pub bases: &'static [&'static str],
     pub runs: Vec<SimResult>,
 }
 
@@ -43,7 +46,7 @@ impl Matrix {
 
     pub fn workload_names(&self) -> Vec<String> {
         let mut names: Vec<String> = Vec::new();
-        for base in NPB_NAMES {
+        for &base in self.bases {
             for size in &self.sizes {
                 let n = format!("{base}-{size}");
                 if self.runs.iter().any(|r| r.workload == n) {
@@ -67,11 +70,17 @@ impl Matrix {
 
 /// The [`exec::SweepSpec`] behind one evaluation matrix: the paper
 /// machine, the Fig. 5 policy set, one seed, and (workload × size) cells
-/// in presentation order.
-pub fn matrix_spec(sizes: &[&'static str], opts: &BenchOpts) -> exec::SweepSpec {
+/// in presentation order — for any workload-suite base set (NPB here,
+/// GAP for [`super::fig_gap`]).
+pub fn matrix_spec_for(
+    bases: &'static [&'static str],
+    sizes: &[&'static str],
+    opts: &BenchOpts,
+) -> exec::SweepSpec {
     let mut sim = SimConfig::default();
     sim.epochs = opts.epochs;
     sim.seed = opts.seed;
+    sim.migrate_share = opts.migrate_share;
     // steady state: skip the convergence transient (paper runs last
     // minutes-to-hours; placement converges in the first seconds)
     sim.warmup_epochs = (opts.epochs / 3).max(2);
@@ -80,13 +89,18 @@ pub fn matrix_spec(sizes: &[&'static str], opts: &BenchOpts) -> exec::SweepSpec 
     let mut spec = exec::SweepSpec::new(MachineConfig::paper_machine(), sim, hp);
     spec.window_frac = opts.window_frac;
     let mut workloads = Vec::new();
-    for base in NPB_NAMES {
+    for &base in bases {
         for size in sizes {
             workloads.push(format!("{base}-{size}"));
         }
     }
     spec.workloads = workloads;
     spec
+}
+
+/// The NPB (fig5/6/7) instantiation of [`matrix_spec_for`].
+pub fn matrix_spec(sizes: &[&'static str], opts: &BenchOpts) -> exec::SweepSpec {
+    matrix_spec_for(&NPB_NAMES, sizes, opts)
 }
 
 /// Run the evaluation matrix for the given size classes on the sweep
@@ -108,10 +122,20 @@ pub fn run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Matrix {
 /// instead of the later one clobbering the earlier); `--resume`
 /// additionally skips cells whose content key is already present.
 pub fn try_run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Result<Matrix, String> {
+    try_run_matrix_for(&NPB_NAMES, sizes, opts)
+}
+
+/// Suite-generic form of [`try_run_matrix`] (the fig-gap harness runs
+/// the GAP bases through the identical checkpoint/resume plumbing).
+pub fn try_run_matrix_for(
+    bases: &'static [&'static str],
+    sizes: &[&'static str],
+    opts: &BenchOpts,
+) -> Result<Matrix, String> {
     if opts.resume && opts.out.is_none() {
         return Err("--resume requires --out FILE".to_string());
     }
-    let spec = matrix_spec(sizes, opts);
+    let spec = matrix_spec_for(bases, sizes, opts);
     let prior = match &opts.out {
         Some(path) => exec::load_results(path)?,
         None => None,
@@ -123,11 +147,12 @@ pub fn try_run_matrix(sizes: &[&'static str], opts: &BenchOpts) -> Result<Matrix
     }
     Ok(Matrix {
         sizes: sizes.to_vec(),
+        bases,
         runs: outcome.run.results.into_iter().map(|c| c.sim).collect(),
     })
 }
 
-fn matrix_table(m: &Matrix, metric: &str) -> Table {
+pub(crate) fn matrix_table(m: &Matrix, metric: &str) -> Table {
     let mut headers = vec!["policy".to_string()];
     headers.extend(m.workload_names());
     headers.push("geomean".to_string());

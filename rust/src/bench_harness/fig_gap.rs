@@ -1,0 +1,69 @@
+//! fig-gap — the GAP-suite (PageRank / BFS) evaluation figure the
+//! ROADMAP called for once pr/bfs landed on the sweep allowlist.
+//!
+//! Graph analytics is the workload family the paper's NPB matrix does
+//! not cover: pointer-chasing frontiers with high random fractions are
+//! exactly where stranded-in-DCPMM pages hurt most (the latency-bound
+//! term of the perf model). The figure runs the full Fig. 5 policy set
+//! over PR/BFS at M and L scale through the same [`exec::SweepSpec`]
+//! checkpoint/resume plumbing as fig5/6/7, so `hyplacer fig-gap --out
+//! gap.json --resume` accumulates the matrix incrementally and emits
+//! the same JSON artifact schema every other figure uses.
+//!
+//! [`exec::SweepSpec`]: crate::exec::SweepSpec
+
+use crate::workloads::GAP_NAMES;
+
+use super::fig5::{matrix_table, try_run_matrix_for, Matrix};
+use super::{BenchOpts, Report};
+
+/// Run the GAP matrix and render the speedup figure. Fallible (bad
+/// checkpoint files report instead of panicking, matching the CLI's
+/// error path).
+pub fn try_fig_gap_report(opts: &BenchOpts) -> Result<(Report, Matrix), String> {
+    let m = try_run_matrix_for(&GAP_NAMES, &["M", "L"], opts)?;
+    let mut rep = Report::new(
+        "fig-gap",
+        "GAP suite (PR/BFS): throughput speedup vs ADM-default (M and L data sets)",
+    );
+    rep.tables.push(("speedup".to_string(), matrix_table(&m, "speedup")));
+    rep.tables.push(("energy_gain".to_string(), matrix_table(&m, "energy")));
+    rep.notes.push(format!(
+        "HyPlacer geomean {:.2}x over PR/BFS (graph frontiers: high random fraction, \
+         the perf model's latency-bound regime)",
+        m.geomean_speedup("hyplacer")
+    ));
+    let pr_l = m.speedup("PR-L", "hyplacer").unwrap_or(f64::NAN);
+    rep.notes.push(format!("HyPlacer on PR-L: {pr_l:.2}x"));
+    Ok((rep, m))
+}
+
+/// Panicking convenience used by tests (mirrors `fig5::run_matrix`).
+pub fn fig_gap_report(opts: &BenchOpts) -> (Report, Matrix) {
+    match try_fig_gap_report(opts) {
+        Ok(r) => r,
+        Err(e) => panic!("fig-gap matrix failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_matrix_has_the_expected_shape() {
+        let mut opts = BenchOpts::quick();
+        opts.epochs = 8;
+        let (rep, m) = fig_gap_report(&opts);
+        // PR/BFS at M and L, in presentation order
+        assert_eq!(m.workload_names(), vec!["PR-M", "PR-L", "BFS-M", "BFS-L"]);
+        assert_eq!(m.runs.len(), 4 * 6, "4 workloads x fig5 policy set");
+        let rendered = rep.render();
+        assert!(rendered.contains("fig-gap") && rendered.contains("PR-M"), "{rendered}");
+        // every cell has a baseline-normalized speedup
+        for w in m.workload_names() {
+            assert!(m.speedup(&w, "hyplacer").is_some(), "{w} missing");
+        }
+        assert!(m.geomean_speedup("hyplacer") > 0.0);
+    }
+}

@@ -11,6 +11,7 @@ pub mod baseline;
 pub mod fig2;
 pub mod fig3;
 pub mod fig5;
+pub mod fig_gap;
 pub mod perf;
 pub mod tables;
 
@@ -78,6 +79,9 @@ pub struct BenchOpts {
     /// With `out`: load prior results first and skip every cell whose
     /// content key matches — incremental paper matrices.
     pub resume: bool,
+    /// Migration-engine bandwidth share for every matrix cell (1.0 =
+    /// unthrottled one-shot semantics, the legacy-key default).
+    pub migrate_share: f64,
 }
 
 impl Default for BenchOpts {
@@ -90,6 +94,7 @@ impl Default for BenchOpts {
             jobs: 0,
             out: None,
             resume: false,
+            migrate_share: 1.0,
         }
     }
 }

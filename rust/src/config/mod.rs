@@ -250,11 +250,23 @@ pub struct SimConfig {
     pub seed: u64,
     /// Epochs ignored when computing steady-state throughput.
     pub warmup_epochs: u32,
+    /// Fraction of the machine's copy bandwidth the migration engine may
+    /// spend per epoch (`crate::vm::MigrationEngine::budget_moves`).
+    /// 1.0 disables throttling — the engine then reproduces the one-shot
+    /// `migrate::execute` semantics bit for bit, which is what keeps all
+    /// pre-engine sweep/figure baselines valid.
+    pub migrate_share: f64,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { epoch_secs: 1.0, epochs: 120, seed: 42, warmup_epochs: 10 }
+        SimConfig {
+            epoch_secs: 1.0,
+            epochs: 120,
+            seed: 42,
+            warmup_epochs: 10,
+            migrate_share: 1.0,
+        }
     }
 }
 
@@ -271,6 +283,20 @@ impl SimConfig {
         }
         if let Some(v) = doc.i64("sim.warmup_epochs") {
             self.warmup_epochs = v as u32;
+        }
+        if let Some(v) = doc.f64("sim.migrate_share") {
+            // same domain the CLI enforces: (0, 1]. `apply_doc` is
+            // infallible by design, so an out-of-range value keeps the
+            // current share and warns instead of silently running
+            // unthrottled (or as a 1-move-per-epoch trickle).
+            if v > 0.0 && v <= 1.0 {
+                self.migrate_share = v;
+            } else {
+                eprintln!(
+                    "config: sim.migrate_share = {v} outside (0, 1]; keeping {}",
+                    self.migrate_share
+                );
+            }
         }
     }
 }
@@ -289,6 +315,9 @@ pub struct CellOverride {
     pub epochs: Option<u32>,
     pub warmup_epochs: Option<u32>,
     pub epoch_secs: Option<f64>,
+    /// Migration-engine bandwidth share for matching cells (what
+    /// `--migrate-share-for '*-L=0.1'` scans).
+    pub migrate_share: Option<f64>,
 }
 
 impl CellOverride {
@@ -325,6 +354,9 @@ impl CellOverride {
         if let Some(s) = self.epoch_secs {
             sim.epoch_secs = s;
         }
+        if let Some(m) = self.migrate_share {
+            sim.migrate_share = m;
+        }
     }
 
     /// Parse a CLI `--epochs-for` rule, `WORKLOAD_PATTERN=EPOCHS`
@@ -347,6 +379,32 @@ impl CellOverride {
         Ok(CellOverride {
             workload: Some(pat.to_string()),
             epochs: Some(epochs),
+            ..CellOverride::default()
+        })
+    }
+
+    /// Parse a CLI `--migrate-share-for` rule,
+    /// `WORKLOAD_PATTERN=SHARE` (e.g. `*-L=0.1`), into a
+    /// workload-matched migration-share override so sweeps can scan the
+    /// engine's bandwidth throttle per cell.
+    pub fn parse_share_rule(rule: &str) -> Result<CellOverride, String> {
+        let (pat, share) = rule
+            .split_once('=')
+            .ok_or_else(|| format!("override {rule:?}: expected PATTERN=SHARE"))?;
+        let pat = pat.trim();
+        if pat.is_empty() {
+            return Err(format!("override {rule:?}: empty workload pattern"));
+        }
+        let share: f64 = share
+            .trim()
+            .parse()
+            .map_err(|e| format!("override {rule:?}: {e}"))?;
+        if !(share > 0.0 && share <= 1.0) {
+            return Err(format!("override {rule:?}: migrate share must be in (0, 1]"));
+        }
+        Ok(CellOverride {
+            workload: Some(pat.to_string()),
+            migrate_share: Some(share),
             ..CellOverride::default()
         })
     }
@@ -508,6 +566,43 @@ mod tests {
         assert!(CellOverride::parse_epochs_rule("=5").is_err());
         assert!(CellOverride::parse_epochs_rule("*-L=zero").is_err());
         assert!(CellOverride::parse_epochs_rule("*-L=0").is_err());
+    }
+
+    #[test]
+    fn migrate_share_default_and_overrides() {
+        let sim = SimConfig::default();
+        assert_eq!(sim.migrate_share, 1.0, "default is the unthrottled one-shot semantics");
+
+        let doc = parse::Doc::parse("[sim]\nmigrate_share = 0.25").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert!((sim.migrate_share - 0.25).abs() < 1e-12);
+        // config files get the CLI's domain: out-of-range values keep
+        // the current share (with a stderr warning), never a silent
+        // unthrottled run keyed as throttled
+        let doc = parse::Doc::parse("[sim]\nmigrate_share = 1.5").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert_eq!(sim.migrate_share, 1.0);
+        let doc = parse::Doc::parse("[sim]\nmigrate_share = 0").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert_eq!(sim.migrate_share, 1.0);
+
+        let ov = CellOverride::parse_share_rule("*-L=0.1").unwrap();
+        assert!(ov.applies("paper", "cg-L", "hyplacer"));
+        assert!(!ov.applies("paper", "cg-M", "hyplacer"));
+        let mut sim = SimConfig::default();
+        ov.apply(&mut sim);
+        assert!((sim.migrate_share - 0.1).abs() < 1e-12);
+        // untouched fields keep their values
+        assert_eq!(sim.epochs, SimConfig::default().epochs);
+
+        assert!(CellOverride::parse_share_rule("no-equals").is_err());
+        assert!(CellOverride::parse_share_rule("*-L=0").is_err());
+        assert!(CellOverride::parse_share_rule("*-L=1.5").is_err());
+        assert!(CellOverride::parse_share_rule("*-L=nan").is_err());
+        assert!(CellOverride::parse_share_rule("=0.5").is_err());
     }
 
     #[test]

@@ -7,9 +7,13 @@
 //!  1. the workload declares its region activity; the MMU side sets
 //!     R/D (+ delay-window) bits on touched pages,
 //!  2. the policy's decision tick runs against the page table, PCMon's
-//!     last window and the machine config, producing a migration plan,
-//!  3. the plan executes (`move_pages`/exchange), yielding copy traffic
-//!     and fixed kernel overhead,
+//!     last window, the machine config and the migration engine's
+//!     backpressure summary, producing a migration plan,
+//!  3. the plan is submitted to the [`MigrationEngine`], which executes
+//!     queued moves up to the epoch's copy-bandwidth budget
+//!     (`SimConfig::migrate_share`), carrying the remainder over and
+//!     revalidating aged entries — yielding copy traffic and fixed
+//!     kernel overhead for what actually ran,
 //!  4. the epoch's app demand is computed from the *current* page
 //!     distribution (post-migration), combined with migration traffic,
 //!     optionally routed (Memory Mode), and served by the perf model,
@@ -25,7 +29,7 @@ use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx};
 use crate::sim::{RunStats, SimClock};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
-use crate::vm::{migrate, PageTable, PlaneQuery};
+use crate::vm::{MigrationEngine, PageTable, PlaneQuery};
 use crate::workloads::Workload;
 
 /// Result summary of one simulated run.
@@ -43,6 +47,12 @@ pub struct SimResult {
     pub total_energy_j: f64,
     pub migrated_pages: u64,
     pub dram_traffic_share: f64,
+    /// Migration-engine telemetry (run-local; not part of the persisted
+    /// sweep schema): peak queue depth, deferral and stale-drop ratios.
+    /// All exactly 0 with the default `migrate_share = 1.0`.
+    pub migrate_queue_peak: u64,
+    pub migrate_deferred_ratio: f64,
+    pub migrate_stale_ratio: f64,
     pub stats: RunStats,
 }
 
@@ -83,6 +93,9 @@ pub struct Simulation {
     stats: RunStats,
     energy: EnergyAccount,
     rng: Rng64,
+    /// The bandwidth-throttled migration pipeline (`SimConfig::
+    /// migrate_share`; 1.0 = unthrottled one-shot semantics).
+    engine: MigrationEngine,
     /// delay-window fraction of the epoch (HyPlacer's 50 ms / 1 s).
     window_frac: f64,
     region_scratch: Vec<ActiveRegion>,
@@ -125,6 +138,7 @@ impl Simulation {
         let model = PerfModel::new(&cfg);
         let seed = sim.seed;
         let warmup = sim.warmup_epochs;
+        let engine = MigrationEngine::new(sim.migrate_share);
         let mut this = Simulation {
             cfg,
             sim,
@@ -137,6 +151,7 @@ impl Simulation {
             stats: RunStats::new(warmup),
             energy: EnergyAccount::default(),
             rng: Rng64::new(seed),
+            engine,
             window_frac: window_frac.clamp(0.0, 1.0),
             region_scratch: Vec::new(),
             region_bounds: Vec::new(),
@@ -175,11 +190,13 @@ impl Simulation {
         }
     }
 
-    /// Refresh the incremental counters after a migration plan executed,
-    /// by exact per-page deltas: every policy selects promotion
-    /// candidates from PM and demotion victims from DRAM (the PageFind
-    /// contract), so a page's *current* tier tells us whether its move
-    /// actually happened (skipped moves leave the tier unchanged).
+    /// Refresh the incremental counters from the moves the engine
+    /// actually landed this epoch, by exact per-page deltas: every
+    /// policy selects promotion candidates from PM and demotion victims
+    /// from DRAM (the PageFind contract), so a page's *current* tier
+    /// confirms the move (the engine only reports moves that succeeded;
+    /// the tier check also keeps the function safe if handed a raw plan
+    /// with skipped moves, as the one-shot tests do).
     /// O(plan size), independent of footprint.
     fn apply_plan_to_counts(&mut self, plan: &crate::vm::MigrationPlan) {
         if plan.is_empty() {
@@ -218,6 +235,10 @@ impl Simulation {
     }
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+    /// The migration engine's queue summary as of the last epoch.
+    pub fn migration_backpressure(&self) -> crate::vm::Backpressure {
+        self.engine.backpressure()
     }
 
     /// RNG draws consumed so far — a deterministic, scale-free proxy for
@@ -301,7 +322,8 @@ impl Simulation {
             });
         }
 
-        // --- 2. Policy decision tick.
+        // --- 2. Policy decision tick (with the engine's queue summary
+        // from the previous epoch: decisions react to the backlog).
         let plan = {
             let mut ctx = PolicyCtx {
                 pt: &mut self.pt,
@@ -309,12 +331,16 @@ impl Simulation {
                 cfg: &self.cfg,
                 epoch,
                 epoch_secs: self.sim.epoch_secs,
+                backpressure: self.engine.backpressure(),
             };
             self.policy.epoch_tick(&mut ctx)
         };
 
-        // --- 3. Execute migrations.
-        let mig = migrate::execute(&mut self.pt, &self.cfg, &plan);
+        // --- 3. Submit the plan and execute queued migrations up to the
+        // epoch's copy-bandwidth budget; the remainder carries over.
+        self.engine.submit(&mut self.pt, &plan, epoch);
+        let (mig, executed) =
+            self.engine.run_epoch(&mut self.pt, &self.cfg, epoch, self.sim.epoch_secs);
 
         // --- 4. App demand from the post-migration distribution, using
         // the incrementally maintained per-region DRAM counts.
@@ -326,7 +352,7 @@ impl Simulation {
         if !bounds_match {
             self.rebuild_region_counts(&regions);
         } else {
-            self.apply_plan_to_counts(&plan);
+            self.apply_plan_to_counts(&executed);
         }
         let mut demand = EpochDemand::default();
         demand.app_bytes = offered;
@@ -394,6 +420,9 @@ impl Simulation {
             total_energy_j: self.energy.total_j(),
             migrated_pages: self.stats.total_migrated_pages(),
             dram_traffic_share: self.stats.tier_traffic_share(Tier::Dram),
+            migrate_queue_peak: self.stats.migrate_queue_depth_peak(),
+            migrate_deferred_ratio: self.stats.migrate_deferred_ratio(),
+            migrate_stale_ratio: self.stats.migrate_stale_drop_ratio(),
             stats: self.stats,
         }
     }
@@ -561,6 +590,67 @@ mod tests {
         assert!(
             large_visits < 4 * small_visits + 8192,
             "visits grew with footprint: small {small_visits}, large {large_visits}"
+        );
+    }
+
+    #[test]
+    fn default_share_has_empty_queue_semantics() {
+        // migrate_share = 1.0 (the default): every plan lands in its own
+        // epoch, nothing defers, nothing goes stale — the precondition
+        // for all pre-engine baselines staying byte-identical.
+        let r = small_sim("hyplacer", "cg-L", 20);
+        assert!(r.migrated_pages > 0);
+        assert_eq!(r.migrate_queue_peak, 0);
+        assert_eq!(r.migrate_deferred_ratio, 0.0);
+        assert_eq!(r.migrate_stale_ratio, 0.0);
+        assert!(r.stats.epochs.iter().all(|e| e.migrate_queued == 0));
+    }
+
+    #[test]
+    fn throttled_share_caps_moves_carries_over_and_charges_traffic() {
+        use crate::vm::MigrationEngine;
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 16;
+        sim.warmup_epochs = 2;
+        sim.migrate_share = 0.05;
+        let budget = MigrationEngine::budget_moves(&cfg, sim.migrate_share, sim.epoch_secs);
+        assert!(budget > 0 && budget < u64::MAX);
+        let hp = HyPlacerConfig::default();
+        let w = workloads::by_name("cg-L", cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+        let r = run_pair(&cfg, &sim, w, p, 0.05);
+
+        // per-epoch executed moves never exceed the bandwidth budget
+        // (budget.max(2): a queued exchange heading an idle epoch may
+        // overshoot a 1-move budget by one — not reachable at this
+        // share, but the invariant is stated as the engine guarantees it)
+        for e in &r.stats.epochs {
+            assert!(
+                e.migrated_pages <= budget.max(2),
+                "epoch {}: {} moves > budget {budget}",
+                e.epoch,
+                e.migrated_pages
+            );
+        }
+        // the first oversized activation defers work across epochs
+        assert!(r.migrate_queue_peak > 0, "no carry-over observed");
+        assert!(r.migrate_deferred_ratio > 0.0);
+        assert!(r.migrated_pages > 0);
+        // in-flight copies contend with the app: tier traffic of a
+        // migrating epoch exceeds the app bytes by the copy traffic
+        // (each move reads one tier and writes the other)
+        let page = cfg.page_bytes as f64;
+        let epochs = &r.stats.epochs;
+        let migrating = epochs
+            .iter()
+            .find(|e| e.migrated_pages > 0)
+            .expect("some epoch migrated");
+        let extra = migrating.dram_bytes + migrating.pm_bytes - migrating.app_bytes;
+        let copy = 2.0 * migrating.migrated_pages as f64 * page;
+        assert!(
+            extra > 0.99 * copy,
+            "migration traffic not folded into demand: extra {extra}, copy {copy}"
         );
     }
 

@@ -213,8 +213,22 @@ impl SweepSpec {
     pub fn cell_key(&self, machine_idx: usize, workload: &str, policy: &str, seed: u64) -> u64 {
         let (mname, machine) = &self.machines[machine_idx];
         let sim = self.resolved_sim(mname, workload, policy, seed);
+        // The sim fingerprint spells out the *original* SimConfig field
+        // set exactly as `derive(Debug)` rendered it before the
+        // migration engine existed, and appends newer knobs only at
+        // non-default values. Default-config grids therefore keep their
+        // historical content keys — existing checkpoints resume with 0
+        // executed cells — while an overridden `migrate_share` re-keys
+        // exactly the cells it changes.
+        let mut sim_fp = format!(
+            "SimConfig {{ epoch_secs: {:?}, epochs: {:?}, seed: {:?}, warmup_epochs: {:?} }}",
+            sim.epoch_secs, sim.epochs, sim.seed, sim.warmup_epochs
+        );
+        if sim.migrate_share != 1.0 {
+            sim_fp.push_str(&format!("|migrate_share={:?}", sim.migrate_share));
+        }
         let fp = format!(
-            "v1|machine={mname}:{machine:?}|sim={sim:?}|hp={:?}|wf={}|w={workload}|p={policy}",
+            "v1|machine={mname}:{machine:?}|sim={sim_fp}|hp={:?}|wf={}|w={workload}|p={policy}",
             self.hyplacer, self.window_frac
         );
         fnv1a64(fp.as_bytes())
@@ -418,6 +432,11 @@ impl CellResult {
                 total_energy_j: num("total_energy_j")?,
                 migrated_pages: num("migrated_pages")? as u64,
                 dram_traffic_share: num("dram_traffic_share")?,
+                // engine telemetry is run-local (like the epoch trace):
+                // not persisted, so loaded cells carry zeros
+                migrate_queue_peak: 0,
+                migrate_deferred_ratio: 0.0,
+                migrate_stale_ratio: 0.0,
                 stats: RunStats::new(0),
             },
         })
@@ -741,6 +760,50 @@ mod tests {
         spec.overrides.push(CellOverride {
             workload: Some("mg-S".to_string()),
             epochs: Some(4),
+            ..CellOverride::default()
+        });
+        for (c, orig) in spec.cells().iter().zip(a.iter()) {
+            if c.workload == "mg-S" {
+                assert_ne!(c.key, orig.key, "{}/{}", c.workload, c.policy);
+            } else {
+                assert_eq!(c.key, orig.key, "{}/{}", c.workload, c.policy);
+            }
+        }
+    }
+
+    #[test]
+    fn default_migrate_share_keeps_legacy_cell_keys() {
+        // The contract that keeps pre-engine checkpoints resumable: at
+        // the default share the fingerprint must be byte-for-byte the
+        // pre-engine one — the original SimConfig Debug rendering with
+        // no trace of the new field. Pin the exact string here so a
+        // refactor that silently reformats it (and re-keys every
+        // existing results file) fails loudly.
+        let spec = quick_spec();
+        let (mname, machine) = &spec.machines[0];
+        let w = &spec.workloads[0];
+        let p = &spec.policies[0];
+        let seed = spec.seeds[0];
+        let sim = spec.resolved_sim(mname, w, p, seed);
+        assert_eq!(sim.migrate_share, 1.0);
+        let legacy = format!(
+            "v1|machine={mname}:{machine:?}|sim=SimConfig {{ epoch_secs: {:?}, epochs: {:?}, \
+             seed: {:?}, warmup_epochs: {:?} }}|hp={:?}|wf={}|w={w}|p={p}",
+            sim.epoch_secs,
+            sim.epochs,
+            sim.seed,
+            sim.warmup_epochs,
+            spec.hyplacer,
+            spec.window_frac
+        );
+        assert_eq!(spec.cell_key(0, w, p, seed), crate::util::fnv1a64(legacy.as_bytes()));
+
+        // a migrate-share override re-keys exactly the matching cells
+        let a = quick_spec().cells();
+        let mut spec = quick_spec();
+        spec.overrides.push(CellOverride {
+            workload: Some("mg-S".to_string()),
+            migrate_share: Some(0.1),
             ..CellOverride::default()
         });
         for (c, orig) in spec.cells().iter().zip(a.iter()) {

@@ -18,7 +18,7 @@
 use std::process::ExitCode;
 
 use hyplacer::bench_harness::baseline::{self, BaselineDoc};
-use hyplacer::bench_harness::{fig2, fig3, fig5, perf, tables, BenchOpts, Report};
+use hyplacer::bench_harness::{fig2, fig3, fig5, fig_gap, perf, tables, BenchOpts, Report};
 use hyplacer::config::{parse::Doc, CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;
 use hyplacer::exec::{self, SweepSpec};
@@ -51,6 +51,10 @@ struct Args {
     resume: bool,
     /// per-cell epoch overrides, comma list of WORKLOAD_PATTERN=EPOCHS.
     epochs_for: Option<String>,
+    /// migration-engine bandwidth share in (0, 1]; 1.0 = unthrottled.
+    migrate_share: Option<f64>,
+    /// per-cell migrate-share overrides, WORKLOAD_PATTERN=SHARE list.
+    migrate_share_for: Option<String>,
     /// bench-check: committed baseline file(s), comma list.
     baseline: Option<String>,
     /// bench-check: directory holding fresh BENCH_*.json (else recompute).
@@ -77,6 +81,8 @@ fn parse_args() -> Result<Args, String> {
         out: None,
         resume: false,
         epochs_for: None,
+        migrate_share: None,
+        migrate_share_for: None,
         baseline: None,
         current: None,
         tolerance: 0.25,
@@ -99,6 +105,18 @@ fn parse_args() -> Result<Args, String> {
             "--config" => args.config = Some(take("--config")?),
             "--out" => args.out = Some(take("--out")?),
             "--epochs-for" => args.epochs_for = Some(take("--epochs-for")?),
+            "--migrate-share" => {
+                let v: f64 = take("--migrate-share")?
+                    .parse()
+                    .map_err(|e| format!("--migrate-share: {e}"))?;
+                if !(v > 0.0 && v <= 1.0) {
+                    return Err("--migrate-share: must be in (0, 1]".to_string());
+                }
+                args.migrate_share = Some(v);
+            }
+            "--migrate-share-for" => {
+                args.migrate_share_for = Some(take("--migrate-share-for")?)
+            }
             "--baseline" => args.baseline = Some(take("--baseline")?),
             "--current" => args.current = Some(take("--current")?),
             "--tolerance" => {
@@ -135,6 +153,7 @@ COMMANDS
   fig5      throughput speedup matrix, M+L data sets (paper Fig. 5)
   fig6      energy-gain matrix (paper Fig. 6; reuses the fig5 runs)
   fig7      small-data-set overheads (paper Fig. 7)
+  fig-gap   GAP-suite (PR/BFS) evaluation matrix (ROADMAP figure)
   table1    proposal comparison table (paper Table 1)
   table2    PageFind modes (paper Table 2)
   table3    workload summary (paper Table 3)
@@ -163,6 +182,13 @@ FLAGS
   --epochs-for PAT=N[,PAT=N]
                  (sweep) per-cell epoch overrides by workload pattern,
                  e.g. '*-L=240' gives L-size workloads longer runs
+  --migrate-share S
+                 migration-engine bandwidth share in (0, 1] for
+                 run/compare/sweep and the fig5/6/7/fig-gap matrices;
+                 1.0 (the default) is unthrottled one-shot semantics
+  --migrate-share-for PAT=S[,PAT=S]
+                 (sweep) per-cell migrate-share overrides by workload
+                 pattern, e.g. '*-L=0.1' throttles L-size cells
   --baseline F   (bench-check) committed baseline file(s), comma list
   --current DIR  (bench-check) compare against DIR/BENCH_*.json from a
                  fresh `bench --json DIR` run (default: recompute live)
@@ -194,6 +220,9 @@ fn opts_from(args: &Args) -> BenchOpts {
     o.jobs = args.jobs;
     o.out = args.out.clone();
     o.resume = args.resume;
+    if let Some(m) = args.migrate_share {
+        o.migrate_share = m;
+    }
     o
 }
 
@@ -227,6 +256,9 @@ fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig
     }
     if let Some(s) = args.seed {
         sim.seed = s;
+    }
+    if let Some(m) = args.migrate_share {
+        sim.migrate_share = m;
     }
     hp.use_aot = args.aot;
     Ok((machine, sim, hp))
@@ -372,6 +404,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(rules) = &args.epochs_for {
         for rule in split_list(rules) {
             spec.overrides.push(CellOverride::parse_epochs_rule(&rule)?);
+        }
+    }
+    if let Some(rules) = &args.migrate_share_for {
+        for rule in split_list(rules) {
+            spec.overrides.push(CellOverride::parse_share_rule(&rule)?);
         }
     }
     // a prior --out file always merges into the rewrite; --resume
@@ -530,6 +567,13 @@ fn main() -> ExitCode {
             emit(&rep, &args.csv);
             Ok(())
         }
+        "fig-gap" => match fig_gap::try_fig_gap_report(&opts) {
+            Ok((rep, _)) => {
+                emit(&rep, &args.csv);
+                Ok(())
+            }
+            Err(e) => Err(e),
+        },
         "table1" => {
             emit(&tables::table1(), &args.csv);
             Ok(())

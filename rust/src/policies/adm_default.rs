@@ -60,6 +60,7 @@ mod tests {
             cfg: &cfg,
             epoch: 0,
             epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
         };
         let plan = p.epoch_tick(&mut ctx);
         assert!(plan.is_empty());

@@ -16,7 +16,7 @@
 //! observes on BT ("autonuma fails to improve ADM-default on BT").
 
 use crate::config::{MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PlaneQuery, SparseWalker, WalkControl};
+use crate::vm::{MigrationPlan, PageFlags, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
@@ -84,7 +84,13 @@ impl Policy for AutoNuma {
             if flags.referenced() {
                 let c = &mut proof[page as usize];
                 *c = c.saturating_add(1);
-                if flags.tier() == Tier::Pm && *c >= PROMOTE_THRESHOLD && promote.len() < budget {
+                // still *profile* in-flight (QUEUED) pages, but never
+                // re-plan them — their move is already in the engine
+                if flags.tier() == Tier::Pm
+                    && !flags.queued()
+                    && *c >= PROMOTE_THRESHOLD
+                    && promote.len() < budget
+                {
                     promote.push(page);
                 }
             }
@@ -106,7 +112,7 @@ impl Policy for AutoNuma {
             // cleared and survive this pass; unreferenced, proof-less
             // pages are reclaim victims. DRAM-tier scan with early stop:
             // O(selected) on mostly-idle DRAM.
-            let dram = PlaneQuery::tier(Tier::Dram);
+            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
             self.demote_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
                 if flags.referenced() {
                     pt.clear_rd(page);
@@ -151,6 +157,7 @@ mod tests {
             cfg,
             epoch,
             epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
         };
         p.epoch_tick(&mut ctx)
     }
@@ -205,6 +212,7 @@ mod tests {
             cfg: &cfg,
             epoch: 0,
             epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
         };
         let _ = p.epoch_tick(&mut ctx);
         // only the 2-page window was observed/cleared

@@ -16,11 +16,15 @@
 //!  * otherwise the distribution is on target → no request.
 //!
 //! Every decision is budgeted by the max-migration size (§5.1: 128 K
-//! pages per activation).
+//! pages per activation), *minus* whatever the migration engine still
+//! has in flight: when the throttled engine's queue backs up, Control
+//! shrinks (down to pausing) its next request instead of piling more
+//! moves onto a saturated copy path — the same promotion-rate
+//! backpressure that makes TPP-style tiering viable under load.
 
 use crate::config::{HyPlacerConfig, Tier};
 use crate::mem::PcmonSnapshot;
-use crate::vm::PageTable;
+use crate::vm::{Backpressure, PageTable};
 
 use super::selmo::PageFindMode;
 
@@ -33,9 +37,21 @@ pub struct Decision {
 }
 
 /// Decide the epoch's PageFind request (if any).
-pub fn decide(cfg: &HyPlacerConfig, pt: &PageTable, pcmon: &PcmonSnapshot) -> Option<Decision> {
+pub fn decide(
+    cfg: &HyPlacerConfig,
+    pt: &PageTable,
+    pcmon: &PcmonSnapshot,
+    bp: &Backpressure,
+) -> Option<Decision> {
     let page_bytes = pt.page_bytes();
-    let budget_pages = (cfg.max_migrate_bytes / page_bytes).max(1) as usize;
+    let activation_pages = (cfg.max_migrate_bytes / page_bytes).max(1) as usize;
+    // Backpressure: moves already queued in the engine consume this
+    // activation's budget. With an idle queue (always true at
+    // migrate_share = 1.0) this is the plain activation budget.
+    let budget_pages = activation_pages.saturating_sub(bp.queued_moves as usize);
+    if budget_pages == 0 {
+        return None; // the engine is still draining a full activation
+    }
 
     let dram_cap = pt.capacity_pages(Tier::Dram);
     let dram_used = pt.used_pages(Tier::Dram);
@@ -107,6 +123,14 @@ mod tests {
         c
     }
 
+    fn idle() -> Backpressure {
+        Backpressure::default()
+    }
+
+    fn backed_up(queued: u64) -> Backpressure {
+        Backpressure { queued_moves: queued, ..Backpressure::default() }
+    }
+
     fn quiet_pcmon() -> PcmonSnapshot {
         PcmonSnapshot::default()
     }
@@ -118,7 +142,7 @@ mod tests {
     #[test]
     fn switch_when_dram_full_and_pm_writing() {
         let pt = pt_with(100, 100, 50);
-        let d = decide(&cfg(), &pt, &writey_pcmon()).unwrap();
+        let d = decide(&cfg(), &pt, &writey_pcmon(), &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::Switch);
         assert_eq!(d.count, 64); // budget-capped
     }
@@ -126,7 +150,7 @@ mod tests {
     #[test]
     fn promote_int_when_dram_has_room_and_pm_writing() {
         let pt = pt_with(50, 100, 50);
-        let d = decide(&cfg(), &pt, &writey_pcmon()).unwrap();
+        let d = decide(&cfg(), &pt, &writey_pcmon(), &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::PromoteInt);
         // room to watermark = 95-50 = 45
         assert_eq!(d.count, 45);
@@ -135,7 +159,7 @@ mod tests {
     #[test]
     fn demote_when_dram_full_and_pm_quiet() {
         let pt = pt_with(98, 100, 50);
-        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        let d = decide(&cfg(), &pt, &quiet_pcmon(), &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::Demote);
         assert_eq!(d.count, 4, "excess (3) + slack (1)");
     }
@@ -143,7 +167,7 @@ mod tests {
     #[test]
     fn eager_promote_when_everything_quiet() {
         let pt = pt_with(50, 100, 50);
-        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        let d = decide(&cfg(), &pt, &quiet_pcmon(), &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::Promote);
         assert_eq!(d.count, 44); // to watermark (95) - slack (1)
     }
@@ -153,20 +177,37 @@ mod tests {
         // at watermark - slack (where DEMOTE drains to), eager PROMOTE
         // must NOT re-trigger
         let pt = pt_with(94, 100, 50);
-        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon(), &idle()), None);
         // one page below the dead band: still quiet
         let pt = pt_with(93, 100, 50);
-        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon(), &idle()), None);
         // below the dead band: promotion resumes
         let pt = pt_with(92, 100, 50);
-        let d = decide(&cfg(), &pt, &quiet_pcmon()).unwrap();
+        let d = decide(&cfg(), &pt, &quiet_pcmon(), &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::Promote);
     }
 
     #[test]
     fn on_target_when_pm_empty_and_dram_below_watermark() {
         let pt = pt_with(50, 100, 0);
-        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon()), None);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon(), &idle()), None);
+    }
+
+    #[test]
+    fn backpressure_shrinks_then_pauses_requests() {
+        // DRAM full + PM writing would normally request a full-budget
+        // SWITCH (64); queued engine moves eat into that budget...
+        let pt = pt_with(100, 100, 50);
+        let d = decide(&cfg(), &pt, &writey_pcmon(), &backed_up(40)).unwrap();
+        assert_eq!(d.mode, PageFindMode::Switch);
+        assert_eq!(d.count, 24, "budget shrinks by the queued backlog");
+        // ...and a saturated queue pauses planning entirely, in every mode
+        assert_eq!(decide(&cfg(), &pt, &writey_pcmon(), &backed_up(64)), None);
+        let pt = pt_with(98, 100, 50);
+        assert_eq!(decide(&cfg(), &pt, &quiet_pcmon(), &backed_up(200)), None);
+        // an idle queue reproduces the unthrottled decisions exactly
+        let d = decide(&cfg(), &pt, &quiet_pcmon(), &backed_up(0)).unwrap();
+        assert_eq!(d.mode, PageFindMode::Demote);
     }
 
     #[test]
@@ -174,10 +215,10 @@ mod tests {
         let pt = pt_with(50, 100, 50);
         let mut pcm = quiet_pcmon();
         pcm.pm_write_bw = HyPlacerConfig::default().pm_write_bw_threshold; // == threshold: not above
-        let d = decide(&cfg(), &pt, &pcm).unwrap();
+        let d = decide(&cfg(), &pt, &pcm, &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::Promote);
         pcm.pm_write_bw *= 1.01;
-        let d = decide(&cfg(), &pt, &pcm).unwrap();
+        let d = decide(&cfg(), &pt, &pcm, &idle()).unwrap();
         assert_eq!(d.mode, PageFindMode::PromoteInt);
     }
 }

@@ -220,11 +220,20 @@ impl Policy for HyPlacer {
 
         // 3. Control decision from occupancy + PCMon, with our own
         // last-epoch migration traffic discounted from the PM write
-        // counter (see `self_pm_write_bytes`).
+        // counter. Unthrottled, the plan we handed over landed in full,
+        // so the plan-sized estimate (`self_pm_write_bytes`) is exact —
+        // and byte-identical to the historical behavior. A throttled
+        // engine executes carry-over instead of the fresh plan, so there
+        // we discount what the engine reports it actually copied.
+        let bp = ctx.backpressure;
+        let (self_wr_bytes, self_rd_bytes) = if bp.throttled {
+            (bp.pm_copy_write_bytes, bp.pm_copy_read_bytes)
+        } else {
+            (self.self_pm_write_bytes, self.self_pm_read_bytes)
+        };
         let mut pcmon = ctx.pcmon;
         if pcmon.window_secs > 0.0 {
-            pcmon.pm_write_bw =
-                (pcmon.pm_write_bw - self.self_pm_write_bytes / pcmon.window_secs).max(0.0);
+            pcmon.pm_write_bw = (pcmon.pm_write_bw - self_wr_bytes / pcmon.window_secs).max(0.0);
         }
         // Adaptive SWITCH backoff: grade the previous switch burst on
         // total app PM *bytes per window* (bandwidth is misleading:
@@ -232,8 +241,8 @@ impl Policy for HyPlacer {
         // even as traffic falls), with our own migration reads/writes
         // discounted and a two-strike rule against epoch noise.
         let pm_app_bytes = ((pcmon.pm_write_bw + pcmon.pm_read_bw) * pcmon.window_secs
-            - self.self_pm_write_bytes
-            - self.self_pm_read_bytes)
+            - self_wr_bytes
+            - self_rd_bytes)
             .max(0.0);
         if self.last_was_switch {
             if pm_app_bytes < 0.99 * self.pm_bytes_at_switch {
@@ -253,7 +262,7 @@ impl Policy for HyPlacer {
             self.switch_backoff = (self.switch_backoff * 2.0).min(1.0);
         }
 
-        let decision = control::decide(&self.cfg, ctx.pt, &pcmon);
+        let decision = control::decide(&self.cfg, ctx.pt, &pcmon, &ctx.backpressure);
         self.last_decision = decision;
 
         // 4. SelMo PageFind reply → migration plan. Selection merges the
@@ -342,7 +351,14 @@ mod tests {
         pcmon: PcmonSnapshot,
         epoch: u32,
     ) -> MigrationPlan {
-        let mut ctx = PolicyCtx { pt, pcmon, cfg: m, epoch, epoch_secs: 1.0 };
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon,
+            cfg: m,
+            epoch,
+            epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
+        };
         h.epoch_tick(&mut ctx)
     }
 

@@ -162,6 +162,12 @@ pub fn merge_candidates(
 /// candidate skips) are examined, never the tier population. Every pool
 /// draw is charged to the table's `pte_visits` counter, so the metric
 /// would expose a regression that defeats the early stop.
+///
+/// Pages with a queued (in-flight) migration are excluded from both
+/// sides, so a throttled engine's backlog is never re-selected and
+/// SWITCH pairs are formed only from actually plannable pages. With an
+/// idle queue (always true at `migrate_share = 1.0`) no QUEUED bit
+/// exists during a tick, so selection is unchanged.
 #[allow(clippy::too_many_arguments)]
 fn select_into(
     topk: &mut TopK,
@@ -176,12 +182,16 @@ fn select_into(
 ) {
     topk.begin(k, floor);
     for (i, &page) in cand_pages.iter().enumerate() {
+        if pt.flags(page).queued() {
+            continue; // move already in flight — never re-planned
+        }
         topk.offer(page, cand_scores[i]);
     }
     if pool_score >= floor && !pool_score.is_nan() {
         let mut drawn = 0u64;
         let mut ci = 0usize; // merge cursor — pool and candidates both ascend
-        for page in pt.iter_matching(PlaneQuery::tier(tier)) {
+        let pool = PlaneQuery::tier(tier).and_none(crate::vm::PageFlags::QUEUED);
+        for page in pt.iter_matching(pool) {
             drawn += 1;
             while ci < cand_pages.len() && cand_pages[ci] < page {
                 ci += 1;
@@ -567,6 +577,29 @@ mod tests {
         // pool (page 1 is the only settled DRAM page, at score 0.1)
         let r = selmo.page_find(&mut pt, PageFindMode::Demote, 5, &c, 0.0);
         assert_eq!(r.demote, vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn queued_pages_are_excluded_from_candidates_and_pools() {
+        // a page with an in-flight migration (QUEUED bit) must never be
+        // re-selected — neither as an explicit candidate nor as a
+        // settled-pool draw (the throttled engine's backlog contract)
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        let pages = [4u32, 6];
+        let promote = [0.9f32, 0.8];
+        let demote = [-1.0f32; 2];
+        let hot = [0.0f32; 8];
+        let c = cand(&pages, &demote, &promote, &hot, 0.0, 0.2);
+        pt.set_queued(4); // hottest candidate is in flight
+        pt.set_queued(5); // a settled pool page is in flight
+        let r = selmo.page_find(&mut pt, PageFindMode::Promote, 3, &c, 0.0);
+        assert_eq!(r.promote, vec![6, 7], "queued pages must not be re-planned");
+        // releasing the bits restores the unfiltered selection
+        pt.clear_queued(4);
+        pt.clear_queued(5);
+        let r = selmo.page_find(&mut pt, PageFindMode::Promote, 4, &c, 0.0);
+        assert_eq!(r.promote, vec![4, 6, 5, 7]);
     }
 
     #[test]

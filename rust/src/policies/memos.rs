@@ -18,6 +18,7 @@
 //!    10x the original 10,000 pages / 40 s cycle, at 4 s periodicity).
 
 use crate::config::{HyPlacerConfig, MachineConfig, Tier};
+use crate::vm::PageFlags;
 use crate::vm::{MigrationPlan, PageId, PageTable, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
@@ -95,7 +96,9 @@ impl Policy for Memos {
             let budget = self.migrate_budget;
             let mut hot_written = Vec::new();
             let mut hot_read = Vec::new();
-            let touched_pm = PlaneQuery::epoch_touched().in_tier(Tier::Pm);
+            // in-flight (QUEUED) pages are never re-planned
+            let touched_pm =
+                PlaneQuery::epoch_touched().in_tier(Tier::Pm).and_none(PageFlags::QUEUED);
             self.pm_hand.walk(pt, pt.len() as usize, touched_pm, |page, flags, pt| {
                 if flags.dirty() {
                     hot_written.push(page);
@@ -117,7 +120,7 @@ impl Policy for Memos {
             .saturating_sub((self.dram_watermark * cap as f64) as u64);
         if over > 0 {
             let need = over as usize;
-            let dram = PlaneQuery::tier(Tier::Dram);
+            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
             self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
                 if !flags.referenced() {
                     plan.demote.push(page);
@@ -177,7 +180,14 @@ mod tests {
             window_id: 1,
             ..Default::default()
         };
-        let mut ctx = PolicyCtx { pt, pcmon, cfg, epoch, epoch_secs: 1.0 };
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon,
+            cfg,
+            epoch,
+            epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
+        };
         m.epoch_tick(&mut ctx)
     }
 

@@ -26,7 +26,7 @@ pub mod hyplacer;
 
 use crate::config::{HyPlacerConfig, MachineConfig, Tier};
 use crate::mem::{EpochDemand, PcmonSnapshot};
-use crate::vm::{MigrationPlan, PageId, PageTable};
+use crate::vm::{Backpressure, MigrationPlan, PageId, PageTable};
 
 /// Per-epoch context handed to a policy's decision tick.
 pub struct PolicyCtx<'a> {
@@ -36,6 +36,12 @@ pub struct PolicyCtx<'a> {
     pub epoch: u32,
     /// Nominal epoch length (Control's monitoring period), seconds.
     pub epoch_secs: f64,
+    /// Migration-engine queue state as of the previous epoch. Policies
+    /// must not re-plan pages already in flight (the QUEUED bit-plane
+    /// makes that a query filter) and should shrink their requests when
+    /// the queue backs up — the engine executes under a bandwidth
+    /// budget, so planning past it only grows the backlog.
+    pub backpressure: Backpressure,
 }
 
 /// One active region's demand this epoch (coordinator-computed summary

@@ -15,7 +15,7 @@
 //! than ADM-default").
 
 use crate::config::{MachineConfig, Tier};
-use crate::vm::{MigrationPlan, PlaneQuery, SparseWalker, WalkControl};
+use crate::vm::{MigrationPlan, PageFlags, PlaneQuery, SparseWalker, WalkControl};
 
 use super::{Policy, PolicyCtx, Table1Row};
 
@@ -57,7 +57,9 @@ impl Policy for Nimble {
         // skipping idle spans through the activity index is exact.
         let mut promote = Vec::new();
         let scan_budget = pt.len() as usize;
-        let touched_pm = PlaneQuery::epoch_touched().in_tier(Tier::Pm);
+        // pages with a move already in flight are not re-planned
+        let touched_pm =
+            PlaneQuery::epoch_touched().in_tier(Tier::Pm).and_none(PageFlags::QUEUED);
         self.pm_hand.walk(pt, scan_budget, touched_pm, |page, flags, pt| {
             if flags.referenced() {
                 promote.push(page);
@@ -85,7 +87,8 @@ impl Policy for Nimble {
         if need_exchange > 0 {
             // DRAM-tier scan (word-level skip of PM/invalid spans); the
             // early stop keeps it O(selected) on mostly-idle DRAM.
-            self.dram_hand.walk(pt, scan_budget, PlaneQuery::tier(Tier::Dram), |page, flags, pt| {
+            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
+            self.dram_hand.walk(pt, scan_budget, dram, |page, flags, pt| {
                 if !flags.referenced() {
                     victims.push(page);
                 } else {
@@ -142,8 +145,25 @@ mod tests {
             cfg,
             epoch,
             epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
         };
         p.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn queued_pages_are_not_replanned() {
+        let (cfg, mut pt) = ctx_setup(10, 10, 8);
+        let mut p = Nimble::new(&cfg);
+        for page in 0..4 {
+            pt.allocate(page, Tier::Pm);
+        }
+        pt.touch(1, false);
+        pt.touch(2, false);
+        pt.set_queued(2); // move already in flight
+        let plan = tick(&mut p, &cfg, &mut pt, 0);
+        assert_eq!(plan.promote, vec![1], "queued page must not be re-selected");
+        // its R bit also survives (the walk never reached it)
+        assert!(pt.flags(2).referenced());
     }
 
     #[test]

@@ -65,7 +65,10 @@ impl Policy for Partitioned {
         // Pass 1 — PM side, O(dirty pages): a write detected on a PM page
         // makes it DRAM-bound. (PM pages touched read-only keep their R
         // bit; CLOCK-DWF never reads it, so there is nothing to clear.)
-        let dirty_pm = PlaneQuery::all_of(crate::vm::PageFlags::DIRTY).in_tier(Tier::Pm);
+        // in-flight (QUEUED) pages are never re-planned
+        let dirty_pm = PlaneQuery::all_of(crate::vm::PageFlags::DIRTY)
+            .in_tier(Tier::Pm)
+            .and_none(crate::vm::PageFlags::QUEUED);
         self.pm_hand.walk(pt, pt.len() as usize, dirty_pm, |page, _flags, pt| {
             if promote.len() < budget {
                 promote.push(page);
@@ -78,7 +81,7 @@ impl Policy for Partitioned {
         // every epoch by design (an untouched page *ages*), so this scan
         // is inherently O(DRAM-resident pages); the index still skips
         // invalid/PM spans word-wise.
-        let dram = PlaneQuery::tier(Tier::Dram);
+        let dram = PlaneQuery::tier(Tier::Dram).and_none(crate::vm::PageFlags::QUEUED);
         self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
             // read-dominated for several epochs => PM-bound
             let idle = &mut write_idle[page as usize];
@@ -138,6 +141,7 @@ mod tests {
             cfg,
             epoch,
             epoch_secs: 1.0,
+            backpressure: crate::vm::Backpressure::default(),
         };
         p.epoch_tick(&mut ctx)
     }

@@ -21,6 +21,13 @@ pub struct EpochRecord {
     pub migrated_pages: u64,
     pub migration_overhead_secs: f64,
     pub dram_occupancy: f64,
+    /// Page-moves the migration engine accepted this epoch.
+    pub migrate_submitted: u64,
+    /// Page-moves still queued (deferred past the bandwidth budget)
+    /// after this epoch — the queue-depth series.
+    pub migrate_queued: u64,
+    /// Carried-over moves dropped by revalidation this epoch.
+    pub migrate_stale: u64,
 }
 
 /// Aggregated statistics for a run.
@@ -57,6 +64,9 @@ impl RunStats {
             migrated_pages: migration.moves(),
             migration_overhead_secs: migration.overhead_secs,
             dram_occupancy,
+            migrate_submitted: migration.submitted,
+            migrate_queued: migration.deferred,
+            migrate_stale: migration.stale,
         });
     }
 
@@ -98,6 +108,36 @@ impl RunStats {
 
     pub fn total_migrated_pages(&self) -> u64 {
         self.epochs.iter().map(|e| e.migrated_pages).sum()
+    }
+
+    /// Peak migration-queue depth over the run (page-moves pending after
+    /// an epoch's budget was spent). 0 for unthrottled runs — the
+    /// empty-queue semantics the pre-engine baselines rely on.
+    pub fn migrate_queue_depth_peak(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrate_queued).max().unwrap_or(0)
+    }
+
+    /// How backed up the migration pipeline ran: pending move-epochs
+    /// (a move waiting k epochs counts k times) per submitted move.
+    /// 0 when nothing was submitted or nothing ever deferred.
+    pub fn migrate_deferred_ratio(&self) -> f64 {
+        let submitted: u64 = self.epochs.iter().map(|e| e.migrate_submitted).sum();
+        if submitted == 0 {
+            return 0.0;
+        }
+        let waited: u64 = self.epochs.iter().map(|e| e.migrate_queued).sum();
+        waited as f64 / submitted as f64
+    }
+
+    /// Fraction of submitted moves dropped by carry-over revalidation
+    /// (page moved/freed/re-tiered between planning and execution).
+    pub fn migrate_stale_drop_ratio(&self) -> f64 {
+        let submitted: u64 = self.epochs.iter().map(|e| e.migrate_submitted).sum();
+        if submitted == 0 {
+            return 0.0;
+        }
+        let stale: u64 = self.epochs.iter().map(|e| e.migrate_stale).sum();
+        stale as f64 / submitted as f64
     }
 
     /// Fraction of app traffic served from a tier (post-warmup).
@@ -162,5 +202,26 @@ mod tests {
         assert_eq!(s.steady_throughput(), 0.0);
         assert_eq!(s.tier_traffic_share(Tier::Dram), 0.0);
         assert_eq!(s.mean_pm_read_latency_ns(), 0.0);
+        assert_eq!(s.migrate_queue_depth_peak(), 0);
+        assert_eq!(s.migrate_deferred_ratio(), 0.0);
+        assert_eq!(s.migrate_stale_drop_ratio(), 0.0);
+    }
+
+    #[test]
+    fn migration_queue_series_aggregate() {
+        let mut s = RunStats::new(0);
+        let mut mig = MigrationStats::default();
+        mig.submitted = 10;
+        mig.deferred = 6;
+        let d = EpochDemand::default();
+        let out = EpochOutcome::default();
+        s.record(0, &d, &out, &mig, 0.5);
+        let mut mig2 = MigrationStats::default();
+        mig2.deferred = 2;
+        mig2.stale = 1;
+        s.record(1, &d, &out, &mig2, 0.5);
+        assert_eq!(s.migrate_queue_depth_peak(), 6);
+        assert!((s.migrate_deferred_ratio() - 8.0 / 10.0).abs() < 1e-12);
+        assert!((s.migrate_stale_drop_ratio() - 0.1).abs() < 1e-12);
     }
 }

@@ -1,0 +1,616 @@
+//! The asynchronous, bandwidth-throttled migration engine.
+//!
+//! The paper's central empirical lesson is that DCPMM bandwidth is the
+//! resource every placement decision competes for — a migration burst is
+//! not free, it *contends with the application* on the slower tier's
+//! channels. The one-shot [`super::execute`] lands an arbitrarily large
+//! plan inside a single epoch; this engine instead models what
+//! `move_pages(2)` batching plus TPP-style promotion rate-limiting
+//! (arXiv 2206.02878) do on real kernels:
+//!
+//!  * policies **submit** [`MigrationPlan`]s into a pending queue
+//!    ([`MigrationEngine::submit`]); submission dedups against the plan
+//!    itself and against moves already in flight through the page
+//!    table's QUEUED bit-plane,
+//!  * each epoch the engine **executes** only up to a copy-bandwidth
+//!    budget derived from the machine's tier bandwidths and the
+//!    `migrate_share` tunable ([`MigrationEngine::run_epoch`]); the
+//!    remainder **carries over** to later epochs,
+//!  * carried-over moves are **revalidated** against current PTE state —
+//!    a page that moved, was freed or re-tiered since planning is
+//!    dropped and counted `stale`,
+//!  * a [`Backpressure`] summary (queue depth, deferred bytes, stale
+//!    drops) feeds back into every policy tick so decision loops can
+//!    throttle themselves instead of growing the backlog.
+//!
+//! **Unthrottled equivalence.** With `migrate_share >= 1.0` the budget is
+//! unbounded: a submit followed by `run_epoch` executes the whole plan in
+//! the submission epoch, in exactly the order and with exactly the
+//! accounting of the one-shot [`super::execute`] (demotions, then
+//! exchanges, then promotions; same PTE-visit charges; same skip
+//! semantics). The default configuration therefore reproduces every
+//! pre-engine result bit for bit — `tests/migration.rs` pins this with a
+//! property test and a per-policy lockstep test.
+
+use std::collections::VecDeque;
+
+use crate::config::{MachineConfig, Tier};
+
+use super::super::page_table::{PageId, PageTable};
+use super::{MigrationPlan, MigrationStats};
+
+/// Queue-state summary handed to every policy tick: how backed up the
+/// migration pipeline is. Policies use it to shrink (or pause) their
+/// next request instead of re-planning work that is already in flight.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Backpressure {
+    /// Page-moves still pending in the engine queue (an exchange counts
+    /// as two moves, like everywhere else in migration accounting).
+    pub queued_moves: u64,
+    /// Bytes those pending moves will still copy (per side).
+    pub deferred_bytes: f64,
+    /// Stale drops over the engine's lifetime (revalidation failures).
+    pub stale_drops: u64,
+    /// Whether the engine runs under a bandwidth budget (`migrate_share
+    /// < 1.0`). Policies that estimate their own migration traffic must
+    /// switch to the engine-reported copy bytes below when this is set —
+    /// a throttled epoch executes carry-over, not the plan just
+    /// submitted.
+    pub throttled: bool,
+    /// PM bytes the engine's last epoch actually wrote (copy traffic).
+    pub pm_copy_write_bytes: f64,
+    /// PM bytes the engine's last epoch actually read (copy traffic).
+    pub pm_copy_read_bytes: f64,
+}
+
+impl Backpressure {
+    /// No pending work: policies may plan a full activation.
+    pub fn is_idle(&self) -> bool {
+        self.queued_moves == 0
+    }
+}
+
+/// What [`MigrationEngine::submit`] did with a plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitStats {
+    /// Page-moves accepted into the queue.
+    pub accepted: u64,
+    /// Offending page *references* dropped at submission, counted per
+    /// reference: a page referenced again while a move is in flight
+    /// (QUEUED bit set — within this plan or carried over), or the
+    /// second naming of a self-paired exchange. An exchange side whose
+    /// partner was the offender is not itself counted (it was never
+    /// duplicated — it is simply not moved this round).
+    pub dropped_duplicate: u64,
+}
+
+/// One pending move, stamped with the epoch it was planned in so
+/// execution can tell a same-epoch precondition failure (`skipped`, the
+/// one-shot semantics) from a carried-over entry invalidated since
+/// planning (`stale`).
+type Queued = (PageId, u32);
+type QueuedPair = (PageId, PageId, u32);
+
+/// Stateful, bandwidth-throttled replacement for the one-shot
+/// [`super::execute`] — see the module docs for the full contract.
+#[derive(Clone, Debug)]
+pub struct MigrationEngine {
+    /// Fraction of the machine's copy bandwidth migrations may consume
+    /// per epoch; `>= 1.0` disables throttling entirely.
+    share: f64,
+    /// Phase queues. Draining demotions first, then exchanges, then
+    /// promotions preserves the one-shot ordering invariant globally:
+    /// demotions free DRAM before promotions consume it, even across
+    /// carry-over boundaries.
+    demote_q: VecDeque<Queued>,
+    exchange_q: VecDeque<QueuedPair>,
+    promote_q: VecDeque<Queued>,
+    /// Page-moves accepted since the last `run_epoch` (drained into
+    /// [`MigrationStats::submitted`]).
+    submitted_since_run: u64,
+    /// Lifetime stale-drop counter (surfaced through [`Backpressure`]).
+    stale_total: u64,
+    /// Summary after the last `run_epoch` (what the next policy tick
+    /// sees).
+    last_bp: Backpressure,
+}
+
+impl MigrationEngine {
+    pub fn new(migrate_share: f64) -> Self {
+        MigrationEngine {
+            share: migrate_share,
+            demote_q: VecDeque::new(),
+            exchange_q: VecDeque::new(),
+            promote_q: VecDeque::new(),
+            submitted_since_run: 0,
+            stale_total: 0,
+            last_bp: Backpressure::default(),
+        }
+    }
+
+    /// The per-epoch page-move budget for a machine at a given share.
+    ///
+    /// Every move reads one tier and writes the other, so the copy path
+    /// is bounded by the slowest of the four sequential ceilings — on
+    /// DCPMM machines that is the PM write ceiling, the same asymmetry
+    /// that makes demotion bursts so visible in the paper's Fig. 7.
+    /// `share >= 1.0` means unthrottled (`u64::MAX`), which is what makes
+    /// the default configuration bit-identical to the one-shot path;
+    /// throttled budgets floor at 1 move/epoch (guaranteed drain).
+    pub fn budget_moves(cfg: &MachineConfig, share: f64, epoch_secs: f64) -> u64 {
+        if share >= 1.0 {
+            return u64::MAX;
+        }
+        let pm_bw = cfg.pm.peak_read_bw().min(cfg.pm.peak_write_bw());
+        let dram_bw = cfg.dram.peak_read_bw().min(cfg.dram.peak_write_bw());
+        let copy_bw = pm_bw.min(dram_bw);
+        let bytes = share.max(0.0) * copy_bw * epoch_secs;
+        // guaranteed progress: even a tiny share drains at least one
+        // move per epoch, so the carry-over queue can never livelock
+        ((bytes / cfg.page_bytes as f64).floor() as u64).max(1)
+    }
+
+    pub fn migrate_share(&self) -> f64 {
+        self.share
+    }
+
+    /// Page-moves currently pending (exchanges count double).
+    pub fn queued_moves(&self) -> u64 {
+        let pairs = 2 * self.exchange_q.len() as u64;
+        self.demote_q.len() as u64 + self.promote_q.len() as u64 + pairs
+    }
+
+    /// The queue summary as of the last executed epoch — this is what
+    /// the coordinator hands to the *next* policy tick (decisions react
+    /// to the backlog the previous epoch left behind).
+    pub fn backpressure(&self) -> Backpressure {
+        self.last_bp
+    }
+
+    /// Accept a plan into the pending queue. Dedup happens here, in
+    /// execution order (demote, exchange, promote): the first reference
+    /// to a page wins and sets its QUEUED bit; any later reference —
+    /// within this plan or from a later epoch's plan while the move is
+    /// still in flight — is dropped and counted. This is both the
+    /// `validate()` enforcement point and what lets policies keep
+    /// walking without tracking in-flight pages themselves.
+    pub fn submit(&mut self, pt: &mut PageTable, plan: &MigrationPlan, epoch: u32) -> SubmitStats {
+        let mut stats = SubmitStats::default();
+        for &p in &plan.demote {
+            if pt.flags(p).queued() {
+                stats.dropped_duplicate += 1;
+                continue;
+            }
+            pt.set_queued(p);
+            self.demote_q.push_back((p, epoch));
+            stats.accepted += 1;
+        }
+        for &(pm_page, dram_page) in &plan.exchange {
+            // per-reference accounting, mirroring execute()'s per-page
+            // skip fix: only the offending side(s) count as duplicates
+            let a_dup = pt.flags(pm_page).queued();
+            let b_dup = pt.flags(dram_page).queued();
+            if pm_page == dram_page {
+                stats.dropped_duplicate += 1 + u64::from(a_dup);
+                continue;
+            }
+            if a_dup || b_dup {
+                stats.dropped_duplicate += u64::from(a_dup) + u64::from(b_dup);
+                continue;
+            }
+            pt.set_queued(pm_page);
+            pt.set_queued(dram_page);
+            self.exchange_q.push_back((pm_page, dram_page, epoch));
+            stats.accepted += 2;
+        }
+        for &p in &plan.promote {
+            if pt.flags(p).queued() {
+                stats.dropped_duplicate += 1;
+                continue;
+            }
+            pt.set_queued(p);
+            self.promote_q.push_back((p, epoch));
+            stats.accepted += 1;
+        }
+        self.submitted_since_run += stats.accepted;
+        stats
+    }
+
+    /// Execute queued moves up to this epoch's budget; the remainder
+    /// carries over. Returns the epoch's cost/accounting plus the plan of
+    /// moves that actually *landed* (the coordinator's incremental
+    /// region-count maintenance consumes it).
+    ///
+    /// Revalidation: a popped entry whose page is no longer in its
+    /// expected source tier (or no longer mapped) is dropped — `skipped`
+    /// if the entry was planned this epoch (the one-shot semantics for
+    /// malformed plans), `stale` if it aged in the queue. Capacity
+    /// failures are always `skipped`: the destination filling up is not
+    /// a revalidation failure (submission-time dedup makes in-sim stale
+    /// drops impossible, which `BENCH_hotpath.json` gates at exactly 0).
+    /// Budget counts only moves that copy data; drops are free. An
+    /// exchange (2 moves) never splits across epochs.
+    pub fn run_epoch(
+        &mut self,
+        pt: &mut PageTable,
+        cfg: &MachineConfig,
+        epoch: u32,
+        epoch_secs: f64,
+    ) -> (MigrationStats, MigrationPlan) {
+        let budget = Self::budget_moves(cfg, self.share, epoch_secs);
+        let page = cfg.page_bytes as f64;
+        let mut stats = MigrationStats::default();
+        stats.submitted = std::mem::take(&mut self.submitted_since_run);
+        let mut executed = MigrationPlan::default();
+        let mut moves = 0u64;
+
+        // a same-epoch precondition failure is `skipped` (exactly the
+        // one-shot semantics); a carried-over one is `stale`
+        let drop_one = |stats: &mut MigrationStats, planned: u32, n: u64| {
+            if planned < epoch {
+                stats.stale += n;
+            } else {
+                stats.skipped += n;
+            }
+        };
+
+        while let Some(&(p, e)) = self.demote_q.front() {
+            if moves >= budget {
+                break;
+            }
+            self.demote_q.pop_front();
+            pt.count_pte_visits(1);
+            pt.clear_queued(p);
+            let f = pt.flags(p);
+            if !f.valid() || f.tier() != Tier::Dram {
+                drop_one(&mut stats, e, 1);
+                continue;
+            }
+            if pt.migrate(p, Tier::Pm) {
+                stats.demoted += 1;
+                stats.dram_traffic.read_bytes += page;
+                stats.pm_traffic.write_bytes += page;
+                executed.demote.push(p);
+                moves += 1;
+            } else {
+                // capacity exhausted: always `skipped` (it is not a
+                // revalidation failure), never retried
+                stats.skipped += 1;
+            }
+        }
+        while let Some(&(pm_page, dram_page, e)) = self.exchange_q.front() {
+            // an exchange never splits across epochs; when it heads an
+            // otherwise idle epoch it may overshoot a 1-move budget by
+            // one (minimum transfer granularity — the alternative is a
+            // pair that can never drain)
+            if moves > 0 && moves + 2 > budget {
+                break;
+            }
+            self.exchange_q.pop_front();
+            pt.count_pte_visits(2);
+            pt.clear_queued(pm_page);
+            pt.clear_queued(dram_page);
+            let fa = pt.flags(pm_page);
+            let fb = pt.flags(dram_page);
+            let a_ok = fa.valid() && fa.tier() == Tier::Pm;
+            let b_ok = fb.valid() && fb.tier() == Tier::Dram;
+            if a_ok && b_ok && pt.exchange(pm_page, dram_page) {
+                stats.exchanged_pairs += 1;
+                stats.dram_traffic.read_bytes += page;
+                stats.dram_traffic.write_bytes += page;
+                stats.pm_traffic.read_bytes += page;
+                stats.pm_traffic.write_bytes += page;
+                executed.exchange.push((pm_page, dram_page));
+                moves += 2;
+            } else {
+                drop_one(&mut stats, e, u64::from(!a_ok) + u64::from(!b_ok));
+            }
+        }
+        while let Some(&(p, e)) = self.promote_q.front() {
+            if moves >= budget {
+                break;
+            }
+            self.promote_q.pop_front();
+            pt.count_pte_visits(1);
+            pt.clear_queued(p);
+            let f = pt.flags(p);
+            if !f.valid() || f.tier() != Tier::Pm {
+                drop_one(&mut stats, e, 1);
+                continue;
+            }
+            if pt.migrate(p, Tier::Dram) {
+                stats.promoted += 1;
+                stats.pm_traffic.read_bytes += page;
+                stats.dram_traffic.write_bytes += page;
+                executed.promote.push(p);
+                moves += 1;
+            } else {
+                // DRAM at capacity: `skipped`, never retried
+                stats.skipped += 1;
+            }
+        }
+
+        stats.overhead_secs = stats.moves() as f64 * cfg.migrate_page_overhead;
+        stats.deferred = self.queued_moves();
+        self.stale_total += stats.stale;
+        self.last_bp = Backpressure {
+            queued_moves: stats.deferred,
+            deferred_bytes: stats.deferred as f64 * page,
+            stale_drops: self.stale_total,
+            throttled: self.share < 1.0,
+            pm_copy_write_bytes: stats.pm_traffic.write_bytes,
+            pm_copy_read_bytes: stats.pm_traffic.read_bytes,
+        };
+        (stats, executed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PageTable, MachineConfig) {
+        let mut cfg = MachineConfig::paper_machine();
+        cfg.page_bytes = 1024;
+        cfg.migrate_page_overhead = 1e-6;
+        // 16 DRAM frames (8 used), 32 PM frames; pages 0..8 DRAM, 8..24 PM
+        let mut pt = PageTable::new(24, 1024, 16 * 1024, 32 * 1024);
+        for p in 0..8 {
+            pt.allocate(p, Tier::Dram);
+        }
+        for p in 8..24 {
+            pt.allocate(p, Tier::Pm);
+        }
+        (pt, cfg)
+    }
+
+    /// A share giving exactly `n` page-moves of budget per 1 s epoch
+    /// (the paper machine's slowest copy ceiling is the PM write one).
+    fn share_for_budget(cfg: &MachineConfig, n: u64) -> f64 {
+        let copy_bw = cfg.pm.peak_write_bw();
+        assert!(copy_bw <= cfg.pm.peak_read_bw());
+        assert!(copy_bw <= cfg.dram.peak_write_bw() && copy_bw <= cfg.dram.peak_read_bw());
+        let share = (n as f64 * cfg.page_bytes as f64) / copy_bw;
+        assert_eq!(MigrationEngine::budget_moves(cfg, share, 1.0), n);
+        share
+    }
+
+    #[test]
+    fn unthrottled_share_is_unbounded() {
+        let cfg = MachineConfig::paper_machine();
+        assert_eq!(MigrationEngine::budget_moves(&cfg, 1.0, 1.0), u64::MAX);
+        assert_eq!(MigrationEngine::budget_moves(&cfg, 1.5, 1.0), u64::MAX);
+        // throttled budgets scale with share and epoch length
+        let b1 = MigrationEngine::budget_moves(&cfg, 0.1, 1.0);
+        let b2 = MigrationEngine::budget_moves(&cfg, 0.2, 1.0);
+        let b3 = MigrationEngine::budget_moves(&cfg, 0.1, 2.0);
+        assert!(b1 > 0 && b2 >= 2 * b1 - 1 && b3 >= 2 * b1 - 1);
+        assert!(b1 < u64::MAX);
+    }
+
+    #[test]
+    fn budget_caps_epoch_moves_and_carry_over_drains() {
+        let (mut pt, cfg) = setup();
+        let share = share_for_budget(&cfg, 3);
+        let mut eng = MigrationEngine::new(share);
+        let plan = MigrationPlan {
+            promote: vec![8, 9, 10, 11, 12],
+            demote: vec![0, 1],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        assert_eq!(eng.queued_moves(), 7);
+
+        // epoch 0: 2 demotes + 1 promote land, 4 promotes defer
+        let (s0, ex0) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s0.moves(), 3);
+        assert_eq!(s0.demoted, 2);
+        assert_eq!(s0.promoted, 1);
+        assert_eq!(s0.deferred, 4);
+        assert_eq!(s0.submitted, 7);
+        assert_eq!(ex0.demote, vec![0, 1]);
+        assert_eq!(ex0.promote, vec![8]);
+        let bp = eng.backpressure();
+        assert_eq!(bp.queued_moves, 4);
+        assert_eq!(bp.deferred_bytes, 4.0 * 1024.0);
+        assert!(!bp.is_idle());
+
+        // epoch 1: 3 more; epoch 2: the last one
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.promoted, 3);
+        assert_eq!(s1.deferred, 1);
+        assert_eq!(s1.submitted, 0, "nothing new submitted");
+        let (s2, _) = eng.run_epoch(&mut pt, &cfg, 2, 1.0);
+        assert_eq!(s2.promoted, 1);
+        assert_eq!(s2.deferred, 0);
+        assert!(eng.backpressure().is_idle());
+        // queue fully drained: all five promotions landed
+        assert_eq!(pt.used_pages(Tier::Dram), 8 - 2 + 5);
+        assert_eq!(s0.stale + s1.stale + s2.stale, 0);
+    }
+
+    #[test]
+    fn exchange_never_splits_across_the_budget_boundary() {
+        let (mut pt, cfg) = setup();
+        let share = share_for_budget(&cfg, 3);
+        let mut eng = MigrationEngine::new(share);
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(8, 0), (9, 1)],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        // budget 3 fits one pair (2 moves); the second would need 4
+        assert_eq!(s0.exchanged_pairs, 1);
+        assert_eq!(s0.deferred, 2);
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.exchanged_pairs, 1);
+        assert!(eng.backpressure().is_idle());
+    }
+
+    #[test]
+    fn double_listed_page_is_dropped_at_submission() {
+        // the regression for the promote+demote double listing: the
+        // demote reference wins (execution order), the promote reference
+        // is dropped, and the page is NOT churned through both tiers
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        let plan = MigrationPlan {
+            promote: vec![0], // also listed below — contradictory
+            demote: vec![0],
+            exchange: vec![],
+        };
+        assert!(plan.validate().is_err());
+        let sub = eng.submit(&mut pt, &plan, 0);
+        assert_eq!(sub.accepted, 1);
+        assert_eq!(sub.dropped_duplicate, 1);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.demoted, 1);
+        assert_eq!(s.promoted, 0);
+        assert_eq!(pt.flags(0).tier(), Tier::Pm, "page stays demoted");
+
+        // duplicates within one list collapse to a single move
+        let plan = MigrationPlan {
+            promote: vec![8, 8, 8],
+            demote: vec![],
+            exchange: vec![],
+        };
+        let sub = eng.submit(&mut pt, &plan, 1);
+        assert_eq!(sub.accepted, 1);
+        assert_eq!(sub.dropped_duplicate, 2);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s.promoted, 1);
+        assert_eq!(s.skipped, 0);
+    }
+
+    #[test]
+    fn resubmitting_a_queued_page_is_dropped() {
+        let (mut pt, cfg) = setup();
+        let share = share_for_budget(&cfg, 1);
+        let mut eng = MigrationEngine::new(share);
+        let plan = MigrationPlan {
+            promote: vec![8, 9],
+            demote: vec![],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s0.promoted, 1, "budget 1: only page 8 lands");
+        // page 9 is still in flight; a policy re-planning it is a no-op
+        assert!(pt.flags(9).queued());
+        assert!(!pt.flags(8).queued(), "executed moves release the bit");
+        let sub = eng.submit(&mut pt, &plan, 1);
+        // 9 dropped (queued); 8 re-accepted — it is no longer in flight
+        // (its wrong-tier state is caught at execution as a skip)
+        assert_eq!(sub.dropped_duplicate, 1);
+        assert_eq!(sub.accepted, 1);
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.promoted, 1, "the carried-over page 9 lands");
+        let (s2, _) = eng.run_epoch(&mut pt, &cfg, 2, 1.0);
+        // 8 was re-planned at epoch 1 while already DRAM-resident:
+        // carried one epoch, then dropped by revalidation as stale
+        assert_eq!(s2.stale, 1);
+        assert!(eng.backpressure().is_idle());
+    }
+
+    #[test]
+    fn exchange_duplicate_accounting_is_per_reference() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        // queue page 8; then submit a pair whose pm side is in flight —
+        // only that side is a duplicate, the valid partner (0) is not
+        let first = MigrationPlan { promote: vec![8], demote: vec![], exchange: vec![] };
+        let sub = eng.submit(&mut pt, &first, 0);
+        assert_eq!(sub.accepted, 1);
+        let pair = MigrationPlan { promote: vec![], demote: vec![], exchange: vec![(8, 0)] };
+        let sub = eng.submit(&mut pt, &pair, 0);
+        assert_eq!(sub.accepted, 0);
+        assert_eq!(sub.dropped_duplicate, 1, "valid partner is not a duplicate");
+        assert!(!pt.flags(0).queued(), "partner stays plannable");
+        // a self-pair is one duplicate naming of a single page
+        let selfpair =
+            MigrationPlan { promote: vec![], demote: vec![], exchange: vec![(9, 9)] };
+        let sub = eng.submit(&mut pt, &selfpair, 0);
+        assert_eq!(sub.dropped_duplicate, 1);
+        let _ = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+    }
+
+    #[test]
+    fn carried_over_moves_are_revalidated_as_stale() {
+        let (mut pt, cfg) = setup();
+        let share = share_for_budget(&cfg, 1);
+        let mut eng = MigrationEngine::new(share);
+        let plan = MigrationPlan {
+            promote: vec![8, 9],
+            demote: vec![],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s0.promoted, 1);
+        assert_eq!(s0.deferred, 1);
+        // page 9 is re-tiered behind the engine's back while queued
+        assert!(pt.migrate(9, Tier::Dram));
+        let (s1, ex1) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.promoted, 0);
+        assert_eq!(s1.stale, 1, "carried-over move dropped by revalidation");
+        assert_eq!(s1.skipped, 0);
+        assert!(ex1.is_empty());
+        assert_eq!(eng.backpressure().stale_drops, 1);
+        assert!(!pt.flags(9).queued(), "drop releases the QUEUED bit");
+    }
+
+    #[test]
+    fn same_epoch_precondition_failures_stay_skipped() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        // promote a DRAM page (wrong tier), demote a PM page (wrong tier)
+        let plan = MigrationPlan {
+            promote: vec![0],
+            demote: vec![8],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 3);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 3, 1.0);
+        assert_eq!(s.skipped, 2);
+        assert_eq!(s.stale, 0);
+    }
+
+    #[test]
+    fn one_move_budget_still_drains_exchanges() {
+        // regression: an exchange costs 2 moves; a budget of 1 must not
+        // livelock the queue — the pair overshoots by one when it heads
+        // an otherwise idle epoch
+        let (mut pt, cfg) = setup();
+        let share = share_for_budget(&cfg, 1);
+        let mut eng = MigrationEngine::new(share);
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![0],
+            exchange: vec![(8, 1)],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        // epoch 0: the demote fills the budget; the pair defers
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s0.demoted, 1);
+        assert_eq!(s0.exchanged_pairs, 0);
+        // epoch 1: the pair heads an idle epoch and lands despite 2 > 1
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.exchanged_pairs, 1);
+        assert!(eng.backpressure().is_idle());
+        // tiny shares never produce a zero budget
+        assert_eq!(MigrationEngine::budget_moves(&cfg, 1e-12, 1.0), 1);
+    }
+
+    #[test]
+    fn empty_queue_epoch_is_free() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(0.1);
+        let (s, ex) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.moves(), 0);
+        assert_eq!(s.overhead_secs, 0.0);
+        assert!(ex.is_empty());
+        assert!(eng.backpressure().is_idle());
+    }
+}

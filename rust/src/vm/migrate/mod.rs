@@ -1,15 +1,32 @@
-//! Page-migration engine — the simulator's `move_pages(2)` plus the
+//! Page-migration pipeline — the simulator's `move_pages(2)` plus the
 //! exchange-based technique HyPlacer layers on top of it (paper §4.2:
 //! "an equal number of pages are switched between both tiers, thus
 //! preserving their current allocation").
 //!
-//! Executing a plan updates the page table and produces the *cost* of the
+//! Two layers live here:
+//!
+//!  * [`execute`] — the one-shot primitive: land a whole [`MigrationPlan`]
+//!    immediately, whatever its size. This is the reference semantics the
+//!    bandwidth-throttled engine must reproduce exactly when it is
+//!    unthrottled, and what the equivalence property tests compare
+//!    against.
+//!  * [`MigrationEngine`] ([`engine`]) — the production path: plans are
+//!    *submitted* into a pending queue and executed across epochs under a
+//!    copy-bandwidth budget, with carry-over, staleness revalidation and
+//!    a [`Backpressure`] summary fed back to the policies. See
+//!    DESIGN.md §9.
+//!
+//! Executing moves updates the page table and produces the *cost* of the
 //! migration: copy traffic charged to both tiers (read on the source,
 //! write on the destination) and fixed per-page kernel overhead (PTE
 //! unmap/remap, TLB shootdown, page-struct management). The coordinator
 //! folds this into the epoch's [`crate::mem::EpochDemand`], so heavy
 //! migrators pay for it in wall-clock — the effect behind Fig. 7's
 //! small-footprint overheads.
+
+pub mod engine;
+
+pub use engine::{Backpressure, MigrationEngine, SubmitStats};
 
 use crate::config::{MachineConfig, Tier};
 use crate::mem::TierDemand;
@@ -33,16 +50,61 @@ impl MigrationPlan {
     pub fn page_moves(&self) -> u64 {
         (self.promote.len() + self.demote.len() + 2 * self.exchange.len()) as u64
     }
+
+    /// Check the plan is well-formed: every page referenced at most once
+    /// across all three lists (a page listed in both `promote` and
+    /// `demote`, duplicated within a list, or self-paired in `exchange`
+    /// is contradictory — executing it would churn the page or corrupt
+    /// accounting). The engine's submission path *drops* such references
+    /// instead of executing them ([`MigrationEngine::submit`] dedups in
+    /// execution order: demote, exchange, promote — first reference
+    /// wins); this standalone check is for tests and policy debugging.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        let mut check = |page: PageId, role: &str| -> Result<(), String> {
+            if !seen.insert(page) {
+                return Err(format!("page {page} referenced more than once ({role})"));
+            }
+            Ok(())
+        };
+        for &p in &self.demote {
+            check(p, "demote")?;
+        }
+        for &(pm, dram) in &self.exchange {
+            check(pm, "exchange pm side")?;
+            check(dram, "exchange dram side")?;
+        }
+        for &p in &self.promote {
+            check(p, "promote")?;
+        }
+        Ok(())
+    }
 }
 
-/// Cost and accounting of an executed plan.
+/// Cost and accounting of executed migration work.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MigrationStats {
     pub promoted: u64,
     pub demoted: u64,
     pub exchanged_pairs: u64,
-    /// Moves skipped (capacity exhausted / invalid / same tier).
+    /// Moves abandoned per page, never retried: destination capacity
+    /// exhausted (any epoch), or an invalid/wrong-tier entry caught in
+    /// the epoch it was planned (the one-shot semantics for malformed
+    /// plans).
     pub skipped: u64,
+    /// Carried-over moves dropped by revalidation because the PTE state
+    /// changed between planning and execution (page moved, freed or
+    /// re-tiered since) — per page. Always 0 on the one-shot
+    /// [`execute`] path, and 0 in-sim (submission-time dedup leaves
+    /// nothing else to re-tier a queued page).
+    pub stale: u64,
+    /// Page-moves accepted into the engine queue since the last engine
+    /// epoch (0 for the one-shot [`execute`] path).
+    pub submitted: u64,
+    /// Page-moves still pending in the engine queue after this epoch
+    /// (0 for the one-shot path and whenever the budget covered the
+    /// whole backlog).
+    pub deferred: u64,
     /// Copy traffic to charge each tier this epoch.
     pub dram_traffic: TierDemand,
     pub pm_traffic: TierDemand,
@@ -64,7 +126,8 @@ impl MigrationStats {
 /// Ordering matters and mirrors HyPlacer's Control: demotions first (they
 /// free DRAM), then exchanges (capacity-neutral), then promotions (they
 /// consume the freed space). Moves that cannot proceed are skipped and
-/// counted, never retried — the next epoch's PageFind will re-select.
+/// counted per page, never retried — the next epoch's PageFind will
+/// re-select.
 pub fn execute(pt: &mut PageTable, cfg: &MachineConfig, plan: &MigrationPlan) -> MigrationStats {
     let mut stats = MigrationStats::default();
     let page = cfg.page_bytes as f64;
@@ -82,12 +145,11 @@ pub fn execute(pt: &mut PageTable, cfg: &MachineConfig, plan: &MigrationPlan) ->
         }
     }
     for &(pm_page, dram_page) in &plan.exchange {
-        if pt.flags(pm_page).valid()
-            && pt.flags(dram_page).valid()
-            && pt.flags(pm_page).tier() == Tier::Pm
-            && pt.flags(dram_page).tier() == Tier::Dram
-            && pt.exchange(pm_page, dram_page)
-        {
+        let fa = pt.flags(pm_page);
+        let fb = pt.flags(dram_page);
+        let a_ok = fa.valid() && fa.tier() == Tier::Pm;
+        let b_ok = fb.valid() && fb.tier() == Tier::Dram;
+        if a_ok && b_ok && pt.exchange(pm_page, dram_page) {
             stats.exchanged_pairs += 1;
             // both directions copied
             stats.dram_traffic.read_bytes += page;
@@ -95,7 +157,10 @@ pub fn execute(pt: &mut PageTable, cfg: &MachineConfig, plan: &MigrationPlan) ->
             stats.pm_traffic.read_bytes += page;
             stats.pm_traffic.write_bytes += page;
         } else {
-            stats.skipped += 2;
+            // per-page accounting: only the side(s) whose precondition
+            // failed count as skipped pages — a valid partner is simply
+            // left in place and remains selectable next epoch
+            stats.skipped += u64::from(!a_ok) + u64::from(!b_ok);
         }
     }
     for &p in &plan.promote {
@@ -211,9 +276,10 @@ mod tests {
     }
 
     #[test]
-    fn malformed_exchange_skipped() {
+    fn malformed_exchange_skipped_per_page() {
         let (mut pt, cfg) = setup();
-        // (dram, dram) and (pm, pm) pairs are rejected
+        // (dram, dram) and (pm, pm) pairs are rejected; only the side
+        // whose precondition failed counts as a skipped page
         let plan = MigrationPlan {
             promote: vec![],
             demote: vec![],
@@ -221,7 +287,26 @@ mod tests {
         };
         let s = execute(&mut pt, &cfg, &plan);
         assert_eq!(s.exchanged_pairs, 0);
-        assert_eq!(s.skipped, 4);
+        // (0, 1): the pm side (0) is in DRAM — one bad page (1 *is* a
+        // valid dram side); (4, 5): the dram side (5) is in PM — one more
+        assert_eq!(s.skipped, 2);
+    }
+
+    #[test]
+    fn one_bad_side_of_an_exchange_charges_one_skip() {
+        let (mut pt, cfg) = setup();
+        // pm side (4) is fine, dram side (9) is actually in PM
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(4, 9)],
+        };
+        let s = execute(&mut pt, &cfg, &plan);
+        assert_eq!(s.exchanged_pairs, 0);
+        assert_eq!(s.skipped, 1, "only the invalid side is a skipped page");
+        // both pages stay where they were
+        assert_eq!(pt.flags(4).tier(), Tier::Pm);
+        assert_eq!(pt.flags(9).tier(), Tier::Pm);
     }
 
     #[test]
@@ -236,5 +321,44 @@ mod tests {
         assert_eq!(s.moves(), 5);
         assert!((s.overhead_secs - 5e-6).abs() < 1e-12);
         assert_eq!(s.bytes_moved(1024), 5.0 * 1024.0);
+    }
+
+    #[test]
+    fn validate_flags_double_listed_and_duplicate_pages() {
+        let ok = MigrationPlan {
+            promote: vec![4, 5],
+            demote: vec![0, 1],
+            exchange: vec![(6, 2)],
+        };
+        assert!(ok.validate().is_ok());
+        // the double-listed case: page 0 both promoted and demoted
+        let double = MigrationPlan {
+            promote: vec![0],
+            demote: vec![0],
+            exchange: vec![],
+        };
+        let err = double.validate().unwrap_err();
+        assert!(err.contains("page 0"), "{err}");
+        // duplicate within one list
+        let dup = MigrationPlan {
+            promote: vec![4, 4],
+            demote: vec![],
+            exchange: vec![],
+        };
+        assert!(dup.validate().is_err());
+        // a page in exchange and also in demote
+        let cross = MigrationPlan {
+            promote: vec![],
+            demote: vec![2],
+            exchange: vec![(6, 2)],
+        };
+        assert!(cross.validate().is_err());
+        // self-paired exchange
+        let selfpair = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(6, 6)],
+        };
+        assert!(selfpair.validate().is_err());
     }
 }

@@ -14,4 +14,4 @@ pub mod migrate;
 
 pub use page_table::{MatchingPages, PageFlags, PageId, PageTable, PlaneQuery};
 pub use pagewalk::{PageWalker, SparseWalker, WalkControl};
-pub use migrate::{MigrationPlan, MigrationStats};
+pub use migrate::{Backpressure, MigrationEngine, MigrationPlan, MigrationStats, SubmitStats};

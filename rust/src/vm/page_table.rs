@@ -39,6 +39,12 @@ impl PageFlags {
     pub const WREF: u8 = 1 << 4;
     /// Delay-window dirty bit.
     pub const WDIRTY: u8 = 1 << 5;
+    /// Migration-engine bookkeeping bit: the page has a queued (not yet
+    /// executed) move in the engine's carry-over pipeline. Set at plan
+    /// submission, cleared when the move lands or is dropped. Policies
+    /// exclude QUEUED pages from re-selection, which is what keeps the
+    /// throttled engine's backlog free of duplicates.
+    pub const QUEUED: u8 = 1 << 6;
 
     pub fn valid(self) -> bool {
         self.0 & Self::VALID != 0
@@ -55,6 +61,9 @@ impl PageFlags {
     pub fn window_dirty(self) -> bool {
         self.0 & Self::WDIRTY != 0
     }
+    pub fn queued(self) -> bool {
+        self.0 & Self::QUEUED != 0
+    }
     pub fn tier(self) -> Tier {
         if self.0 & Self::TIER_PM != 0 {
             Tier::Pm
@@ -65,7 +74,7 @@ impl PageFlags {
 }
 
 /// One bit-plane per PTE flag bit (plane index == flag bit position).
-const NUM_PLANES: usize = 6;
+const NUM_PLANES: usize = 7;
 /// Every flag bit the activity index mirrors.
 const ALL_BITS: u8 = (1 << NUM_PLANES) - 1;
 
@@ -354,6 +363,22 @@ impl PageTable {
     pub fn clear_window(&mut self, page: PageId) {
         let old = self.flags[page as usize];
         self.write_flags(page, old & !(PageFlags::WREF | PageFlags::WDIRTY));
+    }
+
+    /// Migration-engine path: mark a page as having a move in flight
+    /// (see [`PageFlags::QUEUED`]).
+    #[inline]
+    pub fn set_queued(&mut self, page: PageId) {
+        let old = self.flags[page as usize];
+        self.write_flags(page, old | PageFlags::QUEUED);
+    }
+
+    /// Migration-engine path: release the in-flight mark (the move
+    /// landed or was dropped).
+    #[inline]
+    pub fn clear_queued(&mut self, page: PageId) {
+        let old = self.flags[page as usize];
+        self.write_flags(page, old & !PageFlags::QUEUED);
     }
 
     /// DCPMM_CLEAR fast path: reset the delay-window bits of every valid
@@ -769,6 +794,25 @@ mod tests {
     }
 
     #[test]
+    fn queued_bit_round_trips_and_filters_queries() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Pm);
+        }
+        t.touch(1, false);
+        t.touch(2, false);
+        t.set_queued(2);
+        assert!(t.flags(2).queued());
+        // a walk excluding in-flight pages skips page 2
+        let q = PlaneQuery::epoch_touched().and_none(PageFlags::QUEUED);
+        assert_eq!(t.query_word(0, q), 1 << 1);
+        t.clear_queued(2);
+        assert!(!t.flags(2).queued());
+        assert_eq!(t.query_word(0, q), (1 << 1) | (1 << 2));
+        t.check_index_consistent().unwrap();
+    }
+
+    #[test]
     fn iter_matching_is_ascending_and_skips_idle_blocks() {
         let mut t = PageTable::new(10_000, 1024, 100_000 * 1024, 100_000 * 1024);
         for p in [3u32, 64, 4097, 9999] {
@@ -834,7 +878,7 @@ mod tests {
             let mut t = PageTable::new(pages, 1024, dram_cap * 1024, pm_cap * 1024);
             for _ in 0..500 {
                 let page = rng.next_below(pages as u64) as u32;
-                match rng.next_below(7) {
+                match rng.next_below(8) {
                     0 => {
                         if !t.flags(page).valid() {
                             let tier = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
@@ -853,9 +897,16 @@ mod tests {
                         let to = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
                         let _ = t.migrate(page, to);
                     }
-                    _ => {
+                    6 => {
                         let other = rng.next_below(pages as u64) as u32;
                         let _ = t.exchange(page, other);
+                    }
+                    _ => {
+                        if rng.chance(0.5) {
+                            t.set_queued(page);
+                        } else {
+                            t.clear_queued(page);
+                        }
                     }
                 }
             }

@@ -1,0 +1,267 @@
+//! Migration-engine integration: the bit-identity contract between the
+//! bandwidth-throttled [`MigrationEngine`] and the one-shot
+//! `migrate::execute` reference at `migrate_share = 1.0`, the throttled
+//! carry-over/convergence semantics, and the fig5-policy lockstep proof
+//! that the coordinator swap changed nothing at default config.
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, Tier};
+use hyplacer::mem::PcmonSnapshot;
+use hyplacer::policies::{self, Policy, PolicyCtx, FIG5_POLICIES};
+use hyplacer::util::proptest::check;
+use hyplacer::vm::{migrate, MigrationEngine, MigrationPlan, PageTable};
+
+fn small_cfg() -> MachineConfig {
+    let mut cfg = MachineConfig::paper_machine();
+    cfg.page_bytes = 1024;
+    cfg.migrate_page_overhead = 1e-6;
+    cfg
+}
+
+fn flags_equal(a: &PageTable, b: &PageTable) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("table sizes differ: {} vs {}", a.len(), b.len()));
+    }
+    for p in 0..a.len() {
+        if a.flags(p).0 != b.flags(p).0 {
+            return Err(format!(
+                "page {p}: engine flags {:#04x} vs one-shot {:#04x}",
+                a.flags(p).0,
+                b.flags(p).0
+            ));
+        }
+    }
+    if a.used_pages(Tier::Dram) != b.used_pages(Tier::Dram)
+        || a.used_pages(Tier::Pm) != b.used_pages(Tier::Pm)
+    {
+        return Err("occupancy counters diverged".to_string());
+    }
+    Ok(())
+}
+
+fn stats_equal(
+    a: &hyplacer::vm::MigrationStats,
+    b: &hyplacer::vm::MigrationStats,
+) -> Result<(), String> {
+    if a.promoted != b.promoted
+        || a.demoted != b.demoted
+        || a.exchanged_pairs != b.exchanged_pairs
+        || a.skipped != b.skipped
+        || a.stale != 0
+    {
+        return Err(format!("outcome counters diverged: engine {a:?} vs one-shot {b:?}"));
+    }
+    let pairs = [
+        (a.dram_traffic.read_bytes, b.dram_traffic.read_bytes),
+        (a.dram_traffic.write_bytes, b.dram_traffic.write_bytes),
+        (a.pm_traffic.read_bytes, b.pm_traffic.read_bytes),
+        (a.pm_traffic.write_bytes, b.pm_traffic.write_bytes),
+        (a.overhead_secs, b.overhead_secs),
+    ];
+    for (x, y) in pairs {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("cost diverged: engine {x} vs one-shot {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// Property: at `migrate_share = 1.0`, submit + run_epoch reproduces the
+/// one-shot `execute` bit for bit — same final page table, same stats —
+/// for arbitrary well-formed (dup-free) plans over arbitrary tables,
+/// including malformed entries (wrong tiers, capacity overruns) that
+/// exercise the skip paths.
+#[test]
+fn unthrottled_engine_is_bit_identical_to_oneshot_execute() {
+    let cfg = small_cfg();
+    check("engine ≡ one-shot at share 1.0", 80, |rng| {
+        let pages = 32 + rng.next_below(200) as u32;
+        let dram_cap = 4 + rng.next_below(pages as u64);
+        let pm_cap = 8 + rng.next_below(2 * pages as u64);
+        let mut pt = PageTable::new(pages, 1024, dram_cap * 1024, pm_cap * 1024);
+        for p in 0..pages {
+            let tier = if rng.chance(0.4) { Tier::Dram } else { Tier::Pm };
+            if !pt.allocate(p, tier) && !pt.allocate(p, tier.other()) {
+                break; // both tiers full: leave the rest unmapped
+            }
+        }
+        // a dup-free plan drawn from a shuffled page universe; roles are
+        // assigned blindly, so wrong-tier/invalid entries are common
+        let mut order: Vec<u32> = (0..pages).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let mut it = order.into_iter();
+        let mut plan = MigrationPlan::default();
+        for _ in 0..rng.next_below(12) {
+            if let Some(p) = it.next() {
+                plan.demote.push(p);
+            }
+        }
+        for _ in 0..rng.next_below(6) {
+            if let (Some(a), Some(b)) = (it.next(), it.next()) {
+                plan.exchange.push((a, b));
+            }
+        }
+        for _ in 0..rng.next_below(12) {
+            if let Some(p) = it.next() {
+                plan.promote.push(p);
+            }
+        }
+        plan.validate().map_err(|e| format!("generator produced a dup: {e}"))?;
+
+        let mut oneshot = pt.clone();
+        let ref_stats = migrate::execute(&mut oneshot, &cfg, &plan);
+
+        let mut eng = MigrationEngine::new(1.0);
+        eng.submit(&mut pt, &plan, 0);
+        let (eng_stats, executed) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+
+        flags_equal(&pt, &oneshot)?;
+        stats_equal(&eng_stats, &ref_stats)?;
+        hyplacer::prop_assert!(
+            eng.backpressure().is_idle(),
+            "unthrottled queue must drain within the epoch"
+        );
+        hyplacer::prop_assert!(
+            executed.page_moves() == eng_stats.moves(),
+            "executed plan must list exactly the landed moves"
+        );
+        Ok(())
+    });
+}
+
+/// The fig5 policy set, driven lockstep: each epoch the policy ticks on
+/// the engine-backed table, and the resulting plan is applied both ways
+/// — through the unthrottled engine and through the one-shot reference
+/// on a post-tick snapshot. Any divergence in PTE state or cost would
+/// make post-refactor `SimResult`s differ from pre-refactor ones; none
+/// is allowed. (The coordinator is otherwise unchanged, so this plus
+/// the property test above is the SimResult bit-identity argument.)
+#[test]
+fn fig5_policies_engine_matches_oneshot_per_epoch() {
+    let cfg = small_cfg();
+    let hp = HyPlacerConfig::default();
+    let total: u32 = 256;
+    for pname in FIG5_POLICIES {
+        let mut policy = policies::by_name(pname, &cfg, &hp).unwrap();
+        let mut pt = PageTable::new(total, 1024, 64 * 1024, 512 * 1024);
+        for page in 0..total {
+            let want = policy.place_new(page, &pt);
+            assert!(pt.allocate(page, want) || pt.allocate(page, want.other()));
+        }
+        let mut eng = MigrationEngine::new(1.0);
+        for epoch in 0..12u32 {
+            // deterministic rotating touch pattern (writes + delay window)
+            for i in 0..48u32 {
+                let page = (i * 5 + epoch * 7) % total;
+                let write = (i + epoch) % 3 == 0;
+                pt.touch(page, write);
+                if i % 4 == 0 {
+                    pt.touch_window(page, write);
+                }
+            }
+            // alternate PCMon regimes to exercise several decision modes
+            let pcmon = if epoch % 2 == 0 {
+                PcmonSnapshot {
+                    dram_read_bw: 1e9,
+                    pm_read_bw: 10e9,
+                    pm_write_bw: 50e6,
+                    window_secs: 1.0,
+                    window_id: epoch as u64 + 1,
+                    ..Default::default()
+                }
+            } else {
+                PcmonSnapshot::default()
+            };
+            let plan = {
+                let mut ctx = PolicyCtx {
+                    pt: &mut pt,
+                    pcmon,
+                    cfg: &cfg,
+                    epoch,
+                    epoch_secs: 1.0,
+                    backpressure: eng.backpressure(),
+                };
+                policy.epoch_tick(&mut ctx)
+            };
+            plan.validate()
+                .unwrap_or_else(|e| panic!("{pname} produced an ill-formed plan: {e}"));
+
+            // one-shot reference on a post-tick snapshot
+            let mut oneshot = pt.clone();
+            let ref_stats = migrate::execute(&mut oneshot, &cfg, &plan);
+            // engine path on the live table
+            eng.submit(&mut pt, &plan, epoch);
+            let (eng_stats, _) = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+
+            flags_equal(&pt, &oneshot).unwrap_or_else(|e| panic!("{pname} epoch {epoch}: {e}"));
+            let verdict = stats_equal(&eng_stats, &ref_stats);
+            verdict.unwrap_or_else(|e| panic!("{pname} epoch {epoch}: {e}"));
+            assert!(eng.backpressure().is_idle(), "{pname} epoch {epoch}: queue not empty");
+        }
+    }
+}
+
+/// Convergence: once the workload quiesces, a throttled run drains its
+/// carry-over queue and reaches exactly the placement the unthrottled
+/// run reached immediately.
+#[test]
+fn throttled_run_converges_to_unthrottled_placement_after_quiesce() {
+    let cfg = small_cfg();
+    let hp = HyPlacerConfig::default();
+    // budget of 2 moves/epoch for the throttled run
+    let share = 2.0 * cfg.page_bytes as f64 / cfg.pm.peak_write_bw();
+    assert_eq!(MigrationEngine::budget_moves(&cfg, share, 1.0), 2);
+
+    let run = |share: f64| -> (PageTable, u32) {
+        let mut policy = policies::by_name("nimble", &cfg, &hp).unwrap();
+        // all 60 pages start in PM; DRAM has room for the hot set
+        let mut pt = PageTable::new(60, 1024, 16 * 1024, 128 * 1024);
+        for p in 0..60 {
+            assert!(pt.allocate(p, Tier::Pm));
+        }
+        let mut eng = MigrationEngine::new(share);
+        let mut epochs_with_moves = 0u32;
+        for epoch in 0..30u32 {
+            if epoch < 5 {
+                // active phase: pages 20..28 are the hot set
+                for p in 20..28u32 {
+                    pt.touch(p, p % 2 == 0);
+                }
+            } // epochs >= 5: the workload has quiesced
+            let plan = {
+                let mut ctx = PolicyCtx {
+                    pt: &mut pt,
+                    pcmon: PcmonSnapshot::default(),
+                    cfg: &cfg,
+                    epoch,
+                    epoch_secs: 1.0,
+                    backpressure: eng.backpressure(),
+                };
+                policy.epoch_tick(&mut ctx)
+            };
+            eng.submit(&mut pt, &plan, epoch);
+            let (stats, _) = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+            if stats.moves() > 0 {
+                epochs_with_moves += 1;
+            }
+        }
+        assert!(eng.backpressure().is_idle(), "queue must drain after quiesce");
+        (pt, epochs_with_moves)
+    };
+
+    let (fast, fast_epochs) = run(1.0);
+    let (slow, slow_epochs) = run(share);
+    // the throttled run really was spread across epochs...
+    assert!(slow_epochs > fast_epochs, "throttle had no effect: {slow_epochs} vs {fast_epochs}");
+    // ...yet lands every page in the same final tier
+    for p in 0..60u32 {
+        assert_eq!(
+            fast.flags(p).tier(),
+            slow.flags(p).tier(),
+            "page {p} placed differently"
+        );
+    }
+    assert_eq!(fast.used_pages(Tier::Dram), 8, "the hot set ends up in DRAM");
+}

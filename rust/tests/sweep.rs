@@ -216,6 +216,80 @@ fn cli_sweep_accepts_gap_workloads() {
 }
 
 #[test]
+fn cli_sweep_migrate_share_override_rekeys_matching_cells_only() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out_path = std::env::temp_dir().join("hyplacer_sweep_mshare_test.json");
+    let out_str = out_path.to_str().unwrap().to_string();
+    std::fs::remove_file(&out_path).ok();
+    let run = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args([
+            "sweep", "-w", "cg-S,mg-S", "-p", "adm-default", "--seeds", "1", "--epochs", "4",
+            "--out", &out_str,
+        ]);
+        cmd.args(extra);
+        let out = cmd.output().unwrap();
+        assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    // cold run at default (unthrottled) share
+    let s = run(&[]);
+    assert!(s.contains("executed 2 of 2 cells"), "{s}");
+    // throttling one workload's cells re-executes exactly those
+    let s = run(&["--migrate-share-for", "mg-*=0.5", "--resume"]);
+    assert!(s.contains("executed 1 of 2 cells (1 cached)"), "{s}");
+    // and the explicit default share maps to the legacy keys (all cached)
+    let s = run(&["--resume"]);
+    assert!(s.contains("executed 0 of 2 cells (2 cached)"), "{s}");
+    std::fs::remove_file(&out_path).ok();
+
+    // malformed rules fail fast
+    let out = std::process::Command::new(exe)
+        .args(["sweep", "-w", "cg-S", "--migrate-share-for", "cg-*=2.0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("migrate share"));
+}
+
+#[test]
+fn cli_fig_gap_emits_artifact_and_resumes() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out_path = std::env::temp_dir().join("hyplacer_fig_gap_cli_test.json");
+    let out_str = out_path.to_str().unwrap().to_string();
+    std::fs::remove_file(&out_path).ok();
+    let run = |resume: bool| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args([
+            "fig-gap", "--quick", "--epochs", "6", "--jobs", "2", "--out", &out_str,
+        ]);
+        if resume {
+            cmd.arg("--resume");
+        }
+        cmd.output().unwrap()
+    };
+    let first = run(false);
+    assert!(first.status.success(), "stderr: {}", String::from_utf8_lossy(&first.stderr));
+    let text = String::from_utf8_lossy(&first.stdout);
+    assert!(text.contains("fig-gap") && text.contains("PR-M") && text.contains("BFS-L"), "{text}");
+
+    // the JSON artifact is the standard sweep-results schema
+    let doc = json::parse(&std::fs::read_to_string(&out_path).unwrap()).unwrap();
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4 * 6, "PR/BFS x M/L x fig5 policy set");
+    assert!(cells
+        .iter()
+        .any(|c| c.get("workload").unwrap().as_str() == Some("PR-L")));
+    let bytes_first = std::fs::read(&out_path).unwrap();
+
+    // resuming re-executes nothing and rewrites identical bytes
+    let second = run(true);
+    assert!(second.status.success(), "stderr: {}", String::from_utf8_lossy(&second.stderr));
+    assert_eq!(bytes_first, std::fs::read(&out_path).unwrap());
+    std::fs::remove_file(&out_path).ok();
+}
+
+#[test]
 fn cli_sweep_rejects_duplicate_axes_and_lone_resume() {
     let exe = env!("CARGO_BIN_EXE_hyplacer");
     let out = std::process::Command::new(exe)
