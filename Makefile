@@ -8,7 +8,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify bench bench-baselines bench-check sweep artifacts clean-artifacts
+.PHONY: build test verify bench bench-baselines bench-check sweep share-sweep \
+	artifacts aot-artifacts experiment-artifacts clean-artifacts
 
 build:
 	$(CARGO) build --release
@@ -39,10 +40,38 @@ bench-check: build
 sweep:
 	$(CARGO) run --release --bin hyplacer -- sweep
 
+# Calibrate SimConfig::migrate_share (ROADMAP open item): a fig5 subset
+# (CG/MG at L scale, adm-default vs hyplacer) across the share axis
+# {1.0, 0.5, 0.25, 0.1}. One resumable checkpoint per share — the
+# persisted cell schema carries no share field, so the filename is the
+# attribution; re-runs are incremental per file. adm-default never
+# migrates, so its baseline cells are identical at every share and the
+# per-file speedup_vs_adm columns are directly comparable.
+share-sweep: build
+	for s in 1.0 0.5 0.25 0.1; do \
+		$(CARGO) run --release --bin hyplacer -- sweep -w cg-L,mg-L \
+			-p adm-default,hyplacer --epochs 60 --migrate-share $$s \
+			--out share-sweep-$$s.json --resume || exit 1; \
+	done
+	@echo "share axis captured in share-sweep-{1.0,0.5,0.25,0.1}.json;"
+	@echo "compare the hyplacer speedup_vs_adm columns across the files"
+
+# Full experiment-artifact run: every figure and table (incl. the
+# fig-gap and fig-mix matrices) accumulated into one resumable
+# checkpoint + per-table CSVs under artifacts/experiments/.
+experiment-artifacts: build
+	mkdir -p artifacts/experiments
+	$(CARGO) run --release --bin hyplacer -- all --csv artifacts/experiments \
+		--out artifacts/experiments/results.json --resume
+
 # AOT-lower the L1/L2 placement model to rust/artifacts/*.hlo.txt.
 # Requires jax; see python/compile/aot.py.
-artifacts:
+aot-artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts
 
+# Everything: the experiment artifacts (figures/tables, always
+# buildable) plus the AOT classifier artifacts (needs jax).
+artifacts: experiment-artifacts aot-artifacts
+
 clean-artifacts:
-	rm -rf rust/artifacts
+	rm -rf rust/artifacts artifacts/experiments

@@ -1,0 +1,123 @@
+# Cross-language check of the tenant address-space mapping — stdlib
+# only, so it runs even where jax/numpy are absent.
+#
+# The rust side owns the implementation (`TenantSet` in
+# rust/src/tenants/mod.rs: `from_footprints` packs tenants at
+# accumulated base offsets; `tenant_of` is a binary search over bases
+# with the Ok(i)/Err(0)/Err(i-1) resolution rust's `binary_search_by`
+# produces). This file is an independent port of that algorithm,
+# property-tested for the bijection the multi-tenant subsystem relies
+# on: every page has exactly one owner, every tenant-local page
+# round-trips through the global space, and out-of-space pages resolve
+# to no one. The rust property test (tests/tenants.rs) checks the same
+# invariants against the real implementation; together they pin the
+# algorithm from two independent codebases, mirroring the PR-4 python
+# port of the migration-engine livelock argument.
+from __future__ import annotations
+
+import bisect
+import random
+
+import pytest
+
+U32_MAX = 2**32 - 1
+
+
+class TenantSet:
+    """Python port of rust `tenants::TenantSet` (layout math only)."""
+
+    def __init__(self, footprints):
+        if not footprints:
+            raise ValueError("empty tenant set")
+        self.ranges = []
+        cursor = 0
+        for fp in footprints:
+            if fp == 0:
+                raise ValueError("zero footprint")
+            self.ranges.append((cursor, fp))
+            cursor += fp
+            if cursor > U32_MAX:
+                raise OverflowError("combined footprint overflows u32")
+
+    def total_pages(self):
+        base, pages = self.ranges[-1]
+        return base + pages
+
+    def tenant_of(self, page):
+        # mirrors rust binary_search_by over bases:
+        # Ok(i) -> i, Err(0) -> None, Err(i) -> i - 1
+        bases = [b for b, _ in self.ranges]
+        i = bisect.bisect_left(bases, page)
+        if i < len(bases) and bases[i] == page:
+            idx = i
+        elif i == 0:
+            return None
+        else:
+            idx = i - 1
+        base, pages = self.ranges[idx]
+        return idx if base <= page < base + pages else None
+
+    def to_global(self, idx, local):
+        if idx >= len(self.ranges):
+            return None
+        base, pages = self.ranges[idx]
+        return base + local if local < pages else None
+
+    def to_local(self, page):
+        idx = self.tenant_of(page)
+        if idx is None:
+            return None
+        return (idx, page - self.ranges[idx][0])
+
+
+def test_layout_is_packed_and_contiguous():
+    s = TenantSet([10, 5, 7])
+    assert [b for b, _ in s.ranges] == [0, 10, 15]
+    assert s.total_pages() == 22
+    assert s.tenant_of(9) == 0
+    assert s.tenant_of(10) == 1
+    assert s.tenant_of(21) == 2
+    assert s.tenant_of(22) is None
+    assert s.to_global(1, 4) == 14
+    assert s.to_global(1, 5) is None
+    assert s.to_local(14) == (1, 4)
+
+
+def test_degenerate_layouts_rejected():
+    with pytest.raises(ValueError):
+        TenantSet([])
+    with pytest.raises(ValueError):
+        TenantSet([3, 0, 2])
+    with pytest.raises(OverflowError):
+        TenantSet([U32_MAX, 2])
+
+
+def test_bijection_property():
+    rng = random.Random(0xC0FFEE)
+    for case in range(500):
+        n = rng.randint(1, 6)
+        fps = [rng.randint(1, 5000) for _ in range(n)]
+        s = TenantSet(fps)
+        total = sum(fps)
+        assert s.total_pages() == total
+        # exhaustive on small layouts, sampled on large ones
+        if total < 300:
+            pages = range(total + 5)
+        else:
+            pages = [rng.randrange(total + 5) for _ in range(100)]
+        for g in pages:
+            owner = s.tenant_of(g)
+            owners = [j for j, (b, p) in enumerate(s.ranges) if b <= g < b + p]
+            if g < total:
+                assert len(owners) == 1, f"case {case}: page {g} owners {owners}"
+                assert owner == owners[0]
+                idx, local = s.to_local(g)
+                assert s.to_global(idx, local) == g
+            else:
+                assert owner is None and not owners
+        for idx, fp in enumerate(fps):
+            for local in {0, fp - 1, rng.randrange(fp)}:
+                g = s.to_global(idx, local)
+                assert s.tenant_of(g) == idx
+                assert s.to_local(g) == (idx, local)
+            assert s.to_global(idx, fp) is None

@@ -1,0 +1,217 @@
+//! `hyplacer compare` — every Fig. 5 policy on one workload (or one
+//! `+`-joined co-run mix), with the migration-engine telemetry the CLI
+//! used to drop.
+//!
+//! The PR-4 engine added run-local queue metrics to [`SimResult`]
+//! (`migrate_queue_peak` / `migrate_deferred_ratio` /
+//! `migrate_stale_ratio`) but `compare`'s table never surfaced them —
+//! the one command people reach for when tuning `--migrate-share` was
+//! blind to the queue it throttles. This module renders them in both
+//! the text table and a machine-readable JSON document, and is a
+//! library function so its shape is testable (the CLI is a thin shell).
+
+use std::collections::BTreeMap;
+
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::coordinator::SimResult;
+use crate::exec::build_policy;
+use crate::policies::FIG5_POLICIES;
+use crate::report::json::Json;
+use crate::report::Table;
+use crate::tenants;
+
+use super::Report;
+
+/// One policy's run in a comparison.
+pub struct CompareCell {
+    pub policy: String,
+    pub speedup_vs_adm: f64,
+    pub energy_gain_vs_adm: f64,
+    pub sim: SimResult,
+}
+
+/// A full policy comparison on one workload-axis name.
+pub struct Comparison {
+    pub workload: String,
+    pub cells: Vec<CompareCell>,
+}
+
+/// Run the Fig. 5 policy set on `wname` (plain workload or mix).
+pub fn run_comparison(
+    machine: &MachineConfig,
+    sim: &SimConfig,
+    hp: &HyPlacerConfig,
+    wname: &str,
+    window_frac: f64,
+) -> Result<Comparison, String> {
+    let mut cells: Vec<CompareCell> = Vec::new();
+    let mut base_wall: Option<f64> = None;
+    let mut base_energy: Option<f64> = None;
+    for pname in FIG5_POLICIES {
+        let p = build_policy(pname, machine, hp)
+            .ok_or_else(|| format!("unknown policy {pname:?}"))?;
+        let r = tenants::run_named(machine, sim, wname, p, window_frac)?;
+        let speedup = base_wall.map(|b| b / r.total_wall_secs).unwrap_or(1.0);
+        let egain = base_energy.map(|b| b / r.energy_j_per_byte).unwrap_or(1.0);
+        if pname == "adm-default" {
+            base_wall = Some(r.total_wall_secs);
+            base_energy = Some(r.energy_j_per_byte);
+        }
+        cells.push(CompareCell {
+            policy: pname.to_string(),
+            speedup_vs_adm: speedup,
+            energy_gain_vs_adm: egain,
+            sim: r,
+        });
+    }
+    Ok(Comparison { workload: wname.to_string(), cells })
+}
+
+impl Comparison {
+    /// The printable table — including the PR-4 run-local migration
+    /// ratios (all exactly 0 at the default unthrottled share).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "policy",
+            "wall_s",
+            "throughput_GBs",
+            "speedup",
+            "energy_gain",
+            "migrated",
+            "queue_peak",
+            "deferred",
+            "stale",
+        ]);
+        for c in &self.cells {
+            t.row(vec![
+                c.policy.clone(),
+                format!("{:.1}", c.sim.total_wall_secs),
+                format!("{:.2}", c.sim.throughput / 1e9),
+                format!("{:.2}x", c.speedup_vs_adm),
+                format!("{:.2}x", c.energy_gain_vs_adm),
+                c.sim.migrated_pages.to_string(),
+                c.sim.migrate_queue_peak.to_string(),
+                format!("{:.3}", c.sim.migrate_deferred_ratio),
+                format!("{:.3}", c.sim.migrate_stale_ratio),
+            ]);
+        }
+        t
+    }
+
+    /// The full report (what the CLI prints / writes as CSV).
+    pub fn report(&self) -> Report {
+        let mut rep = Report::new("compare", "All Fig. 5 policies on one workload");
+        rep.tables.push(("policies".to_string(), self.table()));
+        rep.notes.push(format!("workload: {}", self.workload));
+        rep.notes.push(
+            "queue_peak/deferred/stale are the migration-engine telemetry \
+             (run-local; all 0 at the default migrate_share = 1.0)"
+                .to_string(),
+        );
+        rep
+    }
+
+    /// Machine-readable rendering (`hyplacer compare --json FILE`). The
+    /// migration telemetry keys mirror the `BENCH_hotpath.json`
+    /// `migrate/*` metric names.
+    pub fn to_json(&self) -> Json {
+        let num = Json::Num;
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("policy".to_string(), Json::Str(c.policy.clone()));
+                m.insert("wall_secs".to_string(), num(c.sim.total_wall_secs));
+                m.insert("throughput".to_string(), num(c.sim.throughput));
+                m.insert("speedup_vs_adm".to_string(), num(c.speedup_vs_adm));
+                m.insert("energy_gain_vs_adm".to_string(), num(c.energy_gain_vs_adm));
+                m.insert("migrated_pages".to_string(), num(c.sim.migrated_pages as f64));
+                m.insert(
+                    "queue_depth_peak".to_string(),
+                    num(c.sim.migrate_queue_peak as f64),
+                );
+                m.insert("deferred_ratio".to_string(), num(c.sim.migrate_deferred_ratio));
+                m.insert("stale_drop_ratio".to_string(), num(c.sim.migrate_stale_ratio));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), num(1.0));
+        root.insert("workload".to_string(), Json::Str(self.workload.clone()));
+        root.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_comparison(wname: &str, migrate_share: f64) -> Comparison {
+        let machine = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 8;
+        sim.warmup_epochs = 2;
+        sim.migrate_share = migrate_share;
+        let hp = HyPlacerConfig::default();
+        run_comparison(&machine, &sim, &hp, wname, 0.05).unwrap()
+    }
+
+    #[test]
+    fn table_and_json_carry_the_migration_telemetry() {
+        let c = quick_comparison("cg-M", 1.0);
+        assert_eq!(c.cells.len(), FIG5_POLICIES.len());
+        let rendered = c.table().render();
+        for col in ["queue_peak", "deferred", "stale"] {
+            assert!(rendered.contains(col), "missing column {col} in\n{rendered}");
+        }
+        let json = c.to_json().render();
+        let doc = crate::report::json::parse(&json).unwrap();
+        let cells = doc.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), FIG5_POLICIES.len());
+        for cell in cells {
+            for key in [
+                "policy",
+                "wall_secs",
+                "throughput",
+                "speedup_vs_adm",
+                "energy_gain_vs_adm",
+                "migrated_pages",
+                "queue_depth_peak",
+                "deferred_ratio",
+                "stale_drop_ratio",
+            ] {
+                assert!(cell.get(key).is_some(), "missing field {key}");
+            }
+            // unthrottled: telemetry is exactly zero
+            assert_eq!(cell.get("queue_depth_peak").unwrap().as_f64(), Some(0.0));
+            assert_eq!(cell.get("deferred_ratio").unwrap().as_f64(), Some(0.0));
+            assert_eq!(cell.get("stale_drop_ratio").unwrap().as_f64(), Some(0.0));
+        }
+    }
+
+    #[test]
+    fn throttled_compare_surfaces_nonzero_queue_telemetry() {
+        let c = quick_comparison("cg-L", 0.05);
+        let hyp = c.cells.iter().find(|x| x.policy == "hyplacer").unwrap();
+        assert!(hyp.sim.migrated_pages > 0);
+        assert!(
+            hyp.sim.migrate_queue_peak > 0,
+            "throttled cg-L hyplacer must defer work"
+        );
+        assert!(hyp.sim.migrate_deferred_ratio > 0.0);
+        let json = c.to_json().render();
+        assert!(json.contains("queue_depth_peak"), "{json}");
+    }
+
+    #[test]
+    fn compare_accepts_a_mix() {
+        let c = quick_comparison("cg.S+mg.S", 1.0);
+        assert_eq!(c.workload, "cg.S+mg.S");
+        assert_eq!(c.cells.len(), FIG5_POLICIES.len());
+        // the adm-default row is the 1.0x anchor
+        assert_eq!(c.cells[0].policy, "adm-default");
+        assert!((c.cells[0].speedup_vs_adm - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,199 @@
+//! fig-mix — the multi-tenant co-run evaluation matrix (mixes ×
+//! policies × machines).
+//!
+//! The paper sells HyPlacer as a *system-wide* tool, yet every other
+//! figure runs one workload at a time. fig-mix opens the contention
+//! dimension: each workload-axis value is a `+`-joined
+//! [`crate::tenants::MixSpec`] (two or more tenants sharing DRAM
+//! capacity, the migration queue and the memory system), run over the
+//! full Fig. 5 policy set through the standard [`crate::exec::SweepSpec`]
+//! checkpoint/resume plumbing — `hyplacer fig-mix --out mix.json
+//! --resume` accumulates the matrix incrementally and emits the same
+//! JSON artifact schema every other figure uses (aggregate metrics only;
+//! per-tenant slowdown/unfairness are run-local — use `hyplacer run -w
+//! 'is.M+pr.M'` for the fairness view of one mix).
+
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::exec::{self, SweepRun};
+use crate::policies::FIG5_POLICIES;
+use crate::report::Table;
+use crate::util::geomean;
+
+use super::{BenchOpts, Report};
+
+/// The default co-run mix set: a write-heavy NPB tenant against a
+/// graph tenant (the contended-PM-write-ceiling case), two cache-
+/// unfriendly M tenants, and a staggered-arrival half-weight tenant
+/// landing on a warmed-up L run.
+pub const DEFAULT_MIXES: [&str; 3] = ["is.M+pr.M", "cg.M+bfs.M", "cg.L+is.S@8*0.5"];
+
+/// What one fig-mix invocation did: the report, the merged run, and the
+/// executed/cached cell split (the CLI prints the machine-greppable
+/// resume proof from these, mirroring `hyplacer sweep`).
+pub struct FigMixOutcome {
+    pub report: Report,
+    pub run: SweepRun,
+    pub executed: usize,
+    pub cached: usize,
+}
+
+/// The [`exec::SweepSpec`] behind the co-run matrix: mix axis values ×
+/// the Fig. 5 policy set × the given machines (paper machine when
+/// `None`), same run-length policy as the other figure matrices.
+pub fn mix_spec(
+    mixes: &[String],
+    machines: Option<Vec<(String, MachineConfig)>>,
+    opts: &BenchOpts,
+) -> exec::SweepSpec {
+    let mut sim = SimConfig::default();
+    sim.epochs = opts.epochs;
+    sim.seed = opts.seed;
+    sim.migrate_share = opts.migrate_share;
+    sim.warmup_epochs = (opts.epochs / 3).max(2);
+    let mut hp = HyPlacerConfig::default();
+    hp.use_aot = opts.use_aot;
+    let mut spec = exec::SweepSpec::new(MachineConfig::paper_machine(), sim, hp);
+    spec.window_frac = opts.window_frac;
+    spec.workloads = mixes.to_vec();
+    if let Some(m) = machines {
+        spec.machines = m;
+    }
+    spec
+}
+
+/// Run the co-run matrix with the standard checkpoint/resume plumbing
+/// and render the aggregate speedup/energy tables.
+pub fn try_fig_mix_report(
+    opts: &BenchOpts,
+    mixes: &[String],
+    machines: Option<Vec<(String, MachineConfig)>>,
+) -> Result<FigMixOutcome, String> {
+    if opts.resume && opts.out.is_none() {
+        return Err("--resume requires --out FILE".to_string());
+    }
+    for m in mixes {
+        if !crate::tenants::MixSpec::is_mix(m) {
+            return Err(format!(
+                "fig-mix workload {m:?} is not a mix (use '+'-joined tenants, e.g. 'is.M+pr.M')"
+            ));
+        }
+    }
+    let spec = mix_spec(mixes, machines, opts);
+    let prior = match &opts.out {
+        Some(path) => exec::load_results(path)?,
+        None => None,
+    };
+    let cache = if opts.resume { prior.as_ref() } else { None };
+    let outcome = spec.run_with_cache(opts.jobs, cache)?;
+    if let Some(path) = &opts.out {
+        exec::save_results(path, &outcome.run, prior.as_ref())?;
+    }
+    let run = outcome.run;
+
+    let mut rep = Report::new(
+        "fig-mix",
+        "Multi-tenant co-runs: aggregate speedup vs ADM-default (shared DRAM + migration queue)",
+    );
+    let multi_machine = spec.machines.len() > 1;
+    let mut headers: Vec<String> = Vec::new();
+    if multi_machine {
+        headers.push("machine".to_string());
+    }
+    headers.push("policy".to_string());
+    for m in mixes {
+        headers.push(m.clone());
+    }
+    headers.push("geomean".to_string());
+    let mut speed = Table::new(headers.clone());
+    let mut energy = Table::new(headers);
+    for (mname, _) in &spec.machines {
+        for pname in FIG5_POLICIES.iter().skip(1) {
+            let mut srow: Vec<String> = Vec::new();
+            let mut erow: Vec<String> = Vec::new();
+            if multi_machine {
+                srow.push(mname.clone());
+                erow.push(mname.clone());
+            }
+            srow.push(pname.to_string());
+            erow.push(pname.to_string());
+            let mut svals = Vec::new();
+            let mut evals = Vec::new();
+            for mix in mixes {
+                let cell = run.results.iter().find(|c| {
+                    c.machine == *mname && c.workload == *mix && c.policy == *pname
+                });
+                let (s, e) = match cell {
+                    Some(c) => (
+                        run.speedup_vs_baseline(c).unwrap_or(f64::NAN),
+                        run.energy_gain_vs_baseline(c).unwrap_or(f64::NAN),
+                    ),
+                    None => (f64::NAN, f64::NAN),
+                };
+                svals.push(s);
+                evals.push(e);
+                srow.push(format!("{s:.2}x"));
+                erow.push(format!("{e:.2}x"));
+            }
+            srow.push(format!("{:.2}x", geomean(&svals)));
+            erow.push(format!("{:.2}x", geomean(&evals)));
+            speed.row(srow);
+            energy.row(erow);
+        }
+    }
+    rep.tables.push(("speedup".to_string(), speed));
+    rep.tables.push(("energy_gain".to_string(), energy));
+    rep.notes.push(
+        "each cell is one MultiSimulation: tenants contend for DRAM capacity, the \
+         migration-engine queue and PerfModel bandwidth; speedups are aggregate \
+         steady-state vs the adm-default cell of the same (machine, mix, seed) group"
+            .to_string(),
+    );
+    rep.notes.push(
+        "per-tenant slowdown-vs-solo and unfairness are run-local: \
+         `hyplacer run -w 'is.M+pr.M'` reports them for one mix"
+            .to_string(),
+    );
+    Ok(FigMixOutcome { report: rep, run, executed: outcome.executed, cached: outcome.cached })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_matrix_has_the_expected_shape() {
+        let mut opts = BenchOpts::quick();
+        opts.epochs = 8;
+        let mixes = vec!["cg.S+mg.S".to_string()];
+        let out = try_fig_mix_report(&opts, &mixes, None).unwrap();
+        assert_eq!(out.executed, 6, "1 mix x fig5 policy set");
+        assert_eq!(out.cached, 0);
+        assert_eq!(out.run.results.len(), 6);
+        // the mix display name groups its baseline correctly: every
+        // non-adm cell has a finite aggregate speedup
+        for c in &out.run.results {
+            assert_eq!(c.workload, "cg.S+mg.S");
+            assert_eq!(c.sim.workload, "CG-S+MG-S");
+            let s = out.run.speedup_vs_baseline(c).unwrap();
+            assert!(s.is_finite() && s > 0.0, "{}: {s}", c.policy);
+        }
+        let rendered = out.report.render();
+        assert!(rendered.contains("fig-mix") && rendered.contains("cg.S+mg.S"), "{rendered}");
+    }
+
+    #[test]
+    fn non_mix_axis_values_are_rejected() {
+        let opts = BenchOpts::quick();
+        let err = try_fig_mix_report(&opts, &["cg-S".to_string()], None).unwrap_err();
+        assert!(err.contains("not a mix"), "{err}");
+    }
+
+    #[test]
+    fn default_mix_set_validates_on_the_paper_machine() {
+        let opts = BenchOpts::quick();
+        let mixes: Vec<String> = DEFAULT_MIXES.iter().map(|s| s.to_string()).collect();
+        let spec = mix_spec(&mixes, None, &opts);
+        spec.validate().unwrap();
+        assert_eq!(spec.cells().len(), DEFAULT_MIXES.len() * 6);
+    }
+}

@@ -8,10 +8,12 @@
 //! orderings, crossover locations).
 
 pub mod baseline;
+pub mod compare;
 pub mod fig2;
 pub mod fig3;
 pub mod fig5;
 pub mod fig_gap;
+pub mod fig_mix;
 pub mod perf;
 pub mod tables;
 

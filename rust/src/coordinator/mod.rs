@@ -53,6 +53,11 @@ pub struct SimResult {
     pub migrate_queue_peak: u64,
     pub migrate_deferred_ratio: f64,
     pub migrate_stale_ratio: f64,
+    /// Per-tenant summaries for multi-tenant co-runs (run-local, like
+    /// the epoch trace — not part of the persisted sweep schema). Empty
+    /// for legacy single-workload [`Simulation`] runs and for results
+    /// loaded back from a checkpoint.
+    pub tenants: Vec<crate::tenants::TenantSummary>,
     pub stats: RunStats,
 }
 
@@ -332,6 +337,7 @@ impl Simulation {
                 epoch,
                 epoch_secs: self.sim.epoch_secs,
                 backpressure: self.engine.backpressure(),
+                tenants: &[],
             };
             self.policy.epoch_tick(&mut ctx)
         };
@@ -423,6 +429,7 @@ impl Simulation {
             migrate_queue_peak: self.stats.migrate_queue_depth_peak(),
             migrate_deferred_ratio: self.stats.migrate_deferred_ratio(),
             migrate_stale_ratio: self.stats.migrate_stale_drop_ratio(),
+            tenants: Vec::new(),
             stats: self.stats,
         }
     }

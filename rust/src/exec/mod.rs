@@ -44,6 +44,7 @@ use crate::policies::{self, Policy};
 use crate::report::json::{self, Json};
 use crate::report::Table;
 use crate::sim::RunStats;
+use crate::tenants::MixSpec;
 use crate::util::fnv1a64;
 use crate::workloads;
 
@@ -300,7 +301,36 @@ impl SweepSpec {
         }
         for (mname, machine) in &self.machines {
             for w in &self.workloads {
-                if workloads::by_name(w, machine.page_bytes, self.sim.epoch_secs).is_none() {
+                if MixSpec::is_mix(w) {
+                    // a multi-tenant mix on the workload axis: parse,
+                    // resolve every tenant and check the combined
+                    // footprint fits this machine
+                    let mix = MixSpec::parse(w)
+                        .and_then(|m| {
+                            m.validate_on(machine, self.sim.epoch_secs)?;
+                            Ok(m)
+                        })
+                        .map_err(|e| format!("mix {w:?} (machine {mname:?}): {e}"))?;
+                    // every tenant must arrive before its cell's run
+                    // ends — per cell, because `CellOverride`s can
+                    // shrink the epoch count of exactly these cells
+                    let max_arrival =
+                        mix.tenants.iter().map(|t| t.arrival_epoch).max().unwrap_or(0);
+                    for p in &self.policies {
+                        for &seed in &self.seeds {
+                            let sim = self.resolved_sim(mname, w, p, seed);
+                            if max_arrival >= sim.epochs {
+                                return Err(format!(
+                                    "mix {w:?}: tenant arrival epoch {max_arrival} is past \
+                                     the cell's {} epochs (machine {mname:?}, policy {p:?}, \
+                                     seed {seed})",
+                                    sim.epochs
+                                ));
+                            }
+                        }
+                    }
+                } else if workloads::by_name(w, machine.page_bytes, self.sim.epoch_secs).is_none()
+                {
                     return Err(format!("unknown workload {w:?} (machine {mname:?})"));
                 }
             }
@@ -362,20 +392,30 @@ impl SweepSpec {
         })
     }
 
-    /// Run one cell (names were validated up front).
+    /// Run one cell (names were validated up front). A `+`-joined
+    /// workload axis value runs the multi-tenant coordinator
+    /// ([`crate::tenants::MultiSimulation`]); everything else keeps the
+    /// legacy single-workload path bit for bit.
     fn run_cell(&self, cell: &SweepCell) -> CellResult {
         let (mname, machine) = &self.machines[cell.machine_idx];
         let sim = self.resolved_sim(mname, &cell.workload, &cell.policy, cell.seed);
-        let w = workloads::by_name(&cell.workload, machine.page_bytes, sim.epoch_secs)
-            .expect("workload validated");
         let p = build_policy(&cell.policy, machine, &self.hyplacer).expect("policy validated");
+        let sim_result = if MixSpec::is_mix(&cell.workload) {
+            let mix = MixSpec::parse(&cell.workload).expect("mix validated");
+            crate::tenants::run_mix(machine, &sim, &mix, p, self.window_frac)
+                .expect("mix validated")
+        } else {
+            let w = workloads::by_name(&cell.workload, machine.page_bytes, sim.epoch_secs)
+                .expect("workload validated");
+            run_pair(machine, &sim, w, p, self.window_frac)
+        };
         CellResult {
             machine: cell.machine.clone(),
             workload: cell.workload.clone(),
             policy: cell.policy.clone(),
             seed: cell.seed,
             key: cell.key,
-            sim: run_pair(machine, &sim, w, p, self.window_frac),
+            sim: sim_result,
         }
     }
 }
@@ -437,6 +477,7 @@ impl CellResult {
                 migrate_queue_peak: 0,
                 migrate_deferred_ratio: 0.0,
                 migrate_stale_ratio: 0.0,
+                tenants: Vec::new(),
                 stats: RunStats::new(0),
             },
         })
@@ -719,6 +760,40 @@ mod tests {
         let mut spec = quick_spec();
         spec.seeds.clear();
         assert!(spec.run(1).is_err());
+    }
+
+    #[test]
+    fn mix_axis_values_validate_like_workloads() {
+        // a '+'-joined mix on the workload axis resolves and keys
+        let mut spec = quick_spec();
+        spec.workloads = vec!["cg-S".to_string(), "cg.S+mg.S".to_string()];
+        spec.validate().unwrap();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        // a bad tenant inside a mix fails fast with its name
+        let mut bad = quick_spec();
+        bad.workloads = vec!["cg.S+nope.Q".to_string()];
+        assert!(bad.validate().unwrap_err().contains("nope"), "{:?}", bad.validate());
+        // an oversized mix fails fast on the capacity check
+        let mut big = quick_spec();
+        big.workloads = vec!["cg.L+mg.L+is.L".to_string()];
+        assert!(big.validate().unwrap_err().contains("capacity"));
+        // a tenant arriving at/after the cell's epoch count fails in
+        // validate, not as a worker-thread panic in run_cell (the
+        // quick spec runs 6 epochs)
+        let mut late = quick_spec();
+        late.workloads = vec!["cg.S+mg.S@6".to_string()];
+        assert!(late.validate().unwrap_err().contains("arrival"), "{:?}", late.validate());
+        // ...and an override that shrinks exactly these cells is caught
+        let mut shrunk = quick_spec();
+        shrunk.workloads = vec!["cg.S+mg.S@4".to_string()];
+        shrunk.validate().unwrap();
+        shrunk.overrides.push(CellOverride {
+            workload: Some("cg.S+mg.S@4".to_string()),
+            epochs: Some(3),
+            ..CellOverride::default()
+        });
+        assert!(shrunk.validate().unwrap_err().contains("arrival"));
     }
 
     #[test]

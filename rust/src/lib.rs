@@ -28,6 +28,7 @@ pub mod workloads;
 pub mod policies;
 pub mod runtime;
 pub mod coordinator;
+pub mod tenants;
 pub mod report;
 pub mod exec;
 pub mod bench_harness;

@@ -18,12 +18,15 @@
 use std::process::ExitCode;
 
 use hyplacer::bench_harness::baseline::{self, BaselineDoc};
-use hyplacer::bench_harness::{fig2, fig3, fig5, fig_gap, perf, tables, BenchOpts, Report};
+use hyplacer::bench_harness::{
+    compare, fig2, fig3, fig5, fig_gap, fig_mix, perf, tables, BenchOpts, Report,
+};
 use hyplacer::config::{parse::Doc, CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;
 use hyplacer::exec::{self, SweepSpec};
-use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::policies;
 use hyplacer::report::Table;
+use hyplacer::tenants::{self, MixSpec};
 use hyplacer::workloads;
 
 struct Args {
@@ -154,11 +157,18 @@ COMMANDS
   fig6      energy-gain matrix (paper Fig. 6; reuses the fig5 runs)
   fig7      small-data-set overheads (paper Fig. 7)
   fig-gap   GAP-suite (PR/BFS) evaluation matrix (ROADMAP figure)
+  fig-mix   multi-tenant co-run matrix: mixes x policies x machines
+            [-w 'is.M+pr.M,cg.M+bfs.M'] (default mix set otherwise)
   table1    proposal comparison table (paper Table 1)
   table2    PageFind modes (paper Table 2)
   table3    workload summary (paper Table 3)
   run       one (workload, policy) pair    [-w cg-L -p hyplacer]
-  compare   all policies on one workload   [-w cg-L]
+            a '+'-joined mix runs the multi-tenant coordinator and
+            reports per-tenant slowdown-vs-solo, DRAM share, weighted
+            speedup and unfairness   [-w 'is.M+pr.M']
+  compare   all policies on one workload or mix   [-w cg-L]
+            (incl. migration-engine queue telemetry; --json FILE for
+            the machine-readable rendering)
   sweep     parallel (machine x workload x policy x seed) grid
             [-w bt-M,ft-M,mg-M,cg-M -p all --seeds 42 --machines paper]
   bench     scale-free perf metrics for the baseline pipeline
@@ -175,8 +185,10 @@ FLAGS
   -j, --jobs N   worker threads for fig5/6/7 + sweep (default: one per core)
   --csv DIR      also write each table as CSV under DIR
   --json FILE    (sweep) also write full results as JSON
+                 (compare) machine-readable comparison incl. queue telemetry
                  (bench) directory for the emitted BENCH_*.json docs
-  --out FILE     (sweep, fig5/6/7) checkpoint results to FILE (atomic rewrite)
+  --out FILE     (sweep, fig5/6/7, fig-gap, fig-mix, all) checkpoint
+                 results to FILE (atomic rewrite)
   --resume       with --out: load FILE first and execute only cells whose
                  content key is missing or changed (incremental matrices)
   --epochs-for PAT=N[,PAT=N]
@@ -199,9 +211,13 @@ FLAGS
   --aot          use the AOT/PJRT classifier for HyPlacer (needs artifacts/)
   --quick        short runs (CI)
   --config FILE  TOML-subset config overriding machine/sim/hyplacer knobs
-  -w, --workload NAME   bt|ft|mg|cg (NPB) or pr|bfs (GAP) + -S/-M/-L
+  -w, --workload NAME   bt|ft|mg|cg|is (NPB) or pr|bfs (GAP) + -S/-M/-L
                         (default cg-M; sweep accepts a comma list and the
-                        suite aliases \"npb\" / \"gap\" = whole suite at -M)
+                        suite aliases \"npb\" / \"gap\" = whole suite at -M).
+                        A '+'-joined mix of TENANT[@ARRIVAL][*WEIGHT]
+                        components ('.' = '-', e.g. 'is.M+pr.M@8*0.5')
+                        co-runs tenants in one shared address space
+                        (run/compare/sweep/fig-mix)
   -p, --policy NAME     adm-default|memm|autonuma|memos|nimble|hyplacer|
                         partitioned|interleave-<pct>   (default hyplacer;
                         sweep accepts a comma list, or \"all\" for the
@@ -268,11 +284,16 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
     let wname = args.workload.as_deref().unwrap_or("cg-M");
     let pname = args.policy.as_deref().unwrap_or("hyplacer");
+    let window_frac = hp.delay_secs / sim.epoch_secs;
+    if MixSpec::is_mix(wname) {
+        return cmd_run_mix(&machine, &sim, &hp, wname, pname, window_frac);
+    }
     let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs)
         .ok_or_else(|| format!("unknown workload {wname:?}"))?;
-    let p = policies::by_name(pname, &machine, &hp)
+    // build_policy (not policies::by_name) so --aot swaps in the AOT
+    // classifier here exactly like the mix/compare/figure paths do
+    let p = exec::build_policy(pname, &machine, &hp)
         .ok_or_else(|| format!("unknown policy {pname:?}"))?;
-    let window_frac = hp.delay_secs / sim.epoch_secs;
     let r = run_pair(&machine, &sim, w, p, window_frac);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["workload".to_string(), r.workload.clone()]);
@@ -293,41 +314,104 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `hyplacer run -w 'is.M+pr.M'` — the multi-tenant contention demo:
+/// run the mix plus one solo reference per tenant under the same
+/// policy, and report per-tenant slowdown-vs-solo, DRAM occupancy
+/// share, unfairness and the share-weighted aggregate speedup.
+fn cmd_run_mix(
+    machine: &MachineConfig,
+    sim: &SimConfig,
+    hp: &HyPlacerConfig,
+    wname: &str,
+    pname: &str,
+    window_frac: f64,
+) -> Result<(), String> {
+    if policies::by_name(pname, machine, hp).is_none() {
+        return Err(format!("unknown policy {pname:?}"));
+    }
+    let mix = MixSpec::parse(wname)?;
+    let out = tenants::run_mix_with_solos(machine, sim, &mix, window_frac, || {
+        exec::build_policy(pname, machine, hp).expect("policy checked above")
+    })?;
+    let r = &out.corun;
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["mix".to_string(), r.workload.clone()]);
+    t.row(vec!["policy".to_string(), r.policy.clone()]);
+    t.row(vec!["total wall (s)".to_string(), format!("{:.2}", r.total_wall_secs)]);
+    t.row(vec!["throughput (GB/s)".to_string(), format!("{:.2}", r.throughput / 1e9)]);
+    t.row(vec!["migrated pages".to_string(), r.migrated_pages.to_string()]);
+    t.row(vec![
+        "DRAM traffic share".to_string(),
+        format!("{:.1}%", r.dram_traffic_share * 100.0),
+    ]);
+    t.row(vec![
+        "weighted speedup (vs solo)".to_string(),
+        format!("{:.3}", out.weighted_speedup),
+    ]);
+    t.row(vec![
+        "unfairness (max/min slowdown)".to_string(),
+        format!("{:.3}", out.unfairness),
+    ]);
+    println!("{}", t.render());
+    let mut per = Table::new(vec![
+        "tenant",
+        "arrival",
+        "weight",
+        "steady_GBs",
+        "solo_GBs",
+        "slowdown",
+        "dram_share",
+    ]);
+    for (i, ten) in r.tenants.iter().enumerate() {
+        per.row(vec![
+            ten.name.clone(),
+            ten.arrival_epoch.to_string(),
+            format!("{}", ten.share_weight),
+            format!("{:.2}", ten.steady_throughput / 1e9),
+            format!("{:.2}", out.solos[i].steady_throughput / 1e9),
+            format!("{:.2}x", out.slowdowns[i]),
+            format!("{:.1}%", ten.mean_dram_share * 100.0),
+        ]);
+    }
+    println!("{}", per.render());
+    Ok(())
+}
+
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
     let wname = args.workload.as_deref().unwrap_or("cg-M");
     let window_frac = hp.delay_secs / sim.epoch_secs;
-    let mut t = Table::new(vec![
-        "policy",
-        "wall_s",
-        "throughput_GBs",
-        "speedup",
-        "energy_gain",
-        "migrated",
-    ]);
-    let mut base: Option<f64> = None;
-    let mut base_energy: Option<f64> = None;
-    for pname in FIG5_POLICIES {
-        let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs)
-            .ok_or_else(|| format!("unknown workload {wname:?}"))?;
-        let p = policies::by_name(pname, &machine, &hp).unwrap();
-        let r = run_pair(&machine, &sim, w, p, window_frac);
-        let speedup = base.map(|b| b / r.total_wall_secs).unwrap_or(1.0);
-        let egain = base_energy.map(|b| b / r.energy_j_per_byte).unwrap_or(1.0);
-        if pname == "adm-default" {
-            base = Some(r.total_wall_secs);
-            base_energy = Some(r.energy_j_per_byte);
-        }
-        t.row(vec![
-            pname.to_string(),
-            format!("{:.1}", r.total_wall_secs),
-            format!("{:.2}", r.throughput / 1e9),
-            format!("{speedup:.2}x"),
-            format!("{egain:.2}x"),
-            r.migrated_pages.to_string(),
-        ]);
+    let cmp = compare::run_comparison(&machine, &sim, &hp, wname, window_frac)?;
+    emit(&cmp.report(), &args.csv);
+    if let Some(path) = &args.json {
+        let mut text = cmp.to_json().render();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote {path}");
     }
-    println!("workload: {wname}\n{}", t.render());
+    Ok(())
+}
+
+/// `hyplacer fig-mix`: the co-run matrix over the standard
+/// checkpoint/resume plumbing (prints the machine-greppable
+/// executed/cached line CI's mix smoke keys on, mirroring `sweep`).
+fn cmd_fig_mix(args: &Args, opts: &BenchOpts) -> Result<(), String> {
+    let mixes: Vec<String> = match &args.workload {
+        Some(w) => split_list(w),
+        None => fig_mix::DEFAULT_MIXES.iter().map(|s| s.to_string()).collect(),
+    };
+    let machines = match &args.machines {
+        Some(m) => Some(parse_machines(m)?),
+        None => None,
+    };
+    let out = fig_mix::try_fig_mix_report(opts, &mixes, machines)?;
+    emit(&out.report, &args.csv);
+    println!(
+        "fig-mix: executed {} of {} cells ({} cached)",
+        out.executed,
+        out.run.results.len(),
+        out.cached
+    );
     Ok(())
 }
 
@@ -528,6 +612,30 @@ fn cmd_bench_check(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `hyplacer all`: every figure and table. With `--out F` the fig5/7,
+/// fig-gap and fig-mix matrices all accumulate into one checkpoint
+/// (each loads the prior file and merges its rewrite; `--resume`
+/// additionally skips unchanged cells) — the experiment-artifact run
+/// `make artifacts` drives.
+fn cmd_all(args: &Args, opts: &BenchOpts, machine: &MachineConfig) -> Result<(), String> {
+    emit(&fig2::report(machine), &args.csv);
+    emit(&fig3::report(), &args.csv);
+    let (rep5, matrix) = fig5::fig5_report(opts);
+    emit(&rep5, &args.csv);
+    emit(&fig5::fig6_report(&matrix), &args.csv);
+    let (rep7, _) = fig5::fig7_report(opts);
+    emit(&rep7, &args.csv);
+    let (gap_rep, _) = fig_gap::try_fig_gap_report(opts)?;
+    emit(&gap_rep, &args.csv);
+    let mixes: Vec<String> = fig_mix::DEFAULT_MIXES.iter().map(|s| s.to_string()).collect();
+    let mix_out = fig_mix::try_fig_mix_report(opts, &mixes, None)?;
+    emit(&mix_out.report, &args.csv);
+    emit(&tables::table1(), &args.csv);
+    emit(&tables::table2(), &args.csv);
+    emit(&tables::table3(), &args.csv);
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let args = match parse_args() {
         Ok(a) => a,
@@ -574,6 +682,7 @@ fn main() -> ExitCode {
             }
             Err(e) => Err(e),
         },
+        "fig-mix" => cmd_fig_mix(&args, &opts),
         "table1" => {
             emit(&tables::table1(), &args.csv);
             Ok(())
@@ -591,19 +700,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "bench-check" => cmd_bench_check(&args),
-        "all" => {
-            emit(&fig2::report(&machine), &args.csv);
-            emit(&fig3::report(), &args.csv);
-            let (rep5, matrix) = fig5::fig5_report(&opts);
-            emit(&rep5, &args.csv);
-            emit(&fig5::fig6_report(&matrix), &args.csv);
-            let (rep7, _) = fig5::fig7_report(&opts);
-            emit(&rep7, &args.csv);
-            emit(&tables::table1(), &args.csv);
-            emit(&tables::table2(), &args.csv);
-            emit(&tables::table3(), &args.csv);
-            Ok(())
-        }
+        "all" => cmd_all(&args, &opts, &machine),
         other => Err(format!("unknown command {other:?}\n\n{HELP}")),
     };
     match result {

@@ -61,6 +61,7 @@ mod tests {
             epoch: 0,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         let plan = p.epoch_tick(&mut ctx);
         assert!(plan.is_empty());

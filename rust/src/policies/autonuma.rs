@@ -158,6 +158,7 @@ mod tests {
             epoch,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         p.epoch_tick(&mut ctx)
     }
@@ -213,6 +214,7 @@ mod tests {
             epoch: 0,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         let _ = p.epoch_tick(&mut ctx);
         // only the 2-page window was observed/cleared

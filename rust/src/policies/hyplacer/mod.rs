@@ -358,6 +358,7 @@ mod tests {
             epoch,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         h.epoch_tick(&mut ctx)
     }

@@ -187,6 +187,7 @@ mod tests {
             epoch,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         m.epoch_tick(&mut ctx)
     }

@@ -28,6 +28,28 @@ use crate::config::{HyPlacerConfig, MachineConfig, Tier};
 use crate::mem::{EpochDemand, PcmonSnapshot};
 use crate::vm::{Backpressure, MigrationPlan, PageId, PageTable};
 
+/// One tenant's slice of the shared address space in a multi-tenant
+/// co-run ([`crate::tenants`]): contiguous `[base, base + pages)` plus
+/// its resource share weight. Policies receive the full layout through
+/// [`PolicyCtx::tenants`] but are not required to consult it — the
+/// paper's policies are tenant-blind (system-wide placement over the
+/// union footprint), and the slice is empty for single-workload runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantRange {
+    pub base: PageId,
+    pub pages: u32,
+    pub share_weight: f64,
+}
+
+impl TenantRange {
+    pub fn end(&self) -> PageId {
+        self.base + self.pages
+    }
+    pub fn contains(&self, p: PageId) -> bool {
+        p >= self.base && p < self.end()
+    }
+}
+
 /// Per-epoch context handed to a policy's decision tick.
 pub struct PolicyCtx<'a> {
     pub pt: &'a mut PageTable,
@@ -42,6 +64,12 @@ pub struct PolicyCtx<'a> {
     /// the queue backs up — the engine executes under a bandwidth
     /// budget, so planning past it only grows the backlog.
     pub backpressure: Backpressure,
+    /// Tenant layout of the shared address space (empty outside
+    /// multi-tenant runs). Decision ticks stay system-wide — DRAM,
+    /// the migration queue and PM bandwidth are global resources — so
+    /// existing policies ignore this; it exists so tenant-aware policies
+    /// *can* weight selections without a trait change.
+    pub tenants: &'a [TenantRange],
 }
 
 /// One active region's demand this epoch (coordinator-computed summary

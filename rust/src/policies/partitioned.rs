@@ -142,6 +142,7 @@ mod tests {
             epoch,
             epoch_secs: 1.0,
             backpressure: crate::vm::Backpressure::default(),
+            tenants: &[],
         };
         p.epoch_tick(&mut ctx)
     }

@@ -7,7 +7,7 @@ use crate::mem::{EpochDemand, EpochOutcome};
 use crate::vm::MigrationStats;
 
 /// Everything recorded about one served epoch.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct EpochRecord {
     pub epoch: u32,
     pub wall_secs: f64,
@@ -28,6 +28,15 @@ pub struct EpochRecord {
     pub migrate_queued: u64,
     /// Carried-over moves dropped by revalidation this epoch.
     pub migrate_stale: u64,
+    /// Per-tenant app bytes served this epoch (multi-tenant co-runs
+    /// only; empty for single-workload runs). Index = tenant index in
+    /// the run's [`crate::tenants::MixSpec`]; a tenant that has not
+    /// arrived yet carries 0.0.
+    pub tenant_app_bytes: Vec<f64>,
+    /// Per-tenant share of DRAM *capacity* held at the end of the epoch
+    /// (multi-tenant co-runs only) — the contention series: who actually
+    /// owns the fast tier.
+    pub tenant_dram_share: Vec<f64>,
 }
 
 /// Aggregated statistics for a run.
@@ -67,7 +76,19 @@ impl RunStats {
             migrate_submitted: migration.submitted,
             migrate_queued: migration.deferred,
             migrate_stale: migration.stale,
+            tenant_app_bytes: Vec::new(),
+            tenant_dram_share: Vec::new(),
         });
+    }
+
+    /// Attach the per-tenant series to the most recently recorded epoch
+    /// (multi-tenant coordinator only; legacy runs never call this, so
+    /// their records keep empty — and allocation-free — tenant series).
+    pub fn record_tenant_series(&mut self, app_bytes: Vec<f64>, dram_share: Vec<f64>) {
+        if let Some(last) = self.epochs.last_mut() {
+            last.tenant_app_bytes = app_bytes;
+            last.tenant_dram_share = dram_share;
+        }
     }
 
     fn steady(&self) -> &[EpochRecord] {

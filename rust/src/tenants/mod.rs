@@ -1,0 +1,1241 @@
+//! Multi-tenant co-run subsystem: system-wide placement across
+//! concurrent workloads.
+//!
+//! The paper positions HyPlacer as a *system-wide* Linux tool — its
+//! placement decisions arbitrate DRAM across every process on the
+//! socket — but `coordinator::Simulation` binds exactly one workload to
+//! one policy. This module opens the contention dimension:
+//!
+//! * [`MixSpec`] describes N tenants (`-w 'is.M+pr.M'`): each a
+//!   `(workload, arrival_epoch, share_weight)` [`TenantSpec`], parsed
+//!   from `WORKLOAD[@ARRIVAL][*WEIGHT]` components joined by `+`
+//!   (`.` doubles for `-` inside a component so mixes stay one
+//!   shell-friendly token),
+//! * [`TenantSet`] maps the tenants into one shared [`PageTable`]
+//!   address space via per-tenant base offsets — the mapping is
+//!   bijective (every page belongs to exactly one tenant, every tenant
+//!   page resolves back; a property test pins this),
+//! * [`MultiSimulation`] drives the epoch loop across all tenants. Each
+//!   tenant's MMU bit-setting and region activity stay independent
+//!   (per-tenant RNG streams; tenant 0 keeps the legacy stream), but
+//!   the policy decision tick, the single [`MigrationEngine`] queue,
+//!   DRAM capacity and [`PerfModel::service`] bandwidth are **global**
+//!   — tenants contend exactly where real DCPMM systems contend.
+//!
+//! Policies run unmodified: the decision tick is system-wide over the
+//! union footprint (a tenant-aware [`PolicyCtx::tenants`] layout is
+//! available but ignored by all paper policies), per-tenant demand is
+//! routed and serviced jointly, and per-tenant slowdown/fairness stats
+//! come out the other side ([`TenantSummary`], [`MixOutcome`]).
+//!
+//! **Single-tenant equivalence.** A 1-tenant `MultiSimulation` (weight
+//! 1.0, arrival 0) reproduces `coordinator::Simulation` bit for bit:
+//! same RNG stream, same float operations in the same order, same
+//! policy/engine calls. `tests/tenants.rs` pins this in lockstep for
+//! every fig5 policy, which is what keeps all existing checkpoints and
+//! BENCH baselines valid.
+//!
+//! [`PageTable`]: crate::vm::PageTable
+//! [`MigrationEngine`]: crate::vm::MigrationEngine
+//! [`PerfModel::service`]: crate::mem::PerfModel::service
+//! [`PolicyCtx::tenants`]: crate::policies::PolicyCtx
+
+use crate::config::{MachineConfig, SimConfig, Tier};
+use crate::coordinator::SimResult;
+use crate::mem::energy::EnergyAccount;
+use crate::mem::{EpochDemand, PerfModel, Pcmon, TierDemand};
+use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx, TenantRange};
+use crate::sim::{RunStats, SimClock};
+use crate::util::rng::bernoulli_hits;
+use crate::util::Rng64;
+use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery};
+use crate::workloads::{self, Region, Workload};
+
+/// One tenant of a co-run mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Workload registry name, e.g. `"is-M"`.
+    pub workload: String,
+    /// Global epoch at which the tenant arrives (is mapped and starts
+    /// offering work). 0 = present from the start.
+    pub arrival_epoch: u32,
+    /// Resource share weight: scales the tenant's offered bytes per
+    /// epoch and its contribution to the aggregate weighted speedup.
+    pub share_weight: f64,
+}
+
+impl TenantSpec {
+    pub fn new(workload: &str) -> Self {
+        TenantSpec {
+            workload: workload.to_string(),
+            arrival_epoch: 0,
+            share_weight: 1.0,
+        }
+    }
+
+    /// Parse one mix component: `WORKLOAD[@ARRIVAL][*WEIGHT]`, with `.`
+    /// accepted for `-` inside WORKLOAD (`is.M` = `is-M`).
+    pub fn parse(part: &str) -> Result<TenantSpec, String> {
+        let mut rest = part.trim();
+        let mut weight = 1.0f64;
+        let mut arrival = 0u32;
+        if let Some((head, w)) = rest.rsplit_once('*') {
+            weight = w
+                .trim()
+                .parse()
+                .map_err(|e| format!("tenant {part:?}: weight: {e}"))?;
+            if !(weight > 0.0 && weight.is_finite()) {
+                return Err(format!("tenant {part:?}: weight must be finite and > 0"));
+            }
+            rest = head;
+        }
+        if let Some((head, a)) = rest.rsplit_once('@') {
+            arrival = a
+                .trim()
+                .parse()
+                .map_err(|e| format!("tenant {part:?}: arrival epoch: {e}"))?;
+            rest = head;
+        }
+        let name = rest.trim().replace('.', "-");
+        if name.is_empty() {
+            return Err(format!("tenant {part:?}: empty workload name"));
+        }
+        Ok(TenantSpec {
+            workload: name,
+            arrival_epoch: arrival,
+            share_weight: weight,
+        })
+    }
+}
+
+/// A parsed co-run mix: the tenant axis value of a sweep cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixSpec {
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl MixSpec {
+    /// Is this workload-axis name a mix? Mixes plumb through
+    /// `SweepSpec`/cell keys/`--resume` as their axis string, so the
+    /// `+` separator is the single dispatch point.
+    pub fn is_mix(name: &str) -> bool {
+        name.contains('+')
+    }
+
+    /// Parse a mix axis string, e.g. `is.M+pr.M@8*0.5`.
+    pub fn parse(spec: &str) -> Result<MixSpec, String> {
+        let tenants = spec
+            .split('+')
+            .map(TenantSpec::parse)
+            .collect::<Result<Vec<_>, _>>()?;
+        if tenants.is_empty() {
+            return Err(format!("mix {spec:?}: no tenants"));
+        }
+        Ok(MixSpec { tenants })
+    }
+
+    /// A 1-tenant mix (the solo-reference and legacy-equivalence form).
+    pub fn single(workload: &str) -> MixSpec {
+        MixSpec { tenants: vec![TenantSpec::new(workload)] }
+    }
+
+    /// Resolve every tenant workload and check the combined footprint
+    /// fits the machine — the graceful form of `Simulation::new`'s
+    /// capacity panic, callable from `SweepSpec::validate`.
+    pub fn validate_on(&self, cfg: &MachineConfig, epoch_secs: f64) -> Result<(), String> {
+        let footprints = self.footprints(cfg, epoch_secs)?;
+        let set = TenantSet::from_footprints(self.tenants.clone(), &footprints)?;
+        let capacity = cfg.dram_pages() + cfg.pm_pages();
+        if set.total_pages() as u64 > capacity {
+            return Err(format!(
+                "mix footprint {} pages exceeds machine capacity {} pages",
+                set.total_pages(),
+                capacity
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-tenant footprints in pages (resolving each workload).
+    fn footprints(&self, cfg: &MachineConfig, epoch_secs: f64) -> Result<Vec<u32>, String> {
+        self.tenants
+            .iter()
+            .map(|t| {
+                workloads::by_name(&t.workload, cfg.page_bytes, epoch_secs)
+                    .map(|w| w.footprint_pages())
+                    .ok_or_else(|| format!("unknown workload {:?} in mix", t.workload))
+            })
+            .collect()
+    }
+}
+
+/// The tenant → address-space mapping: N contiguous slices packed from
+/// page 0 in tenant order. Owns the `(workload, arrival_epoch,
+/// share_weight)` specs plus each tenant's `(base, pages)` range.
+#[derive(Clone, Debug)]
+pub struct TenantSet {
+    specs: Vec<TenantSpec>,
+    /// (base, pages) per tenant, ascending and contiguous from 0.
+    ranges: Vec<(PageId, u32)>,
+}
+
+impl TenantSet {
+    /// Lay tenants out at per-tenant base offsets. Rejects empty sets,
+    /// zero footprints and u32 overflow of the combined address space.
+    pub fn from_footprints(specs: Vec<TenantSpec>, footprints: &[u32]) -> Result<Self, String> {
+        if specs.is_empty() || specs.len() != footprints.len() {
+            return Err("tenant set: specs and footprints must be non-empty and equal-length"
+                .to_string());
+        }
+        let mut ranges = Vec::with_capacity(footprints.len());
+        let mut cursor: u32 = 0;
+        for (i, &fp) in footprints.iter().enumerate() {
+            if fp == 0 {
+                return Err(format!("tenant {i}: zero footprint"));
+            }
+            ranges.push((cursor, fp));
+            cursor = cursor
+                .checked_add(fp)
+                .ok_or_else(|| format!("tenant {i}: combined footprint overflows u32"))?;
+        }
+        Ok(TenantSet { specs, ranges })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+    pub fn spec(&self, idx: usize) -> &TenantSpec {
+        &self.specs[idx]
+    }
+    /// First page of tenant `idx`'s slice.
+    pub fn base(&self, idx: usize) -> PageId {
+        self.ranges[idx].0
+    }
+    /// Pages owned by tenant `idx`.
+    pub fn pages(&self, idx: usize) -> u32 {
+        self.ranges[idx].1
+    }
+    /// Total mapped address space (sum of footprints).
+    pub fn total_pages(&self) -> u32 {
+        match self.ranges.last() {
+            Some(&(base, pages)) => base + pages,
+            None => 0,
+        }
+    }
+
+    /// Which tenant owns `page`? `None` past the end of the address
+    /// space. Together with [`TenantSet::to_global`] this is the
+    /// bijection the property test pins: every page belongs to exactly
+    /// one tenant and every tenant-local page resolves back.
+    pub fn tenant_of(&self, page: PageId) -> Option<usize> {
+        let idx = match self.ranges.binary_search_by(|&(base, _)| base.cmp(&page)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let (base, pages) = self.ranges[idx];
+        if page >= base && page < base + pages {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Tenant-local page → global page. `None` if out of the tenant's
+    /// footprint.
+    pub fn to_global(&self, idx: usize, local: PageId) -> Option<PageId> {
+        let (base, pages) = *self.ranges.get(idx)?;
+        if local < pages {
+            Some(base + local)
+        } else {
+            None
+        }
+    }
+
+    /// Global page → (tenant, tenant-local page).
+    pub fn to_local(&self, page: PageId) -> Option<(usize, PageId)> {
+        let idx = self.tenant_of(page)?;
+        Some((idx, page - self.ranges[idx].0))
+    }
+
+    /// The layout as policy-facing [`TenantRange`]s (all tenants, in
+    /// tenant order).
+    pub fn tenant_ranges(&self) -> Vec<TenantRange> {
+        self.ranges
+            .iter()
+            .zip(self.specs.iter())
+            .map(|(&(base, pages), s)| TenantRange {
+                base,
+                pages,
+                share_weight: s.share_weight,
+            })
+            .collect()
+    }
+}
+
+/// Per-tenant result summary of a co-run (run-local — not part of the
+/// persisted sweep schema, mirroring the epoch trace).
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    /// Workload display name, e.g. "IS-M".
+    pub name: String,
+    pub arrival_epoch: u32,
+    pub share_weight: f64,
+    /// App bytes this tenant was served over its active epochs.
+    pub app_bytes: f64,
+    /// Wall-clock of the tenant's active epochs (arrival → end).
+    pub active_wall_secs: f64,
+    /// App throughput over the active window, B/s.
+    pub throughput: f64,
+    /// Post-warmup throughput (epochs >= arrival + warmup), B/s — the
+    /// co-run side of the slowdown-vs-solo ratio. When the tenant's
+    /// steady window is empty (it arrived too late for any post-warmup
+    /// epoch), this falls back to the whole-active-window throughput so
+    /// fairness ratios stay finite instead of degenerating to 0/∞.
+    pub steady_throughput: f64,
+    /// Mean share of DRAM *capacity* this tenant held over its active
+    /// epochs — who actually owns the fast tier under contention.
+    pub mean_dram_share: f64,
+}
+
+/// Per-tenant runtime state inside [`MultiSimulation`].
+struct TenantRun {
+    workload: Box<dyn Workload>,
+    rng: Rng64,
+    arrived: bool,
+    /// This tenant's cached region boundaries in *global* page coords
+    /// and the incrementally maintained per-region DRAM counts (the
+    /// per-tenant analogue of `Simulation::region_bounds/region_dram`).
+    region_bounds: Vec<(u32, u32)>,
+    region_dram: Vec<u64>,
+    /// This epoch's staged region activity.
+    regions: Vec<Region>,
+    /// Index of this tenant's first [`ActiveRegion`] in the epoch's
+    /// union scratch list.
+    scratch_start: usize,
+    /// Offered bytes this epoch (post share-weight scaling).
+    offered: f64,
+    /// Pages touched this epoch.
+    active_pages: u64,
+}
+
+/// RNG stream seed for tenant `idx`. Tenant 0 keeps the raw sim seed —
+/// that is the legacy `Simulation` stream, which the 1-tenant
+/// bit-identity guarantee depends on.
+fn tenant_seed(seed: u64, idx: usize) -> u64 {
+    seed.wrapping_add((idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A bound multi-tenant simulation: N workloads, one shared page table,
+/// one policy, one migration engine, one memory system.
+pub struct MultiSimulation {
+    cfg: MachineConfig,
+    sim: SimConfig,
+    model: PerfModel,
+    pt: PageTable,
+    policy: Box<dyn Policy>,
+    set: TenantSet,
+    runs: Vec<TenantRun>,
+    pcmon: Pcmon,
+    clock: SimClock,
+    stats: RunStats,
+    energy: EnergyAccount,
+    engine: MigrationEngine,
+    window_frac: f64,
+    /// Union scratch of every arrived tenant's [`ActiveRegion`]s this
+    /// epoch, in tenant order (what demand routing sees).
+    all_scratch: Vec<ActiveRegion>,
+    /// Arrived tenants' layout, for [`PolicyCtx::tenants`].
+    arrived_ranges: Vec<TenantRange>,
+}
+
+impl MultiSimulation {
+    pub fn new(
+        cfg: MachineConfig,
+        sim: SimConfig,
+        mix: &MixSpec,
+        policy: Box<dyn Policy>,
+        window_frac: f64,
+    ) -> Result<Self, String> {
+        if mix.tenants.is_empty() {
+            return Err("mix has no tenants".to_string());
+        }
+        for t in &mix.tenants {
+            if t.arrival_epoch >= sim.epochs {
+                return Err(format!(
+                    "tenant {:?} arrives at epoch {} but the run has only {} epochs",
+                    t.workload, t.arrival_epoch, sim.epochs
+                ));
+            }
+        }
+        mix.validate_on(&cfg, sim.epoch_secs)?;
+        let mut workloads_built = Vec::with_capacity(mix.tenants.len());
+        let mut footprints = Vec::with_capacity(mix.tenants.len());
+        for t in &mix.tenants {
+            let w = workloads::by_name(&t.workload, cfg.page_bytes, sim.epoch_secs)
+                .ok_or_else(|| format!("unknown workload {:?} in mix", t.workload))?;
+            footprints.push(w.footprint_pages());
+            workloads_built.push(w);
+        }
+        let set = TenantSet::from_footprints(mix.tenants.clone(), &footprints)?;
+        let pt = PageTable::new(
+            set.total_pages(),
+            cfg.page_bytes,
+            cfg.dram.capacity,
+            cfg.pm.capacity,
+        );
+        let model = PerfModel::new(&cfg);
+        let seed = sim.seed;
+        let warmup = sim.warmup_epochs;
+        let engine = MigrationEngine::new(sim.migrate_share);
+        let runs = workloads_built
+            .into_iter()
+            .enumerate()
+            .map(|(i, workload)| TenantRun {
+                workload,
+                rng: Rng64::new(tenant_seed(seed, i)),
+                arrived: false,
+                region_bounds: Vec::new(),
+                region_dram: Vec::new(),
+                regions: Vec::new(),
+                scratch_start: 0,
+                offered: 0.0,
+                active_pages: 0,
+            })
+            .collect();
+        let mut this = MultiSimulation {
+            cfg,
+            sim,
+            model,
+            pt,
+            policy,
+            set,
+            runs,
+            pcmon: Pcmon::new(),
+            clock: SimClock::new(),
+            stats: RunStats::new(warmup),
+            energy: EnergyAccount::default(),
+            engine,
+            window_frac: window_frac.clamp(0.0, 1.0),
+            all_scratch: Vec::new(),
+            arrived_ranges: Vec::new(),
+        };
+        // Map every epoch-0 tenant now, in tenant (= address) order —
+        // the exact first-touch sequence `Simulation::new` performs for
+        // its single workload.
+        for ti in 0..this.runs.len() {
+            if this.set.spec(ti).arrival_epoch == 0 {
+                this.map_tenant(ti);
+            }
+        }
+        Ok(this)
+    }
+
+    /// First-touch map tenant `ti`'s pages (in address order, like
+    /// NPB-style init loops) and prime its region counts.
+    fn map_tenant(&mut self, ti: usize) {
+        let base = self.set.base(ti);
+        let pages = self.set.pages(ti);
+        for local in 0..pages {
+            let page = base + local;
+            let want = self.policy.place_new(page, &self.pt);
+            if !self.pt.allocate(page, want) && !self.pt.allocate(page, want.other()) {
+                panic!(
+                    "tenant {ti} footprint {} pages exceeds remaining machine capacity \
+                     ({} DRAM + {} PM pages free)",
+                    pages,
+                    self.pt.free_pages(Tier::Dram),
+                    self.pt.free_pages(Tier::Pm)
+                );
+            }
+        }
+        let regions = self.runs[ti].workload.regions(0);
+        self.rebuild_region_counts(ti, &regions);
+        self.runs[ti].arrived = true;
+        self.arrived_ranges = self
+            .set
+            .tenant_ranges()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| self.runs[*i].arrived)
+            .map(|(_, r)| r)
+            .collect();
+    }
+
+    /// (Re)build tenant `ti`'s per-region DRAM counters in one pass over
+    /// the activity index (word popcounts, O(range/64)).
+    fn rebuild_region_counts(&mut self, ti: usize, regions: &[Region]) {
+        let base = self.set.base(ti);
+        let t = &mut self.runs[ti];
+        t.region_bounds = regions.iter().map(|r| (r.start + base, r.pages)).collect();
+        t.region_dram.clear();
+        let dram = PlaneQuery::tier(Tier::Dram);
+        for r in regions {
+            t.region_dram
+                .push(self.pt.count_matching_in(r.start + base, r.end() + base, dram));
+        }
+    }
+
+    /// (tenant, region) containing the global `page`, if mapped.
+    fn locate(&self, page: PageId) -> Option<(usize, usize)> {
+        let ti = self.set.tenant_of(page)?;
+        let t = &self.runs[ti];
+        if !t.arrived {
+            return None;
+        }
+        let ri = match t.region_bounds.binary_search_by(|&(start, _)| start.cmp(&page)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let (start, pages) = t.region_bounds[ri];
+        if page >= start && page < start + pages {
+            Some((ti, ri))
+        } else {
+            None
+        }
+    }
+
+    /// Refresh the incremental DRAM counters from the moves the engine
+    /// landed this epoch — the multi-tenant generalization of
+    /// `Simulation::apply_plan_to_counts` (same tier-confirmation
+    /// semantics), skipping tenants whose counts were just rebuilt from
+    /// the index (already post-migration accurate).
+    fn apply_plan_to_counts(&mut self, plan: &crate::vm::MigrationPlan, rebuilt: &[bool]) {
+        if plan.is_empty() {
+            return;
+        }
+        let delta = |page: u32, went_dram_if: Tier, d: i64, this: &mut Self| {
+            if this.pt.flags(page).tier() == went_dram_if {
+                if let Some((ti, ri)) = this.locate(page) {
+                    if rebuilt[ti] {
+                        return;
+                    }
+                    let c = &mut this.runs[ti].region_dram[ri];
+                    *c = (*c as i64 + d).max(0) as u64;
+                }
+            }
+        };
+        for &p in &plan.promote {
+            delta(p, Tier::Dram, 1, self); // was PM; now DRAM => moved
+        }
+        for &p in &plan.demote {
+            delta(p, Tier::Pm, -1, self); // was DRAM; now PM => moved
+        }
+        for &(pm_page, dram_page) in &plan.exchange {
+            // exchange is atomic: if the PM page is now in DRAM, both
+            // sides flipped
+            if self.pt.flags(pm_page).tier() == Tier::Dram {
+                if let Some((ti, ri)) = self.locate(pm_page) {
+                    if !rebuilt[ti] {
+                        self.runs[ti].region_dram[ri] += 1;
+                    }
+                }
+                if let Some((ti, ri)) = self.locate(dram_page) {
+                    if !rebuilt[ti] {
+                        let c = &mut self.runs[ti].region_dram[ri];
+                        *c = c.saturating_sub(1);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn page_table(&self) -> &PageTable {
+        &self.pt
+    }
+    pub fn tenant_set(&self) -> &TenantSet {
+        &self.set
+    }
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+    /// RNG draws consumed so far across every tenant stream (the MMU
+    /// hot-path instrument; the single-tenant value equals
+    /// `Simulation::rng_draws`).
+    pub fn rng_draws(&self) -> u64 {
+        self.runs.iter().map(|t| t.rng.draw_count()).sum()
+    }
+    /// Kernel-side PTE-inspection counter (`Simulation::pte_visits`).
+    pub fn pte_visits(&self) -> u64 {
+        self.pt.pte_visits()
+    }
+
+    /// Run one epoch; returns its wall-clock seconds. The phase order
+    /// and float-op order mirror `Simulation::step` exactly — that is
+    /// the 1-tenant bit-identity contract.
+    pub fn step(&mut self) -> f64 {
+        let epoch = self.clock.epoch();
+        // --- 0. arrivals: map tenants whose arrival epoch is here.
+        for ti in 0..self.runs.len() {
+            if !self.runs[ti].arrived && epoch >= self.set.spec(ti).arrival_epoch {
+                self.map_tenant(ti);
+            }
+        }
+        let page_bytes = self.cfg.page_bytes as f64;
+
+        // --- 1. MMU per tenant: set R/D (+ delay-window) bits on
+        // touched pages, each tenant from its own RNG stream.
+        self.all_scratch.clear();
+        let mut active_total = 0u64;
+        let pt = &mut self.pt;
+        let scratch = &mut self.all_scratch;
+        let window_frac = self.window_frac;
+        for ti in 0..self.runs.len() {
+            let spec_arrival = self.set.spec(ti).arrival_epoch;
+            let weight = self.set.spec(ti).share_weight;
+            let base = self.set.base(ti) as u64;
+            let t = &mut self.runs[ti];
+            t.scratch_start = scratch.len();
+            t.active_pages = 0;
+            if !t.arrived {
+                t.regions.clear();
+                t.offered = 0.0;
+                continue;
+            }
+            t.regions = t.workload.regions(epoch - spec_arrival);
+            let total_weight: f64 = t.regions.iter().map(|r| r.weight).sum();
+            let offered = t.workload.offered_bytes() * weight;
+            t.offered = offered;
+            let mut tenant_active = 0u64;
+            for r in &t.regions {
+                let share = if total_weight > 0.0 { r.weight / total_weight } else { 0.0 };
+                let bytes = offered * share;
+                scratch.push(ActiveRegion {
+                    pages: r.pages as u64,
+                    read_bytes: bytes * (1.0 - r.write_frac),
+                    write_bytes: bytes * r.write_frac,
+                    random_frac: r.random_frac,
+                });
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let coverage = bytes / (r.pages as f64 * page_bytes);
+                let p_touch = 1.0 - (-coverage).exp();
+                let p_dirty_given = 1.0 - (-coverage * r.write_frac).exp();
+                let events = coverage * (1.0 + r.random_frac * 60.0);
+                let wcov = events * window_frac;
+                let p_window = 1.0 - (-wcov).exp();
+                let p_wdirty = 1.0 - (-wcov * r.write_frac).exp();
+                let p_write_given_touch = p_dirty_given / p_touch.max(1e-12);
+                let p_wwrite_given = p_wdirty / p_window.max(1e-12);
+                let rng = &mut t.rng;
+                bernoulli_hits(
+                    rng,
+                    base + r.start as u64,
+                    base + r.end() as u64,
+                    p_touch,
+                    |rng, page| {
+                        tenant_active += 1;
+                        let write = rng.chance(p_write_given_touch);
+                        pt.touch(page as u32, write);
+                    },
+                );
+                bernoulli_hits(
+                    rng,
+                    base + r.start as u64,
+                    base + r.end() as u64,
+                    p_window,
+                    |rng, page| {
+                        let wwrite = rng.chance(p_wwrite_given);
+                        pt.touch_window(page as u32, wwrite);
+                    },
+                );
+            }
+            t.active_pages = tenant_active;
+            active_total += tenant_active;
+        }
+
+        // --- 2. One system-wide policy decision tick over the union
+        // footprint (the engine's queue summary is global).
+        let plan = {
+            let mut ctx = PolicyCtx {
+                pt: &mut self.pt,
+                pcmon: self.pcmon.snapshot(),
+                cfg: &self.cfg,
+                epoch,
+                epoch_secs: self.sim.epoch_secs,
+                backpressure: self.engine.backpressure(),
+                tenants: &self.arrived_ranges,
+            };
+            self.policy.epoch_tick(&mut ctx)
+        };
+
+        // --- 3. Submit to the single global engine; execute up to the
+        // epoch's copy-bandwidth budget (DRAM capacity and migration
+        // bandwidth are shared — this is where tenants contend).
+        self.engine.submit(&mut self.pt, &plan, epoch);
+        let (mig, executed) =
+            self.engine.run_epoch(&mut self.pt, &self.cfg, epoch, self.sim.epoch_secs);
+
+        // --- 4. Per-tenant region counts from the post-migration
+        // distribution: rebuild tenants whose boundaries changed,
+        // apply exact per-page deltas everywhere else.
+        let mut rebuilt = vec![false; self.runs.len()];
+        for ti in 0..self.runs.len() {
+            if !self.runs[ti].arrived {
+                continue;
+            }
+            let base = self.set.base(ti);
+            let t = &self.runs[ti];
+            let bounds_match = t.regions.len() == t.region_bounds.len()
+                && t.regions
+                    .iter()
+                    .zip(t.region_bounds.iter())
+                    .all(|(r, &(start, pages))| r.start + base == start && r.pages == pages);
+            if !bounds_match {
+                let regions = std::mem::take(&mut self.runs[ti].regions);
+                self.rebuild_region_counts(ti, &regions);
+                self.runs[ti].regions = regions;
+                rebuilt[ti] = true;
+            }
+        }
+        self.apply_plan_to_counts(&executed, &rebuilt);
+
+        // --- 5. Joint app demand from every tenant's post-migration
+        // distribution, serviced by the one memory system.
+        let mut demand = EpochDemand::default();
+        for t in self.runs.iter() {
+            if !t.arrived {
+                continue;
+            }
+            demand.app_bytes += t.offered;
+            for (i, r) in t.regions.iter().enumerate() {
+                let ar = &self.all_scratch[t.scratch_start + i];
+                if ar.total() <= 0.0 {
+                    continue;
+                }
+                let dram_pages = t.region_dram[i];
+                let dram_frac = dram_pages as f64 / r.pages as f64;
+                let mk = |bytes_r: f64, bytes_w: f64| TierDemand {
+                    read_bytes: bytes_r,
+                    write_bytes: bytes_w,
+                    random_frac: ar.random_frac,
+                };
+                demand
+                    .dram
+                    .add(&mk(ar.read_bytes * dram_frac, ar.write_bytes * dram_frac));
+                demand
+                    .pm
+                    .add(&mk(ar.read_bytes * (1.0 - dram_frac), ar.write_bytes * (1.0 - dram_frac)));
+            }
+        }
+        // Demand routing (Memory Mode cache) over the union activity.
+        let route_ctx = RouteCtx {
+            cfg: &self.cfg,
+            active_pages: active_total,
+            regions: &self.all_scratch,
+            epoch,
+        };
+        demand = self.policy.route_demand(demand, &route_ctx);
+        // Migration copy traffic + kernel overhead.
+        demand.dram.add(&mig.dram_traffic);
+        demand.pm.add(&mig.pm_traffic);
+        demand.overhead_secs += mig.overhead_secs;
+
+        // --- 6. Serve + record (global), then the per-tenant series.
+        let outcome = self.model.service(&demand);
+        self.pcmon.record_epoch(&demand, &outcome);
+        self.energy.record(&self.cfg, &demand, &outcome);
+        self.stats
+            .record(epoch, &demand, &outcome, &mig, self.pt.dram_occupancy());
+        let dram_capacity = self.pt.capacity_pages(Tier::Dram).max(1) as f64;
+        let dram = PlaneQuery::tier(Tier::Dram);
+        let mut tenant_app = Vec::with_capacity(self.runs.len());
+        let mut tenant_share = Vec::with_capacity(self.runs.len());
+        for (ti, t) in self.runs.iter().enumerate() {
+            if !t.arrived {
+                tenant_app.push(0.0);
+                tenant_share.push(0.0);
+                continue;
+            }
+            let base = self.set.base(ti);
+            let held = self.pt.count_matching_in(base, base + self.set.pages(ti), dram);
+            tenant_app.push(t.offered);
+            tenant_share.push(held as f64 / dram_capacity);
+        }
+        self.stats.record_tenant_series(tenant_app, tenant_share);
+        self.clock.advance(outcome.wall_secs);
+        outcome.wall_secs
+    }
+
+    /// Run the configured number of epochs and summarize.
+    pub fn run(mut self) -> SimResult {
+        for _ in 0..self.sim.epochs {
+            self.step();
+        }
+        self.finish()
+    }
+
+    /// Summarize without consuming a fixed epoch count.
+    pub fn finish(mut self) -> SimResult {
+        let warmup = self.stats.warmup_epochs;
+        let mut tenants = Vec::with_capacity(self.runs.len());
+        for (ti, t) in self.runs.iter().enumerate() {
+            let spec = self.set.spec(ti);
+            let arrival = spec.arrival_epoch;
+            let mut app = 0.0;
+            let mut wall = 0.0;
+            let mut steady_app = 0.0;
+            let mut steady_wall = 0.0;
+            let mut share_sum = 0.0;
+            let mut share_n = 0u64;
+            for e in &self.stats.epochs {
+                if e.epoch < arrival {
+                    continue;
+                }
+                let a = e.tenant_app_bytes.get(ti).copied().unwrap_or(0.0);
+                app += a;
+                wall += e.wall_secs;
+                share_sum += e.tenant_dram_share.get(ti).copied().unwrap_or(0.0);
+                share_n += 1;
+                if e.epoch >= arrival + warmup {
+                    steady_app += a;
+                    steady_wall += e.wall_secs;
+                }
+            }
+            let throughput = if wall > 0.0 { app / wall } else { 0.0 };
+            tenants.push(TenantSummary {
+                name: t.workload.name(),
+                arrival_epoch: arrival,
+                share_weight: spec.share_weight,
+                app_bytes: app,
+                active_wall_secs: wall,
+                throughput,
+                // empty steady window (late arrival) → whole-window
+                // throughput, so fairness ratios stay meaningful
+                steady_throughput: if steady_wall > 0.0 {
+                    steady_app / steady_wall
+                } else {
+                    throughput
+                },
+                mean_dram_share: if share_n > 0 { share_sum / share_n as f64 } else { 0.0 },
+            });
+        }
+        // The mix display name: tenant workload names joined by '+',
+        // annotated with non-default arrivals/weights — deterministic,
+        // so sweep baselines group co-run cells correctly.
+        let name = tenants
+            .iter()
+            .map(|t| {
+                let mut n = t.name.clone();
+                if t.arrival_epoch > 0 {
+                    n.push_str(&format!("@{}", t.arrival_epoch));
+                }
+                if t.share_weight != 1.0 {
+                    n.push_str(&format!("*{}", t.share_weight));
+                }
+                n
+            })
+            .collect::<Vec<_>>()
+            .join("+");
+        self.stats.energy = self.energy;
+        SimResult {
+            workload: name,
+            policy: self.policy.name().to_string(),
+            total_wall_secs: self.stats.total_wall_secs(),
+            total_app_bytes: self.stats.total_app_bytes(),
+            throughput: self.stats.throughput(),
+            steady_throughput: self.stats.steady_throughput(),
+            energy_j_per_byte: self.energy.j_per_byte(),
+            total_energy_j: self.energy.total_j(),
+            migrated_pages: self.stats.total_migrated_pages(),
+            dram_traffic_share: self.stats.tier_traffic_share(Tier::Dram),
+            migrate_queue_peak: self.stats.migrate_queue_depth_peak(),
+            migrate_deferred_ratio: self.stats.migrate_deferred_ratio(),
+            migrate_stale_ratio: self.stats.migrate_stale_drop_ratio(),
+            tenants,
+            stats: self.stats,
+        }
+    }
+}
+
+/// Build + run a mix on a machine (the co-run analogue of
+/// `coordinator::run_pair`).
+pub fn run_mix(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    mix: &MixSpec,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+) -> Result<SimResult, String> {
+    Ok(MultiSimulation::new(cfg.clone(), sim.clone(), mix, policy, window_frac)?.run())
+}
+
+/// Run a workload-axis name — a plain workload or a `+`-joined mix —
+/// through the right coordinator. The single dispatch point the CLI and
+/// the sweep engine share.
+pub fn run_named(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    name: &str,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+) -> Result<SimResult, String> {
+    if MixSpec::is_mix(name) {
+        let mix = MixSpec::parse(name)?;
+        run_mix(cfg, sim, &mix, policy, window_frac)
+    } else {
+        let w = workloads::by_name(name, cfg.page_bytes, sim.epoch_secs)
+            .ok_or_else(|| format!("unknown workload {name:?}"))?;
+        Ok(crate::coordinator::run_pair(cfg, sim, w, policy, window_frac))
+    }
+}
+
+/// A co-run plus its per-tenant solo references: the fairness view.
+pub struct MixOutcome {
+    /// The co-run itself (per-tenant summaries in `corun.tenants`).
+    pub corun: SimResult,
+    /// Solo reference runs, tenant order: the same workload at the same
+    /// share weight alone on the machine under the same policy, for the
+    /// tenant's active epoch count.
+    pub solos: Vec<SimResult>,
+    /// Per-tenant slowdown vs solo (steady-state; > 1 = contention
+    /// cost).
+    pub slowdowns: Vec<f64>,
+    /// max/min slowdown across tenants (1.0 = perfectly fair).
+    pub unfairness: f64,
+    /// Σ wᵢ·(co-run throughputᵢ / solo throughputᵢ) / Σ wᵢ — the
+    /// share-weighted aggregate speedup (≤ 1.0; higher = the policy
+    /// preserves more of each tenant's solo performance under co-run).
+    pub weighted_speedup: f64,
+}
+
+/// Run a mix and its per-tenant solo references under one policy and
+/// derive the fairness metrics. `build_policy` is invoked once for the
+/// co-run and once per solo (fresh policy state each run, like sweep
+/// cells).
+pub fn run_mix_with_solos(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    mix: &MixSpec,
+    window_frac: f64,
+    mut build_policy: impl FnMut() -> Box<dyn Policy>,
+) -> Result<MixOutcome, String> {
+    let corun = run_mix(cfg, sim, mix, build_policy(), window_frac)?;
+    let mut solos = Vec::with_capacity(mix.tenants.len());
+    for t in &mix.tenants {
+        let mut solo_spec = t.clone();
+        solo_spec.arrival_epoch = 0;
+        let solo_mix = MixSpec { tenants: vec![solo_spec] };
+        let mut solo_sim = sim.clone();
+        solo_sim.epochs = sim.epochs - t.arrival_epoch;
+        solos.push(run_mix(cfg, &solo_sim, &solo_mix, build_policy(), window_frac)?);
+    }
+    let mut slowdowns = Vec::with_capacity(solos.len());
+    let mut weighted = 0.0;
+    let mut weight_sum = 0.0;
+    for (t, solo) in corun.tenants.iter().zip(solos.iter()) {
+        // short solo runs (late arrivals shrink the solo epoch count)
+        // can have an empty steady window; fall back to whole-run
+        // throughput like the tenant side does, so the ratio stays a
+        // number instead of 0/∞
+        let solo_thr = if solo.steady_throughput > 0.0 {
+            solo.steady_throughput
+        } else {
+            solo.throughput
+        };
+        let slow = if t.steady_throughput > 0.0 {
+            solo_thr / t.steady_throughput
+        } else {
+            f64::INFINITY
+        };
+        slowdowns.push(slow);
+        let speedup = if solo_thr > 0.0 { t.steady_throughput / solo_thr } else { 0.0 };
+        weighted += t.share_weight * speedup;
+        weight_sum += t.share_weight;
+    }
+    let finite: Vec<f64> = slowdowns.iter().copied().filter(|s| s.is_finite()).collect();
+    let unfairness = match (
+        finite.iter().copied().fold(f64::NAN, f64::max),
+        finite.iter().copied().fold(f64::NAN, f64::min),
+    ) {
+        (max, min) if min > 0.0 => max / min,
+        _ => 0.0,
+    };
+    Ok(MixOutcome {
+        corun,
+        solos,
+        slowdowns,
+        unfairness,
+        weighted_speedup: if weight_sum > 0.0 { weighted / weight_sum } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HyPlacerConfig;
+    use crate::policies;
+
+    #[test]
+    fn tenant_spec_parsing() {
+        let t = TenantSpec::parse("is.M").unwrap();
+        assert_eq!(t.workload, "is-M");
+        assert_eq!(t.arrival_epoch, 0);
+        assert_eq!(t.share_weight, 1.0);
+
+        let t = TenantSpec::parse("cg-L@8*0.5").unwrap();
+        assert_eq!(t.workload, "cg-L");
+        assert_eq!(t.arrival_epoch, 8);
+        assert!((t.share_weight - 0.5).abs() < 1e-12);
+
+        assert!(TenantSpec::parse("").is_err());
+        assert!(TenantSpec::parse("@5").is_err());
+        assert!(TenantSpec::parse("cg.M*0").is_err());
+        assert!(TenantSpec::parse("cg.M*-1").is_err());
+        assert!(TenantSpec::parse("cg.M@x").is_err());
+    }
+
+    #[test]
+    fn mix_spec_parse_and_detect() {
+        assert!(MixSpec::is_mix("is.M+pr.M"));
+        assert!(!MixSpec::is_mix("cg-L"));
+        let m = MixSpec::parse("is.M+pr.M@4*2").unwrap();
+        assert_eq!(m.tenants.len(), 2);
+        assert_eq!(m.tenants[0].workload, "is-M");
+        assert_eq!(m.tenants[1].workload, "pr-M");
+        assert_eq!(m.tenants[1].arrival_epoch, 4);
+        assert!((m.tenants[1].share_weight - 2.0).abs() < 1e-12);
+        assert!(MixSpec::parse("is.M+nope.Q").is_err() || {
+            // parse succeeds (name-shaped) — resolution fails later
+            let m = MixSpec::parse("is.M+nope.Q").unwrap();
+            m.validate_on(&MachineConfig::paper_machine(), 1.0).is_err()
+        });
+    }
+
+    #[test]
+    fn mix_capacity_validation() {
+        let cfg = MachineConfig::paper_machine();
+        // two M tenants fit DRAM+PM comfortably
+        MixSpec::parse("is.M+pr.M").unwrap().validate_on(&cfg, 1.0).unwrap();
+        // three L tenants blow past 288 GiB
+        let err = MixSpec::parse("cg.L+mg.L+is.L")
+            .unwrap()
+            .validate_on(&cfg, 1.0)
+            .unwrap_err();
+        assert!(err.contains("capacity"), "{err}");
+    }
+
+    #[test]
+    fn tenant_set_layout_is_packed_and_resolvable() {
+        let specs = vec![TenantSpec::new("a"), TenantSpec::new("b"), TenantSpec::new("c")];
+        let set = TenantSet::from_footprints(specs, &[10, 5, 7]).unwrap();
+        assert_eq!(set.total_pages(), 22);
+        assert_eq!(set.base(0), 0);
+        assert_eq!(set.base(1), 10);
+        assert_eq!(set.base(2), 15);
+        assert_eq!(set.tenant_of(0), Some(0));
+        assert_eq!(set.tenant_of(9), Some(0));
+        assert_eq!(set.tenant_of(10), Some(1));
+        assert_eq!(set.tenant_of(14), Some(1));
+        assert_eq!(set.tenant_of(15), Some(2));
+        assert_eq!(set.tenant_of(21), Some(2));
+        assert_eq!(set.tenant_of(22), None);
+        assert_eq!(set.to_global(1, 4), Some(14));
+        assert_eq!(set.to_global(1, 5), None);
+        assert_eq!(set.to_local(14), Some((1, 4)));
+        let ranges = set.tenant_ranges();
+        assert_eq!(ranges.len(), 3);
+        assert!(ranges[2].contains(20) && !ranges[2].contains(22));
+    }
+
+    #[test]
+    fn tenant_set_rejects_degenerate_layouts() {
+        assert!(TenantSet::from_footprints(vec![], &[]).is_err());
+        assert!(TenantSet::from_footprints(vec![TenantSpec::new("a")], &[0]).is_err());
+        assert!(
+            TenantSet::from_footprints(
+                vec![TenantSpec::new("a"), TenantSpec::new("b")],
+                &[u32::MAX, 2]
+            )
+            .is_err()
+        );
+    }
+
+    #[test]
+    fn two_tenant_corun_contends_and_reports_per_tenant_series() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 14;
+        sim.warmup_epochs = 3;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S+mg.S").unwrap();
+        let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+        let r = run_mix(&cfg, &sim, &mix, p, 0.05).unwrap();
+        assert_eq!(r.workload, "CG-S+MG-S");
+        assert_eq!(r.tenants.len(), 2);
+        // both tenants served their offered work the whole run
+        for t in &r.tenants {
+            assert!(t.app_bytes > 0.0);
+            assert!(t.throughput > 0.0);
+            assert!(t.steady_throughput > 0.0);
+            assert!((0.0..=1.0).contains(&t.mean_dram_share), "{}", t.mean_dram_share);
+        }
+        // the per-epoch series carry one entry per tenant
+        for e in &r.stats.epochs {
+            assert_eq!(e.tenant_app_bytes.len(), 2);
+            assert_eq!(e.tenant_dram_share.len(), 2);
+            assert!(e.tenant_app_bytes.iter().all(|&b| b > 0.0));
+        }
+        // combined app bytes = sum of tenant app bytes
+        let tenant_sum: f64 = r.tenants.iter().map(|t| t.app_bytes).sum();
+        assert!((tenant_sum - r.total_app_bytes).abs() < 1e-3 * r.total_app_bytes.max(1.0));
+    }
+
+    #[test]
+    fn staggered_arrival_maps_late_and_offers_nothing_before() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 12;
+        sim.warmup_epochs = 2;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S+mg.S@6").unwrap();
+        let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+        let r = run_mix(&cfg, &sim, &mix, p, 0.05).unwrap();
+        assert_eq!(r.workload, "CG-S+MG-S@6");
+        for e in &r.stats.epochs {
+            if e.epoch < 6 {
+                assert_eq!(e.tenant_app_bytes[1], 0.0, "epoch {}", e.epoch);
+                assert_eq!(e.tenant_dram_share[1], 0.0, "epoch {}", e.epoch);
+            } else {
+                assert!(e.tenant_app_bytes[1] > 0.0, "epoch {}", e.epoch);
+            }
+        }
+        // the late tenant's summary covers only its active window
+        let late = &r.tenants[1];
+        assert_eq!(late.arrival_epoch, 6);
+        let active_wall: f64 = r
+            .stats
+            .epochs
+            .iter()
+            .filter(|e| e.epoch >= 6)
+            .map(|e| e.wall_secs)
+            .sum();
+        assert!((late.active_wall_secs - active_wall).abs() < 1e-9);
+
+        // a warmup longer than the late tenant's window empties its
+        // steady set: the summary must fall back to whole-window
+        // throughput, never 0/∞ fairness inputs
+        let mut sim = SimConfig::default();
+        sim.epochs = 12;
+        sim.warmup_epochs = 10;
+        let mix = MixSpec::parse("cg.S+mg.S@6").unwrap();
+        let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+        let r = run_mix(&cfg, &sim, &mix, p, 0.05).unwrap();
+        let late = &r.tenants[1];
+        assert!(
+            late.steady_throughput > 0.0 && late.steady_throughput.is_finite(),
+            "empty steady window must fall back: {}",
+            late.steady_throughput
+        );
+        assert_eq!(late.steady_throughput, late.throughput);
+    }
+
+    #[test]
+    fn share_weight_scales_offered_demand() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 6;
+        sim.warmup_epochs = 1;
+        let hp = HyPlacerConfig::default();
+        let p = |name: &str| policies::by_name(name, &cfg, &hp).unwrap();
+        let full = run_mix(
+            &cfg,
+            &sim,
+            &MixSpec::parse("cg.S+mg.S").unwrap(),
+            p("adm-default"),
+            0.05,
+        )
+        .unwrap();
+        let half = run_mix(
+            &cfg,
+            &sim,
+            &MixSpec::parse("cg.S+mg.S*0.5").unwrap(),
+            p("adm-default"),
+            0.05,
+        )
+        .unwrap();
+        let full_t1: f64 = full.stats.epochs.iter().map(|e| e.tenant_app_bytes[1]).sum();
+        let half_t1: f64 = half.stats.epochs.iter().map(|e| e.tenant_app_bytes[1]).sum();
+        assert!((half_t1 / full_t1 - 0.5).abs() < 1e-9, "{half_t1} vs {full_t1}");
+        assert_eq!(half.workload, "CG-S+MG-S*0.5");
+    }
+
+    #[test]
+    fn run_named_dispatches_mixes_and_singles() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 5;
+        sim.warmup_epochs = 1;
+        let hp = HyPlacerConfig::default();
+        let single = run_named(
+            &cfg,
+            &sim,
+            "cg-S",
+            policies::by_name("adm-default", &cfg, &hp).unwrap(),
+            0.05,
+        )
+        .unwrap();
+        assert_eq!(single.workload, "CG-S");
+        assert!(single.tenants.is_empty(), "legacy runs carry no tenant summaries");
+        let mix = run_named(
+            &cfg,
+            &sim,
+            "cg.S+mg.S",
+            policies::by_name("adm-default", &cfg, &hp).unwrap(),
+            0.05,
+        )
+        .unwrap();
+        assert_eq!(mix.tenants.len(), 2);
+        assert!(run_named(
+            &cfg,
+            &sim,
+            "nope-Q",
+            policies::by_name("adm-default", &cfg, &hp).unwrap(),
+            0.05
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mix_with_solos_reports_fairness_metrics() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 12;
+        sim.warmup_epochs = 3;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S+mg.S").unwrap();
+        let out = run_mix_with_solos(&cfg, &sim, &mix, 0.05, || {
+            policies::by_name("adm-default", &cfg, &hp).unwrap()
+        })
+        .unwrap();
+        assert_eq!(out.solos.len(), 2);
+        assert_eq!(out.slowdowns.len(), 2);
+        // co-running costs something: every tenant at least as slow as
+        // solo (tiny tolerance for sampling noise)
+        for s in &out.slowdowns {
+            assert!(*s > 0.9, "slowdown {s}");
+        }
+        assert!(out.unfairness >= 1.0 - 1e-9, "unfairness {}", out.unfairness);
+        assert!(
+            out.weighted_speedup > 0.0 && out.weighted_speedup < 1.1,
+            "weighted speedup {}",
+            out.weighted_speedup
+        );
+    }
+
+    #[test]
+    fn arrival_past_run_end_is_rejected() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 8;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S+mg.S@8").unwrap();
+        let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+        assert!(MultiSimulation::new(cfg, sim, &mix, p, 0.05).is_err());
+    }
+}

@@ -354,6 +354,117 @@ impl Workload for Cg {
     }
 }
 
+// --------------------------------------------------------------------
+// IS — integer sort
+// --------------------------------------------------------------------
+
+/// IS bucket-sorts a huge key array: a counting pass streams the keys
+/// while hammering a small bucket-histogram with random read-modify-
+/// writes, then a permutation pass re-reads the keys and scatters them
+/// into the output array. Writes are the suite's largest share
+/// (~1.25R:1W) and the scatter phase is almost fully random — the
+/// write-intensive co-run tenant the multi-tenant mixes lean on (DCPMM's
+/// write ceiling is the contended resource).
+pub struct Is {
+    class: SizeClass,
+    layout: Layout,
+    regions: Vec<(u32, u32)>,
+    offered: f64,
+}
+
+impl Is {
+    pub fn footprint_bytes(class: SizeClass) -> f64 {
+        match class {
+            SizeClass::S => 24.0 * GB,
+            SizeClass::M => 44.0 * GB,
+            SizeClass::L => 90.0 * GB,
+        }
+    }
+
+    pub fn new(class: SizeClass, page_bytes: u64, epoch_secs: f64) -> Self {
+        let layout = Layout::new(Self::footprint_bytes(class), page_bytes);
+        // key array + output array dominate; bucket histogram is small
+        let regions = layout.carve(&[0.45, 0.45, 0.10]);
+        Is { class, layout, regions, offered: 42.0 * GB * epoch_secs }
+    }
+}
+
+impl Workload for Is {
+    fn name(&self) -> String {
+        format!("IS-{}", self.class.letter())
+    }
+    fn footprint_pages(&self) -> u32 {
+        self.layout.footprint_pages
+    }
+    fn offered_bytes(&self) -> f64 {
+        self.offered
+    }
+    fn rw_ratio(&self) -> f64 {
+        1.25
+    }
+    fn regions(&mut self, epoch: u32) -> Vec<Region> {
+        let counting = epoch % 2 == 0;
+        let (keys, output, buckets) = (self.regions[0], self.regions[1], self.regions[2]);
+        if counting {
+            // streaming key read + random bucket increments
+            vec![
+                Region {
+                    name: "keys",
+                    start: keys.0,
+                    pages: keys.1,
+                    weight: 1.0,
+                    write_frac: 0.05,
+                    random_frac: 0.05,
+                },
+                Region {
+                    name: "output",
+                    start: output.0,
+                    pages: output.1,
+                    weight: 0.05,
+                    write_frac: 0.5,
+                    random_frac: 0.3,
+                },
+                Region {
+                    name: "buckets",
+                    start: buckets.0,
+                    pages: buckets.1,
+                    weight: 0.8,
+                    write_frac: 0.5,
+                    random_frac: 0.9,
+                },
+            ]
+        } else {
+            // permutation: re-read keys, scatter into the output array
+            vec![
+                Region {
+                    name: "keys",
+                    start: keys.0,
+                    pages: keys.1,
+                    weight: 0.8,
+                    write_frac: 0.0,
+                    random_frac: 0.05,
+                },
+                Region {
+                    name: "output",
+                    start: output.0,
+                    pages: output.1,
+                    weight: 1.0,
+                    write_frac: 0.85,
+                    random_frac: 0.9,
+                },
+                Region {
+                    name: "buckets",
+                    start: buckets.0,
+                    pages: buckets.1,
+                    weight: 0.2,
+                    write_frac: 0.05,
+                    random_frac: 0.8,
+                },
+            ]
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -433,6 +544,24 @@ mod tests {
         let reads: f64 = rs.iter().map(|r| r.weight * (1.0 - r.write_frac)).sum();
         let writes: f64 = rs.iter().map(|r| r.weight * r.write_frac).sum();
         assert!(reads / writes > 8.0);
+    }
+
+    #[test]
+    fn is_phases_alternate_and_write_heavy() {
+        let mut is = Is::new(SizeClass::M, PAGE, 1.0);
+        assert!(Is::footprint_bytes(SizeClass::S) < 32.0 * GB, "IS-S fits DRAM");
+        assert!(Is::footprint_bytes(SizeClass::M) > 32.0 * GB);
+        let counting = is.regions(0);
+        let permute = is.regions(1);
+        // counting: buckets are the random-RMW hot spot
+        let buckets = counting.iter().find(|r| r.name == "buckets").unwrap();
+        assert!(buckets.random_frac > 0.8 && buckets.write_frac > 0.3);
+        // permute: the output scatter dominates and is write-heavy
+        let out = permute.iter().find(|r| r.name == "output").unwrap();
+        assert!(out.write_frac > 0.7 && out.random_frac > 0.8);
+        assert!(out.weight >= permute.iter().map(|r| r.weight).fold(0.0, f64::max));
+        // the suite's most write-intensive member
+        assert!(is.rw_ratio() < Ft::new(SizeClass::M, PAGE, 1.0).rw_ratio());
     }
 
     #[test]

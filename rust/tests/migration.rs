@@ -182,6 +182,7 @@ fn fig5_policies_engine_matches_oneshot_per_epoch() {
                     epoch,
                     epoch_secs: 1.0,
                     backpressure: eng.backpressure(),
+                    tenants: &[],
                 };
                 policy.epoch_tick(&mut ctx)
             };
@@ -238,6 +239,7 @@ fn throttled_run_converges_to_unthrottled_placement_after_quiesce() {
                     epoch,
                     epoch_secs: 1.0,
                     backpressure: eng.backpressure(),
+                    tenants: &[],
                 };
                 policy.epoch_tick(&mut ctx)
             };

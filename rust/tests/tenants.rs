@@ -1,0 +1,369 @@
+//! Multi-tenant co-run subsystem: the cross-layer guarantees.
+//!
+//! * **1-tenant equivalence** — a 1-tenant `MultiSimulation` is
+//!   bit-identical to the legacy `Simulation` for every fig5 policy,
+//!   pinned in lockstep per epoch. This is the contract that keeps all
+//!   pre-tenant checkpoints and BENCH baselines valid.
+//! * **Bijective offset mapping** — property test over random
+//!   footprints: no page owned by two tenants, every tenant page
+//!   resolvable back to its tenant.
+//! * **Determinism** — a 2-tenant mix is bit-identical across `--jobs`
+//!   values, and resumes from its own checkpoint with 0 executed cells
+//!   and a byte-identical artifact.
+//! * **Contention demo** — the committed `configs/mix_demo.toml`
+//!   scenario (`hyplacer run -w 'is.M+pr.M' --config
+//!   configs/mix_demo.toml`): HyPlacer beats ADM-default on aggregate
+//!   weighted speedup (common solo-reference normalization).
+
+#![allow(clippy::field_reassign_with_default)]
+
+use hyplacer::config::{parse::Doc, HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::Simulation;
+use hyplacer::exec::SweepSpec;
+use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::prop_assert;
+use hyplacer::tenants::{
+    run_mix, run_mix_with_solos, MixSpec, MultiSimulation, TenantSet, TenantSpec,
+};
+use hyplacer::util::proptest;
+use hyplacer::workloads;
+
+#[test]
+fn one_tenant_multisim_is_bit_identical_to_legacy_for_fig5_policies() {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 14;
+    sim.warmup_epochs = 3;
+    let hp = HyPlacerConfig::default();
+    for pname in FIG5_POLICIES {
+        let w = workloads::by_name("cg-M", cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p_legacy = policies::by_name(pname, &cfg, &hp).unwrap();
+        let p_multi = policies::by_name(pname, &cfg, &hp).unwrap();
+        let mut legacy = Simulation::new(cfg.clone(), sim.clone(), w, p_legacy, 0.05);
+        let mix = MixSpec::single("cg-M");
+        let mut multi =
+            MultiSimulation::new(cfg.clone(), sim.clone(), &mix, p_multi, 0.05).unwrap();
+        // lockstep: every epoch's wall clock must agree to the bit
+        for e in 0..sim.epochs {
+            let a = legacy.step();
+            let b = multi.step();
+            assert_eq!(a.to_bits(), b.to_bits(), "{pname}: epoch {e} wall diverged");
+        }
+        // both hot-path instruments agree (same RNG stream, same walks)
+        assert_eq!(legacy.rng_draws(), multi.rng_draws(), "{pname}: rng draws");
+        assert_eq!(legacy.pte_visits(), multi.pte_visits(), "{pname}: pte visits");
+        let ra = legacy.finish();
+        let rb = multi.finish();
+        assert_eq!(ra.workload, rb.workload, "{pname}");
+        assert_eq!(ra.policy, rb.policy, "{pname}");
+        assert_eq!(ra.total_wall_secs.to_bits(), rb.total_wall_secs.to_bits(), "{pname}");
+        assert_eq!(ra.total_app_bytes.to_bits(), rb.total_app_bytes.to_bits(), "{pname}");
+        assert_eq!(ra.throughput.to_bits(), rb.throughput.to_bits(), "{pname}");
+        assert_eq!(
+            ra.steady_throughput.to_bits(),
+            rb.steady_throughput.to_bits(),
+            "{pname}"
+        );
+        assert_eq!(
+            ra.energy_j_per_byte.to_bits(),
+            rb.energy_j_per_byte.to_bits(),
+            "{pname}"
+        );
+        assert_eq!(ra.total_energy_j.to_bits(), rb.total_energy_j.to_bits(), "{pname}");
+        assert_eq!(ra.migrated_pages, rb.migrated_pages, "{pname}");
+        assert_eq!(
+            ra.dram_traffic_share.to_bits(),
+            rb.dram_traffic_share.to_bits(),
+            "{pname}"
+        );
+        assert_eq!(ra.migrate_queue_peak, rb.migrate_queue_peak, "{pname}");
+        assert_eq!(
+            ra.migrate_deferred_ratio.to_bits(),
+            rb.migrate_deferred_ratio.to_bits(),
+            "{pname}"
+        );
+        assert_eq!(
+            ra.migrate_stale_ratio.to_bits(),
+            rb.migrate_stale_ratio.to_bits(),
+            "{pname}"
+        );
+        // the multi run additionally carries the 1 tenant's summary
+        assert!(ra.tenants.is_empty());
+        assert_eq!(rb.tenants.len(), 1);
+        assert_eq!(rb.tenants[0].name, "CG-M");
+    }
+}
+
+#[test]
+fn one_tenant_equivalence_holds_under_throttled_migration() {
+    // the engine's carry-over queue is global state: pin equivalence in
+    // the throttled regime too (share 0.05 defers work across epochs)
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 12;
+    sim.warmup_epochs = 2;
+    sim.migrate_share = 0.05;
+    let hp = HyPlacerConfig::default();
+    let w = workloads::by_name("cg-L", cfg.page_bytes, sim.epoch_secs).unwrap();
+    let mut legacy = Simulation::new(
+        cfg.clone(),
+        sim.clone(),
+        w,
+        policies::by_name("hyplacer", &cfg, &hp).unwrap(),
+        0.05,
+    );
+    let mut multi = MultiSimulation::new(
+        cfg.clone(),
+        sim.clone(),
+        &MixSpec::single("cg-L"),
+        policies::by_name("hyplacer", &cfg, &hp).unwrap(),
+        0.05,
+    )
+    .unwrap();
+    for e in 0..sim.epochs {
+        let a = legacy.step();
+        let b = multi.step();
+        assert_eq!(a.to_bits(), b.to_bits(), "epoch {e} wall diverged");
+    }
+    let ra = legacy.finish();
+    let rb = multi.finish();
+    assert!(ra.migrate_queue_peak > 0, "throttle did not engage");
+    assert_eq!(ra.migrate_queue_peak, rb.migrate_queue_peak);
+    assert_eq!(ra.migrated_pages, rb.migrated_pages);
+}
+
+#[test]
+fn tenant_offset_mapping_is_bijective_under_random_footprints() {
+    proptest::check("tenant-bijection", 200, |rng| {
+        let n = 1 + rng.next_below(6) as usize;
+        let mut fps: Vec<u32> = Vec::with_capacity(n);
+        for _ in 0..n {
+            fps.push(1 + rng.next_below(5000) as u32);
+        }
+        let specs: Vec<TenantSpec> =
+            (0..n).map(|i| TenantSpec::new(&format!("t{i}"))).collect();
+        let set = TenantSet::from_footprints(specs, &fps)?;
+        let total: u64 = fps.iter().map(|&f| f as u64).sum();
+        prop_assert!(
+            set.total_pages() as u64 == total,
+            "address space {} != sum of footprints {total}",
+            set.total_pages()
+        );
+        // every tenant page resolves to a unique global page and back
+        for idx in 0..n {
+            let samples = [0, fps[idx] - 1, rng.next_below(fps[idx] as u64) as u32];
+            for &local in &samples {
+                let g = set
+                    .to_global(idx, local)
+                    .ok_or_else(|| format!("tenant {idx} local {local} unmappable"))?;
+                prop_assert!(
+                    set.tenant_of(g) == Some(idx),
+                    "page {g}: owner {:?} != tenant {idx}",
+                    set.tenant_of(g)
+                );
+                prop_assert!(
+                    set.to_local(g) == Some((idx, local)),
+                    "page {g} does not round-trip to ({idx}, {local})"
+                );
+            }
+            prop_assert!(
+                set.to_global(idx, fps[idx]).is_none(),
+                "tenant {idx}: past-end local page resolved"
+            );
+        }
+        // every global page has exactly one owner whose range holds it
+        for _ in 0..32 {
+            let g = rng.next_below(total + 8) as u32;
+            let owners: Vec<usize> = (0..n)
+                .filter(|&j| g >= set.base(j) && g < set.base(j) + set.pages(j))
+                .collect();
+            match set.tenant_of(g) {
+                Some(i) => prop_assert!(
+                    owners == vec![i],
+                    "page {g}: tenant_of = {i}, range owners = {owners:?}"
+                ),
+                None => prop_assert!(
+                    owners.is_empty() && g as u64 >= total,
+                    "page {g} unowned inside the address space"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
+
+fn mix_spec_for_jobs_test() -> SweepSpec {
+    let mut sim = SimConfig::default();
+    sim.epochs = 8;
+    sim.warmup_epochs = 2;
+    let mut spec =
+        SweepSpec::new(MachineConfig::paper_machine(), sim, HyPlacerConfig::default());
+    spec.workloads = vec!["cg.S+mg.S".to_string()];
+    spec.policies = vec!["adm-default".to_string(), "hyplacer".to_string()];
+    spec.seeds = vec![42, 7];
+    spec
+}
+
+#[test]
+fn two_tenant_mix_is_bit_identical_across_jobs() {
+    let spec = mix_spec_for_jobs_test();
+    let serial = spec.run(1).unwrap();
+    let par = spec.run(4).unwrap();
+    assert_eq!(serial.results.len(), 4);
+    for (a, b) in serial.results.iter().zip(par.results.iter()) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.sim.workload, "CG-S+MG-S");
+        assert_eq!(
+            a.sim.total_wall_secs.to_bits(),
+            b.sim.total_wall_secs.to_bits(),
+            "{}/{}",
+            a.policy,
+            a.seed
+        );
+        assert_eq!(a.sim.migrated_pages, b.sim.migrated_pages);
+    }
+    assert_eq!(serial.to_json().render(), par.to_json().render());
+}
+
+#[test]
+fn mix_cells_resume_with_zero_executed_and_byte_identical_json() {
+    let spec = mix_spec_for_jobs_test();
+    let first = spec.run_with_cache(2, None).unwrap();
+    assert_eq!(first.executed, 4);
+    // resume via a JSON round trip (what --out/--resume does across
+    // processes): 0 executed cells, byte-identical rendering
+    let rendered = first.run.to_json().render();
+    let prior = hyplacer::exec::SweepRun::from_json(
+        &hyplacer::report::json::parse(&rendered).unwrap(),
+    )
+    .unwrap();
+    let resumed = spec.run_with_cache(1, Some(&prior)).unwrap();
+    assert_eq!(resumed.executed, 0);
+    assert_eq!(resumed.cached, 4);
+    assert_eq!(resumed.run.to_json().render(), rendered);
+}
+
+/// Load the committed contention-demo config (what `hyplacer run -w
+/// 'is.M+pr.M' --config configs/mix_demo.toml` uses).
+fn mix_demo_config() -> (MachineConfig, SimConfig, HyPlacerConfig) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs/mix_demo.toml");
+    let text = std::fs::read_to_string(path).expect("committed configs/mix_demo.toml");
+    let doc = Doc::parse(&text).expect("mix_demo.toml parses");
+    let mut machine = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    let mut hp = HyPlacerConfig::default();
+    machine.apply_doc(&doc);
+    sim.apply_doc(&doc);
+    hp.apply_doc(&doc);
+    (machine, sim, hp)
+}
+
+#[test]
+fn hyplacer_beats_adm_default_on_mix_weighted_speedup() {
+    // The acceptance demo: a write-heavy NPB tenant (IS-M) co-run with
+    // a graph tenant (PR-M). Aggregate weighted speedup uses the
+    // scheduling-literature normalization — per-tenant co-run
+    // throughput over a COMMON solo reference (the adm-default solo
+    // runs) — so policies are compared on the same scale.
+    let (machine, sim, hp) = mix_demo_config();
+    let mix = MixSpec::parse("is.M+pr.M").unwrap();
+    let wf = hp.delay_secs / sim.epoch_secs;
+    let adm = run_mix_with_solos(&machine, &sim, &mix, wf, || {
+        policies::by_name("adm-default", &machine, &hp).unwrap()
+    })
+    .unwrap();
+    let hyp_corun = run_mix(
+        &machine,
+        &sim,
+        &mix,
+        policies::by_name("hyplacer", &machine, &hp).unwrap(),
+        wf,
+    )
+    .unwrap();
+    let weighted = |corun: &hyplacer::coordinator::SimResult| -> f64 {
+        let mut sum = 0.0;
+        let mut wsum = 0.0;
+        for (t, solo) in corun.tenants.iter().zip(adm.solos.iter()) {
+            sum += t.share_weight * (t.steady_throughput / solo.steady_throughput);
+            wsum += t.share_weight;
+        }
+        sum / wsum
+    };
+    let ws_adm = weighted(&adm.corun);
+    let ws_hyp = weighted(&hyp_corun);
+    assert!(
+        ws_hyp > ws_adm,
+        "hyplacer weighted speedup {ws_hyp:.3} must beat adm-default {ws_adm:.3}"
+    );
+    // sanity on the fairness metrics the mix run reports
+    assert_eq!(adm.slowdowns.len(), 2);
+    assert!(adm.unfairness >= 1.0 - 1e-9);
+    // under first-touch the first tenant grabs DRAM; the second is
+    // stranded in PM — the contention pathology the subsystem opens up
+    let first = &adm.corun.tenants[0];
+    let second = &adm.corun.tenants[1];
+    assert!(
+        first.mean_dram_share > second.mean_dram_share,
+        "first-touch should strand the late-allocated tenant: {} vs {}",
+        first.mean_dram_share,
+        second.mean_dram_share
+    );
+}
+
+#[test]
+fn cli_run_accepts_a_mix() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let out = std::process::Command::new(exe)
+        .args(["run", "-w", "cg.S+mg.S", "--epochs", "24"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("CG-S+MG-S"), "{stdout}");
+    assert!(stdout.contains("weighted speedup"), "{stdout}");
+    assert!(stdout.contains("slowdown"), "{stdout}");
+}
+
+#[test]
+fn cli_fig_mix_smoke_and_resume() {
+    let exe = env!("CARGO_BIN_EXE_hyplacer");
+    let dir = std::env::temp_dir();
+    let out_path = dir.join("hyplacer_fig_mix_smoke.json");
+    let out_path = out_path.to_str().unwrap();
+    std::fs::remove_file(out_path).ok();
+    let run = |resume: bool| {
+        let mut args = vec![
+            "fig-mix",
+            "-w",
+            "cg.S+mg.S",
+            "--epochs",
+            "6",
+            "--jobs",
+            "2",
+            "--out",
+            out_path,
+        ];
+        if resume {
+            args.push("--resume");
+        }
+        std::process::Command::new(exe).args(&args).output().unwrap()
+    };
+    let first = run(false);
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    let stdout = String::from_utf8_lossy(&first.stdout);
+    assert!(
+        stdout.contains("fig-mix: executed 6 of 6 cells (0 cached)"),
+        "{stdout}"
+    );
+    let bytes_first = std::fs::read(out_path).unwrap();
+    let second = run(true);
+    assert!(second.status.success(), "{}", String::from_utf8_lossy(&second.stderr));
+    let stdout = String::from_utf8_lossy(&second.stdout);
+    assert!(
+        stdout.contains("fig-mix: executed 0 of 6 cells (6 cached)"),
+        "{stdout}"
+    );
+    let bytes_second = std::fs::read(out_path).unwrap();
+    assert_eq!(bytes_first, bytes_second, "resume rewrite must be byte-identical");
+    std::fs::remove_file(out_path).ok();
+}
