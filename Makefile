@@ -8,8 +8,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify bench bench-baselines bench-check sweep share-sweep \
-	artifacts aot-artifacts experiment-artifacts clean-artifacts
+.PHONY: build test verify audit bench bench-baselines bench-check sweep \
+	share-sweep artifacts aot-artifacts experiment-artifacts clean-artifacts
 
 build:
 	$(CARGO) build --release
@@ -19,6 +19,12 @@ test:
 
 # Tier-1 verify (ROADMAP.md).
 verify: build test
+
+# Determinism/robustness static analysis (DESIGN.md §11) gated against
+# the committed zero baseline — what CI's audit job runs.
+audit: build
+	$(CARGO) run --release --bin hyplacer -- audit \
+		--root rust/src --baseline AUDIT_baseline.json
 
 bench:
 	$(CARGO) bench --bench hotpath

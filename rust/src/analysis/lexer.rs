@@ -1,0 +1,318 @@
+//! Hand-rolled Rust lexer for the audit pass (dependency-free, no
+//! `syn`, fully offline).
+//!
+//! Produces just enough structure for lexical rules: identifier /
+//! number / punctuation tokens with 1-based `line:col` spans plus the
+//! comment bodies (where `audit-allow` directives live). String,
+//! raw-string, byte-string and char literals are collapsed to single
+//! placeholder tokens and lifetimes are skipped entirely, so a rule's
+//! token sequence can never match inside literal text — `"HashMap"`
+//! in a message string is not a finding, `HashMap::new()` in code is.
+
+/// One lexical token: an identifier, a number (text `"0"`), a string
+/// or char literal placeholder (`"\""` / `"'"`), or one punctuation
+/// character.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based column (in chars) of the token's first character.
+    pub col: u32,
+}
+
+/// One comment body (line or block), `//` / `/*` delimiters stripped.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    /// 1-based line the comment starts on.
+    pub line: u32,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(src: &str) -> Self {
+        Cursor { chars: src.chars().collect(), i: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek(0)?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+/// Does the cursor sit on a string-literal opening? Returns the prefix
+/// length in chars before any `#`s (`""`/`r`/`b`/`br`), the `#` count,
+/// and whether the literal is raw (escape-free).
+fn string_open(cur: &Cursor) -> Option<(usize, usize, bool)> {
+    match cur.peek(0) {
+        Some('"') => Some((0, 0, false)),
+        Some('r') => {
+            let h = count_hashes(cur, 1);
+            (cur.peek(1 + h) == Some('"')).then_some((1, h, true))
+        }
+        Some('b') => match cur.peek(1) {
+            Some('"') => Some((1, 0, false)),
+            Some('r') => {
+                let h = count_hashes(cur, 2);
+                (cur.peek(2 + h) == Some('"')).then_some((2, h, true))
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn count_hashes(cur: &Cursor, from: usize) -> usize {
+    let mut h = 0;
+    while cur.peek(from + h) == Some('#') {
+        h += 1;
+    }
+    h
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated literals or comments
+/// simply consume to end of input (the compiler rejects such files long
+/// before the audit sees committed code).
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let mut cur = Cursor::new(src);
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        // line comment
+        if c == '/' && cur.peek(1) == Some('/') {
+            cur.bump();
+            cur.bump();
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            comments.push(Comment { text, line });
+            continue;
+        }
+        // block comment (nested, per Rust)
+        if c == '/' && cur.peek(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0u32;
+            while let Some(ch) = cur.peek(0) {
+                if ch == '/' && cur.peek(1) == Some('*') {
+                    depth += 1;
+                    cur.bump();
+                    cur.bump();
+                    text.push_str("/*");
+                } else if ch == '*' && cur.peek(1) == Some('/') {
+                    depth = depth.saturating_sub(1);
+                    cur.bump();
+                    cur.bump();
+                    text.push_str("*/");
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(ch);
+                    cur.bump();
+                }
+            }
+            let body = text
+                .strip_prefix("/*")
+                .unwrap_or(&text)
+                .strip_suffix("*/")
+                .unwrap_or(&text)
+                .to_string();
+            comments.push(Comment { text: body, line });
+            continue;
+        }
+        // string / raw string / byte string literal
+        if let Some((prefix, hashes, raw)) = string_open(&cur) {
+            for _ in 0..prefix + hashes + 1 {
+                cur.bump();
+            }
+            if raw {
+                while let Some(ch) = cur.bump() {
+                    if ch == '"' && (0..hashes).all(|a| cur.peek(a) == Some('#')) {
+                        for _ in 0..hashes {
+                            cur.bump();
+                        }
+                        break;
+                    }
+                }
+            } else {
+                while let Some(ch) = cur.bump() {
+                    if ch == '\\' {
+                        cur.bump();
+                    } else if ch == '"' {
+                        break;
+                    }
+                }
+            }
+            toks.push(Token { text: "\"".to_string(), line, col });
+            continue;
+        }
+        // lifetime vs char literal: `'a>` is a lifetime, `'a'` a char
+        if c == '\'' {
+            let lifetime = matches!(cur.peek(1), Some(ch) if is_ident_start(ch))
+                && cur.peek(2) != Some('\'');
+            cur.bump();
+            if lifetime {
+                while let Some(ch) = cur.peek(0) {
+                    if !is_ident_continue(ch) {
+                        break;
+                    }
+                    cur.bump();
+                }
+            } else {
+                while let Some(ch) = cur.bump() {
+                    if ch == '\\' {
+                        cur.bump();
+                    } else if ch == '\'' {
+                        break;
+                    }
+                }
+                toks.push(Token { text: "'".to_string(), line, col });
+            }
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            toks.push(Token { text, line, col });
+            continue;
+        }
+        // number (incl. a fractional part, so `0.5` emits no `.` punct)
+        if c.is_ascii_digit() {
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                cur.bump();
+            }
+            if cur.peek(0) == Some('.') && matches!(cur.peek(1), Some(d) if d.is_ascii_digit()) {
+                cur.bump();
+                while let Some(ch) = cur.peek(0) {
+                    if !is_ident_continue(ch) {
+                        break;
+                    }
+                    cur.bump();
+                }
+            }
+            toks.push(Token { text: "0".to_string(), line, col });
+            continue;
+        }
+        if !c.is_whitespace() {
+            toks.push(Token { text: c.to_string(), line, col });
+        }
+        cur.bump();
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Token texts joined by single spaces (compact golden form).
+    fn joined(src: &str) -> String {
+        let texts: Vec<String> = lex(src).0.into_iter().map(|t| t.text).collect();
+        texts.join(" ")
+    }
+
+    #[test]
+    fn idents_puncts_and_spans() {
+        let (toks, _) = lex("let x = a.unwrap();");
+        let got: Vec<(&str, u32, u32)> =
+            toks.iter().map(|t| (t.text.as_str(), t.line, t.col)).collect();
+        let want = [
+            ("let", 1, 1),
+            ("x", 1, 5),
+            ("=", 1, 7),
+            ("a", 1, 9),
+            (".", 1, 10),
+            ("unwrap", 1, 11),
+            ("(", 1, 17),
+            (")", 1, 18),
+            (";", 1, 19),
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn strings_collapse_and_never_leak_tokens() {
+        assert_eq!(joined(r#"f("HashMap .unwrap() \" ok")"#), "f ( \" )");
+        assert_eq!(joined("r#\"Instant::now()\"#"), "\"");
+        assert_eq!(joined(r#"b"panic!()""#), "\"");
+        // a raw string with a trailing backslash must not eat its close
+        assert_eq!(joined("r\"\\\" + x"), "\" + x");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        assert_eq!(joined("fn f<'a>(x: &'a str) {}"), "fn f < > ( x : & str ) { }");
+        assert_eq!(joined("let c = 'x'; let e = '\\n';"), "let c = ' ; let e = ' ;");
+    }
+
+    #[test]
+    fn numbers_swallow_fractional_dot() {
+        assert_eq!(joined("a(0.5, 1e9, 0x1F, 1_000u64)"), "a ( 0 , 0 , 0 , 0 )");
+        // a range's dots are still punct (not a fraction)
+        assert_eq!(joined("0..n"), "0 . . n");
+    }
+
+    #[test]
+    fn comments_captured_with_lines() {
+        let (toks, comments) = lex("x; // audit-allow(D1): reason\n/* b\nc */ y;");
+        assert_eq!(toks.iter().map(|t| t.text.as_str()).collect::<Vec<_>>(), vec![
+            "x", ";", "y", ";",
+        ]);
+        assert_eq!(comments.len(), 2);
+        assert_eq!(comments[0].text, " audit-allow(D1): reason");
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(comments[1].text, " b\nc ");
+        assert_eq!(comments[1].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = lex("/* outer /* inner */ tail */ z");
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].text, "z");
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].text.contains("inner"));
+    }
+}

@@ -1,0 +1,604 @@
+//! `hyplacer audit` — a self-contained static-analysis pass enforcing
+//! the repo's determinism and robustness invariants (DESIGN.md §11).
+//!
+//! Every headline result rests on invariants that were previously
+//! enforced only by convention: thread-count-invariant sweeps,
+//! byte-identical resumes, and bit-identical lockstep equivalence
+//! between the sparse/dense, throttled/one-shot and multi/single-tenant
+//! paths. This pass makes them machine-checked, offline and
+//! dependency-free: a hand-rolled lexer ([`lexer`]) over `rust/src`, a
+//! rule table with per-rule severity, findings with `file:line:col`
+//! spans, and `// audit-allow(rule): reason` escape comments that must
+//! carry a justification.
+//!
+//! Rules (see [`RULES`]):
+//!
+//! * **D1** — no unordered `HashMap`/`HashSet` in result-affecting
+//!   modules; iteration order would leak into results.
+//! * **D2** — no wall-clock (`Instant`/`SystemTime`) outside the
+//!   telemetry allowlist ([`D2_ALLOWLIST`]): host timings are info-kind
+//!   metadata, never inputs.
+//! * **D3** — no ambient RNG (`thread_rng`/`from_entropy`/`OsRng`);
+//!   every stream derives from the per-cell/per-tenant seeds.
+//! * **R1** — no `.unwrap()`/`.expect()`/`panic!`-family calls in
+//!   library decision paths (`policies/`, `vm/`, `tenants/`);
+//!   `main.rs`, tests and the bench harness are exempt.
+//! * **N1** — no truncating `as` casts to narrow integer types in
+//!   `vm/`/`tenants/` page-index arithmetic (the global↔local tenant
+//!   bijection is exactly where a silent `as u32` corrupts placement).
+//!
+//! `#[cfg(test)]`-gated items are exempt from every rule. The JSON
+//! report reuses the [`BaselineDoc`] envelope so CI gates audits and
+//! perf baselines through one comparator.
+
+pub mod lexer;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::bench_harness::baseline::{BaselineDoc, MetricKind};
+use lexer::{lex, Comment, Token};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One rule-table row (stable id, gate severity, one-line summary).
+pub struct Rule {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+/// The substantive rules. Two meta-findings exist besides these:
+/// `AA` (error) for a malformed `audit-allow` — unknown rule or missing
+/// justification — and `AU` (warning) for an allow nothing triggers.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        severity: Severity::Error,
+        summary: "no unordered HashMap/HashSet in result-affecting modules",
+    },
+    Rule {
+        id: "D2",
+        severity: Severity::Error,
+        summary: "no wall-clock time source outside the telemetry allowlist",
+    },
+    Rule {
+        id: "D3",
+        severity: Severity::Error,
+        summary: "no ambient RNG; all streams derive from per-cell/per-tenant seeds",
+    },
+    Rule {
+        id: "R1",
+        severity: Severity::Error,
+        summary: "no unwrap/expect/panic! in library decision paths",
+    },
+    Rule {
+        id: "N1",
+        severity: Severity::Error,
+        summary: "no truncating integer casts on page-index arithmetic",
+    },
+];
+
+/// Module prefixes whose execution affects committed results (D1 scope).
+pub const D1_SCOPE: &[&str] =
+    &["sim/", "vm/", "policies/", "tenants/", "mem/", "workloads/", "exec/", "coordinator/"];
+
+/// Files allowed to read wall-clock time: cell wall-time metadata in the
+/// sweep engine and the bench harness's host-timing metrics — both are
+/// info-kind telemetry that never feeds back into results.
+pub const D2_ALLOWLIST: &[&str] = &["exec/mod.rs", "bench_harness/perf.rs"];
+
+/// Library decision paths (R1 scope): policies, the vm layer incl. the
+/// migration engine, and the tenant subsystem.
+pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/"];
+
+/// Page-index arithmetic modules (N1 scope).
+pub const N1_SCOPE: &[&str] = &["vm/", "tenants/"];
+
+const D3_TOKENS: &[&str] = &["thread_rng", "ThreadRng", "from_entropy", "OsRng"];
+const R1_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const N1_TYPES: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// One audit finding, anchored to a `file:line:col` span.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+impl Finding {
+    /// `file:line:col: severity [rule] message` — the grep/editor form.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {} [{}] {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.as_str(),
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// A parsed `audit-allow(rule): reason` escape directive.
+struct AllowDirective {
+    rule: String,
+    used: bool,
+}
+
+/// Inclusive line ranges covered by `#[cfg(test)]`-gated items; every
+/// rule exempts them (tests assert/unwrap freely by design).
+fn test_exempt_ranges(toks: &[Token]) -> Vec<(u32, u32)> {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut out = Vec::new();
+    let mut k = 0;
+    while k < toks.len() {
+        let hit = toks.len() - k >= PAT.len()
+            && PAT.iter().enumerate().all(|(o, p)| toks[k + o].text == *p);
+        if hit {
+            let start_line = toks[k].line;
+            let mut j = k + PAT.len();
+            // skip any further attributes on the same item
+            while j + 1 < toks.len() && toks[j].text == "#" && toks[j + 1].text == "[" {
+                let mut depth = 0i32;
+                j += 1;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            // the gated item: a braced body (balanced to its close) or a
+            // brace-free item ending at `;`
+            let mut depth = 0i32;
+            let mut end_line = toks.last().map(|t| t.line).unwrap_or(start_line);
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end_line = toks[j].line;
+                            break;
+                        }
+                    }
+                    ";" if depth == 0 => {
+                        end_line = toks[j].line;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            out.push((start_line, end_line));
+            k = j;
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Parse every `audit-allow(rule): reason` directive out of the
+/// comments. Only a comment that *begins* with the directive counts —
+/// prose or doc text mentioning the syntax mid-sentence is ignored.
+/// Malformed directives (unknown rule, missing or empty justification)
+/// come back as `AA` error findings — an escape without a reason is
+/// itself a violation.
+fn parse_allows(
+    comments: &[Comment],
+    rel: &str,
+) -> (BTreeMap<u32, Vec<AllowDirective>>, Vec<Finding>) {
+    const KEY: &str = "audit-allow(";
+    let mut allows: BTreeMap<u32, Vec<AllowDirective>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    let mut push_bad = |line: u32, message: String| {
+        bad.push(Finding {
+            rule: "AA",
+            severity: Severity::Error,
+            file: rel.to_string(),
+            line,
+            col: 1,
+            message,
+        });
+    };
+    for c in comments {
+        if !c.text.trim_start().starts_with(KEY) {
+            continue;
+        }
+        let mut pos = 0usize;
+        while let Some(found) = c.text[pos..].find(KEY) {
+            let after = pos + found + KEY.len();
+            let Some(close_rel) = c.text[after..].find(')') else {
+                push_bad(c.line, "unterminated audit-allow directive".to_string());
+                break;
+            };
+            let close = after + close_rel;
+            let rule = c.text[after..close].trim().to_string();
+            let rest = c.text[close + 1..].trim_start();
+            let mut reason = "";
+            if let Some(r) = rest.strip_prefix(':') {
+                let r = r.trim();
+                reason = match r.find(KEY) {
+                    Some(nxt) => r[..nxt].trim_end(),
+                    None => r,
+                };
+            }
+            if !RULES.iter().any(|r| r.id == rule) {
+                push_bad(c.line, format!("audit-allow names unknown rule {rule:?}"));
+            } else if reason.is_empty() {
+                push_bad(c.line, format!("audit-allow({rule}) carries no justification"));
+            } else {
+                allows.entry(c.line).or_default().push(AllowDirective { rule, used: false });
+            }
+            pos = close + 1;
+        }
+    }
+    (allows, bad)
+}
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Emit one candidate finding unless a test region or a matching
+/// `audit-allow` on the same line (or the line above) covers it.
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    findings: &mut Vec<Finding>,
+    allows: &mut BTreeMap<u32, Vec<AllowDirective>>,
+    exempt: &[(u32, u32)],
+    rule: &'static str,
+    rel: &str,
+    line: u32,
+    col: u32,
+    message: String,
+) {
+    if exempt.iter().any(|&(a, b)| line >= a && line <= b) {
+        return;
+    }
+    for l in [line, line.saturating_sub(1)] {
+        if let Some(list) = allows.get_mut(&l) {
+            if let Some(a) = list.iter_mut().find(|a| a.rule == rule) {
+                a.used = true;
+                return;
+            }
+        }
+    }
+    findings.push(Finding {
+        rule,
+        severity: Severity::Error,
+        file: rel.to_string(),
+        line,
+        col,
+        message,
+    });
+}
+
+/// Scan one file (`rel` is its path relative to the scan root, with
+/// `/` separators — rule scoping is path-prefix based).
+pub fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
+    let (toks, comments) = lex(src);
+    let exempt = test_exempt_ranges(&toks);
+    let (mut allows, mut findings) = parse_allows(&comments, rel);
+
+    let in_d1 = in_scope(rel, D1_SCOPE);
+    let in_r1 = in_scope(rel, R1_SCOPE);
+    let in_n1 = in_scope(rel, N1_SCOPE);
+    let d2_allowed = D2_ALLOWLIST.contains(&rel);
+
+    for (k, t) in toks.iter().enumerate() {
+        let text = t.text.as_str();
+        if in_d1 && (text == "HashMap" || text == "HashSet") {
+            emit(
+                &mut findings,
+                &mut allows,
+                &exempt,
+                "D1",
+                rel,
+                t.line,
+                t.col,
+                format!(
+                    "unordered {text} in a result-affecting module; use \
+                     BTreeMap/BTreeSet or a sorted-collect idiom"
+                ),
+            );
+        }
+        if !d2_allowed && (text == "Instant" || text == "SystemTime") {
+            emit(
+                &mut findings,
+                &mut allows,
+                &exempt,
+                "D2",
+                rel,
+                t.line,
+                t.col,
+                format!("wall-clock source {text} outside the telemetry allowlist"),
+            );
+        }
+        if D3_TOKENS.contains(&text) {
+            emit(
+                &mut findings,
+                &mut allows,
+                &exempt,
+                "D3",
+                rel,
+                t.line,
+                t.col,
+                format!(
+                    "ambient RNG {text}; construct RNGs from the seeded \
+                     per-cell/per-tenant streams"
+                ),
+            );
+        }
+        if in_r1 {
+            if text == "."
+                && k + 2 < toks.len()
+                && (toks[k + 1].text == "unwrap" || toks[k + 1].text == "expect")
+                && toks[k + 2].text == "("
+            {
+                emit(
+                    &mut findings,
+                    &mut allows,
+                    &exempt,
+                    "R1",
+                    rel,
+                    toks[k + 1].line,
+                    toks[k + 1].col,
+                    format!(".{}() in a library decision path", toks[k + 1].text),
+                );
+            }
+            if R1_MACROS.contains(&text) && k + 1 < toks.len() && toks[k + 1].text == "!" {
+                emit(
+                    &mut findings,
+                    &mut allows,
+                    &exempt,
+                    "R1",
+                    rel,
+                    t.line,
+                    t.col,
+                    format!("{text}! in a library decision path"),
+                );
+            }
+        }
+        if in_n1 && text == "as" && k + 1 < toks.len() {
+            let ty = toks[k + 1].text.as_str();
+            if N1_TYPES.contains(&ty) {
+                emit(
+                    &mut findings,
+                    &mut allows,
+                    &exempt,
+                    "N1",
+                    rel,
+                    t.line,
+                    t.col,
+                    format!("truncating cast `as {ty}` on page-index arithmetic"),
+                );
+            }
+        }
+    }
+
+    for (line, list) in &allows {
+        for a in list {
+            if !a.used {
+                findings.push(Finding {
+                    rule: "AU",
+                    severity: Severity::Warning,
+                    file: rel.to_string(),
+                    line: *line,
+                    col: 1,
+                    message: format!("unused audit-allow({})", a.rule),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// The audit result over a tree: findings sorted by span, plus the
+/// error/warning tallies the exit code keys on.
+pub struct AuditOutcome {
+    pub findings: Vec<Finding>,
+    pub errors: usize,
+    pub warnings: usize,
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        entries.push(entry.map_err(|e| format!("{}: {e}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` (recursively, deterministic
+/// order) and aggregate the findings.
+pub fn run(root: &Path) -> Result<AuditOutcome, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        findings.extend(scan_file(&rel, &src));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+    let errors = findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warnings = findings.len() - errors;
+    Ok(AuditOutcome { findings, errors, warnings })
+}
+
+/// Render the outcome as a [`BaselineDoc`] (the `BENCH_*.json`
+/// envelope), so CI can gate "zero new violations" against a committed
+/// baseline through the same comparator as `bench-check`. Per-rule
+/// error counts (and the malformed-allow count under `rule/AA`) gate
+/// exactly; warnings are info-kind.
+pub fn to_baseline_doc(out: &AuditOutcome) -> BaselineDoc {
+    let mut doc = BaselineDoc::new("audit", "full");
+    doc.put("findings/errors", out.errors as f64, MetricKind::Exact);
+    doc.put("findings/warnings", out.warnings as f64, MetricKind::Info);
+    let count = |rule: &str| out.findings.iter().filter(|f| f.rule == rule).count() as f64;
+    for r in RULES {
+        doc.put(&format!("rule/{}", r.id), count(r.id), MetricKind::Exact);
+    }
+    doc.put("rule/AA", count("AA"), MetricKind::Exact);
+    doc.put("rule/AU", count("AU"), MetricKind::Info);
+    for f in &out.findings {
+        doc.notes.push(f.render());
+    }
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn errs(rel: &str, src: &str) -> Vec<String> {
+        scan_file(rel, src)
+            .into_iter()
+            .filter(|f| f.severity == Severity::Error)
+            .map(|f| f.render())
+            .collect()
+    }
+
+    #[test]
+    fn d1_scoped_to_result_affecting_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(errs("vm/x.rs", src).len(), 1);
+        assert_eq!(errs("report/x.rs", src).len(), 0);
+        assert!(errs("vm/x.rs", src)[0].starts_with("vm/x.rs:1:23: error [D1]"));
+    }
+
+    #[test]
+    fn d2_allowlist_and_string_immunity() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(errs("policies/x.rs", src).len(), 1);
+        assert_eq!(errs("exec/mod.rs", src).len(), 0);
+        assert_eq!(errs("bench_harness/perf.rs", src).len(), 0);
+        // the token inside a string literal is not a finding
+        assert_eq!(errs("policies/x.rs", "let s = \"Instant::now()\";\n").len(), 0);
+    }
+
+    #[test]
+    fn d3_everywhere() {
+        assert_eq!(errs("report/x.rs", "let r = thread_rng();\n").len(), 1);
+    }
+
+    #[test]
+    fn r1_calls_and_macros_scoped() {
+        let src = "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"b\"); unreachable!() }\n";
+        assert_eq!(errs("tenants/x.rs", src).len(), 4);
+        assert_eq!(errs("report/x.rs", src).len(), 0);
+        // field access / non-call mentions don't match
+        assert_eq!(errs("tenants/x.rs", "let a = b.unwrap_or(0);\n").len(), 0);
+    }
+
+    #[test]
+    fn n1_narrow_casts_only() {
+        assert_eq!(errs("vm/x.rs", "let a = b as u32;\n").len(), 1);
+        assert_eq!(errs("vm/x.rs", "let a = b as u64 + c as usize as u64;\n").len(), 0);
+        assert_eq!(errs("mem/x.rs", "let a = b as u32;\n").len(), 0);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod t { fn b() { y.unwrap(); } }\n";
+        let e = errs("vm/x.rs", src);
+        assert_eq!(e.len(), 1, "{e:?}");
+        assert!(e[0].starts_with("vm/x.rs:1:"), "{}", e[0]);
+    }
+
+    #[test]
+    fn allow_same_line_and_line_above() {
+        let same = "let a = b as u32; // audit-allow(N1): bounded by construction\n";
+        assert_eq!(errs("vm/x.rs", same).len(), 0);
+        let above = "// audit-allow(N1): bounded by construction\nlet a = b as u32;\n";
+        assert_eq!(errs("vm/x.rs", above).len(), 0);
+        // the allow only covers its own rule: the R1 violation stands
+        // and the unmatched N1 allow downgrades to an unused warning
+        let wrong = "let a = b.unwrap(); // audit-allow(N1): wrong rule\n";
+        let all = scan_file("vm/x.rs", wrong);
+        let e: Vec<&Finding> = all.iter().filter(|f| f.severity == Severity::Error).collect();
+        assert_eq!(e.len(), 1, "{all:?}");
+        assert_eq!(e[0].rule, "R1");
+        assert!(all.iter().any(|f| f.rule == "AU"), "{all:?}");
+    }
+
+    #[test]
+    fn prose_mentions_are_not_directives() {
+        let fs = scan_file("vm/x.rs", "// see audit-allow(N1): syntax docs in DESIGN.md\n");
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn allow_requires_reason_and_known_rule() {
+        let e = errs("vm/x.rs", "// audit-allow(N1)\nlet a = b as u32;\n");
+        assert_eq!(e.len(), 2, "{e:?}"); // AA (no reason) + uncovered N1
+        assert!(e.iter().any(|m| m.contains("[AA]")), "{e:?}");
+        let e = errs("vm/x.rs", "// audit-allow(Z9): nonsense\n");
+        assert_eq!(e.len(), 1, "{e:?}");
+        assert!(e[0].contains("unknown rule"), "{}", e[0]);
+    }
+
+    #[test]
+    fn unused_allow_is_a_warning_not_an_error() {
+        let fs = scan_file("vm/x.rs", "// audit-allow(N1): nothing here needs it\n");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].severity, Severity::Warning);
+        assert_eq!(fs[0].rule, "AU");
+    }
+
+    #[test]
+    fn baseline_doc_shape() {
+        let out = AuditOutcome { findings: Vec::new(), errors: 0, warnings: 0 };
+        let doc = to_baseline_doc(&out);
+        assert_eq!(doc.bench, "audit");
+        assert_eq!(doc.metrics["findings/errors"].value, 0.0);
+        assert_eq!(doc.metrics["rule/D1"].kind, MetricKind::Exact);
+        assert_eq!(doc.metrics["rule/AU"].kind, MetricKind::Info);
+        // zero-violation doc gates: 7 exact metrics (5 rules + AA + total)
+        assert_eq!(doc.compared_len(), 7);
+    }
+}

@@ -271,6 +271,23 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// Calibrated migration-bandwidth share (DESIGN.md §9). 0.25 is the
+    /// smallest share in the `make share-sweep` grid {1.0, 0.5, 0.25,
+    /// 0.1} whose per-epoch budget still covers HyPlacer's own 512 MiB
+    /// decision cap: at the paper machine's 4.6 GB/s PM-write ceiling
+    /// and 2 MiB pages, `budget_moves` gives ⌊0.25 · 4.6 GB/s · 1 s /
+    /// 2 MiB⌋ = 548 page-moves, above the 512-move worst case (256
+    /// pages, all exchanges at 2 moves each), so every plan drains in
+    /// its submission epoch and steady-state placement matches the
+    /// unthrottled run — while a 0.1 share (219 moves) forces
+    /// carry-over even for a plain 256-page plan. It is deliberately
+    /// NOT the [`Default`]: `migrate_share` feeds the sweep cell-key
+    /// fingerprint (only when != 1.0), so changing the default would
+    /// re-key every committed checkpoint. Opt in per run via
+    /// `--migrate-share`, `sim.migrate_share`, or
+    /// `--migrate-share-for 'PAT=0.25'`.
+    pub const CALIBRATED_MIGRATE_SHARE: f64 = 0.25;
+
     pub fn apply_doc(&mut self, doc: &Doc) {
         if let Some(v) = doc.f64("sim.epoch_secs") {
             self.epoch_secs = v;
@@ -603,6 +620,17 @@ mod tests {
         assert!(CellOverride::parse_share_rule("*-L=1.5").is_err());
         assert!(CellOverride::parse_share_rule("*-L=nan").is_err());
         assert!(CellOverride::parse_share_rule("=0.5").is_err());
+    }
+
+    #[test]
+    fn calibrated_share_is_throttled_and_leaves_legacy_default_alone() {
+        // in the CLI/config domain (0, 1] and genuinely throttled
+        let c = SimConfig::CALIBRATED_MIGRATE_SHARE;
+        assert!(c > 0.0 && c < 1.0);
+        // the default stays unthrottled: migrate_share feeds the cell-key
+        // fingerprint (only when != 1.0), so a default flip would re-key
+        // every committed checkpoint
+        assert_eq!(SimConfig::default().migrate_share, 1.0);
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //!
 //! [`Simulation`]: crate::coordinator::Simulation
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -277,7 +277,7 @@ impl SweepSpec {
             return Err("sweep has no seeds".to_string());
         }
         let dup = |names: &[String]| -> Option<String> {
-            let mut seen = HashSet::new();
+            let mut seen = BTreeSet::new();
             names
                 .iter()
                 .find(|n| !seen.insert(n.to_ascii_lowercase()))
@@ -293,7 +293,7 @@ impl SweepSpec {
         if let Some(d) = dup(&mnames) {
             return Err(format!("duplicate machine {d:?} in sweep axes"));
         }
-        let mut seen_seeds = HashSet::new();
+        let mut seen_seeds = BTreeSet::new();
         for &s in &self.seeds {
             if !seen_seeds.insert(s) {
                 return Err(format!("duplicate seed {s} in sweep axes"));
@@ -362,9 +362,9 @@ impl SweepSpec {
     ) -> Result<SweepOutcome, String> {
         self.validate()?;
         let cells = self.cells();
-        let cache: HashMap<u64, &CellResult> = match prior {
+        let cache: BTreeMap<u64, &CellResult> = match prior {
             Some(p) => p.results.iter().map(|c| (c.key, c)).collect(),
-            None => HashMap::new(),
+            None => BTreeMap::new(),
         };
         let todo: Vec<&SweepCell> =
             cells.iter().filter(|c| !cache.contains_key(&c.key)).collect();
@@ -513,8 +513,8 @@ impl SweepRun {
     /// merged checkpoint the current run's cells come first, so fresh
     /// cells always normalize against the fresh baseline, never a stale
     /// prior-config one appended by [`SweepRun::merged_with`].
-    fn baselines(&self) -> HashMap<BaselineKey<'_>, &CellResult> {
-        let mut map: HashMap<BaselineKey<'_>, &CellResult> = HashMap::new();
+    fn baselines(&self) -> BTreeMap<BaselineKey<'_>, &CellResult> {
+        let mut map: BTreeMap<BaselineKey<'_>, &CellResult> = BTreeMap::new();
         for c in self.results.iter().filter(|c| c.sim.policy == "adm-default") {
             map.entry((c.machine.as_str(), c.sim.workload.as_str(), c.seed)).or_insert(c);
         }
@@ -522,7 +522,7 @@ impl SweepRun {
     }
 
     fn baseline_of<'a>(
-        baselines: &HashMap<BaselineKey<'a>, &'a CellResult>,
+        baselines: &BTreeMap<BaselineKey<'a>, &'a CellResult>,
         cell: &'a CellResult,
     ) -> Option<&'a CellResult> {
         baselines
@@ -552,7 +552,7 @@ impl SweepRun {
     pub fn merged_with(&self, prior: Option<&SweepRun>) -> SweepRun {
         let mut results = self.results.clone();
         if let Some(p) = prior {
-            let have: HashSet<u64> = results.iter().map(|c| c.key).collect();
+            let have: BTreeSet<u64> = results.iter().map(|c| c.key).collect();
             for c in &p.results {
                 if !have.contains(&c.key) {
                     results.push(c.clone());
@@ -611,7 +611,6 @@ impl SweepRun {
     /// only; recompute from the per-cell metrics when comparing across
     /// generations.
     pub fn to_json(&self) -> Json {
-        use std::collections::BTreeMap;
         let num = Json::Num;
         let baselines = self.baselines();
         let cells: Vec<Json> = self

@@ -32,6 +32,7 @@ pub mod tenants;
 pub mod report;
 pub mod exec;
 pub mod bench_harness;
+pub mod analysis;
 
 pub use config::MachineConfig;
 pub use coordinator::{Simulation, SimResult};

@@ -17,6 +17,7 @@
 
 use std::process::ExitCode;
 
+use hyplacer::analysis;
 use hyplacer::bench_harness::baseline::{self, BaselineDoc};
 use hyplacer::bench_harness::{
     compare, fig2, fig3, fig5, fig_gap, fig_mix, perf, tables, BenchOpts, Report,
@@ -64,6 +65,8 @@ struct Args {
     current: Option<String>,
     /// bench-check: relative tolerance for ratio metrics.
     tolerance: f64,
+    /// audit: scan root (default rust/src).
+    root: Option<String>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -89,6 +92,7 @@ fn parse_args() -> Result<Args, String> {
         baseline: None,
         current: None,
         tolerance: 0.25,
+        root: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -122,6 +126,7 @@ fn parse_args() -> Result<Args, String> {
             }
             "--baseline" => args.baseline = Some(take("--baseline")?),
             "--current" => args.current = Some(take("--current")?),
+            "--root" => args.root = Some(take("--root")?),
             "--tolerance" => {
                 args.tolerance =
                     take("--tolerance")?.parse().map_err(|e| format!("--tolerance: {e}"))?
@@ -177,6 +182,13 @@ COMMANDS
             [--quick] [--json DIR]  -> DIR/BENCH_hotpath.json + BENCH_sweep.json
   bench-check  gate fresh metrics against committed BENCH_*.json baselines
             [--baseline F[,F...] --current DIR --tolerance 0.25]
+  audit     determinism/robustness static analysis over the library
+            source (DESIGN.md §11 rule table: D1 ordered collections,
+            D2 wall-clock, D3 seeded RNG, R1 no-panic decision paths,
+            N1 truncating page-index casts; `audit-allow(rule): reason`
+            escapes must justify themselves). Exits nonzero on any
+            error-severity finding.
+            [--json FILE] [--baseline AUDIT_baseline.json] [--root DIR]
   all       every figure and table in sequence
 
 FLAGS
@@ -187,6 +199,7 @@ FLAGS
   --json FILE    (sweep) also write full results as JSON
                  (compare) machine-readable comparison incl. queue telemetry
                  (bench) directory for the emitted BENCH_*.json docs
+                 (audit) machine-readable findings doc (BENCH_*.json shape)
   --out FILE     (sweep, fig5/6/7, fig-gap, fig-mix, all) checkpoint
                  results to FILE (atomic rewrite)
   --resume       with --out: load FILE first and execute only cells whose
@@ -202,9 +215,11 @@ FLAGS
                  (sweep) per-cell migrate-share overrides by workload
                  pattern, e.g. '*-L=0.1' throttles L-size cells
   --baseline F   (bench-check) committed baseline file(s), comma list
+                 (audit) committed AUDIT_baseline.json to gate against
   --current DIR  (bench-check) compare against DIR/BENCH_*.json from a
                  fresh `bench --json DIR` run (default: recompute live)
   --tolerance T  (bench-check) relative tolerance for ratio metrics (0.25)
+  --root DIR     (audit) scan root (default rust/src)
   --seeds A,B    (sweep) seed axis — replicates the grid per seed
   --machines M   (sweep) machine axis: paper and/or D:P channel splits,
                  e.g. paper,3:3,2:4,1:5
@@ -612,6 +627,57 @@ fn cmd_bench_check(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `hyplacer audit`: the determinism/robustness static-analysis pass
+/// (DESIGN.md §11) over the library source. Prints every finding as
+/// `file:line:col: severity [rule] message`; exits nonzero on any
+/// error-severity finding, or on per-rule count drift from a committed
+/// baseline (`--baseline`, compared through the bench-check machinery
+/// at zero tolerance).
+fn cmd_audit(args: &Args) -> Result<(), String> {
+    let root = match &args.root {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let local = std::path::PathBuf::from("rust/src");
+            if local.is_dir() {
+                local
+            } else {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+            }
+        }
+    };
+    let out = analysis::run(&root)?;
+    for f in &out.findings {
+        println!("{}", f.render());
+    }
+    println!(
+        "audit {}: {} error(s), {} warning(s)",
+        root.display(),
+        out.errors,
+        out.warnings
+    );
+    let doc = analysis::to_baseline_doc(&out);
+    if let Some(path) = &args.json {
+        doc.save(path)?;
+        println!("wrote {path}");
+    }
+    let mut baseline_fails = 0usize;
+    if let Some(path) = &args.baseline {
+        let base = BaselineDoc::load(path)?;
+        let fails = baseline::compare(&base, &doc, 0.0);
+        for f in &fails {
+            eprintln!("audit baseline {path}: FAIL {f}");
+        }
+        baseline_fails = fails.len();
+    }
+    if out.errors > 0 {
+        return Err(format!("{} audit violation(s)", out.errors));
+    }
+    if baseline_fails > 0 {
+        return Err(format!("{baseline_fails} audit-baseline regression(s)"));
+    }
+    Ok(())
+}
+
 /// `hyplacer all`: every figure and table. With `--out F` the fig5/7,
 /// fig-gap and fig-mix matrices all accumulate into one checkpoint
 /// (each loads the prior file and merges its rewrite; `--resume`
@@ -700,6 +766,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "bench-check" => cmd_bench_check(&args),
+        "audit" => cmd_audit(&args),
         "all" => cmd_all(&args, &opts, &machine),
         other => Err(format!("unknown command {other:?}\n\n{HELP}")),
     };

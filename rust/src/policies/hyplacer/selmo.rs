@@ -109,7 +109,7 @@ fn merge_ascending(
     pages.clear();
     bits.clear();
     let (mut ai, mut bi) = (0usize, 0usize);
-    while ai < a_pages.len() || bi < b_pages.len() {
+    loop {
         let (page, bit) = match (a_pages.get(ai), b_pages.get(bi)) {
             (Some(&a), Some(&b)) if a < b => {
                 ai += 1;
@@ -132,7 +132,8 @@ fn merge_ascending(
                 bi += 1;
                 (b, b_bit(bi - 1))
             }
-            (None, None) => unreachable!("loop condition"),
+            // both streams drained: the merge is complete
+            (None, None) => break,
         };
         pages.push(page);
         bits.push(bit);

@@ -53,9 +53,7 @@ fn hit_fractions_into(
 ) {
     order.clear();
     order.extend(0..regions.len());
-    order.sort_by(|&a, &b| {
-        regions[b].density().partial_cmp(&regions[a].density()).unwrap()
-    });
+    order.sort_by(|&a, &b| regions[b].density().total_cmp(&regions[a].density()));
     out.clear();
     out.resize(regions.len(), 0.0);
     let mut room = dram_pages as f64;

@@ -443,6 +443,10 @@ impl MultiSimulation {
             let page = base + local;
             let want = self.policy.place_new(page, &self.pt);
             if !self.pt.allocate(page, want) && !self.pt.allocate(page, want.other()) {
+                // validate_on rejects tenant sets whose combined footprint
+                // exceeds machine capacity before any mapping happens, so
+                // both allocate calls failing here is impossible.
+                // audit-allow(R1): unreachable by construction (validate_on)
                 panic!(
                     "tenant {ti} footprint {} pages exceeds remaining machine capacity \
                      ({} DRAM + {} PM pages free)",
@@ -631,6 +635,7 @@ impl MultiSimulation {
                     |rng, page| {
                         tenant_active += 1;
                         let write = rng.chance(p_write_given_touch);
+                        // audit-allow(N1): page < pt.len(), a u32 by construction
                         pt.touch(page as u32, write);
                     },
                 );
@@ -641,6 +646,7 @@ impl MultiSimulation {
                     p_window,
                     |rng, page| {
                         let wwrite = rng.chance(p_wwrite_given);
+                        // audit-allow(N1): page < pt.len(), a u32 by construction
                         pt.touch_window(page as u32, wwrite);
                     },
                 );

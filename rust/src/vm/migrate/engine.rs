@@ -389,6 +389,23 @@ mod tests {
     }
 
     #[test]
+    fn calibrated_share_covers_the_hyplacer_decision_cap() {
+        use crate::config::{HyPlacerConfig, SimConfig};
+        // DESIGN.md §9 calibration: the chosen share must drain HyPlacer's
+        // largest possible plan (max_migrate_bytes, worst case all
+        // exchanges at 2 moves each) within one monitor period — so
+        // steady-state placement matches the unthrottled run — while the
+        // next share down in the sweep grid must not (the knee).
+        let cfg = MachineConfig::paper_machine();
+        let epoch = SimConfig::default().epoch_secs;
+        let cap_pages = HyPlacerConfig::default().max_migrate_bytes / cfg.page_bytes;
+        let worst_moves = 2 * cap_pages;
+        let c = SimConfig::CALIBRATED_MIGRATE_SHARE;
+        assert!(MigrationEngine::budget_moves(&cfg, c, epoch) >= worst_moves);
+        assert!(MigrationEngine::budget_moves(&cfg, 0.1, epoch) < cap_pages);
+    }
+
+    #[test]
     fn budget_caps_epoch_moves_and_carry_over_drains() {
         let (mut pt, cfg) = setup();
         let share = share_for_budget(&cfg, 3);

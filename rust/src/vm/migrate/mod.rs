@@ -60,7 +60,7 @@ impl MigrationPlan {
     /// execution order: demote, exchange, promote — first reference
     /// wins); this standalone check is for tests and policy debugging.
     pub fn validate(&self) -> Result<(), String> {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         let mut check = |page: PageId, role: &str| -> Result<(), String> {
             if !seen.insert(page) {
                 return Err(format!("page {page} referenced more than once ({role})"));

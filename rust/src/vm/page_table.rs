@@ -101,6 +101,7 @@ impl ActivityIndex {
 
     /// Dense rebuild from flag bytes (verification only).
     fn build(flags: &[u8]) -> Self {
+        // audit-allow(N1): one flag byte per page; the page count is a u32 by construction
         let mut idx = Self::new(flags.len() as u32);
         for (i, &f) in flags.iter().enumerate() {
             if f & ALL_BITS != 0 {
@@ -255,6 +256,7 @@ impl PageTable {
     }
 
     pub fn len(&self) -> u32 {
+        // audit-allow(N1): flags.len() equals the u32 page count passed to new.
         self.flags.len() as u32
     }
     pub fn is_empty(&self) -> bool {
@@ -582,6 +584,7 @@ impl PageTable {
         let mut total = 0u64;
         for wi in lo_w..=hi_w {
             let mut m = self.query_word(wi, q);
+            // audit-allow(N1): wi <= (len - 1) / 64 with len a u32, so wi * 64 fits u32
             let base = (wi as u32) * 64;
             if base < lo {
                 m &= !0u64 << (lo - base);
@@ -647,6 +650,7 @@ impl Iterator for MatchingPages<'_> {
         if self.word != 0 {
             let b = self.word.trailing_zeros();
             self.word &= self.word - 1;
+            // audit-allow(N1): wi - 1 indexes a leaf word of a u32-page table.
             return Some(((self.wi - 1) as u32) * 64 + b);
         }
         let nw = self.pt.num_index_words();
@@ -654,6 +658,7 @@ impl Iterator for MatchingPages<'_> {
         self.wi = w + 1;
         let b = m.trailing_zeros();
         self.word = m & (m - 1);
+        // audit-allow(N1): w is a leaf word index of a u32-page table.
         Some((w as u32) * 64 + b)
     }
 }

@@ -159,22 +159,26 @@ impl SparseWalker {
         let start = (self.cursor as u64) % n;
         let first_hi = n.min(start + span);
         let mut matches = 0usize;
-        if let Some(stopped) =
-            scan_segment(pt, start as u32, first_hi as u32, q, &mut matches, &mut f)
-        {
+        // audit-allow(N1): start and first_hi are both <= n = pt.len(), a u32
+        let (seg_lo, seg_hi) = (start as u32, first_hi as u32);
+        if let Some(stopped) = scan_segment(pt, seg_lo, seg_hi, q, &mut matches, &mut f) {
             self.visited += matches as u64;
+            // audit-allow(N1): the cursor is reduced mod n, so it fits u32.
             self.cursor = ((stopped as u64 + 1) % n) as u32;
             return matches;
         }
         let rem = span - (first_hi - start);
         if rem > 0 {
+            // audit-allow(N1): rem < span <= n, a u32 page count.
             if let Some(stopped) = scan_segment(pt, 0, rem as u32, q, &mut matches, &mut f) {
                 self.visited += matches as u64;
+                // audit-allow(N1): reduced mod n, so it fits u32.
                 self.cursor = ((stopped as u64 + 1) % n) as u32;
                 return matches;
             }
         }
         self.visited += matches as u64;
+        // audit-allow(N1): reduced mod n, so it fits u32.
         self.cursor = ((start + span) % n) as u32;
         matches
     }
@@ -208,6 +212,7 @@ where
     let mut wi = (lo / 64) as usize;
     let hi_words = ((hi - 1) / 64) as usize + 1;
     while let Some((w, mut m)) = pt.next_match_word(wi, hi_words, q) {
+        // audit-allow(N1): w < hi_words <= ceil(u32::MAX / 64) words.
         let base = (w as u32) * 64;
         if base < lo {
             m &= !0u64 << (lo - base);

@@ -1,0 +1,99 @@
+//! Integration tests for `hyplacer audit`: golden fixtures per rule
+//! (violating / allowed / clean trees), span accuracy, baseline-doc
+//! counts, and the tree-wide gate that committed `rust/src` stays
+//! audit-clean.
+
+use std::path::{Path, PathBuf};
+
+use hyplacer::analysis::{self, Severity};
+use hyplacer::bench_harness::baseline;
+
+fn fixture(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/audit").join(sub)
+}
+
+fn rendered(out: &analysis::AuditOutcome) -> Vec<String> {
+    out.findings.iter().map(|f| f.render()).collect()
+}
+
+#[test]
+fn violations_fixture_trips_every_rule_with_exact_spans() {
+    let out = analysis::run(&fixture("violations")).expect("fixture scan");
+    let got: Vec<(String, u32, u32, &str)> =
+        out.findings.iter().map(|f| (f.file.clone(), f.line, f.col, f.rule)).collect();
+    let want: Vec<(String, u32, u32, &str)> = [
+        ("d3.rs", 2, 23, "D3"),
+        ("policies/d2.rs", 1, 16, "D2"),
+        ("policies/d2.rs", 3, 19, "D2"),
+        ("policies/d2.rs", 4, 5, "D2"),
+        ("sim/d1.rs", 1, 23, "D1"),
+        ("sim/d1.rs", 3, 19, "D1"),
+        ("sim/d1.rs", 4, 5, "D1"),
+        ("vm/bad_allow.rs", 1, 1, "AA"),
+        ("vm/bad_allow.rs", 3, 10, "N1"),
+        ("vm/n1.rs", 2, 10, "N1"),
+        ("vm/r1.rs", 2, 27, "R1"),
+        ("vm/r1.rs", 4, 9, "R1"),
+    ]
+    .into_iter()
+    .map(|(f, l, c, r)| (f.to_string(), l, c, r))
+    .collect();
+    assert_eq!(got, want);
+    assert_eq!(out.errors, 12);
+    assert_eq!(out.warnings, 0);
+    assert!(out.findings.iter().all(|f| f.severity == Severity::Error));
+}
+
+#[test]
+fn findings_render_in_editor_span_form() {
+    let out = analysis::run(&fixture("violations")).expect("fixture scan");
+    assert_eq!(
+        out.findings[9].render(),
+        "vm/n1.rs:2:10: error [N1] truncating cast `as u32` on page-index arithmetic"
+    );
+}
+
+#[test]
+fn allowed_fixture_is_clean_including_warnings() {
+    let out = analysis::run(&fixture("allowed")).expect("fixture scan");
+    assert!(out.findings.is_empty(), "{:?}", rendered(&out));
+}
+
+#[test]
+fn clean_fixture_has_no_findings() {
+    let out = analysis::run(&fixture("clean")).expect("fixture scan");
+    assert!(out.findings.is_empty(), "{:?}", rendered(&out));
+}
+
+#[test]
+fn baseline_doc_counts_per_rule() {
+    let out = analysis::run(&fixture("violations")).expect("fixture scan");
+    let doc = analysis::to_baseline_doc(&out);
+    assert_eq!(doc.bench, "audit");
+    assert_eq!(doc.metrics["findings/errors"].value, 12.0);
+    assert_eq!(doc.metrics["rule/D1"].value, 3.0);
+    assert_eq!(doc.metrics["rule/D2"].value, 3.0);
+    assert_eq!(doc.metrics["rule/D3"].value, 1.0);
+    assert_eq!(doc.metrics["rule/R1"].value, 2.0);
+    assert_eq!(doc.metrics["rule/N1"].value, 3.0);
+    assert_eq!(doc.metrics["rule/AA"].value, 1.0);
+    assert_eq!(doc.notes.len(), 12);
+}
+
+#[test]
+fn audit_baseline_gates_new_violations() {
+    let clean = analysis::to_baseline_doc(&analysis::run(&fixture("clean")).expect("scan"));
+    let dirty = analysis::to_baseline_doc(&analysis::run(&fixture("violations")).expect("scan"));
+    assert!(baseline::compare(&clean, &clean, 0.0).is_empty());
+    let fails = baseline::compare(&clean, &dirty, 0.0);
+    assert!(!fails.is_empty(), "a violating tree must fail the zero baseline");
+}
+
+#[test]
+fn committed_tree_is_audit_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let out = analysis::run(&root).expect("tree scan");
+    let r = rendered(&out);
+    assert_eq!(out.errors, 0, "audit errors in rust/src: {r:?}");
+    assert_eq!(out.warnings, 0, "unused allows in rust/src: {r:?}");
+}

@@ -1,0 +1,12 @@
+pub fn id(x: u32) -> u32 {
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_and_casts_are_fine_in_tests() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap() as u8, 3);
+    }
+}

@@ -1,0 +1,8 @@
+pub fn fold(page: u64) -> u32 {
+    page as u32 // audit-allow(N1): bounded by the table's u32 page count
+}
+
+pub fn fold_above(page: u64) -> u32 {
+    // audit-allow(N1): bounded by the table's u32 page count
+    page as u32
+}

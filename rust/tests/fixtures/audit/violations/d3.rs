@@ -1,0 +1,4 @@
+pub fn seed() -> u64 {
+    let mut r = rand::thread_rng();
+    r.gen()
+}

@@ -1,0 +1,4 @@
+// audit-allow(N1)
+pub fn fold(page: u64) -> u32 {
+    page as u32
+}

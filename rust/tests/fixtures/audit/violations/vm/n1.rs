@@ -1,0 +1,3 @@
+pub fn fold(page: u64) -> u32 {
+    page as u32
+}

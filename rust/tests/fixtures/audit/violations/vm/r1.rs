@@ -1,0 +1,7 @@
+pub fn pick(v: &[u32]) -> u32 {
+    let first = v.first().unwrap();
+    if *first == 0 {
+        panic!("zero");
+    }
+    *first
+}
