@@ -77,6 +77,24 @@ def test_hotpath_carries_the_migration_engine_metrics():
     assert metrics["migrate/throttle_respected"]["value"] == 1
 
 
+def test_hotpath_carries_the_mix_fairness_metrics():
+    # The per-tenant quota PR promoted the co-run fairness view to
+    # first-class hotpath metrics: unfairness and weighted speedup of a
+    # hard-capped two-tenant mix under hyplacer-qos, plus the engine's
+    # over-quota rejection counter. They stay info-kind until the first
+    # reference-runner recapture (the collector already emits the two
+    # ratios as gated — same upgrade path as the migrate/* metrics).
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    for name in (
+        "mix/unfairness",
+        "mix/weighted_speedup",
+        "mix/over_quota_rejections",
+    ):
+        assert name in metrics, f"missing {name}"
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

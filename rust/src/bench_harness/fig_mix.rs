@@ -21,11 +21,22 @@ use crate::util::geomean;
 
 use super::{BenchOpts, Report};
 
+/// The quota antagonist: write-heavy IS-M (which stock HyPlacer's
+/// SWITCH mode happily feeds DRAM on write-intensity merit) hard-capped
+/// at 5000 of the paper machine's 16384 DRAM pages, co-run with
+/// latency-sensitive PR-M holding weight 2 and the larger soft share.
+/// `tests/tenants.rs` (qos_quotas_improve_unfairness_on_the_antagonist_
+/// mix) pins that hyplacer-qos improves unfairness here without losing
+/// weighted speedup.
+pub const ANTAGONIST_MIX: &str = "is.M:5000/1+pr.M*2/2";
+
 /// The default co-run mix set: a write-heavy NPB tenant against a
 /// graph tenant (the contended-PM-write-ceiling case), two cache-
-/// unfriendly M tenants, and a staggered-arrival half-weight tenant
-/// landing on a warmed-up L run.
-pub const DEFAULT_MIXES: [&str; 3] = ["is.M+pr.M", "cg.M+bfs.M", "cg.L+is.S@8*0.5"];
+/// unfriendly M tenants, a staggered-arrival half-weight tenant
+/// landing on a warmed-up L run, and the hard-cap/soft-share quota
+/// antagonist ([`ANTAGONIST_MIX`]).
+pub const DEFAULT_MIXES: [&str; 4] =
+    ["is.M+pr.M", "cg.M+bfs.M", "cg.L+is.S@8*0.5", ANTAGONIST_MIX];
 
 /// What one fig-mix invocation did: the report, the merged run, and the
 /// executed/cached cell split (the CLI prints the machine-greppable

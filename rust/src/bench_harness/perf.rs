@@ -221,6 +221,31 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
         MetricKind::Exact,
     );
 
+    // --- multi-tenant fairness: a small hard-capped co-run under
+    // hyplacer-qos (cap + soft shares exercise the quota plumbing end
+    // to end). Unfairness and weighted speedup are deterministic
+    // simulated ratios — first-class gating metrics; the committed
+    // baseline carries them as info-kind until the reference runner's
+    // first recapture, after which they gate like every other ratio.
+    let mut sim_mix = SimConfig::default();
+    sim_mix.epochs = if quick { 10 } else { 24 };
+    sim_mix.warmup_epochs = 2;
+    let mix = crate::tenants::MixSpec::parse("cg.S:4000/1+mg.S/2").expect("bench mix parses");
+    let t0 = Instant::now();
+    let fair = crate::tenants::run_mix_with_solos(&cfg, &sim_mix, &mix, 0.05, || {
+        policies::by_name("hyplacer-qos", &cfg, &hp).expect("hyplacer-qos registered")
+    })
+    .expect("bench mix runs");
+    let mix_secs = t0.elapsed().as_secs_f64();
+    doc.put("mix/unfairness", fair.unfairness, MetricKind::Ratio);
+    doc.put("mix/weighted_speedup", fair.weighted_speedup, MetricKind::Ratio);
+    doc.put(
+        "mix/over_quota_rejections",
+        fair.corun.stats.migrate_over_quota_total() as f64,
+        MetricKind::Exact,
+    );
+    doc.put("host/mix_ms", mix_secs * 1e3, MetricKind::Info);
+
     doc.notes.push(
         "gating metrics are scale-free and deterministic (RNG draws, page counts, \
          simulated ratios); host/* timings are informational only"
@@ -351,6 +376,10 @@ mod tests {
         assert_eq!(a.metrics["migrate/stale_drop_ratio"].value, 0.0);
         assert!(a.metrics["migrate/queue_depth_peak"].value >= 0.0);
         assert!(a.metrics["migrate/deferred_ratio"].value >= 0.0);
+        // the fairness metrics of the capped co-run are well-formed
+        assert!(a.metrics["mix/unfairness"].value >= 1.0);
+        assert!(a.metrics["mix/weighted_speedup"].value > 0.0);
+        assert!(a.metrics["mix/over_quota_rejections"].value >= 0.0);
     }
 
     #[test]

@@ -229,14 +229,20 @@ FLAGS
   -w, --workload NAME   bt|ft|mg|cg|is (NPB) or pr|bfs (GAP) + -S/-M/-L
                         (default cg-M; sweep accepts a comma list and the
                         suite aliases \"npb\" / \"gap\" = whole suite at -M).
-                        A '+'-joined mix of TENANT[@ARRIVAL][*WEIGHT]
+                        A '+'-joined mix of
+                        TENANT[@ARRIVAL][*WEIGHT][:HARD_CAP][/SOFT_SHARE]
                         components ('.' = '-', e.g. 'is.M+pr.M@8*0.5')
                         co-runs tenants in one shared address space
-                        (run/compare/sweep/fig-mix)
+                        (run/compare/sweep/fig-mix). :HARD_CAP is a DRAM
+                        page ceiling the migration engine enforces
+                        (rejections counted as over_quota); /SOFT_SHARE
+                        weights hyplacer-qos's activation-budget split
   -p, --policy NAME     adm-default|memm|autonuma|memos|nimble|hyplacer|
-                        partitioned|interleave-<pct>   (default hyplacer;
-                        sweep accepts a comma list, or \"all\" for the
-                        Fig. 5 policy set)
+                        hyplacer-qos|partitioned|interleave-<pct>
+                        (default hyplacer; sweep accepts a comma list, or
+                        \"all\" for the Fig. 5 policy set. hyplacer-qos is
+                        the tenant-aware variant: identical to hyplacer
+                        unless the mix sets quotas)
 ";
 
 fn opts_from(args: &Args) -> BenchOpts {
@@ -366,6 +372,10 @@ fn cmd_run_mix(
     t.row(vec![
         "unfairness (max/min slowdown)".to_string(),
         format!("{:.3}", out.unfairness),
+    ]);
+    t.row(vec![
+        "over_quota (rejected promotions)".to_string(),
+        r.stats.migrate_over_quota_total().to_string(),
     ]);
     println!("{}", t.render());
     let mut per = Table::new(vec![

@@ -83,10 +83,26 @@ pub struct HyPlacer {
     epochs_since_probe: u32,
     /// Last decision (observability / tests).
     pub last_decision: Option<control::Decision>,
+    /// Tenant-aware QoS variant ("hyplacer-qos"): split the promotion
+    /// budget by soft-share weight and prefer over-quota tenants as
+    /// demotion victims. Every QoS branch is additionally gated on the
+    /// mix actually carrying quotas, so without quotas this variant is
+    /// bit-identical to stock HyPlacer (pinned by the lockstep test in
+    /// `tests/tenants.rs`).
+    qos: bool,
 }
 
 impl HyPlacer {
-    pub fn new(_m: &MachineConfig, cfg: HyPlacerConfig) -> Self {
+    pub fn new(m: &MachineConfig, cfg: HyPlacerConfig) -> Self {
+        Self::build(m, cfg, false)
+    }
+
+    /// The tenant-aware QoS variant (policy name "hyplacer-qos").
+    pub fn new_qos(m: &MachineConfig, cfg: HyPlacerConfig) -> Self {
+        Self::build(m, cfg, true)
+    }
+
+    fn build(_m: &MachineConfig, cfg: HyPlacerConfig, qos: bool) -> Self {
         let classifier: Box<dyn Classifier> = Box::new(NativeClassifier);
         let floor = cfg.hot_threshold as f32;
         HyPlacer {
@@ -110,6 +126,7 @@ impl HyPlacer {
             last_was_switch: false,
             epochs_since_probe: 0,
             last_decision: None,
+            qos,
         }
     }
 
@@ -144,7 +161,11 @@ impl HyPlacer {
 
 impl Policy for HyPlacer {
     fn name(&self) -> &'static str {
-        "hyplacer"
+        if self.qos {
+            "hyplacer-qos"
+        } else {
+            "hyplacer"
+        }
     }
 
     // place_new: trait default — ADM first-touch fill-DRAM-first; the
@@ -286,7 +307,83 @@ impl Policy for HyPlacer {
                 settled_demote: settled_dram.demote_score,
                 settled_promote: settled_pm.promote_score,
             };
-            let reply = self.selmo.page_find(ctx.pt, d.mode, count, &cand, 0.0);
+            // QoS gate: only the "hyplacer-qos" variant, and only when
+            // the mix actually sets quotas. Everything else takes the
+            // stock page_find call — the no-quota lockstep test pins
+            // that this variant is then bit-identical to stock.
+            let qos_tenants = if self.qos && ctx.tenants.iter().any(|t| t.has_quota()) {
+                Some(ctx.tenants)
+            } else {
+                None
+            };
+            let reply = match qos_tenants {
+                None => self.selmo.page_find(ctx.pt, d.mode, count, &cand, 0.0),
+                Some(tenants) => {
+                    // Victim preference: a tenant holding DRAM at/past
+                    // its hard cap, or past its soft-share slice of DRAM
+                    // capacity, is demoted from before anyone else.
+                    let dram_cap = ctx.cfg.dram_pages() as f64;
+                    let total_share: f64 = tenants.iter().map(|t| t.effective_share()).sum();
+                    let mut over: Vec<(PageId, PageId)> = Vec::new();
+                    for t in tenants {
+                        let used = ctx.pt.count_matching_in(
+                            t.base,
+                            t.base + t.pages,
+                            crate::vm::PlaneQuery::tier(crate::config::Tier::Dram),
+                        );
+                        let fair = dram_cap * t.effective_share() / total_share;
+                        let capped = t.hard_cap_pages.is_some_and(|c| used >= u64::from(c));
+                        if capped || used as f64 > fair {
+                            over.push((t.base, t.base + t.pages));
+                        }
+                    }
+                    let in_over = |p: PageId| over.iter().any(|&(lo, hi)| p >= lo && p < hi);
+                    // no tenant over (or all of them): stock victim order
+                    let filter: selmo::PageFilter<'_> =
+                        if over.is_empty() || over.len() == tenants.len() {
+                            None
+                        } else {
+                            Some(&in_over)
+                        };
+                    let mut reply =
+                        self.selmo.page_find_filtered(ctx.pt, d.mode, count, &cand, 0.0, filter);
+                    if matches!(d.mode, PageFindMode::Promote | PageFindMode::PromoteInt) {
+                        // Promotion budget split by soft-share weight:
+                        // floor allotments, remainder handed out in
+                        // tenant order (deterministic), then the reply
+                        // is trimmed hottest-first per tenant.
+                        let mut allot: Vec<usize> = tenants
+                            .iter()
+                            .map(|t| {
+                                (count as f64 * t.effective_share() / total_share).floor()
+                                    as usize
+                            })
+                            .collect();
+                        let mut left = count.saturating_sub(allot.iter().sum());
+                        for a in allot.iter_mut() {
+                            if left == 0 {
+                                break;
+                            }
+                            *a += 1;
+                            left -= 1;
+                        }
+                        reply.promote.retain(|&p| {
+                            match tenants
+                                .iter()
+                                .position(|t| p >= t.base && p < t.base + t.pages)
+                            {
+                                Some(ti) if allot[ti] > 0 => {
+                                    allot[ti] -= 1;
+                                    true
+                                }
+                                Some(_) => false,
+                                None => true, // unowned page: never budgeted
+                            }
+                        });
+                    }
+                    reply
+                }
+            };
             match d.mode {
                 PageFindMode::Switch => {
                     for (p, q) in reply.promote.iter().zip(reply.demote.iter()) {
@@ -514,6 +611,35 @@ mod tests {
         let mut h = HyPlacer::new(&m, hp);
         let plan = tick(&mut h, &m, &mut pt_empty, PcmonSnapshot::default(), 0);
         assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn qos_variant_is_stock_when_no_tenant_has_a_quota() {
+        // the unit-level half of the no-quota bit-identity contract
+        // (tests/tenants.rs pins the full-simulation lockstep): with no
+        // tenant table at all, every qos branch is skipped and the two
+        // variants plan identical migrations from identical state
+        let (m, hp, mut pt_a) = setup(100, 16);
+        let (_, hp2, mut pt_b) = setup(100, 16);
+        let mut stock = HyPlacer::new(&m, hp);
+        let mut qos = HyPlacer::new_qos(&m, hp2);
+        assert_eq!(stock.name(), "hyplacer");
+        assert_eq!(qos.name(), "hyplacer-qos");
+        for p in 0..8 {
+            pt_a.allocate(p, Tier::Pm);
+            pt_b.allocate(p, Tier::Pm);
+        }
+        for e in 0..4 {
+            for p in 0..4 {
+                pt_a.touch_window(p, p == 1);
+                pt_b.touch_window(p, p == 1);
+            }
+            let a = tick(&mut stock, &m, &mut pt_a, PcmonSnapshot::default(), e);
+            let b = tick(&mut qos, &m, &mut pt_b, PcmonSnapshot::default(), e);
+            assert_eq!(a.promote, b.promote, "epoch {e}: promote diverged");
+            assert_eq!(a.demote, b.demote, "epoch {e}: demote diverged");
+            assert_eq!(a.exchange, b.exchange, "epoch {e}: exchange diverged");
+        }
     }
 
     #[test]

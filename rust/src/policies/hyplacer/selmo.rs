@@ -169,6 +169,11 @@ pub fn merge_candidates(
 /// SWITCH pairs are formed only from actually plannable pages. With an
 /// idle queue (always true at `migrate_share = 1.0`) no QUEUED bit
 /// exists during a tick, so selection is unchanged.
+/// Optional page predicate restricting a selection pass to a subset of
+/// pages (the QoS victim filter). `None` must execute the exact stock
+/// code sequence — every quota-free run goes through `None`.
+pub type PageFilter<'a> = Option<&'a dyn Fn(PageId) -> bool>;
+
 #[allow(clippy::too_many_arguments)]
 fn select_into(
     topk: &mut TopK,
@@ -179,12 +184,18 @@ fn select_into(
     cand_pages: &[PageId],
     cand_scores: &[f32],
     pool_score: f32,
+    filter: PageFilter<'_>,
     out: &mut Vec<PageId>,
 ) {
     topk.begin(k, floor);
     for (i, &page) in cand_pages.iter().enumerate() {
         if pt.flags(page).queued() {
             continue; // move already in flight — never re-planned
+        }
+        if let Some(f) = filter {
+            if !f(page) {
+                continue;
+            }
         }
         topk.offer(page, cand_scores[i]);
     }
@@ -199,6 +210,11 @@ fn select_into(
             }
             if ci < cand_pages.len() && cand_pages[ci] == page {
                 continue; // already offered with its own score
+            }
+            if let Some(f) = filter {
+                if !f(page) {
+                    continue; // filtered pool pages don't end the draw
+                }
             }
             if !topk.offer(page, pool_score) {
                 break; // later pool pages rank even lower
@@ -244,6 +260,8 @@ pub struct SelMo {
     /// Reusable selection scratch (no per-tick heap allocation).
     promote_topk: TopK,
     demote_topk: TopK,
+    /// Second-pass scratch for filtered (QoS) victim selection.
+    filter_scratch: Vec<PageId>,
 }
 
 impl SelMo {
@@ -258,6 +276,7 @@ impl SelMo {
             intensive_floor,
             promote_topk: TopK::new(),
             demote_topk: TopK::new(),
+            filter_scratch: Vec::new(),
         }
     }
 
@@ -333,6 +352,56 @@ impl SelMo {
     /// zero benefit.
     pub const SWITCH_MARGIN: f32 = 0.10;
 
+    /// Demote-side (victim) selection. Without a filter this is the one
+    /// stock `select_into` call. With a QoS filter it runs two passes:
+    /// victims from the filtered (over-quota) population first, then —
+    /// only if that population cannot fill the budget — the remainder
+    /// from everyone else. Pass-1 pages all satisfy the filter and
+    /// pass-2 pages all fail it, so the passes are disjoint by
+    /// construction.
+    fn select_demote(
+        &mut self,
+        pt: &mut PageTable,
+        count: usize,
+        cand: &Candidates<'_>,
+        filter: PageFilter<'_>,
+        out: &mut Vec<PageId>,
+    ) {
+        select_into(
+            &mut self.demote_topk,
+            pt,
+            Tier::Dram,
+            count,
+            0.0,
+            cand.pages,
+            cand.demote_score,
+            cand.settled_demote,
+            filter,
+            out,
+        );
+        if let Some(f) = filter {
+            if out.len() < count {
+                let rest = count - out.len();
+                let inverse = |p: PageId| !f(p);
+                let mut scratch = std::mem::take(&mut self.filter_scratch);
+                select_into(
+                    &mut self.demote_topk,
+                    pt,
+                    Tier::Dram,
+                    rest,
+                    0.0,
+                    cand.pages,
+                    cand.demote_score,
+                    cand.settled_demote,
+                    Some(&inverse),
+                    &mut scratch,
+                );
+                out.append(&mut scratch);
+                self.filter_scratch = scratch;
+            }
+        }
+    }
+
     /// The selection (reply-back) phase: answer a PageFind request for up
     /// to `count` pages from the candidate scores merged with the settled
     /// pools (see [`Candidates`]). Takes the table mutably only to charge
@@ -345,20 +414,26 @@ impl SelMo {
         cand: &Candidates<'_>,
         switch_floor: f32,
     ) -> PageFindReply {
+        self.page_find_filtered(pt, mode, count, cand, switch_floor, None)
+    }
+
+    /// [`SelMo::page_find`] with an optional demote-side victim filter
+    /// (the hyplacer-qos hook). `demote_filter = None` is the stock
+    /// path — `page_find` delegates here, so a quota-free run executes
+    /// the identical code sequence.
+    pub fn page_find_filtered(
+        &mut self,
+        pt: &mut PageTable,
+        mode: PageFindMode,
+        count: usize,
+        cand: &Candidates<'_>,
+        switch_floor: f32,
+        demote_filter: PageFilter<'_>,
+    ) -> PageFindReply {
         let mut reply = PageFindReply::default();
         match mode {
             PageFindMode::Demote => {
-                select_into(
-                    &mut self.demote_topk,
-                    pt,
-                    Tier::Dram,
-                    count,
-                    0.0,
-                    cand.pages,
-                    cand.demote_score,
-                    cand.settled_demote,
-                    &mut reply.demote,
-                );
+                self.select_demote(pt, count, cand, demote_filter, &mut reply.demote);
             }
             PageFindMode::Promote => {
                 // eager promotion: any resident PM page qualifies,
@@ -372,6 +447,7 @@ impl SelMo {
                     cand.pages,
                     cand.promote_score,
                     cand.settled_promote,
+                    None,
                     &mut reply.promote,
                 );
             }
@@ -385,6 +461,7 @@ impl SelMo {
                     cand.pages,
                     cand.promote_score,
                     cand.settled_promote,
+                    None,
                     &mut reply.promote,
                 );
             }
@@ -398,17 +475,14 @@ impl SelMo {
                     cand.pages,
                     cand.promote_score,
                     cand.settled_promote,
+                    None,
                     &mut reply.promote,
                 );
-                select_into(
-                    &mut self.demote_topk,
+                self.select_demote(
                     pt,
-                    Tier::Dram,
                     reply.promote.len(),
-                    0.0,
-                    cand.pages,
-                    cand.demote_score,
-                    cand.settled_demote,
+                    cand,
+                    demote_filter,
                     &mut reply.demote,
                 );
                 // promote is hottest-first, demote is coldest-first: the
@@ -601,6 +675,31 @@ mod tests {
         pt.clear_queued(5);
         let r = selmo.page_find(&mut pt, PageFindMode::Promote, 4, &c, 0.0);
         assert_eq!(r.promote, vec![4, 6, 5, 7]);
+    }
+
+    #[test]
+    fn demote_filter_prefers_filtered_pages_then_falls_back() {
+        // the hyplacer-qos victim hook: with a filter, over-quota pages
+        // are selected first (coldest-first among themselves), and the
+        // rest of the budget falls back to the unfiltered population
+        let mut pt = table();
+        let mut selmo = SelMo::new(0.3);
+        let pages = [0u32, 1, 2, 3];
+        let demote = [0.9f32, 0.8, 0.7, 0.6];
+        let promote = [-1.0f32; 4];
+        let hot = [0.0f32; 8];
+        // settled pool below the floor: only explicit candidates select
+        let c = cand(&pages, &demote, &promote, &hot, -1.0, 0.0);
+        let r = selmo.page_find(&mut pt, PageFindMode::Demote, 2, &c, 0.0);
+        assert_eq!(r.demote, vec![0, 1], "stock order is score-descending");
+        let filt = |p: PageId| p >= 2;
+        let r =
+            selmo.page_find_filtered(&mut pt, PageFindMode::Demote, 3, &c, 0.0, Some(&filt));
+        assert_eq!(r.demote, vec![2, 3, 0], "filtered pages first, then fallback");
+        // a filter that covers the budget never reaches the fallback
+        let r =
+            selmo.page_find_filtered(&mut pt, PageFindMode::Demote, 2, &c, 0.0, Some(&filt));
+        assert_eq!(r.demote, vec![2, 3]);
     }
 
     #[test]

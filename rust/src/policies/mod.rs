@@ -39,6 +39,14 @@ pub struct TenantRange {
     pub base: PageId,
     pub pages: u32,
     pub share_weight: f64,
+    /// Hard DRAM quota in pages (`:CAP` in the mix grammar): the
+    /// migration engine rejects promotions that would push the tenant
+    /// past it. `None` = uncapped.
+    pub hard_cap_pages: Option<u32>,
+    /// Soft DRAM share weight (`/SHARE`): how tenant-aware policies
+    /// split their activation budget. `None` = fall back to
+    /// `share_weight`.
+    pub soft_share: Option<f64>,
 }
 
 impl TenantRange {
@@ -47,6 +55,15 @@ impl TenantRange {
     }
     pub fn contains(&self, p: PageId) -> bool {
         p >= self.base && p < self.end()
+    }
+    /// Effective soft-share weight: the explicit `/SHARE` if set, else
+    /// the tenant's resource share weight.
+    pub fn effective_share(&self) -> f64 {
+        self.soft_share.unwrap_or(self.share_weight)
+    }
+    /// Does this tenant carry any quota annotation?
+    pub fn has_quota(&self) -> bool {
+        self.hard_cap_pages.is_some() || self.soft_share.is_some()
     }
 }
 
@@ -169,6 +186,7 @@ pub fn by_name(
         "memos" => Some(Box::new(memos::Memos::new(cfg, hp_cfg))),
         "partitioned" | "clock-dwf" => Some(Box::new(partitioned::Partitioned::new(cfg))),
         "hyplacer" | "ambix" => Some(Box::new(hyplacer::HyPlacer::new(cfg, hp_cfg.clone()))),
+        "hyplacer-qos" => Some(Box::new(hyplacer::HyPlacer::new_qos(cfg, hp_cfg.clone()))),
         other => {
             // interleave-<dram_pct>, e.g. interleave-90
             if let Some(pct) = other.strip_prefix("interleave-") {
@@ -201,6 +219,7 @@ mod tests {
             assert!(p.is_some(), "missing policy {name}");
         }
         assert!(by_name("partitioned", &cfg, &hp).is_some());
+        assert_eq!(by_name("hyplacer-qos", &cfg, &hp).unwrap().name(), "hyplacer-qos");
         assert!(by_name("interleave-90", &cfg, &hp).is_some());
         assert!(by_name("interleave-101", &cfg, &hp).is_none());
         assert!(by_name("bogus", &cfg, &hp).is_none());

@@ -28,6 +28,9 @@ pub struct EpochRecord {
     pub migrate_queued: u64,
     /// Carried-over moves dropped by revalidation this epoch.
     pub migrate_stale: u64,
+    /// Promotions rejected this epoch because they would push a tenant
+    /// past its hard DRAM quota (always 0 without quotas).
+    pub migrate_over_quota: u64,
     /// Per-tenant app bytes served this epoch (multi-tenant co-runs
     /// only; empty for single-workload runs). Index = tenant index in
     /// the run's [`crate::tenants::MixSpec`]; a tenant that has not
@@ -76,6 +79,7 @@ impl RunStats {
             migrate_submitted: migration.submitted,
             migrate_queued: migration.deferred,
             migrate_stale: migration.stale,
+            migrate_over_quota: migration.over_quota,
             tenant_app_bytes: Vec::new(),
             tenant_dram_share: Vec::new(),
         });
@@ -148,6 +152,12 @@ impl RunStats {
         }
         let waited: u64 = self.epochs.iter().map(|e| e.migrate_queued).sum();
         waited as f64 / submitted as f64
+    }
+
+    /// Total promotions rejected by hard DRAM quotas over the run —
+    /// the isolation-pressure counter the quota CI smoke greps for.
+    pub fn migrate_over_quota_total(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrate_over_quota).sum()
     }
 
     /// Fraction of submitted moves dropped by carry-over revalidation
@@ -226,6 +236,7 @@ mod tests {
         assert_eq!(s.migrate_queue_depth_peak(), 0);
         assert_eq!(s.migrate_deferred_ratio(), 0.0);
         assert_eq!(s.migrate_stale_drop_ratio(), 0.0);
+        assert_eq!(s.migrate_over_quota_total(), 0);
     }
 
     #[test]
@@ -240,9 +251,11 @@ mod tests {
         let mut mig2 = MigrationStats::default();
         mig2.deferred = 2;
         mig2.stale = 1;
+        mig2.over_quota = 3;
         s.record(1, &d, &out, &mig2, 0.5);
         assert_eq!(s.migrate_queue_depth_peak(), 6);
         assert!((s.migrate_deferred_ratio() - 8.0 / 10.0).abs() < 1e-12);
         assert!((s.migrate_stale_drop_ratio() - 0.1).abs() < 1e-12);
+        assert_eq!(s.migrate_over_quota_total(), 3);
     }
 }

@@ -7,10 +7,13 @@
 //! one policy. This module opens the contention dimension:
 //!
 //! * [`MixSpec`] describes N tenants (`-w 'is.M+pr.M'`): each a
-//!   `(workload, arrival_epoch, share_weight)` [`TenantSpec`], parsed
-//!   from `WORKLOAD[@ARRIVAL][*WEIGHT]` components joined by `+`
-//!   (`.` doubles for `-` inside a component so mixes stay one
-//!   shell-friendly token),
+//!   `(workload, arrival_epoch, share_weight, quotas)` [`TenantSpec`],
+//!   parsed from `WORKLOAD[@ARRIVAL][*WEIGHT][:HARD_CAP][/SOFT_SHARE]`
+//!   components joined by `+` (`.` doubles for `-` inside a component
+//!   so mixes stay one shell-friendly token). `:HARD_CAP` is a DRAM
+//!   page ceiling the migration engine enforces; `/SOFT_SHARE` is the
+//!   activation-budget weight tenant-aware policies split by
+//!   (DESIGN.md §12),
 //! * [`TenantSet`] maps the tenants into one shared [`PageTable`]
 //!   address space via per-tenant base offsets — the mapping is
 //!   bijective (every page belongs to exactly one tenant, every tenant
@@ -48,7 +51,7 @@ use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx, TenantRange};
 use crate::sim::{RunStats, SimClock};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
-use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery};
+use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery, TenantQuota};
 use crate::workloads::{self, Region, Workload};
 
 /// One tenant of a co-run mix.
@@ -62,6 +65,12 @@ pub struct TenantSpec {
     /// Resource share weight: scales the tenant's offered bytes per
     /// epoch and its contribution to the aggregate weighted speedup.
     pub share_weight: f64,
+    /// Hard DRAM quota in pages (`:CAP`): the migration engine rejects
+    /// promotions that would push the tenant past it. `None` = uncapped.
+    pub hard_cap_pages: Option<u32>,
+    /// Soft DRAM share (`/SHARE`): activation-budget weight for
+    /// tenant-aware policies. `None` = fall back to `share_weight`.
+    pub soft_share: Option<f64>,
 }
 
 impl TenantSpec {
@@ -70,15 +79,45 @@ impl TenantSpec {
             workload: workload.to_string(),
             arrival_epoch: 0,
             share_weight: 1.0,
+            hard_cap_pages: None,
+            soft_share: None,
         }
     }
 
-    /// Parse one mix component: `WORKLOAD[@ARRIVAL][*WEIGHT]`, with `.`
-    /// accepted for `-` inside WORKLOAD (`is.M` = `is-M`).
+    /// Parse one mix component:
+    /// `WORKLOAD[@ARRIVAL][*WEIGHT][:HARD_CAP][/SOFT_SHARE]`, with `.`
+    /// accepted for `-` inside WORKLOAD (`is.M` = `is-M`). Suffixes are
+    /// stripped right-to-left, so they compose in grammar order.
     pub fn parse(part: &str) -> Result<TenantSpec, String> {
         let mut rest = part.trim();
         let mut weight = 1.0f64;
         let mut arrival = 0u32;
+        let mut hard_cap = None;
+        let mut soft_share = None;
+        if let Some((head, s)) = rest.rsplit_once('/') {
+            let share: f64 = s
+                .trim()
+                .parse()
+                .map_err(|e| format!("tenant {part:?}: soft share: {e}"))?;
+            if !(share > 0.0 && share.is_finite()) {
+                return Err(format!("tenant {part:?}: soft share must be finite and > 0"));
+            }
+            soft_share = Some(share);
+            rest = head;
+        }
+        if let Some((head, c)) = rest.rsplit_once(':') {
+            let cap: u32 = c
+                .trim()
+                .parse()
+                .map_err(|e| format!("tenant {part:?}: hard cap: {e}"))?;
+            if cap == 0 {
+                return Err(format!(
+                    "tenant {part:?}: hard cap must be > 0 pages (omit it for uncapped)"
+                ));
+            }
+            hard_cap = Some(cap);
+            rest = head;
+        }
         if let Some((head, w)) = rest.rsplit_once('*') {
             weight = w
                 .trim()
@@ -104,7 +143,35 @@ impl TenantSpec {
             workload: name,
             arrival_epoch: arrival,
             share_weight: weight,
+            hard_cap_pages: hard_cap,
+            soft_share,
         })
+    }
+
+    /// Does this tenant carry any quota annotation?
+    pub fn has_quota(&self) -> bool {
+        self.hard_cap_pages.is_some() || self.soft_share.is_some()
+    }
+
+    /// The canonical display form — the exact inverse of [`parse`]
+    /// modulo the `.`/`-` equivalence (round-trip pinned by a test).
+    ///
+    /// [`parse`]: TenantSpec::parse
+    pub fn display_suffix(&self) -> String {
+        let mut n = String::new();
+        if self.arrival_epoch > 0 {
+            n.push_str(&format!("@{}", self.arrival_epoch));
+        }
+        if self.share_weight != 1.0 {
+            n.push_str(&format!("*{}", self.share_weight));
+        }
+        if let Some(cap) = self.hard_cap_pages {
+            n.push_str(&format!(":{cap}"));
+        }
+        if let Some(share) = self.soft_share {
+            n.push_str(&format!("/{share}"));
+        }
+        n
     }
 }
 
@@ -139,9 +206,34 @@ impl MixSpec {
         MixSpec { tenants: vec![TenantSpec::new(workload)] }
     }
 
+    /// Does any tenant carry a hard cap or soft share? This is the
+    /// single gate for every quota code path: a quota-free mix runs the
+    /// stock (bit-identical) sequence everywhere.
+    pub fn has_quotas(&self) -> bool {
+        self.tenants.iter().any(|t| t.has_quota())
+    }
+
+    /// Canonical one-token display form (inverse of [`MixSpec::parse`]
+    /// modulo `.`/`-`; round-trip pinned by a test).
+    pub fn display(&self) -> String {
+        self.tenants
+            .iter()
+            .map(|t| format!("{}{}", t.workload, t.display_suffix()))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
     /// Resolve every tenant workload and check the combined footprint
     /// fits the machine — the graceful form of `Simulation::new`'s
     /// capacity panic, callable from `SweepSpec::validate`.
+    ///
+    /// With hard caps set this also checks quota feasibility: every
+    /// page a cap forces out of DRAM must fit in PM. Together with the
+    /// total-capacity check this guarantees cap-aware first-touch
+    /// mapping can never run out of frames (DESIGN.md §12): if PM fills
+    /// while a forced page remains, either the forced total exceeded PM
+    /// (rejected here) or DRAM filled too, i.e. the total footprint
+    /// exceeded the machine (rejected above).
     pub fn validate_on(&self, cfg: &MachineConfig, epoch_secs: f64) -> Result<(), String> {
         let footprints = self.footprints(cfg, epoch_secs)?;
         let set = TenantSet::from_footprints(self.tenants.clone(), &footprints)?;
@@ -151,6 +243,21 @@ impl MixSpec {
                 "mix footprint {} pages exceeds machine capacity {} pages",
                 set.total_pages(),
                 capacity
+            ));
+        }
+        let forced_pm: u64 = self
+            .tenants
+            .iter()
+            .zip(footprints.iter())
+            .filter_map(|(t, &fp)| {
+                t.hard_cap_pages.map(|cap| u64::from(fp.saturating_sub(cap)))
+            })
+            .sum();
+        if forced_pm > cfg.pm_pages() {
+            return Err(format!(
+                "mix hard caps force {} pages into PM but the machine has only {} PM pages",
+                forced_pm,
+                cfg.pm_pages()
             ));
         }
         Ok(())
@@ -271,6 +378,26 @@ impl TenantSet {
                 base,
                 pages,
                 share_weight: s.share_weight,
+                hard_cap_pages: s.hard_cap_pages,
+                soft_share: s.soft_share,
+            })
+            .collect()
+    }
+
+    /// The hard-capped tenants as engine-facing [`TenantQuota`]s
+    /// (ascending base order — the engine binary-searches them). Empty
+    /// when no tenant has a cap, which keeps the engine on its stock
+    /// (bit-identical) path.
+    pub fn quotas(&self) -> Vec<TenantQuota> {
+        self.ranges
+            .iter()
+            .zip(self.specs.iter())
+            .filter_map(|(&(base, pages), s)| {
+                s.hard_cap_pages.map(|cap| TenantQuota {
+                    base,
+                    pages,
+                    hard_cap_pages: cap,
+                })
             })
             .collect()
     }
@@ -390,7 +517,14 @@ impl MultiSimulation {
         let model = PerfModel::new(&cfg);
         let seed = sim.seed;
         let warmup = sim.warmup_epochs;
-        let engine = MigrationEngine::new(sim.migrate_share);
+        let mut engine = MigrationEngine::new(sim.migrate_share);
+        // Hard caps are enforced at the engine (the single point every
+        // promotion funnels through). A quota-free mix installs nothing,
+        // keeping the engine on its stock bit-identical path.
+        let quotas = set.quotas();
+        if !quotas.is_empty() {
+            engine.set_quotas(quotas);
+        }
         let runs = workloads_built
             .into_iter()
             .enumerate()
@@ -439,13 +573,25 @@ impl MultiSimulation {
     fn map_tenant(&mut self, ti: usize) {
         let base = self.set.base(ti);
         let pages = self.set.pages(ti);
+        let cap = self.set.spec(ti).hard_cap_pages;
+        let mut dram_used = 0u32;
         for local in 0..pages {
             let page = base + local;
-            let want = self.policy.place_new(page, &self.pt);
-            if !self.pt.allocate(page, want) && !self.pt.allocate(page, want.other()) {
+            // A hard-capped tenant at its cap may only take PM frames —
+            // DRAM placement (or fallback) here would violate the cap at
+            // first touch, before the engine ever sees a promotion.
+            let at_cap = cap.is_some_and(|c| dram_used >= c);
+            let ok = if at_cap {
+                self.pt.allocate(page, Tier::Pm)
+            } else {
+                let want = self.policy.place_new(page, &self.pt);
+                self.pt.allocate(page, want) || self.pt.allocate(page, want.other())
+            };
+            if !ok {
                 // validate_on rejects tenant sets whose combined footprint
-                // exceeds machine capacity before any mapping happens, so
-                // both allocate calls failing here is impossible.
+                // exceeds machine capacity — and, with hard caps, whose
+                // cap-forced pages exceed PM — before any mapping happens,
+                // so allocation failing here is impossible.
                 // audit-allow(R1): unreachable by construction (validate_on)
                 panic!(
                     "tenant {ti} footprint {} pages exceeds remaining machine capacity \
@@ -454,6 +600,9 @@ impl MultiSimulation {
                     self.pt.free_pages(Tier::Dram),
                     self.pt.free_pages(Tier::Pm)
                 );
+            }
+            if cap.is_some() && self.pt.flags(page).tier() == Tier::Dram {
+                dram_used += 1;
             }
         }
         let regions = self.runs[ti].workload.regions(0);
@@ -822,18 +971,15 @@ impl MultiSimulation {
             });
         }
         // The mix display name: tenant workload names joined by '+',
-        // annotated with non-default arrivals/weights — deterministic,
-        // so sweep baselines group co-run cells correctly.
+        // annotated with non-default arrivals/weights/quotas (the same
+        // grammar `TenantSpec::parse` reads) — deterministic, so sweep
+        // baselines group co-run cells correctly.
         let name = tenants
             .iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(ti, t)| {
                 let mut n = t.name.clone();
-                if t.arrival_epoch > 0 {
-                    n.push_str(&format!("@{}", t.arrival_epoch));
-                }
-                if t.share_weight != 1.0 {
-                    n.push_str(&format!("*{}", t.share_weight));
-                }
+                n.push_str(&self.set.spec(ti).display_suffix());
                 n
             })
             .collect::<Vec<_>>()
@@ -994,6 +1140,116 @@ mod tests {
         assert!(TenantSpec::parse("cg.M*0").is_err());
         assert!(TenantSpec::parse("cg.M*-1").is_err());
         assert!(TenantSpec::parse("cg.M@x").is_err());
+    }
+
+    #[test]
+    fn quota_spec_parsing_edge_cases() {
+        // the full grammar, suffixes in order
+        let t = TenantSpec::parse("is.M@4*0.5:4096/2").unwrap();
+        assert_eq!(t.workload, "is-M");
+        assert_eq!(t.arrival_epoch, 4);
+        assert!((t.share_weight - 0.5).abs() < 1e-12);
+        assert_eq!(t.hard_cap_pages, Some(4096));
+        assert_eq!(t.soft_share, Some(2.0));
+        assert!(t.has_quota());
+        // each quota suffix alone
+        assert_eq!(TenantSpec::parse("cg.M:100").unwrap().hard_cap_pages, Some(100));
+        assert_eq!(TenantSpec::parse("cg.M/0.5").unwrap().soft_share, Some(0.5));
+        assert!(!TenantSpec::parse("cg.M").unwrap().has_quota());
+        // missing / zero / malformed cap values
+        assert!(TenantSpec::parse("cg.M:").is_err());
+        assert!(TenantSpec::parse("cg.M:0").is_err());
+        assert!(TenantSpec::parse("cg.M:x").is_err());
+        assert!(TenantSpec::parse("cg.M:-5").is_err());
+        // zero / negative / non-finite / missing soft shares
+        assert!(TenantSpec::parse("cg.M/0").is_err());
+        assert!(TenantSpec::parse("cg.M/-1").is_err());
+        assert!(TenantSpec::parse("cg.M/inf").is_err());
+        assert!(TenantSpec::parse("cg.M/nan").is_err());
+        assert!(TenantSpec::parse("cg.M/").is_err());
+    }
+
+    #[test]
+    fn mix_display_round_trips_through_parse() {
+        for s in [
+            "is.M+pr.M",
+            "cg.S+mg.S@6",
+            "cg.S+mg.S*0.5",
+            "cg.M@6*0.5:4096/2+mg.M:100",
+            "is.M:2048+pr.M/3",
+        ] {
+            let m = MixSpec::parse(s).unwrap();
+            let shown = m.display();
+            let re = MixSpec::parse(&shown).unwrap();
+            assert_eq!(m, re, "{s} -> {shown}");
+        }
+        assert!(MixSpec::parse("is.M:2048/2+pr.M").unwrap().has_quotas());
+        assert!(!MixSpec::parse("is.M+pr.M*0.5").unwrap().has_quotas());
+    }
+
+    #[test]
+    fn quota_validation_allows_caps_below_footprint_but_rejects_pm_overload() {
+        let cfg = MachineConfig::paper_machine();
+        // a cap far below the tenant's footprint is legal — isolation
+        // demos depend on it; validate_on only rejects infeasible layouts
+        MixSpec::parse("cg.S+mg.S:1").unwrap().validate_on(&cfg, 1.0).unwrap();
+
+        // shrink the machine around the mix: the total footprint still
+        // fits, but the cap forces more pages into PM than PM frames
+        // exist — the graceful error (map_tenant would otherwise have to
+        // spill past the cap or panic)
+        let fp = |name: &str| {
+            workloads::by_name(name, cfg.page_bytes, 1.0)
+                .unwrap()
+                .footprint_pages() as u64
+        };
+        let (a, b) = (fp("cg-S"), fp("mg-S"));
+        let mut small = cfg.clone();
+        small.dram.capacity = (a + 20) * small.page_bytes;
+        small.pm.capacity = (b - 10) * small.page_bytes;
+        let err = MixSpec::parse("cg.S+mg.S:1")
+            .unwrap()
+            .validate_on(&small, 1.0)
+            .unwrap_err();
+        assert!(err.contains("force"), "{err}");
+        // uncapped, the same mix still fits the same machine
+        MixSpec::parse("cg.S+mg.S").unwrap().validate_on(&small, 1.0).unwrap();
+    }
+
+    #[test]
+    fn hard_cap_is_respected_at_first_touch() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 4;
+        sim.warmup_epochs = 1;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S:64+mg.S").unwrap();
+        let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+        let msim = MultiSimulation::new(cfg, sim, &mix, p, 0.05).unwrap();
+        let set = msim.tenant_set();
+        let dram = PlaneQuery::tier(Tier::Dram);
+        let held = msim
+            .page_table()
+            .count_matching_in(set.base(0), set.base(0) + set.pages(0), dram);
+        assert!(held <= 64, "capped tenant first-touched {held} DRAM pages");
+        // the uncapped tenant is unaffected by its neighbour's cap
+        let other = msim
+            .page_table()
+            .count_matching_in(set.base(1), set.base(1) + set.pages(1), dram);
+        assert!(other > 64);
+    }
+
+    #[test]
+    fn quota_mix_display_name_carries_the_quota_suffixes() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 5;
+        sim.warmup_epochs = 1;
+        let hp = HyPlacerConfig::default();
+        let mix = MixSpec::parse("cg.S:64/2+mg.S").unwrap();
+        let p = policies::by_name("adm-default", &cfg, &hp).unwrap();
+        let r = run_mix(&cfg, &sim, &mix, p, 0.05).unwrap();
+        assert_eq!(r.workload, "CG-S:64/2+MG-S");
     }
 
     #[test]

@@ -36,8 +36,29 @@ use std::collections::VecDeque;
 
 use crate::config::{MachineConfig, Tier};
 
-use super::super::page_table::{PageId, PageTable};
+use super::super::page_table::{PageId, PageTable, PlaneQuery};
 use super::{MigrationPlan, MigrationStats};
+
+/// A tenant's hard DRAM quota, in engine-facing form: the tenant's
+/// contiguous `[base, base + pages)` slice of the shared address space
+/// plus the maximum DRAM pages it may hold. Installed via
+/// [`MigrationEngine::set_quotas`] by the multi-tenant coordinator; an
+/// engine with no quotas (the default, and every single-workload run)
+/// executes the stock bit-identical path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantQuota {
+    pub base: PageId,
+    pub pages: u32,
+    /// Maximum DRAM pages the tenant may hold (> 0; promotions that
+    /// would exceed it are rejected and counted `over_quota`).
+    pub hard_cap_pages: u32,
+}
+
+impl TenantQuota {
+    pub fn contains(&self, p: PageId) -> bool {
+        p >= self.base && p < self.base + self.pages
+    }
+}
 
 /// Queue-state summary handed to every policy tick: how backed up the
 /// migration pipeline is. Policies use it to shrink (or pause) their
@@ -113,6 +134,9 @@ pub struct MigrationEngine {
     /// Summary after the last `run_epoch` (what the next policy tick
     /// sees).
     last_bp: Backpressure,
+    /// Hard DRAM quotas, ascending by base (empty = no enforcement,
+    /// the stock bit-identical path).
+    quotas: Vec<TenantQuota>,
 }
 
 impl MigrationEngine {
@@ -125,6 +149,35 @@ impl MigrationEngine {
             submitted_since_run: 0,
             stale_total: 0,
             last_bp: Backpressure::default(),
+            quotas: Vec::new(),
+        }
+    }
+
+    /// Install per-tenant hard DRAM quotas (sorted by base internally).
+    /// Promotions — standalone or the promote side of an exchange — that
+    /// would push a capped tenant's DRAM page count past its cap are
+    /// rejected at execution: the entry is dropped (never re-queued; the
+    /// policy re-plans each epoch, so retrying would only livelock the
+    /// queue), counted in [`MigrationStats::over_quota`], and consumes
+    /// no move budget. Demotions always pass — they only ever move a
+    /// tenant *toward* compliance. With no quotas installed (the
+    /// default) `run_epoch` is bit-identical to the stock engine.
+    pub fn set_quotas(&mut self, mut quotas: Vec<TenantQuota>) {
+        quotas.sort_by_key(|q| q.base);
+        self.quotas = quotas;
+    }
+
+    /// Index of the quota covering `page`, if any.
+    fn quota_of(&self, page: PageId) -> Option<usize> {
+        let idx = match self.quotas.binary_search_by(|q| q.base.cmp(&page)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        if self.quotas[idx].contains(page) {
+            Some(idx)
+        } else {
+            None
         }
     }
 
@@ -244,6 +297,17 @@ impl MigrationEngine {
         let mut executed = MigrationPlan::default();
         let mut moves = 0u64;
 
+        // Per-quota DRAM usage: computed once from the activity index
+        // (word popcounts — no PTE-visit charges) and maintained
+        // incrementally as moves land. Empty when no quotas are
+        // installed, which is the stock bit-identical path.
+        let dram = PlaneQuery::tier(Tier::Dram);
+        let mut quota_dram: Vec<u64> = self
+            .quotas
+            .iter()
+            .map(|q| pt.count_matching_in(q.base, q.base + q.pages, dram))
+            .collect();
+
         // a same-epoch precondition failure is `skipped` (exactly the
         // one-shot semantics); a carried-over one is `stale`
         let drop_one = |stats: &mut MigrationStats, planned: u32, n: u64| {
@@ -272,6 +336,11 @@ impl MigrationEngine {
                 stats.pm_traffic.write_bytes += page;
                 executed.demote.push(p);
                 moves += 1;
+                // demotions always pass — they move the tenant toward
+                // (or keep it within) its cap
+                if let Some(qi) = self.quota_of(p) {
+                    quota_dram[qi] = quota_dram[qi].saturating_sub(1);
+                }
             } else {
                 // capacity exhausted: always `skipped` (it is not a
                 // revalidation failure), never retried
@@ -294,6 +363,18 @@ impl MigrationEngine {
             let fb = pt.flags(dram_page);
             let a_ok = fa.valid() && fa.tier() == Tier::Pm;
             let b_ok = fb.valid() && fb.tier() == Tier::Dram;
+            if a_ok && b_ok {
+                // quota check on the promote side: the pm page enters
+                // DRAM, a net +1 for its tenant unless the partner
+                // leaves the same tenant's slice
+                if let Some(qi) = self.quota_of(pm_page) {
+                    let net_gain = self.quota_of(dram_page) != Some(qi);
+                    if net_gain && quota_dram[qi] >= u64::from(self.quotas[qi].hard_cap_pages) {
+                        stats.over_quota += 1;
+                        continue;
+                    }
+                }
+            }
             if a_ok && b_ok && pt.exchange(pm_page, dram_page) {
                 stats.exchanged_pairs += 1;
                 stats.dram_traffic.read_bytes += page;
@@ -302,6 +383,12 @@ impl MigrationEngine {
                 stats.pm_traffic.write_bytes += page;
                 executed.exchange.push((pm_page, dram_page));
                 moves += 2;
+                if let Some(qi) = self.quota_of(pm_page) {
+                    quota_dram[qi] += 1;
+                }
+                if let Some(qi) = self.quota_of(dram_page) {
+                    quota_dram[qi] = quota_dram[qi].saturating_sub(1);
+                }
             } else {
                 drop_one(&mut stats, e, u64::from(!a_ok) + u64::from(!b_ok));
             }
@@ -318,12 +405,25 @@ impl MigrationEngine {
                 drop_one(&mut stats, e, 1);
                 continue;
             }
+            if let Some(qi) = self.quota_of(p) {
+                if quota_dram[qi] >= u64::from(self.quotas[qi].hard_cap_pages) {
+                    // over-cap promotion: rejected and dropped, never
+                    // re-queued (the policy re-plans each epoch —
+                    // retrying would livelock the queue) and charged
+                    // no move budget
+                    stats.over_quota += 1;
+                    continue;
+                }
+            }
             if pt.migrate(p, Tier::Dram) {
                 stats.promoted += 1;
                 stats.pm_traffic.read_bytes += page;
                 stats.dram_traffic.write_bytes += page;
                 executed.promote.push(p);
                 moves += 1;
+                if let Some(qi) = self.quota_of(p) {
+                    quota_dram[qi] += 1;
+                }
             } else {
                 // DRAM at capacity: `skipped`, never retried
                 stats.skipped += 1;
@@ -618,6 +718,97 @@ mod tests {
         assert!(eng.backpressure().is_idle());
         // tiny shares never produce a zero budget
         assert_eq!(MigrationEngine::budget_moves(&cfg, 1e-12, 1.0), 1);
+    }
+
+    #[test]
+    fn hard_caps_reject_promotions_and_count_over_quota() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        // one capped tenant over [0, 12): currently holds pages 0..8 in
+        // DRAM (usage 8), cap 9 — exactly one promotion of headroom
+        eng.set_quotas(vec![TenantQuota { base: 0, pages: 12, hard_cap_pages: 9 }]);
+        let plan = MigrationPlan {
+            promote: vec![8, 9, 10],
+            demote: vec![],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s, ex) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.promoted, 1, "one promotion fits under the cap");
+        assert_eq!(s.over_quota, 2, "the rest are rejected, not skipped");
+        assert_eq!(s.skipped, 0);
+        assert_eq!(s.stale, 0);
+        assert_eq!(ex.promote, vec![8]);
+        assert_eq!(s.deferred, 0, "rejections are dropped, not re-queued");
+        assert!(!pt.flags(9).queued() && !pt.flags(10).queued());
+
+        // demotions always pass; the freed headroom admits the next
+        // epoch's promotion of the same page
+        let plan = MigrationPlan {
+            promote: vec![9],
+            demote: vec![0, 1],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 1);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s.demoted, 2);
+        assert_eq!(s.promoted, 1);
+        assert_eq!(s.over_quota, 0);
+    }
+
+    #[test]
+    fn quota_checks_the_promote_side_of_exchanges() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        // two capped tenants: t0 = [0, 6) holds 6 DRAM pages, t1 =
+        // [6, 12) holds 2 (pages 6, 7) and sits exactly at its cap
+        eng.set_quotas(vec![
+            TenantQuota { base: 0, pages: 6, hard_cap_pages: 6 },
+            TenantQuota { base: 6, pages: 6, hard_cap_pages: 2 },
+        ]);
+        // same-tenant exchange at the cap is quota-neutral: allowed
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(8, 6)],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.exchanged_pairs, 1);
+        assert_eq!(s.over_quota, 0);
+        // cross-tenant: the promote side enters t1 (at cap), the demote
+        // side leaves t0 — a net gain for t1, so the pair is rejected
+        let plan = MigrationPlan {
+            promote: vec![],
+            demote: vec![],
+            exchange: vec![(9, 0)],
+        };
+        eng.submit(&mut pt, &plan, 1);
+        let (s, ex) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s.exchanged_pairs, 0);
+        assert_eq!(s.over_quota, 1, "one rejected promotion, counted once per pair");
+        assert!(ex.is_empty());
+        assert_eq!(pt.flags(9).tier(), Tier::Pm, "both sides stay put");
+        assert_eq!(pt.flags(0).tier(), Tier::Dram);
+        assert!(!pt.flags(9).queued() && !pt.flags(0).queued());
+    }
+
+    #[test]
+    fn uncapped_pages_are_untouched_by_quotas() {
+        // a quota table that covers only part of the address space must
+        // not affect pages outside it
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        eng.set_quotas(vec![TenantQuota { base: 0, pages: 4, hard_cap_pages: 4 }]);
+        let plan = MigrationPlan {
+            promote: vec![12, 13],
+            demote: vec![],
+            exchange: vec![],
+        };
+        eng.submit(&mut pt, &plan, 0);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.promoted, 2);
+        assert_eq!(s.over_quota, 0);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 
 pub mod engine;
 
-pub use engine::{Backpressure, MigrationEngine, SubmitStats};
+pub use engine::{Backpressure, MigrationEngine, SubmitStats, TenantQuota};
 
 use crate::config::{MachineConfig, Tier};
 use crate::mem::TierDemand;
@@ -105,6 +105,11 @@ pub struct MigrationStats {
     /// (0 for the one-shot path and whenever the budget covered the
     /// whole backlog).
     pub deferred: u64,
+    /// Promotions (standalone or the promote side of an exchange)
+    /// rejected because they would push a tenant's DRAM page count past
+    /// its hard quota ([`MigrationEngine::set_quotas`]). Dropped, never
+    /// retried, and charged no move budget. Always 0 without quotas.
+    pub over_quota: u64,
     /// Copy traffic to charge each tier this epoch.
     pub dram_traffic: TierDemand,
     pub pm_traffic: TierDemand,

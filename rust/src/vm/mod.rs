@@ -14,4 +14,6 @@ pub mod migrate;
 
 pub use page_table::{MatchingPages, PageFlags, PageId, PageTable, PlaneQuery};
 pub use pagewalk::{PageWalker, SparseWalker, WalkControl};
-pub use migrate::{Backpressure, MigrationEngine, MigrationPlan, MigrationStats, SubmitStats};
+pub use migrate::{
+    Backpressure, MigrationEngine, MigrationPlan, MigrationStats, SubmitStats, TenantQuota,
+};

@@ -17,6 +17,7 @@
 
 #![allow(clippy::field_reassign_with_default)]
 
+use hyplacer::bench_harness::fig_mix;
 use hyplacer::config::{parse::Doc, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::Simulation;
 use hyplacer::exec::SweepSpec;
@@ -307,6 +308,151 @@ fn hyplacer_beats_adm_default_on_mix_weighted_speedup() {
         "first-touch should strand the late-allocated tenant: {} vs {}",
         first.mean_dram_share,
         second.mean_dram_share
+    );
+}
+
+#[test]
+fn hyplacer_qos_without_quotas_is_bit_identical_to_stock() {
+    // The QoS variant's no-quota contract: on a mix that sets no hard
+    // caps or soft shares, "hyplacer-qos" must execute the exact stock
+    // HyPlacer sequence — pinned in lockstep per epoch plus on both
+    // hot-path instruments. This is what lets the variant ship without
+    // re-keying any checkpoint or baseline.
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 14;
+    sim.warmup_epochs = 3;
+    let hp = HyPlacerConfig::default();
+    let mix = MixSpec::parse("cg.S+mg.S").unwrap();
+    assert!(!mix.has_quotas());
+    let mut stock = MultiSimulation::new(
+        cfg.clone(),
+        sim.clone(),
+        &mix,
+        policies::by_name("hyplacer", &cfg, &hp).unwrap(),
+        0.05,
+    )
+    .unwrap();
+    let mut qos = MultiSimulation::new(
+        cfg.clone(),
+        sim.clone(),
+        &mix,
+        policies::by_name("hyplacer-qos", &cfg, &hp).unwrap(),
+        0.05,
+    )
+    .unwrap();
+    for e in 0..sim.epochs {
+        let a = stock.step();
+        let b = qos.step();
+        assert_eq!(a.to_bits(), b.to_bits(), "epoch {e} wall diverged");
+    }
+    assert_eq!(stock.rng_draws(), qos.rng_draws(), "rng draws");
+    assert_eq!(stock.pte_visits(), qos.pte_visits(), "pte visits");
+    let ra = stock.finish();
+    let rb = qos.finish();
+    assert_eq!(ra.policy, "hyplacer");
+    assert_eq!(rb.policy, "hyplacer-qos");
+    assert_eq!(ra.total_wall_secs.to_bits(), rb.total_wall_secs.to_bits());
+    assert_eq!(ra.total_app_bytes.to_bits(), rb.total_app_bytes.to_bits());
+    assert_eq!(ra.steady_throughput.to_bits(), rb.steady_throughput.to_bits());
+    assert_eq!(ra.total_energy_j.to_bits(), rb.total_energy_j.to_bits());
+    assert_eq!(ra.migrated_pages, rb.migrated_pages);
+}
+
+#[test]
+fn no_epoch_ends_with_a_tenant_above_its_hard_cap() {
+    // Property: whatever the policy plans, the engine-enforced hard cap
+    // is an invariant at every epoch boundary, not just at the end of
+    // the run. Random caps, random policy, random epoch counts.
+    use hyplacer::config::Tier;
+    use hyplacer::vm::PlaneQuery;
+    let policies_under_test = ["adm-default", "hyplacer", "hyplacer-qos"];
+    proptest::check("hard-cap-invariant", 12, |rng| {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 6 + rng.next_below(6) as u32;
+        sim.warmup_epochs = 2;
+        let hp = HyPlacerConfig::default();
+        let cap_a = 1 + rng.next_below(4000) as u32;
+        let cap_b = 1 + rng.next_below(4000) as u32;
+        let spec = if rng.chance(0.5) {
+            format!("cg.S:{cap_a}+mg.S:{cap_b}")
+        } else {
+            format!("cg.S:{cap_a}/2+mg.S")
+        };
+        let mix = MixSpec::parse(&spec).map_err(|e| format!("{spec}: {e}"))?;
+        let pname = policies_under_test[rng.next_below(3) as usize];
+        let policy = policies::by_name(pname, &cfg, &hp)
+            .ok_or_else(|| format!("unknown policy {pname}"))?;
+        let mut m = MultiSimulation::new(cfg.clone(), sim.clone(), &mix, policy, 0.05)
+            .map_err(|e| format!("{spec}: {e}"))?;
+        for e in 0..sim.epochs {
+            m.step();
+            let set = m.tenant_set();
+            let pt = m.page_table();
+            for ti in 0..set.len() {
+                if let Some(cap) = set.spec(ti).hard_cap_pages {
+                    let used = pt.count_matching_in(
+                        set.base(ti),
+                        set.base(ti) + set.pages(ti),
+                        PlaneQuery::tier(Tier::Dram),
+                    );
+                    prop_assert!(
+                        used <= u64::from(cap),
+                        "{spec} under {pname}: tenant {ti} holds {used} DRAM \
+                         pages over cap {cap} after epoch {e}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn qos_quotas_improve_unfairness_on_the_antagonist_mix() {
+    // The committed antagonist demo (also the 4th fig-mix default):
+    // write-heavy IS-M thrashes latency-sensitive PR-M on the demo
+    // machine. Stock HyPlacer happily feeds the writer — its SWITCH
+    // mode pulls write-intensive IS pages into DRAM on merit, so PR
+    // eats the contention. Capping IS at 5000 of the 16384 DRAM pages
+    // and giving PR the larger soft share hands the freed DRAM to PR:
+    // hyplacer-qos must improve unfairness over the uncapped stock run
+    // without losing aggregate weighted speedup (PR carries weight 2 in
+    // both mixes, so the metrics are compared on the same scale).
+    let (machine, sim, hp) = mix_demo_config();
+    let wf = hp.delay_secs / sim.epoch_secs;
+    let stock_mix = MixSpec::parse("is.M+pr.M*2").unwrap();
+    let stock = run_mix_with_solos(&machine, &sim, &stock_mix, wf, || {
+        policies::by_name("hyplacer", &machine, &hp).unwrap()
+    })
+    .unwrap();
+    let qos_mix = MixSpec::parse(fig_mix::ANTAGONIST_MIX).unwrap();
+    assert!(qos_mix.has_quotas());
+    let qos = run_mix_with_solos(&machine, &sim, &qos_mix, wf, || {
+        policies::by_name("hyplacer-qos", &machine, &hp).unwrap()
+    })
+    .unwrap();
+    assert!(
+        qos.unfairness < stock.unfairness,
+        "quotas must improve unfairness: qos {:.3} vs stock {:.3} \
+         (slowdowns qos {:?} stock {:?})",
+        qos.unfairness,
+        stock.unfairness,
+        qos.slowdowns,
+        stock.slowdowns
+    );
+    assert!(
+        qos.weighted_speedup >= stock.weighted_speedup,
+        "quotas must not cost weighted speedup: qos {:.3} vs stock {:.3}",
+        qos.weighted_speedup,
+        stock.weighted_speedup
+    );
+    // and the isolation pressure is visible: the capped writer had
+    // promotions rejected at the quota wall
+    assert!(
+        qos.corun.stats.migrate_over_quota_total() > 0,
+        "the antagonist demo should actually exercise the cap"
     );
 }
 
