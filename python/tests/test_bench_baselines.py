@@ -95,6 +95,24 @@ def test_hotpath_carries_the_mix_fairness_metrics():
         assert name in metrics, f"missing {name}"
 
 
+def test_hotpath_carries_the_fault_injection_metrics():
+    # The fault-injection PR (DESIGN.md §13) put the degraded-mode view
+    # in the hotpath doc: the storm run's retry ratio, the PINNED
+    # exclusion counter (exactly 0 — policies must never plan unmovable
+    # pages), and HyPlacer's safe-mode dwell. They stay info-kind until
+    # the first reference-runner recapture, like the mix/* metrics.
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    for name in (
+        "faults/retry_ratio",
+        "faults/pinned_rejections",
+        "faults/safe_mode_epochs",
+    ):
+        assert name in metrics, f"missing {name}"
+    assert metrics["faults/pinned_rejections"]["value"] == 0
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

@@ -21,8 +21,8 @@
 //! * **D3** — no ambient RNG (`thread_rng`/`from_entropy`/`OsRng`);
 //!   every stream derives from the per-cell/per-tenant seeds.
 //! * **R1** — no `.unwrap()`/`.expect()`/`panic!`-family calls in
-//!   library decision paths (`policies/`, `vm/`, `tenants/`);
-//!   `main.rs`, tests and the bench harness are exempt.
+//!   library decision paths (`policies/`, `vm/`, `tenants/`,
+//!   `faults/`); `main.rs`, tests and the bench harness are exempt.
 //! * **N1** — no truncating `as` casts to narrow integer types in
 //!   `vm/`/`tenants/` page-index arithmetic (the global↔local tenant
 //!   bijection is exactly where a silent `as u32` corrupts placement).
@@ -93,8 +93,17 @@ pub const RULES: &[Rule] = &[
 ];
 
 /// Module prefixes whose execution affects committed results (D1 scope).
-pub const D1_SCOPE: &[&str] =
-    &["sim/", "vm/", "policies/", "tenants/", "mem/", "workloads/", "exec/", "coordinator/"];
+pub const D1_SCOPE: &[&str] = &[
+    "sim/",
+    "vm/",
+    "policies/",
+    "tenants/",
+    "mem/",
+    "workloads/",
+    "exec/",
+    "coordinator/",
+    "faults/",
+];
 
 /// Files allowed to read wall-clock time: cell wall-time metadata in the
 /// sweep engine and the bench harness's host-timing metrics — both are
@@ -102,8 +111,9 @@ pub const D1_SCOPE: &[&str] =
 pub const D2_ALLOWLIST: &[&str] = &["exec/mod.rs", "bench_harness/perf.rs"];
 
 /// Library decision paths (R1 scope): policies, the vm layer incl. the
-/// migration engine, and the tenant subsystem.
-pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/"];
+/// migration engine, the tenant subsystem, and the fault-injection
+/// plans (a panic there takes down a whole sweep cell).
+pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/", "faults/"];
 
 /// Page-index arithmetic modules (N1 scope).
 pub const N1_SCOPE: &[&str] = &["vm/", "tenants/"];

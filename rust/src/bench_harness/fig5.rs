@@ -136,14 +136,34 @@ pub fn try_run_matrix_for(
         return Err("--resume requires --out FILE".to_string());
     }
     let spec = matrix_spec_for(bases, sizes, opts);
+    // salvage per-cell: one corrupt checkpoint cell re-executes instead
+    // of poisoning the whole matrix
     let prior = match &opts.out {
-        Some(path) => exec::load_results(path)?,
+        Some(path) => match exec::load_results_salvage(path)? {
+            Some((run, skipped)) => {
+                for s in &skipped {
+                    eprintln!("fig5: salvaged checkpoint, re-running {}", s.describe());
+                }
+                Some(run)
+            }
+            None => None,
+        },
         None => None,
     };
     let cache = if opts.resume { prior.as_ref() } else { None };
     let outcome = spec.run_with_cache(opts.jobs, cache)?;
     if let Some(path) = &opts.out {
         exec::save_results(path, &outcome.run, prior.as_ref())?;
+    }
+    if let Some(first) = outcome.failed.first() {
+        for f in &outcome.failed {
+            eprintln!("matrix: cell failed: {}", f.describe());
+        }
+        return Err(format!(
+            "{} cell(s) failed (surviving cells checkpointed); first: {}",
+            outcome.failed.len(),
+            first.describe()
+        ));
     }
     Ok(Matrix {
         sizes: sizes.to_vec(),

@@ -1,0 +1,254 @@
+//! fig-faults — the resilience matrix (fault grid × policies ×
+//! machines).
+//!
+//! The paper evaluates placement policies on a healthy machine; this
+//! figure asks what the same policies do when the machine degrades:
+//! transient migration-copy failures (with the engine's bounded
+//! retry-with-backoff), permanently pinned pages, epoch-windowed PM
+//! bandwidth brownouts, and reference-bit scan gaps — the
+//! [`crate::faults::FaultPlan`] fault classes. Each fault level is one
+//! [`crate::exec::SweepSpec`] over {hyplacer, adm-default} × machines ×
+//! CG-M, run through the standard checkpoint/resume plumbing: the plan
+//! folds into every cell's content key, so all levels accumulate into
+//! one `--out` file and `hyplacer fig-faults --out faults.json --resume`
+//! re-executes nothing on a byte-identical re-run.
+//!
+//! Retry/failure/safe-mode telemetry is run-local (like the epoch
+//! trace): the table shows it for freshly executed cells and zeros for
+//! cells loaded from a checkpoint.
+
+use crate::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use crate::exec;
+use crate::faults::FaultPlan;
+use crate::report::Table;
+
+use super::{BenchOpts, Report};
+
+/// The two policies the resilience grid contrasts: the paper's tool
+/// (whose safe mode the storm level must trip) against the no-migration
+/// baseline (immune to copy faults by construction).
+pub const FAULT_POLICIES: [&str; 2] = ["hyplacer", "adm-default"];
+
+/// The built-in fault grid, mildest first. The brownout window sits in
+/// the middle third of the run so warmup stays clean and the recovery
+/// tail is observable; the storm level stacks every fault class (its
+/// brownout doubles the *effective* copy-failure rate mid-run, which is
+/// what pushes HyPlacer's failure EWMA over the safe-mode threshold).
+pub fn fault_levels(opts: &BenchOpts) -> Vec<(String, String)> {
+    if !opts.faults.is_empty() {
+        // a user-supplied plan replaces the grid: clean baseline + plan
+        return vec![
+            ("none".to_string(), String::new()),
+            ("custom".to_string(), opts.faults.clone()),
+        ];
+    }
+    let (b0, b1) = (opts.epochs / 3, (2 * opts.epochs) / 3);
+    vec![
+        ("none".to_string(), String::new()),
+        ("copy".to_string(), "copy:0.02".to_string()),
+        ("brownout".to_string(), format!("copy:0.02,brownout:ep{b0}..{b1}*0.5")),
+        (
+            "storm".to_string(),
+            format!("copy:0.05,pin:0.001,brownout:ep{b0}..{b1}*0.5,scan-gap:0.005"),
+        ),
+    ]
+}
+
+/// The [`exec::SweepSpec`] of one fault level: CG-M ×
+/// [`FAULT_POLICIES`] × the given machines (paper machine when `None`),
+/// with the level's plan installed in the shared `SimConfig` (and hence
+/// in every cell key).
+pub fn faults_spec(
+    level_spec: &str,
+    machines: Option<Vec<(String, MachineConfig)>>,
+    opts: &BenchOpts,
+) -> Result<exec::SweepSpec, String> {
+    let mut sim = SimConfig::default();
+    sim.epochs = opts.epochs;
+    sim.seed = opts.seed;
+    sim.migrate_share = opts.migrate_share;
+    sim.warmup_epochs = (opts.epochs / 3).max(2);
+    if !level_spec.is_empty() {
+        sim.faults = FaultPlan::parse(level_spec)?;
+    }
+    let mut hp = HyPlacerConfig::default();
+    hp.use_aot = opts.use_aot;
+    let mut spec = exec::SweepSpec::new(MachineConfig::paper_machine(), sim, hp);
+    spec.window_frac = opts.window_frac;
+    spec.workloads = vec!["cg-M".to_string()];
+    spec.policies = FAULT_POLICIES.iter().map(|s| s.to_string()).collect();
+    if let Some(m) = machines {
+        spec.machines = m;
+    }
+    Ok(spec)
+}
+
+/// What one fig-faults invocation did: the report plus the
+/// executed/cached/total cell split across all fault levels (the CLI
+/// prints the machine-greppable resume proof from these).
+pub struct FigFaultsOutcome {
+    pub report: Report,
+    pub executed: usize,
+    pub cached: usize,
+    pub total: usize,
+}
+
+/// Run the resilience matrix with the standard checkpoint/resume
+/// plumbing. Levels share one `--out` file (their cells can never
+/// collide — the fault plan is in the content key); a corrupt prior
+/// checkpoint is salvaged per cell, and a cell whose worker panics is
+/// reported and left out of the (still saved) partial checkpoint.
+pub fn try_fig_faults_report(
+    opts: &BenchOpts,
+    machines: Option<Vec<(String, MachineConfig)>>,
+) -> Result<FigFaultsOutcome, String> {
+    if opts.resume && opts.out.is_none() {
+        return Err("--resume requires --out FILE".to_string());
+    }
+    let levels = fault_levels(opts);
+    let mut prior = match &opts.out {
+        Some(path) => match exec::load_results_salvage(path)? {
+            Some((run, skipped)) => {
+                for s in &skipped {
+                    eprintln!("fig-faults: salvaged checkpoint, re-running {}", s.describe());
+                }
+                Some(run)
+            }
+            None => None,
+        },
+        None => None,
+    };
+
+    let mut rep = Report::new(
+        "fig-faults",
+        "Degraded-mode resilience: fault grid x policies (copy retries, pins, brownouts, scan gaps)",
+    );
+    let mut t = Table::new(vec![
+        "machine",
+        "faults",
+        "policy",
+        "wall_s",
+        "steady_GBs",
+        "speedup",
+        "migrated",
+        "retried",
+        "failed",
+        "safe_mode",
+    ]);
+    let mut executed = 0usize;
+    let mut cached = 0usize;
+    let mut total = 0usize;
+    let mut failures: Vec<exec::CellFailure> = Vec::new();
+    for (level, level_spec) in &levels {
+        let spec = faults_spec(level_spec, machines.clone(), opts)?;
+        // the accumulated prior doubles as the cache: earlier levels of
+        // this invocation can never collide with later ones (distinct
+        // fault fingerprints), so this only skips genuine re-runs
+        let cache = if opts.resume { prior.as_ref() } else { None };
+        let outcome = spec.run_with_cache(opts.jobs, cache)?;
+        executed += outcome.executed;
+        cached += outcome.cached;
+        total += outcome.run.results.len() + outcome.failed.len();
+        failures.extend(outcome.failed);
+        // speedup normalizes within this level's own run, so a faulted
+        // hyplacer cell is compared against the *equally faulted*
+        // adm-default cell, never a clean one
+        for cell in &outcome.run.results {
+            let speedup = outcome
+                .run
+                .speedup_vs_baseline(cell)
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".to_string());
+            t.row(vec![
+                cell.machine.clone(),
+                level.clone(),
+                cell.sim.policy.clone(),
+                format!("{:.1}", cell.sim.total_wall_secs),
+                format!("{:.2}", cell.sim.steady_throughput / 1e9),
+                speedup,
+                cell.sim.migrated_pages.to_string(),
+                cell.sim.migrate_retried.to_string(),
+                cell.sim.migrate_failed.to_string(),
+                cell.sim.safe_mode_epochs.to_string(),
+            ]);
+        }
+        prior = Some(outcome.run.merged_with(prior.as_ref()));
+    }
+    if let Some(path) = &opts.out {
+        // `prior` is already the union of every level plus the salvaged
+        // checkpoint; persist it atomically (partial on failures)
+        let merged = prior.as_ref().expect("at least one level ran");
+        exec::save_results(path, merged, None)?;
+    }
+    rep.tables.push(("resilience".to_string(), t));
+    rep.notes.push(
+        "retried/failed/safe_mode are run-local engine telemetry: populated for \
+         freshly executed cells, zero for cells loaded from a checkpoint"
+            .to_string(),
+    );
+    rep.notes.push(
+        "speedup is vs the adm-default cell of the same (machine, fault level, seed) \
+         group — degraded runs normalize against equally degraded baselines"
+            .to_string(),
+    );
+    for f in &failures {
+        eprintln!("fig-faults: cell failed: {}", f.describe());
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "fig-faults: {} cell(s) failed (surviving cells checkpointed); first: {}",
+            failures.len(),
+            failures[0].describe()
+        ));
+    }
+    Ok(FigFaultsOutcome { report: rep, executed, cached, total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> BenchOpts {
+        let mut opts = BenchOpts::quick();
+        opts.epochs = 30;
+        opts
+    }
+
+    #[test]
+    fn fault_grid_cells_never_collide_across_levels() {
+        let opts = quick_opts();
+        let mut keys = std::collections::HashSet::new();
+        for (_, level_spec) in fault_levels(&opts) {
+            let spec = faults_spec(&level_spec, None, &opts).unwrap();
+            spec.validate().unwrap();
+            for c in spec.cells() {
+                assert!(keys.insert(c.key), "colliding key across fault levels");
+            }
+        }
+        assert_eq!(keys.len(), 4 * 2, "4 levels x 2 policies x 1 machine");
+    }
+
+    #[test]
+    fn storm_level_surfaces_retries_and_safe_mode() {
+        let out = try_fig_faults_report(&quick_opts(), None).unwrap();
+        assert_eq!(out.executed, 8);
+        assert_eq!(out.cached, 0);
+        assert_eq!(out.total, 8);
+        let rendered = out.report.render();
+        assert!(rendered.contains("storm") && rendered.contains("none"), "{rendered}");
+        // the table carries the resilience columns
+        assert!(rendered.contains("retried") && rendered.contains("safe_mode"), "{rendered}");
+    }
+
+    #[test]
+    fn custom_plan_replaces_the_grid() {
+        let mut opts = quick_opts();
+        opts.faults = "copy:0.01".to_string();
+        let levels = fault_levels(&opts);
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].0, "none");
+        assert_eq!(levels[1].1, "copy:0.01");
+        // a malformed plan surfaces as a spec error, not a panic
+        assert!(faults_spec("copy:2.0", None, &opts).is_err());
+    }
+}

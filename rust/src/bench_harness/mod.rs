@@ -12,6 +12,7 @@ pub mod compare;
 pub mod fig2;
 pub mod fig3;
 pub mod fig5;
+pub mod fig_faults;
 pub mod fig_gap;
 pub mod fig_mix;
 pub mod perf;
@@ -84,6 +85,10 @@ pub struct BenchOpts {
     /// Migration-engine bandwidth share for every matrix cell (1.0 =
     /// unthrottled one-shot semantics, the legacy-key default).
     pub migrate_share: f64,
+    /// Fault-plan spec (`--faults 'copy:0.01,...'`; empty = no faults).
+    /// fig-faults swaps its built-in fault grid for {none, this} when
+    /// set; parsed per cell into [`crate::faults::FaultPlan`].
+    pub faults: String,
 }
 
 impl Default for BenchOpts {
@@ -97,6 +102,7 @@ impl Default for BenchOpts {
             out: None,
             resume: false,
             migrate_share: 1.0,
+            faults: String::new(),
         }
     }
 }

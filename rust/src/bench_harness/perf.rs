@@ -246,6 +246,38 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
     );
     doc.put("host/mix_ms", mix_secs * 1e3, MetricKind::Info);
 
+    // --- degraded mode: the same cg-M hyplacer run under a fault storm
+    // (every FaultPlan class at once; the mid-run brownout doubles the
+    // effective copy-failure rate). retry_ratio is the resilience
+    // headline; pinned_rejections gates the PINNED-exclusion invariant
+    // at exactly 0 (policies must never plan unmovable pages);
+    // safe_mode_epochs counts HyPlacer's degraded-mode dwell time. All
+    // three are deterministic simulated outcomes.
+    let mut sim_fault = sim2.clone();
+    let (b0, b1) = (sim_fault.epochs / 3, (2 * sim_fault.epochs) / 3);
+    sim_fault.faults = crate::faults::FaultPlan::parse(&format!(
+        "copy:0.05,pin:0.001,brownout:ep{b0}..{b1}*0.5,scan-gap:0.005"
+    ))
+    .expect("storm plan parses");
+    let w = workloads::by_name("cg-M", cfg.page_bytes, sim_fault.epoch_secs)
+        .expect("cg-M registered");
+    let p = policies::by_name("hyplacer", &cfg, &hp).expect("hyplacer registered");
+    let t0 = Instant::now();
+    let storm = run_pair(&cfg, &sim_fault, w, p, 0.05);
+    let storm_secs = t0.elapsed().as_secs_f64();
+    doc.put("faults/retry_ratio", storm.stats.migrate_retry_ratio(), MetricKind::Ratio);
+    doc.put(
+        "faults/pinned_rejections",
+        storm.stats.migrate_pinned_rejected_total() as f64,
+        MetricKind::Exact,
+    );
+    doc.put(
+        "faults/safe_mode_epochs",
+        storm.safe_mode_epochs as f64,
+        MetricKind::Exact,
+    );
+    doc.put("host/storm_ms", storm_secs * 1e3, MetricKind::Info);
+
     doc.notes.push(
         "gating metrics are scale-free and deterministic (RNG draws, page counts, \
          simulated ratios); host/* timings are informational only"
@@ -380,6 +412,11 @@ mod tests {
         assert!(a.metrics["mix/unfairness"].value >= 1.0);
         assert!(a.metrics["mix/weighted_speedup"].value > 0.0);
         assert!(a.metrics["mix/over_quota_rejections"].value >= 0.0);
+        // the storm run actually faults (retries observed) while the
+        // PINNED-exclusion invariant holds exactly
+        assert!(a.metrics["faults/retry_ratio"].value > 0.0);
+        assert_eq!(a.metrics["faults/pinned_rejections"].value, 0.0);
+        assert!(a.metrics["faults/safe_mode_epochs"].value >= 0.0);
     }
 
     #[test]

@@ -256,6 +256,13 @@ pub struct SimConfig {
     /// `migrate::execute` semantics bit for bit, which is what keeps all
     /// pre-engine sweep/figure baselines valid.
     pub migrate_share: f64,
+    /// Deterministic fault-injection plan (DESIGN.md §13). The default is
+    /// [`crate::faults::FaultPlan::none`]: no fault RNG streams are
+    /// drawn, no pages pin, no brownouts derate, no scans are skipped —
+    /// the simulation is bit-identical to one built before this field
+    /// existed. Like `migrate_share`, it feeds the sweep cell-key
+    /// fingerprint only when non-empty, keeping legacy checkpoints valid.
+    pub faults: crate::faults::FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -266,6 +273,7 @@ impl Default for SimConfig {
             seed: 42,
             warmup_epochs: 10,
             migrate_share: 1.0,
+            faults: crate::faults::FaultPlan::none(),
         }
     }
 }
@@ -313,6 +321,16 @@ impl SimConfig {
                     "config: sim.migrate_share = {v} outside (0, 1]; keeping {}",
                     self.migrate_share
                 );
+            }
+        }
+        if let Some(v) = doc.str("sim.faults") {
+            // same grammar as `--faults`; apply_doc is infallible by
+            // design, so a malformed spec keeps the current plan and
+            // warns rather than silently running fault-free under a
+            // faulted cell key (or vice versa).
+            match crate::faults::FaultPlan::parse(v) {
+                Ok(plan) => self.faults = plan,
+                Err(e) => eprintln!("config: sim.faults: {e}; keeping current plan"),
             }
         }
     }
@@ -455,6 +473,14 @@ pub struct HyPlacerConfig {
     pub use_aot: bool,
     /// Directory holding placement_<N>.hlo.txt artifacts.
     pub artifacts_dir: String,
+    /// Degraded safe mode entry threshold (DESIGN.md §13): when the EWMA
+    /// of the engine's copy-failure rate rises above this, HyPlacer
+    /// pauses promotions/switches and only demotes until the storm
+    /// clears. Must be > `safe_exit_fail_rate` for hysteresis.
+    pub safe_enter_fail_rate: f64,
+    /// Safe-mode exit threshold: the failure-rate EWMA must fall below
+    /// this (strictly lower than entry) before promotions resume.
+    pub safe_exit_fail_rate: f64,
 }
 
 impl Default for HyPlacerConfig {
@@ -472,6 +498,8 @@ impl Default for HyPlacerConfig {
             age_weight: 0.65,
             use_aot: false,
             artifacts_dir: "artifacts".to_string(),
+            safe_enter_fail_rate: 0.04,
+            safe_exit_fail_rate: 0.01,
         }
     }
 }
@@ -501,6 +529,12 @@ impl HyPlacerConfig {
         }
         if let Some(v) = doc.bool("hyplacer.use_aot") {
             self.use_aot = v;
+        }
+        if let Some(v) = doc.f64("hyplacer.safe_enter_fail_rate") {
+            self.safe_enter_fail_rate = v;
+        }
+        if let Some(v) = doc.f64("hyplacer.safe_exit_fail_rate") {
+            self.safe_exit_fail_rate = v;
         }
         if let Some(v) = doc.str("hyplacer.artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -640,5 +674,31 @@ mod tests {
         assert_eq!(h.max_migrate_bytes, 512 * 1024 * 1024);
         assert!((h.pm_write_bw_threshold - 10.0 * MB).abs() < 1.0);
         assert!((h.delay_secs - 0.05).abs() < 1e-12);
+        // safe-mode hysteresis: entry strictly above exit
+        assert!(h.safe_enter_fail_rate > h.safe_exit_fail_rate);
+    }
+
+    #[test]
+    fn faults_default_none_and_doc_override() {
+        assert!(SimConfig::default().faults.is_none());
+
+        let doc =
+            parse::Doc::parse("[sim]\nfaults = \"copy:0.01,brownout:ep4..8*0.5\"").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert!((sim.faults.copy_fail - 0.01).abs() < 1e-12);
+        assert_eq!(sim.faults.brownouts.len(), 1);
+
+        // malformed spec keeps the current plan (warns on stderr)
+        let doc = parse::Doc::parse("[sim]\nfaults = \"copy:2.0\"").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert!(sim.faults.is_none());
+
+        let doc = parse::Doc::parse("[hyplacer]\nsafe_enter_fail_rate = 0.1\nsafe_exit_fail_rate = 0.02").unwrap();
+        let mut h = HyPlacerConfig::default();
+        h.apply_doc(&doc);
+        assert!((h.safe_enter_fail_rate - 0.1).abs() < 1e-12);
+        assert!((h.safe_exit_fail_rate - 0.02).abs() < 1e-12);
     }
 }

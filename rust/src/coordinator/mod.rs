@@ -53,6 +53,13 @@ pub struct SimResult {
     pub migrate_queue_peak: u64,
     pub migrate_deferred_ratio: f64,
     pub migrate_stale_ratio: f64,
+    /// Fault-injection telemetry (run-local, like the queue series; all
+    /// exactly 0 without a [`crate::faults::FaultPlan`]): transient copy
+    /// retries, permanently failed moves, and epochs the policy spent in
+    /// degraded safe mode.
+    pub migrate_retried: u64,
+    pub migrate_failed: u64,
+    pub safe_mode_epochs: u64,
     /// Per-tenant summaries for multi-tenant co-runs (run-local, like
     /// the epoch trace — not part of the persisted sweep schema). Empty
     /// for legacy single-workload [`Simulation`] runs and for results
@@ -143,7 +150,21 @@ impl Simulation {
         let model = PerfModel::new(&cfg);
         let seed = sim.seed;
         let warmup = sim.warmup_epochs;
-        let engine = MigrationEngine::new(sim.migrate_share);
+        let mut engine = MigrationEngine::new(sim.migrate_share);
+        // Fault injection (DESIGN.md §13): pin the plan's random page
+        // subset permanently and arm the engine's copy-failure stream.
+        // With the default empty plan neither branch draws any RNG or
+        // sets any bit — the no-fault path is bit-identical.
+        if !sim.faults.is_none() {
+            if sim.faults.pin > 0.0 {
+                for page in 0..footprint {
+                    if sim.faults.pin_page(seed, page) {
+                        pt.set_pinned(page);
+                    }
+                }
+            }
+            engine.set_fault_injection(&sim.faults, seed);
+        }
         let mut this = Simulation {
             cfg,
             sim,
@@ -279,6 +300,12 @@ impl Simulation {
         let page_bytes = self.cfg.page_bytes as f64;
 
         // --- 1. MMU: set R/D bits (+ delay-window bits) on touched pages.
+        // A fault-plan scan gap drops this epoch's reference-bit harvest
+        // entirely (the app still runs — demand is computed from region
+        // activity, not from the bits). Gated on a non-empty plan so the
+        // no-fault RNG stream is untouched.
+        let scan_gap =
+            !self.sim.faults.is_none() && self.sim.faults.scan_gap_epoch(self.sim.seed, epoch);
         let mut active_pages = 0u64;
         self.region_scratch.clear();
         for r in &regions {
@@ -290,7 +317,7 @@ impl Simulation {
                 write_bytes: bytes * r.write_frac,
                 random_frac: r.random_frac,
             });
-            if bytes <= 0.0 {
+            if bytes <= 0.0 || scan_gap {
                 continue;
             }
             let coverage = bytes / (r.pages as f64 * page_bytes);
@@ -393,12 +420,18 @@ impl Simulation {
         demand.pm.add(&mig.pm_traffic);
         demand.overhead_secs += mig.overhead_secs;
 
-        // --- 5. Serve + record.
+        // --- 5. Serve + record. A brownout window derates the DCPMM
+        // ceilings for this epoch (×1.0 outside windows and for the
+        // empty plan — bit-identical).
+        if !self.sim.faults.is_none() {
+            self.model.set_pm_derate(self.sim.faults.pm_derate(epoch));
+        }
         let outcome = self.model.service(&demand);
         self.pcmon.record_epoch(&demand, &outcome);
         self.energy.record(&self.cfg, &demand, &outcome);
         self.stats
             .record(epoch, &demand, &outcome, &mig, self.pt.dram_occupancy());
+        self.stats.record_safe_mode(self.policy.in_safe_mode());
         self.clock.advance(outcome.wall_secs);
         outcome.wall_secs
     }
@@ -429,6 +462,9 @@ impl Simulation {
             migrate_queue_peak: self.stats.migrate_queue_depth_peak(),
             migrate_deferred_ratio: self.stats.migrate_deferred_ratio(),
             migrate_stale_ratio: self.stats.migrate_stale_drop_ratio(),
+            migrate_retried: self.stats.migrate_retried_total(),
+            migrate_failed: self.stats.migrate_failed_total(),
+            safe_mode_epochs: self.stats.safe_mode_epochs(),
             tenants: Vec::new(),
             stats: self.stats,
         }

@@ -98,6 +98,36 @@ where
     done.into_iter().map(|(_, r)| r).collect()
 }
 
+/// [`parallel_map`] with per-item panic isolation: a panic inside `f`
+/// becomes `Err(message)` for that item while every other item still
+/// completes. The sweep engine uses this so one poisoned cell (a policy
+/// bug on one grid point, say) cannot take down a multi-hour matrix —
+/// the surviving cells are checkpointed and the failure is reported by
+/// name instead.
+pub fn parallel_map_caught<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<Result<R, String>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    parallel_map(items, jobs, |i, item| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item)))
+            .map_err(|payload| panic_message(payload.as_ref()))
+    })
+}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or a formatted message covers everything in this crate).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Build a policy by registry name, swapping in the AOT/PJRT classifier
 /// for HyPlacer when `hp.use_aot` is set (with graceful fallback to the
 /// native classifier if the artifacts or the PJRT backend are missing).
@@ -228,6 +258,12 @@ impl SweepSpec {
         if sim.migrate_share != 1.0 {
             sim_fp.push_str(&format!("|migrate_share={:?}", sim.migrate_share));
         }
+        if !sim.faults.is_none() {
+            // canonical round-trip spelling, so "copy:0.01" and
+            // "copy:1e-2" key identically — and a faulted cell can never
+            // collide with a clean checkpoint of the same grid point
+            sim_fp.push_str(&format!("|faults={}", sim.faults.render()));
+        }
         let fp = format!(
             "v1|machine={mname}:{machine:?}|sim={sim_fp}|hp={:?}|wf={}|w={workload}|p={policy}",
             self.hyplacer, self.window_frac
@@ -345,9 +381,21 @@ impl SweepSpec {
 
     /// Run the whole grid on up to `jobs` worker threads (`0` = one per
     /// core). Results come back in canonical cell order and are
-    /// bit-identical for any `jobs` value.
+    /// bit-identical for any `jobs` value. Any cell whose worker
+    /// panicked turns the whole call into `Err` (callers of the simple
+    /// API get all-or-nothing; the checkpointing path keeps partial
+    /// results via [`SweepOutcome::failed`]).
     pub fn run(&self, jobs: usize) -> Result<SweepRun, String> {
-        Ok(self.run_with_cache(jobs, None)?.run)
+        let out = self.run_with_cache(jobs, None)?;
+        if let Some(first) = out.failed.first() {
+            return Err(format!(
+                "{} of {} cells failed; first: {}",
+                out.failed.len(),
+                out.executed + out.failed.len(),
+                first.describe()
+            ));
+        }
+        Ok(out.run)
     }
 
     /// Run the grid, reusing any prior cell whose content key matches
@@ -370,25 +418,43 @@ impl SweepSpec {
             cells.iter().filter(|c| !cache.contains_key(&c.key)).collect();
         let t0 = Instant::now();
         let jobs = resolve_jobs(jobs).min(todo.len().max(1));
-        let fresh = parallel_map(&todo, jobs, |_, cell| self.run_cell(cell));
+        // per-cell panic isolation: a worker that dies on one cell
+        // yields Err for that cell; every other cell still completes
+        // and lands in the (atomically written) partial checkpoint
+        let fresh = parallel_map_caught(&todo, jobs, |_, cell| self.run_cell(cell));
         let wall_secs = t0.elapsed().as_secs_f64();
-        let executed = todo.len();
         let mut fresh = fresh.into_iter();
         let mut results = Vec::with_capacity(cells.len());
         let mut cached = 0usize;
+        let mut executed = 0usize;
+        let mut failed = Vec::new();
         for cell in &cells {
             match cache.get(&cell.key) {
                 Some(prev) => {
                     cached += 1;
                     results.push((*prev).clone());
                 }
-                None => results.push(fresh.next().expect("one fresh result per missing cell")),
+                None => match fresh.next().expect("one fresh result per missing cell") {
+                    Ok(r) => {
+                        executed += 1;
+                        results.push(r);
+                    }
+                    Err(panic_msg) => failed.push(CellFailure {
+                        machine: cell.machine.clone(),
+                        workload: cell.workload.clone(),
+                        policy: cell.policy.clone(),
+                        seed: cell.seed,
+                        key: cell.key,
+                        error: panic_msg,
+                    }),
+                },
             }
         }
         Ok(SweepOutcome {
             run: SweepRun { results, jobs, wall_secs },
             executed,
             cached,
+            failed,
         })
     }
 
@@ -477,6 +543,9 @@ impl CellResult {
                 migrate_queue_peak: 0,
                 migrate_deferred_ratio: 0.0,
                 migrate_stale_ratio: 0.0,
+                migrate_retried: 0,
+                migrate_failed: 0,
+                safe_mode_epochs: 0,
                 tenants: Vec::new(),
                 stats: RunStats::new(0),
             },
@@ -494,11 +563,37 @@ pub struct SweepRun {
 }
 
 /// What [`SweepSpec::run_with_cache`] did: the merged run plus how many
-/// cells actually executed vs came from the prior results file.
+/// cells actually executed vs came from the prior results file, plus
+/// any cells whose worker panicked (isolated per cell — they are simply
+/// absent from `run`, so saving the checkpoint and re-running resumes
+/// exactly them).
 pub struct SweepOutcome {
     pub run: SweepRun,
     pub executed: usize,
     pub cached: usize,
+    pub failed: Vec<CellFailure>,
+}
+
+/// One grid cell whose simulation panicked, named well enough to find
+/// and re-run it.
+#[derive(Clone, Debug)]
+pub struct CellFailure {
+    pub machine: String,
+    pub workload: String,
+    pub policy: String,
+    pub seed: u64,
+    pub key: u64,
+    pub error: String,
+}
+
+impl CellFailure {
+    /// Human-readable one-liner for the sweep report.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}/{}/seed={} (key {:016x}): {}",
+            self.machine, self.workload, self.policy, self.seed, self.key, self.error
+        )
+    }
 }
 
 /// Baseline lookup key: the (machine, workload, seed) group a cell is
@@ -562,7 +657,9 @@ impl SweepRun {
         SweepRun { results, jobs: self.jobs, wall_secs: self.wall_secs }
     }
 
-    /// Render the per-cell results table.
+    /// Render the per-cell results table. The fault-telemetry columns
+    /// (retried/failed/safe_mode) are run-local: populated for freshly
+    /// executed cells, zero for cells loaded from a checkpoint.
     pub fn table(&self) -> Table {
         let mut t = Table::new(vec![
             "machine",
@@ -574,6 +671,9 @@ impl SweepRun {
             "speedup",
             "energy_gain",
             "migrated",
+            "retried",
+            "failed",
+            "safe_mode",
         ]);
         let fmt_opt = |v: Option<f64>| match v {
             Some(x) => format!("{x:.2}x"),
@@ -592,6 +692,9 @@ impl SweepRun {
                 fmt_opt(base.map(|b| cell.sim.steady_speedup_vs(&b.sim))),
                 fmt_opt(base.map(|b| cell.sim.energy_gain_vs(&b.sim))),
                 cell.sim.migrated_pages.to_string(),
+                cell.sim.migrate_retried.to_string(),
+                cell.sim.migrate_failed.to_string(),
+                cell.sim.safe_mode_epochs.to_string(),
             ]);
         }
         t
@@ -667,6 +770,62 @@ impl SweepRun {
         }
         Ok(SweepRun { results, jobs: 0, wall_secs: 0.0 })
     }
+
+    /// Lenient inverse of [`SweepRun::to_json`] for resume: keep every
+    /// cell that parses, report the ones that do not. One truncated or
+    /// hand-edited cell no longer discards a whole checkpoint — the
+    /// salvaged run simply lacks the bad cells, so
+    /// [`SweepSpec::run_with_cache`] re-executes exactly those.
+    ///
+    /// The *document* must still be a results file (top-level `cells`
+    /// array): structural damage fails hard like [`SweepRun::from_json`],
+    /// because silently treating garbage as an empty checkpoint would
+    /// recompute — and then overwrite — everything.
+    pub fn from_json_salvage(doc: &Json) -> Result<(SweepRun, Vec<SkippedCell>), String> {
+        let cells = doc
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "results document has no \"cells\" array".to_string())?;
+        let mut results = Vec::with_capacity(cells.len());
+        let mut skipped = Vec::new();
+        for (i, c) in cells.iter().enumerate() {
+            match CellResult::from_json(c) {
+                Ok(cell) => results.push(cell),
+                Err(error) => skipped.push(SkippedCell {
+                    index: i,
+                    // best-effort key so the report names which grid
+                    // point will re-execute, even when other fields of
+                    // the cell are the corrupt ones
+                    key: c
+                        .get("key")
+                        .and_then(Json::as_str)
+                        .and_then(|s| u64::from_str_radix(s, 16).ok()),
+                    error,
+                }),
+            }
+        }
+        Ok((SweepRun { results, jobs: 0, wall_secs: 0.0 }, skipped))
+    }
+}
+
+/// One checkpoint cell [`SweepRun::from_json_salvage`] could not parse:
+/// its position in the document, its content key if that much survived,
+/// and the parse error.
+#[derive(Debug)]
+pub struct SkippedCell {
+    pub index: usize,
+    pub key: Option<u64>,
+    pub error: String,
+}
+
+impl SkippedCell {
+    /// Human-readable one-liner for the resume report.
+    pub fn describe(&self) -> String {
+        match self.key {
+            Some(k) => format!("cell {} (key {k:016x}): {}", self.index, self.error),
+            None => format!("cell {}: {}", self.index, self.error),
+        }
+    }
 }
 
 /// Load a prior sweep-results file. `Ok(None)` when the file does not
@@ -681,6 +840,25 @@ pub fn load_results(path: &str) -> Result<Option<SweepRun>, String> {
     };
     let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
     SweepRun::from_json(&doc)
+        .map(Some)
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+/// [`load_results`] with per-cell salvage: the `--resume` loader. A
+/// missing file is still `Ok(None)`; a file that is not parseable JSON
+/// or lacks the top-level `cells` array is still a hard error; but
+/// individually malformed cells are skipped (and reported) instead of
+/// poisoning the checkpoint, so resume re-executes only those.
+pub fn load_results_salvage(
+    path: &str,
+) -> Result<Option<(SweepRun, Vec<SkippedCell>)>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("{path}: {e}")),
+    };
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    SweepRun::from_json_salvage(&doc)
         .map(Some)
         .map_err(|e| format!("{path}: {e}"))
 }
@@ -1083,6 +1261,117 @@ mod tests {
             merged.speedup_vs_baseline(hyp).unwrap().to_bits(),
             expect.to_bits()
         );
+    }
+
+    #[test]
+    fn parallel_map_caught_isolates_panics() {
+        let items: Vec<u32> = (0..20).collect();
+        for jobs in [1, 4] {
+            let out = parallel_map_caught(&items, jobs, |_, &x| {
+                if x == 7 {
+                    panic!("boom on {x}");
+                }
+                x * 2
+            });
+            assert_eq!(out.len(), 20, "jobs={jobs}");
+            for (i, r) in out.iter().enumerate() {
+                if i == 7 {
+                    let err = r.as_ref().unwrap_err();
+                    assert!(err.contains("boom on 7"), "jobs={jobs}: {err}");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i as u32 * 2, "jobs={jobs}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_plan_folds_into_cell_keys() {
+        let a = quick_spec().cells();
+        // an explicit empty plan is the default: fingerprints unchanged,
+        // so every pre-fault checkpoint stays resumable
+        let mut spec = quick_spec();
+        spec.sim.faults = crate::faults::FaultPlan::none();
+        assert!(spec.cells().iter().zip(a.iter()).all(|(x, y)| x.key == y.key));
+        // a non-empty plan re-keys every cell — faulted results can
+        // never be mistaken for (or collide with) clean ones
+        let mut spec = quick_spec();
+        spec.sim.faults =
+            crate::faults::FaultPlan::parse("copy:0.01,brownout:ep2..4*0.5").unwrap();
+        let cells = spec.cells();
+        assert!(cells.iter().zip(a.iter()).all(|(x, y)| x.key != y.key));
+        let mut seen = std::collections::HashSet::new();
+        assert!(cells.iter().all(|c| seen.insert(c.key)));
+        // pin the exact fingerprint (the canonical `render()` spelling
+        // appended like migrate_share) so a reformat fails loudly
+        let (mname, machine) = &spec.machines[0];
+        let w = &spec.workloads[0];
+        let p = &spec.policies[0];
+        let seed = spec.seeds[0];
+        let sim = spec.resolved_sim(mname, w, p, seed);
+        let fp = format!(
+            "v1|machine={mname}:{machine:?}|sim=SimConfig {{ epoch_secs: {:?}, epochs: {:?}, \
+             seed: {:?}, warmup_epochs: {:?} }}|faults={}|hp={:?}|wf={}|w={w}|p={p}",
+            sim.epoch_secs,
+            sim.epochs,
+            sim.seed,
+            sim.warmup_epochs,
+            sim.faults.render(),
+            spec.hyplacer,
+            spec.window_frac
+        );
+        assert_eq!(spec.cell_key(0, w, p, seed), crate::util::fnv1a64(fp.as_bytes()));
+    }
+
+    #[test]
+    fn corrupted_cell_is_salvaged_and_reexecuted() {
+        let spec = quick_spec();
+        let full = spec.run(2).unwrap();
+        let rendered = full.to_json().render();
+
+        // hand-corrupt one cell: drop a required numeric field
+        let mut doc = json::parse(&rendered).unwrap();
+        let victim_key = full.results[2].key;
+        if let Json::Obj(root) = &mut doc {
+            if let Some(Json::Arr(cells)) = root.get_mut("cells") {
+                if let Json::Obj(cell) = &mut cells[2] {
+                    cell.remove("throughput");
+                }
+            }
+        }
+
+        // the strict loader still rejects the whole document
+        assert!(SweepRun::from_json(&doc).is_err());
+
+        // salvage keeps the other cells and names the bad one
+        let (salvaged, skipped) = SweepRun::from_json_salvage(&doc).unwrap();
+        assert_eq!(salvaged.results.len(), full.results.len() - 1);
+        assert_eq!(skipped.len(), 1);
+        assert_eq!(skipped[0].index, 2);
+        assert_eq!(skipped[0].key, Some(victim_key));
+        assert!(skipped[0].error.contains("throughput"), "{}", skipped[0].error);
+        assert!(skipped[0].describe().contains(&format!("{victim_key:016x}")));
+
+        // resume from the salvaged checkpoint re-executes exactly the
+        // corrupt cell and reproduces the cold run bit for bit
+        let out = spec.run_with_cache(1, Some(&salvaged)).unwrap();
+        assert_eq!(out.executed, 1);
+        assert_eq!(out.cached, full.results.len() - 1);
+        assert!(out.failed.is_empty());
+        assert_eq!(out.run.to_json().render(), rendered);
+
+        // on disk: salvage loader reports the same skip; structural
+        // damage (not a results document) still fails hard
+        let path = std::env::temp_dir().join("hyplacer_exec_salvage_test.json");
+        let path = path.to_str().unwrap().to_string();
+        crate::util::write_atomic(&path, &doc.render()).unwrap();
+        let (from_disk, skipped) = load_results_salvage(&path).unwrap().unwrap();
+        assert_eq!(from_disk.results.len(), full.results.len() - 1);
+        assert_eq!(skipped.len(), 1);
+        crate::util::write_atomic(&path, "{\"schema\": 1}").unwrap();
+        assert!(load_results_salvage(&path).unwrap_err().contains("cells"));
+        std::fs::remove_file(&path).ok();
+        assert!(load_results_salvage(&path).unwrap().is_none(), "missing file is Ok(None)");
     }
 
     #[test]

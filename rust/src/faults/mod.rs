@@ -1,0 +1,381 @@
+//! Deterministic fault injection — the robustness layer (DESIGN.md §13).
+//!
+//! The paper's central lesson is that real DCPMM violates the clean
+//! assumptions of prior tiering proposals; this module extends the same
+//! honesty to the *failure* surface a production placement daemon faces:
+//! `move_pages(2)` returning EBUSY/ENOMEM, kernel-pinned pages that can
+//! never migrate, thermal/wear bandwidth brownouts, and monitoring gaps
+//! where reference-bit harvesting is skipped.
+//!
+//! A [`FaultPlan`] is parsed from config/CLI (`--faults
+//! 'copy:0.01,pin:0.001,brownout:ep40..60*0.5,scan-gap:0.005'`) and is
+//! **seeded and deterministic**: every fault decision derives from the
+//! run's `SimConfig::seed` through dedicated RNG streams, so a faulted
+//! run replays bit-for-bit — the property every figure regeneration and
+//! the sweep checkpoint cache rely on. The plan's canonical rendering is
+//! folded into the sweep cell-key fingerprint (only when non-empty), so
+//! faulted cells never collide with clean checkpoints and the fault-free
+//! fingerprint stays byte-identical to the pre-fault era.
+//!
+//! Four fault classes:
+//!
+//!  * **`copy:P`** — each page-move copy attempt fails transiently with
+//!    probability P (the `move_pages` EBUSY analogue). The migration
+//!    engine retries with bounded exponential backoff
+//!    ([`RETRY_MAX`]/[`backoff_epochs`]); the cap exceeded means a
+//!    permanent failure (`failed` in [`crate::vm::MigrationStats`]).
+//!  * **`pin:P`** — each page is permanently pinned at allocation with
+//!    probability P (kernel-pinned / DMA-locked memory). Pinned pages
+//!    carry the `PINNED` activity-index plane; policies exclude them
+//!    from every walk and the engine rejects any reference at
+//!    submission.
+//!  * **`brownout:epA..B*F`** — during epochs `[A, B)` the PM tier's
+//!    bandwidth ceilings are derated by factor F (thermal/wear
+//!    throttling). A browned-out tier also *fails copies more often*:
+//!    the effective transient-failure probability is `copy / F` (capped
+//!    below 1) — an aborted `move_pages` batch under throttling is
+//!    exactly what TPP hardens against. Repeatable; overlapping windows
+//!    multiply.
+//!  * **`scan-gap:P`** — each epoch independently drops MMU
+//!    reference-bit harvesting with probability P, so policies decide on
+//!    stale activity.
+
+use crate::util::Rng64;
+
+/// Max transient-failure retries per queued migration entry; the
+/// (RETRY_MAX + 1)-th consecutive copy failure is permanent.
+pub const RETRY_MAX: u32 = 3;
+
+/// Effective transient-failure probability is capped here so a fully
+/// browned-out tier still makes progress (no infinite retry storm).
+pub const COPY_FAIL_CAP: f64 = 0.95;
+
+/// Epoch-delay before a failed entry's next attempt: exponential in the
+/// retries already consumed (1, 2, 4, ...), capped at 4 epochs.
+pub fn backoff_epochs(retries_done: u32) -> u32 {
+    1u32 << retries_done.min(2)
+}
+
+// Distinct stream constants keep each fault class' randomness
+// independent of the simulation's MMU/workload streams (and of each
+// other) while still deriving from the single run seed.
+const STREAM_COPY: u64 = 0xFA17_C09F_0000_0001;
+const STREAM_PIN: u64 = 0xFA17_C09F_0000_0002;
+const STREAM_SCAN: u64 = 0xFA17_C09F_0000_0003;
+
+/// One PM bandwidth-brownout window: epochs `[start, end)` derated by
+/// `factor` (0 < factor <= 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Brownout {
+    pub start: u32,
+    pub end: u32,
+    pub factor: f64,
+}
+
+impl Brownout {
+    pub fn contains(&self, epoch: u32) -> bool {
+        epoch >= self.start && epoch < self.end
+    }
+}
+
+/// A complete, deterministic fault schedule for one run. The default
+/// ([`FaultPlan::none`]) injects nothing and is bit-identical to the
+/// pre-fault simulator: no fault RNG stream is ever drawn, every derate
+/// is exactly 1.0, and the cell-key fingerprint is untouched.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Per-copy-attempt transient failure probability (`copy:P`).
+    pub copy_fail: f64,
+    /// Per-page permanent-pin probability at allocation (`pin:P`).
+    pub pin: f64,
+    /// PM bandwidth brownout windows (`brownout:epA..B*F`), ascending
+    /// by start epoch (canonicalized at parse).
+    pub brownouts: Vec<Brownout>,
+    /// Per-epoch probability of a dropped reference-bit harvest
+    /// (`scan-gap:P`).
+    pub scan_gap: f64,
+}
+
+impl FaultPlan {
+    /// The empty plan: inject nothing.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True iff this plan injects nothing (the bit-identical path).
+    pub fn is_none(&self) -> bool {
+        self.copy_fail <= 0.0 && self.pin <= 0.0 && self.brownouts.is_empty() && self.scan_gap <= 0.0
+    }
+
+    /// Parse a `--faults` spec: comma-separated terms of
+    /// `copy:P`, `pin:P`, `brownout:epA..B*F` (repeatable) and
+    /// `scan-gap:P`. An empty spec is [`FaultPlan::none`].
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        let mut seen_copy = false;
+        let mut seen_pin = false;
+        let mut seen_gap = false;
+        for term in spec.split(',') {
+            let term = term.trim();
+            if term.is_empty() {
+                continue;
+            }
+            let (key, value) = term
+                .split_once(':')
+                .ok_or_else(|| format!("faults: term {term:?}: expected KEY:VALUE"))?;
+            let prob = |v: &str, key: &str| -> Result<f64, String> {
+                let p: f64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("faults: {key}: {e}"))?;
+                if !(0.0..1.0).contains(&p) {
+                    return Err(format!("faults: {key}: probability {p} outside [0, 1)"));
+                }
+                Ok(p)
+            };
+            match key.trim() {
+                "copy" => {
+                    if seen_copy {
+                        return Err("faults: duplicate copy term".to_string());
+                    }
+                    seen_copy = true;
+                    plan.copy_fail = prob(value, "copy")?;
+                }
+                "pin" => {
+                    if seen_pin {
+                        return Err("faults: duplicate pin term".to_string());
+                    }
+                    seen_pin = true;
+                    plan.pin = prob(value, "pin")?;
+                }
+                "scan-gap" => {
+                    if seen_gap {
+                        return Err("faults: duplicate scan-gap term".to_string());
+                    }
+                    seen_gap = true;
+                    plan.scan_gap = prob(value, "scan-gap")?;
+                }
+                "brownout" => {
+                    let body = value
+                        .trim()
+                        .strip_prefix("ep")
+                        .ok_or_else(|| format!("faults: brownout {value:?}: expected epA..B*F"))?;
+                    let (range, factor) = body
+                        .split_once('*')
+                        .ok_or_else(|| format!("faults: brownout {value:?}: missing *FACTOR"))?;
+                    let (a, b) = range
+                        .split_once("..")
+                        .ok_or_else(|| format!("faults: brownout {value:?}: missing A..B"))?;
+                    let start: u32 =
+                        a.trim().parse().map_err(|e| format!("faults: brownout start: {e}"))?;
+                    let end: u32 =
+                        b.trim().parse().map_err(|e| format!("faults: brownout end: {e}"))?;
+                    if start >= end {
+                        return Err(format!(
+                            "faults: brownout ep{start}..{end}: empty window (start >= end)"
+                        ));
+                    }
+                    let factor: f64 = factor
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("faults: brownout factor: {e}"))?;
+                    if !(factor > 0.0 && factor <= 1.0) {
+                        return Err(format!("faults: brownout factor {factor} outside (0, 1]"));
+                    }
+                    plan.brownouts.push(Brownout { start, end, factor });
+                }
+                other => return Err(format!("faults: unknown term {other:?}")),
+            }
+        }
+        // canonical order so spelling variations of the same plan render
+        // (and therefore fingerprint) identically
+        plan.brownouts
+            .sort_by(|x, y| (x.start, x.end).cmp(&(y.start, y.end)));
+        Ok(plan)
+    }
+
+    /// Canonical spec rendering — what the sweep cell key folds in
+    /// (`parse(render) == self` for every valid plan).
+    pub fn render(&self) -> String {
+        let mut terms: Vec<String> = Vec::new();
+        if self.copy_fail > 0.0 {
+            terms.push(format!("copy:{}", self.copy_fail));
+        }
+        if self.pin > 0.0 {
+            terms.push(format!("pin:{}", self.pin));
+        }
+        for b in &self.brownouts {
+            terms.push(format!("brownout:ep{}..{}*{}", b.start, b.end, b.factor));
+        }
+        if self.scan_gap > 0.0 {
+            terms.push(format!("scan-gap:{}", self.scan_gap));
+        }
+        terms.join(",")
+    }
+
+    /// PM bandwidth derate for an epoch: product of every brownout
+    /// window covering it (1.0 outside all windows).
+    pub fn pm_derate(&self, epoch: u32) -> f64 {
+        let mut d = 1.0;
+        for b in &self.brownouts {
+            if b.contains(epoch) {
+                d *= b.factor;
+            }
+        }
+        d
+    }
+
+    /// Effective transient copy-failure probability for an epoch: the
+    /// base rate amplified by any active brownout (a throttled tier
+    /// aborts copy batches more often), capped at [`COPY_FAIL_CAP`].
+    pub fn effective_copy_fail(&self, epoch: u32) -> f64 {
+        if self.copy_fail <= 0.0 {
+            return 0.0;
+        }
+        (self.copy_fail / self.pm_derate(epoch)).min(COPY_FAIL_CAP)
+    }
+
+    /// Deterministic per-page pin decision (stateless: independent of
+    /// allocation order, so the legacy and multi-tenant coordinators
+    /// agree on which global pages are pinned).
+    pub fn pin_page(&self, seed: u64, page: u32) -> bool {
+        if self.pin <= 0.0 {
+            return false;
+        }
+        let mixed = seed
+            .wrapping_add(STREAM_PIN)
+            .wrapping_add((page as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Rng64::new(mixed).chance(self.pin)
+    }
+
+    /// Deterministic per-epoch scan-gap decision (stateless, so it
+    /// never perturbs the MMU's own RNG stream).
+    pub fn scan_gap_epoch(&self, seed: u64, epoch: u32) -> bool {
+        if self.scan_gap <= 0.0 {
+            return false;
+        }
+        let mixed = seed
+            .wrapping_add(STREAM_SCAN)
+            .wrapping_add((epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Rng64::new(mixed).chance(self.scan_gap)
+    }
+
+    /// The dedicated RNG stream for transient copy-failure draws (the
+    /// migration engine owns the returned generator for the run).
+    pub fn copy_fail_rng(seed: u64) -> Rng64 {
+        Rng64::new(seed.wrapping_add(STREAM_COPY))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_none() {
+        let p = FaultPlan::parse("").expect("empty spec parses");
+        assert!(p.is_none());
+        assert_eq!(p, FaultPlan::none());
+        assert_eq!(p.render(), "");
+        assert_eq!(p.pm_derate(0), 1.0);
+        assert_eq!(p.effective_copy_fail(0), 0.0);
+        assert!(!p.pin_page(42, 0));
+        assert!(!p.scan_gap_epoch(42, 0));
+    }
+
+    #[test]
+    fn full_spec_round_trips_canonically() {
+        let spec = "copy:0.01,pin:0.001,brownout:ep40..60*0.5,scan-gap:0.005";
+        let p = FaultPlan::parse(spec).expect("spec parses");
+        assert!(!p.is_none());
+        assert_eq!(p.copy_fail, 0.01);
+        assert_eq!(p.pin, 0.001);
+        assert_eq!(p.scan_gap, 0.005);
+        assert_eq!(p.brownouts, vec![Brownout { start: 40, end: 60, factor: 0.5 }]);
+        assert_eq!(p.render(), spec);
+        // re-parsing the render is the identity
+        assert_eq!(FaultPlan::parse(&p.render()).expect("render re-parses"), p);
+        // term order and whitespace do not matter; the render is canonical
+        let shuffled =
+            FaultPlan::parse(" scan-gap:0.005, brownout:ep40..60*0.5 ,copy:0.01,pin:0.001 ")
+                .expect("shuffled spec parses");
+        assert_eq!(shuffled, p);
+        assert_eq!(shuffled.render(), spec);
+    }
+
+    #[test]
+    fn brownout_windows_sort_and_multiply() {
+        let p = FaultPlan::parse("brownout:ep50..60*0.5,brownout:ep10..55*0.8")
+            .expect("two windows parse");
+        assert_eq!(p.brownouts[0].start, 10, "windows canonicalized ascending");
+        assert_eq!(p.pm_derate(5), 1.0);
+        assert!((p.pm_derate(20) - 0.8).abs() < 1e-12);
+        assert!((p.pm_derate(52) - 0.4).abs() < 1e-12, "overlap multiplies");
+        assert!((p.pm_derate(57) - 0.5).abs() < 1e-12);
+        assert_eq!(p.pm_derate(60), 1.0, "end is exclusive");
+    }
+
+    #[test]
+    fn brownouts_amplify_copy_failures_with_a_cap() {
+        let p = FaultPlan::parse("copy:0.1,brownout:ep10..20*0.25").expect("spec parses");
+        assert!((p.effective_copy_fail(0) - 0.1).abs() < 1e-12);
+        assert!((p.effective_copy_fail(15) - 0.4).abs() < 1e-12);
+        let storm = FaultPlan::parse("copy:0.5,brownout:ep10..20*0.25").expect("spec parses");
+        assert_eq!(storm.effective_copy_fail(15), COPY_FAIL_CAP, "capped below 1");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "copy",               // no value
+            "copy:1.0",           // probability must be < 1
+            "copy:-0.1",          // negative
+            "copy:x",             // non-numeric
+            "copy:0.1,copy:0.2",  // duplicate scalar
+            "pin:0.1,pin:0.1",    // duplicate scalar
+            "scan-gap:0.1,scan-gap:0.1",
+            "warp:0.5",           // unknown key
+            "brownout:40..60*0.5",    // missing ep prefix
+            "brownout:ep40..60",      // missing factor
+            "brownout:ep40*0.5",      // missing range
+            "brownout:ep60..40*0.5",  // empty window
+            "brownout:ep40..40*0.5",  // empty window
+            "brownout:ep40..60*0",    // factor must be > 0
+            "brownout:ep40..60*1.5",  // factor must be <= 1
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn fault_decisions_are_deterministic_and_seed_sensitive() {
+        let p = FaultPlan::parse("pin:0.3,scan-gap:0.3").expect("spec parses");
+        for page in 0..64u32 {
+            assert_eq!(p.pin_page(7, page), p.pin_page(7, page));
+        }
+        for epoch in 0..64u32 {
+            assert_eq!(p.scan_gap_epoch(7, epoch), p.scan_gap_epoch(7, epoch));
+        }
+        // different seeds disagree somewhere; rates track the probability
+        let pins_a: Vec<bool> = (0..2000).map(|pg| p.pin_page(7, pg)).collect();
+        let pins_b: Vec<bool> = (0..2000).map(|pg| p.pin_page(8, pg)).collect();
+        assert_ne!(pins_a, pins_b);
+        let rate = pins_a.iter().filter(|x| **x).count() as f64 / 2000.0;
+        assert!((rate - 0.3).abs() < 0.05, "pin rate {rate}");
+        // the copy-fail stream is reproducible from the seed alone
+        let mut r1 = FaultPlan::copy_fail_rng(7);
+        let mut r2 = FaultPlan::copy_fail_rng(7);
+        for _ in 0..32 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_is_exponential_and_capped() {
+        assert_eq!(backoff_epochs(0), 1);
+        assert_eq!(backoff_epochs(1), 2);
+        assert_eq!(backoff_epochs(2), 4);
+        assert_eq!(backoff_epochs(3), 4, "capped");
+        assert_eq!(RETRY_MAX, 3);
+    }
+}

@@ -20,6 +20,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 pub mod util;
+pub mod faults;
 pub mod config;
 pub mod sim;
 pub mod mem;

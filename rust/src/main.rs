@@ -20,7 +20,7 @@ use std::process::ExitCode;
 use hyplacer::analysis;
 use hyplacer::bench_harness::baseline::{self, BaselineDoc};
 use hyplacer::bench_harness::{
-    compare, fig2, fig3, fig5, fig_gap, fig_mix, perf, tables, BenchOpts, Report,
+    compare, fig2, fig3, fig5, fig_faults, fig_gap, fig_mix, perf, tables, BenchOpts, Report,
 };
 use hyplacer::config::{parse::Doc, CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
 use hyplacer::coordinator::run_pair;
@@ -57,6 +57,9 @@ struct Args {
     epochs_for: Option<String>,
     /// migration-engine bandwidth share in (0, 1]; 1.0 = unthrottled.
     migrate_share: Option<f64>,
+    /// deterministic fault-injection plan, e.g.
+    /// 'copy:0.01,pin:0.001,brownout:ep40..60*0.5,scan-gap:0.005'.
+    faults: Option<String>,
     /// per-cell migrate-share overrides, WORKLOAD_PATTERN=SHARE list.
     migrate_share_for: Option<String>,
     /// bench-check: committed baseline file(s), comma list.
@@ -88,6 +91,7 @@ fn parse_args() -> Result<Args, String> {
         resume: false,
         epochs_for: None,
         migrate_share: None,
+        faults: None,
         migrate_share_for: None,
         baseline: None,
         current: None,
@@ -123,6 +127,13 @@ fn parse_args() -> Result<Args, String> {
             }
             "--migrate-share-for" => {
                 args.migrate_share_for = Some(take("--migrate-share-for")?)
+            }
+            "--faults" => {
+                let spec = take("--faults")?;
+                // fail fast on a malformed plan, before any run starts
+                hyplacer::faults::FaultPlan::parse(&spec)
+                    .map_err(|e| format!("--faults: {e}"))?;
+                args.faults = Some(spec);
             }
             "--baseline" => args.baseline = Some(take("--baseline")?),
             "--current" => args.current = Some(take("--current")?),
@@ -164,6 +175,9 @@ COMMANDS
   fig-gap   GAP-suite (PR/BFS) evaluation matrix (ROADMAP figure)
   fig-mix   multi-tenant co-run matrix: mixes x policies x machines
             [-w 'is.M+pr.M,cg.M+bfs.M'] (default mix set otherwise)
+  fig-faults  degraded-mode resilience matrix: fault grid (none/copy/
+            brownout/storm, or --faults SPEC) x {hyplacer, adm-default}
+            x machines, with retry/failure/safe-mode telemetry
   table1    proposal comparison table (paper Table 1)
   table2    PageFind modes (paper Table 2)
   table3    workload summary (paper Table 3)
@@ -200,7 +214,8 @@ FLAGS
                  (compare) machine-readable comparison incl. queue telemetry
                  (bench) directory for the emitted BENCH_*.json docs
                  (audit) machine-readable findings doc (BENCH_*.json shape)
-  --out FILE     (sweep, fig5/6/7, fig-gap, fig-mix, all) checkpoint
+  --out FILE     (sweep, fig5/6/7, fig-gap, fig-mix, fig-faults, all)
+                 checkpoint
                  results to FILE (atomic rewrite)
   --resume       with --out: load FILE first and execute only cells whose
                  content key is missing or changed (incremental matrices)
@@ -214,6 +229,14 @@ FLAGS
   --migrate-share-for PAT=S[,PAT=S]
                  (sweep) per-cell migrate-share overrides by workload
                  pattern, e.g. '*-L=0.1' throttles L-size cells
+  --faults SPEC  deterministic fault-injection plan for run/compare/
+                 sweep (and the custom fig-faults level): comma list of
+                 copy:P (transient migration-copy failure rate, bounded
+                 retry-with-backoff), pin:P (permanently pinned pages),
+                 brownout:epA..B*F (PM bandwidth derate F over epochs
+                 [A, B)), scan-gap:P (epochs that skip reference-bit
+                 harvesting). Folds into sweep cell keys, so faulted
+                 cells never collide with clean checkpoints
   --baseline F   (bench-check) committed baseline file(s), comma list
                  (audit) committed AUDIT_baseline.json to gate against
   --current DIR  (bench-check) compare against DIR/BENCH_*.json from a
@@ -260,6 +283,9 @@ fn opts_from(args: &Args) -> BenchOpts {
     if let Some(m) = args.migrate_share {
         o.migrate_share = m;
     }
+    if let Some(f) = &args.faults {
+        o.faults = f.clone();
+    }
     o
 }
 
@@ -297,6 +323,10 @@ fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig
     if let Some(m) = args.migrate_share {
         sim.migrate_share = m;
     }
+    if let Some(f) = &args.faults {
+        sim.faults =
+            hyplacer::faults::FaultPlan::parse(f).map_err(|e| format!("--faults: {e}"))?;
+    }
     hp.use_aot = args.aot;
     Ok((machine, sim, hp))
 }
@@ -331,6 +361,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         "DRAM traffic share".to_string(),
         format!("{:.1}%", r.dram_traffic_share * 100.0),
     ]);
+    if !sim.faults.is_none() {
+        t.row(vec!["faults".to_string(), sim.faults.render()]);
+        t.row(vec!["retried migrations".to_string(), r.migrate_retried.to_string()]);
+        t.row(vec!["failed migrations".to_string(), r.migrate_failed.to_string()]);
+        t.row(vec!["safe-mode epochs".to_string(), r.safe_mode_epochs.to_string()]);
+    }
     println!("{}", t.render());
     Ok(())
 }
@@ -440,6 +476,23 @@ fn cmd_fig_mix(args: &Args, opts: &BenchOpts) -> Result<(), String> {
     Ok(())
 }
 
+/// `hyplacer fig-faults`: the degraded-mode resilience matrix (fault
+/// grid × policies × machines) over the standard checkpoint/resume
+/// plumbing, with the same machine-greppable executed/cached line.
+fn cmd_fig_faults(args: &Args, opts: &BenchOpts) -> Result<(), String> {
+    let machines = match &args.machines {
+        Some(m) => Some(parse_machines(m)?),
+        None => None,
+    };
+    let out = fig_faults::try_fig_faults_report(opts, machines)?;
+    emit(&out.report, &args.csv);
+    println!(
+        "fig-faults: executed {} of {} cells ({} cached)",
+        out.executed, out.total, out.cached
+    );
+    Ok(())
+}
+
 fn split_list(s: &str) -> Vec<String> {
     s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
 }
@@ -521,9 +574,19 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         }
     }
     // a prior --out file always merges into the rewrite; --resume
-    // additionally skips cells whose content key is already present
+    // additionally skips cells whose content key is already present.
+    // Loading salvages per cell: one corrupt cell re-executes instead
+    // of poisoning the whole checkpoint
     let prior = match (&args.out, args.resume) {
-        (Some(path), _) => exec::load_results(path)?,
+        (Some(path), _) => match exec::load_results_salvage(path)? {
+            Some((run, skipped)) => {
+                for s in &skipped {
+                    eprintln!("sweep: salvaged checkpoint, re-running {}", s.describe());
+                }
+                Some(run)
+            }
+            None => None,
+        },
         (None, true) => return Err("--resume requires --out FILE".to_string()),
         (None, false) => None,
     };
@@ -563,6 +626,18 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(path) = &args.json {
         std::fs::write(path, run.to_json().render()).map_err(|e| format!("{path}: {e}"))?;
         println!("wrote {path}");
+    }
+    // failed cells are isolated: survivors are checkpointed above, the
+    // failures exit nonzero with their grid coordinates
+    if let Some(first) = outcome.failed.first() {
+        for f in &outcome.failed {
+            eprintln!("sweep: cell failed: {}", f.describe());
+        }
+        return Err(format!(
+            "sweep: {} cell(s) failed (surviving cells checkpointed); first: {}",
+            outcome.failed.len(),
+            first.describe()
+        ));
     }
     Ok(())
 }
@@ -759,6 +834,7 @@ fn main() -> ExitCode {
             Err(e) => Err(e),
         },
         "fig-mix" => cmd_fig_mix(&args, &opts),
+        "fig-faults" => cmd_fig_faults(&args, &opts),
         "table1" => {
             emit(&tables::table1(), &args.csv);
             Ok(())

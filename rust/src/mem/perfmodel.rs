@@ -121,17 +121,29 @@ impl EpochOutcome {
 #[derive(Clone, Debug)]
 pub struct PerfModel {
     cfg: MachineConfig,
+    /// Epoch-scoped DCPMM bandwidth multiplier in (0, 1]. Normally 1.0;
+    /// fault-injection brownouts (DESIGN.md §13) set it below 1.0 for the
+    /// epochs a `FaultPlan` window covers, scaling both PM read and write
+    /// ceilings. Multiplying by exactly 1.0 is bit-identical in IEEE 754,
+    /// so the no-fault path is unchanged.
+    pm_derate: f64,
 }
 
 pub const RHO_MAX: f64 = 0.95;
 
 impl PerfModel {
     pub fn new(cfg: &MachineConfig) -> Self {
-        PerfModel { cfg: cfg.clone() }
+        PerfModel { cfg: cfg.clone(), pm_derate: 1.0 }
     }
 
     pub fn config(&self) -> &MachineConfig {
         &self.cfg
+    }
+
+    /// Set the brownout derate applied to DCPMM ceilings for subsequent
+    /// epochs (coordinators call this each epoch from the fault plan).
+    pub fn set_pm_derate(&mut self, derate: f64) {
+        self.pm_derate = derate.clamp(f64::MIN_POSITIVE, 1.0);
     }
 
     /// Mix-adjusted bandwidth ceiling for a tier under a demand.
@@ -145,7 +157,10 @@ impl PerfModel {
             Tier::Pm => {
                 let rd = dcpmm::read_derate(spec, demand.random_frac);
                 let amp = dcpmm::write_amplification(spec, demand.random_frac);
-                (spec.peak_read_bw() * rd, spec.peak_write_bw() / amp)
+                (
+                    spec.peak_read_bw() * rd * self.pm_derate,
+                    spec.peak_write_bw() / amp * self.pm_derate,
+                )
             }
         };
         let wf = demand.write_frac();
@@ -476,6 +491,21 @@ mod tests {
         d.app_bytes = 1000.0 * GB;
         let out = m.service(&d);
         assert!(out.pm.utilization <= RHO_MAX + 1e-12);
+    }
+
+    #[test]
+    fn pm_derate_scales_only_pm_ceilings() {
+        let mut m = model();
+        let d = TierDemand::new(2.0 * GB, 1.0 * GB, 0.3);
+        let pm0 = m.ceiling(Tier::Pm, &d);
+        let dram0 = m.ceiling(Tier::Dram, &d);
+        m.set_pm_derate(0.5);
+        let pm1 = m.ceiling(Tier::Pm, &d);
+        assert!((pm1 - pm0 * 0.5).abs() / GB < 1e-9, "pm {pm1} vs half of {pm0}");
+        assert_eq!(m.ceiling(Tier::Dram, &d), dram0);
+        // Restoring 1.0 is bit-identical to a model that never browned out.
+        m.set_pm_derate(1.0);
+        assert_eq!(m.ceiling(Tier::Pm, &d).to_bits(), pm0.to_bits());
     }
 
     #[test]

@@ -84,10 +84,11 @@ impl Policy for AutoNuma {
             if flags.referenced() {
                 let c = &mut proof[page as usize];
                 *c = c.saturating_add(1);
-                // still *profile* in-flight (QUEUED) pages, but never
-                // re-plan them — their move is already in the engine
+                // still *profile* in-flight (QUEUED) and unmovable
+                // (PINNED) pages, but never plan them
                 if flags.tier() == Tier::Pm
                     && !flags.queued()
+                    && !flags.pinned()
                     && *c >= PROMOTE_THRESHOLD
                     && promote.len() < budget
                 {
@@ -112,7 +113,8 @@ impl Policy for AutoNuma {
             // cleared and survive this pass; unreferenced, proof-less
             // pages are reclaim victims. DRAM-tier scan with early stop:
             // O(selected) on mostly-idle DRAM.
-            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
+            let dram =
+                PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED | PageFlags::PINNED);
             self.demote_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
                 if flags.referenced() {
                     pt.clear_rd(page);

@@ -83,6 +83,18 @@ pub struct HyPlacer {
     epochs_since_probe: u32,
     /// Last decision (observability / tests).
     pub last_decision: Option<control::Decision>,
+    /// EWMA of the migration engine's copy-failure rate
+    /// (`Backpressure::copy_fail_rate`), the degraded-safe-mode signal.
+    /// Stays exactly 0.0 without fault injection.
+    fail_ewma: f64,
+    /// Degraded safe mode (DESIGN.md §13): while set, Control's
+    /// promotion-side decisions (PROMOTE / PROMOTE_INT / SWITCH) are
+    /// suppressed so a failure storm cannot keep refilling the engine's
+    /// carry-over queue; demotions stay allowed (they relieve DRAM
+    /// pressure and their failures are the storm's evidence, not its
+    /// amplifier). Entry/exit use hysteresis thresholds from
+    /// [`HyPlacerConfig`].
+    safe_mode: bool,
     /// Tenant-aware QoS variant ("hyplacer-qos"): split the promotion
     /// budget by soft-share weight and prefer over-quota tenants as
     /// demotion victims. Every QoS branch is additionally gated on the
@@ -126,6 +138,8 @@ impl HyPlacer {
             last_was_switch: false,
             epochs_since_probe: 0,
             last_decision: None,
+            fail_ewma: 0.0,
+            safe_mode: false,
             qos,
         }
     }
@@ -283,7 +297,33 @@ impl Policy for HyPlacer {
             self.switch_backoff = (self.switch_backoff * 2.0).min(1.0);
         }
 
-        let decision = control::decide(&self.cfg, ctx.pt, &pcmon, &ctx.backpressure);
+        // Degraded safe mode (DESIGN.md §13): track the engine's
+        // copy-failure rate with a responsive EWMA and gate the
+        // promotion side of Control's decision on it with hysteresis.
+        // Without fault injection the rate is always 0.0, the EWMA stays
+        // 0.0 and nothing here changes any decision. `control::decide`
+        // itself is untouched — the suppression happens on its output so
+        // the decision logic's unit tests keep pinning exact behavior.
+        self.fail_ewma = 0.5 * self.fail_ewma + 0.5 * bp.copy_fail_rate;
+        if self.safe_mode {
+            if self.fail_ewma < self.cfg.safe_exit_fail_rate {
+                self.safe_mode = false;
+            }
+        } else if self.fail_ewma > self.cfg.safe_enter_fail_rate {
+            self.safe_mode = true;
+        }
+
+        let mut decision = control::decide(&self.cfg, ctx.pt, &pcmon, &ctx.backpressure);
+        if self.safe_mode {
+            if let Some(d) = decision {
+                if matches!(
+                    d.mode,
+                    PageFindMode::Promote | PageFindMode::PromoteInt | PageFindMode::Switch
+                ) {
+                    decision = None;
+                }
+            }
+        }
         self.last_decision = decision;
 
         // 4. SelMo PageFind reply → migration plan. Selection merges the
@@ -409,6 +449,10 @@ impl Policy for HyPlacer {
         // (word-granular through the activity index).
         self.selmo.dcpmm_clear(ctx.pt);
         plan
+    }
+
+    fn in_safe_mode(&self) -> bool {
+        self.safe_mode
     }
 
     fn table1_row(&self) -> Table1Row {
@@ -640,6 +684,113 @@ mod tests {
             assert_eq!(a.demote, b.demote, "epoch {e}: demote diverged");
             assert_eq!(a.exchange, b.exchange, "epoch {e}: exchange diverged");
         }
+    }
+
+    fn tick_bp(
+        h: &mut HyPlacer,
+        m: &MachineConfig,
+        pt: &mut PageTable,
+        epoch: u32,
+        copy_fail_rate: f64,
+    ) -> MigrationPlan {
+        let bp = crate::vm::Backpressure { copy_fail_rate, ..Default::default() };
+        let mut ctx = PolicyCtx {
+            pt,
+            pcmon: PcmonSnapshot::default(),
+            cfg: m,
+            epoch,
+            epoch_secs: 1.0,
+            backpressure: bp,
+            tenants: &[],
+        };
+        h.epoch_tick(&mut ctx)
+    }
+
+    #[test]
+    fn safe_mode_pauses_promotions_and_exits_with_hysteresis() {
+        let (m, hp, mut pt) = setup(100, 16);
+        let enter = hp.safe_enter_fail_rate;
+        let exit = hp.safe_exit_fail_rate;
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..8 {
+            pt.allocate(p, Tier::Pm);
+        }
+        // keep PM pages hot so Control wants to promote every epoch
+        let heat = |pt: &mut PageTable| {
+            for p in 0..4 {
+                pt.touch_window(p, false);
+            }
+        };
+        assert!(!h.in_safe_mode());
+        // sustained failure storm: EWMA crosses the entry threshold and
+        // the promote decision is suppressed into an empty plan
+        let mut epoch = 0;
+        let mut entered = false;
+        for _ in 0..4 {
+            heat(&mut pt);
+            let plan = tick_bp(&mut h, &m, &mut pt, epoch, 0.5);
+            epoch += 1;
+            if h.in_safe_mode() {
+                entered = true;
+                assert!(
+                    plan.promote.is_empty() && plan.exchange.is_empty(),
+                    "safe mode must pause promotions"
+                );
+            }
+        }
+        assert!(entered, "storm never entered safe mode");
+        assert!(h.fail_ewma > enter);
+        // storm clears: while the EWMA decays through the hysteresis band
+        // (exit < ewma < enter) the mode must hold
+        let mut exited_at = None;
+        for i in 0..12 {
+            heat(&mut pt);
+            let _ = tick_bp(&mut h, &m, &mut pt, epoch, 0.0);
+            epoch += 1;
+            if h.fail_ewma < enter && h.fail_ewma > exit {
+                assert!(h.in_safe_mode(), "left safe mode inside the hysteresis band");
+            }
+            if !h.in_safe_mode() {
+                exited_at = Some(i);
+                break;
+            }
+        }
+        assert!(exited_at.is_some(), "never exited safe mode after the storm cleared");
+        assert!(h.fail_ewma < exit);
+        // promotions resume once out
+        for _ in 0..4 {
+            heat(&mut pt);
+            let plan = tick_bp(&mut h, &m, &mut pt, epoch, 0.0);
+            epoch += 1;
+            if !plan.promote.is_empty() {
+                return;
+            }
+        }
+        panic!("promotions never resumed after safe-mode exit");
+    }
+
+    #[test]
+    fn safe_mode_still_allows_demotions() {
+        let (m, hp, mut pt) = setup(100, 120);
+        let mut h = HyPlacer::new(&m, hp);
+        for p in 0..98 {
+            pt.allocate(p, Tier::Dram);
+        }
+        // force safe mode with a saturated failure signal
+        let _ = tick_bp(&mut h, &m, &mut pt, 0, 1.0);
+        let _ = tick_bp(&mut h, &m, &mut pt, 1, 1.0);
+        assert!(h.in_safe_mode());
+        for e in 2..6 {
+            for p in 0..8 {
+                pt.touch(p, false);
+            }
+            let plan = tick_bp(&mut h, &m, &mut pt, e, 1.0);
+            assert!(plan.promote.is_empty() && plan.exchange.is_empty());
+            if !plan.demote.is_empty() {
+                return;
+            }
+        }
+        panic!("safe mode must not block DRAM-pressure demotions");
     }
 
     #[test]

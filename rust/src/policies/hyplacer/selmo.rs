@@ -164,11 +164,12 @@ pub fn merge_candidates(
 /// draw is charged to the table's `pte_visits` counter, so the metric
 /// would expose a regression that defeats the early stop.
 ///
-/// Pages with a queued (in-flight) migration are excluded from both
-/// sides, so a throttled engine's backlog is never re-selected and
-/// SWITCH pairs are formed only from actually plannable pages. With an
-/// idle queue (always true at `migrate_share = 1.0`) no QUEUED bit
-/// exists during a tick, so selection is unchanged.
+/// Pages with a queued (in-flight) migration or a PINNED (unmovable)
+/// mark are excluded from both sides, so a throttled engine's backlog is
+/// never re-selected, fault-pinned pages are never planned, and SWITCH
+/// pairs are formed only from actually plannable pages. With an idle
+/// queue and no fault injection neither bit exists during a tick, so
+/// selection is unchanged.
 /// Optional page predicate restricting a selection pass to a subset of
 /// pages (the QoS victim filter). `None` must execute the exact stock
 /// code sequence — every quota-free run goes through `None`.
@@ -189,8 +190,9 @@ fn select_into(
 ) {
     topk.begin(k, floor);
     for (i, &page) in cand_pages.iter().enumerate() {
-        if pt.flags(page).queued() {
-            continue; // move already in flight — never re-planned
+        let f = pt.flags(page);
+        if f.queued() || f.pinned() {
+            continue; // in flight or unmovable — never planned
         }
         if let Some(f) = filter {
             if !f(page) {
@@ -202,7 +204,8 @@ fn select_into(
     if pool_score >= floor && !pool_score.is_nan() {
         let mut drawn = 0u64;
         let mut ci = 0usize; // merge cursor — pool and candidates both ascend
-        let pool = PlaneQuery::tier(tier).and_none(crate::vm::PageFlags::QUEUED);
+        let pool = PlaneQuery::tier(tier)
+            .and_none(crate::vm::PageFlags::QUEUED | crate::vm::PageFlags::PINNED);
         for page in pt.iter_matching(pool) {
             drawn += 1;
             while ci < cand_pages.len() && cand_pages[ci] < page {

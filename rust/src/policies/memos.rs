@@ -96,9 +96,10 @@ impl Policy for Memos {
             let budget = self.migrate_budget;
             let mut hot_written = Vec::new();
             let mut hot_read = Vec::new();
-            // in-flight (QUEUED) pages are never re-planned
-            let touched_pm =
-                PlaneQuery::epoch_touched().in_tier(Tier::Pm).and_none(PageFlags::QUEUED);
+            // in-flight (QUEUED) and unmovable (PINNED) pages are never planned
+            let touched_pm = PlaneQuery::epoch_touched()
+                .in_tier(Tier::Pm)
+                .and_none(PageFlags::QUEUED | PageFlags::PINNED);
             self.pm_hand.walk(pt, pt.len() as usize, touched_pm, |page, flags, pt| {
                 if flags.dirty() {
                     hot_written.push(page);
@@ -120,7 +121,8 @@ impl Policy for Memos {
             .saturating_sub((self.dram_watermark * cap as f64) as u64);
         if over > 0 {
             let need = over as usize;
-            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
+            let dram =
+                PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED | PageFlags::PINNED);
             self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
                 if !flags.referenced() {
                     plan.demote.push(page);

@@ -153,6 +153,15 @@ pub trait Policy {
         demand
     }
 
+    /// Whether the policy is currently operating in a degraded safe mode
+    /// (promotions paused under migration-failure backpressure, DESIGN.md
+    /// §13). Coordinators sample this after each `epoch_tick` to build
+    /// the `safe_mode_epochs` series. Policies without a failure response
+    /// are never in safe mode.
+    fn in_safe_mode(&self) -> bool {
+        false
+    }
+
     /// Row for the Table 1 comparison (policy family, selection criteria,
     /// selection algorithm, modification footprint).
     fn table1_row(&self) -> Table1Row;

@@ -57,9 +57,10 @@ impl Policy for Nimble {
         // skipping idle spans through the activity index is exact.
         let mut promote = Vec::new();
         let scan_budget = pt.len() as usize;
-        // pages with a move already in flight are not re-planned
-        let touched_pm =
-            PlaneQuery::epoch_touched().in_tier(Tier::Pm).and_none(PageFlags::QUEUED);
+        // in-flight (QUEUED) and unmovable (PINNED) pages are not planned
+        let touched_pm = PlaneQuery::epoch_touched()
+            .in_tier(Tier::Pm)
+            .and_none(PageFlags::QUEUED | PageFlags::PINNED);
         self.pm_hand.walk(pt, scan_budget, touched_pm, |page, flags, pt| {
             if flags.referenced() {
                 promote.push(page);
@@ -87,7 +88,8 @@ impl Policy for Nimble {
         if need_exchange > 0 {
             // DRAM-tier scan (word-level skip of PM/invalid spans); the
             // early stop keeps it O(selected) on mostly-idle DRAM.
-            let dram = PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED);
+            let dram =
+                PlaneQuery::tier(Tier::Dram).and_none(PageFlags::QUEUED | PageFlags::PINNED);
             self.dram_hand.walk(pt, scan_budget, dram, |page, flags, pt| {
                 if !flags.referenced() {
                     victims.push(page);

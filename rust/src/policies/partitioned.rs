@@ -65,10 +65,10 @@ impl Policy for Partitioned {
         // Pass 1 — PM side, O(dirty pages): a write detected on a PM page
         // makes it DRAM-bound. (PM pages touched read-only keep their R
         // bit; CLOCK-DWF never reads it, so there is nothing to clear.)
-        // in-flight (QUEUED) pages are never re-planned
+        // in-flight (QUEUED) and unmovable (PINNED) pages are never planned
         let dirty_pm = PlaneQuery::all_of(crate::vm::PageFlags::DIRTY)
             .in_tier(Tier::Pm)
-            .and_none(crate::vm::PageFlags::QUEUED);
+            .and_none(crate::vm::PageFlags::QUEUED | crate::vm::PageFlags::PINNED);
         self.pm_hand.walk(pt, pt.len() as usize, dirty_pm, |page, _flags, pt| {
             if promote.len() < budget {
                 promote.push(page);
@@ -81,7 +81,8 @@ impl Policy for Partitioned {
         // every epoch by design (an untouched page *ages*), so this scan
         // is inherently O(DRAM-resident pages); the index still skips
         // invalid/PM spans word-wise.
-        let dram = PlaneQuery::tier(Tier::Dram).and_none(crate::vm::PageFlags::QUEUED);
+        let dram = PlaneQuery::tier(Tier::Dram)
+            .and_none(crate::vm::PageFlags::QUEUED | crate::vm::PageFlags::PINNED);
         self.dram_hand.walk(pt, pt.len() as usize, dram, |page, flags, pt| {
             // read-dominated for several epochs => PM-bound
             let idle = &mut write_idle[page as usize];

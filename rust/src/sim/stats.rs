@@ -31,6 +31,22 @@ pub struct EpochRecord {
     /// Promotions rejected this epoch because they would push a tenant
     /// past its hard DRAM quota (always 0 without quotas).
     pub migrate_over_quota: u64,
+    /// Copy attempts that failed transiently this epoch and were
+    /// re-enqueued with backoff (always 0 without fault injection).
+    pub migrate_retried: u64,
+    /// Moves that exhausted the retry cap this epoch and failed
+    /// permanently (always 0 without fault injection).
+    pub migrate_failed: u64,
+    /// Duplicate / self-pair submissions dropped at submit this epoch.
+    pub migrate_skipped: u64,
+    /// Moves rejected at submit because they named a PINNED page
+    /// (defense in depth: policies filter pinned pages out of their
+    /// plans, so this stays 0 unless a policy regresses).
+    pub migrate_pinned_rejected: u64,
+    /// Whether the placement policy spent this epoch in its degraded
+    /// safe mode (promotions paused under failure backpressure; HyPlacer
+    /// only — always false for policies without a safe mode).
+    pub safe_mode: bool,
     /// Per-tenant app bytes served this epoch (multi-tenant co-runs
     /// only; empty for single-workload runs). Index = tenant index in
     /// the run's [`crate::tenants::MixSpec`]; a tenant that has not
@@ -80,9 +96,24 @@ impl RunStats {
             migrate_queued: migration.deferred,
             migrate_stale: migration.stale,
             migrate_over_quota: migration.over_quota,
+            migrate_retried: migration.retried,
+            migrate_failed: migration.failed,
+            migrate_skipped: migration.skipped,
+            migrate_pinned_rejected: migration.pinned_rejected,
+            safe_mode: false,
             tenant_app_bytes: Vec::new(),
             tenant_dram_share: Vec::new(),
         });
+    }
+
+    /// Flag the most recently recorded epoch as spent in a policy's
+    /// degraded safe mode (same post-hoc pattern as
+    /// [`RunStats::record_tenant_series`]: coordinators learn the flag
+    /// from the policy after the epoch's demand has been recorded).
+    pub fn record_safe_mode(&mut self, safe: bool) {
+        if let Some(last) = self.epochs.last_mut() {
+            last.safe_mode = safe;
+        }
     }
 
     /// Attach the per-tenant series to the most recently recorded epoch
@@ -158,6 +189,43 @@ impl RunStats {
     /// the isolation-pressure counter the quota CI smoke greps for.
     pub fn migrate_over_quota_total(&self) -> u64 {
         self.epochs.iter().map(|e| e.migrate_over_quota).sum()
+    }
+
+    /// Total transient copy-failure retries over the run (0 without
+    /// fault injection).
+    pub fn migrate_retried_total(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrate_retried).sum()
+    }
+
+    /// Total permanently failed moves (retry cap exhausted) over the run.
+    pub fn migrate_failed_total(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrate_failed).sum()
+    }
+
+    /// Fraction of copy attempts that failed transiently or permanently:
+    /// (retried + failed) / (moves + retried + failed). The resilience
+    /// headline `bench` exports as `faults/retry_ratio`.
+    pub fn migrate_retry_ratio(&self) -> f64 {
+        let retried = self.migrate_retried_total();
+        let failed = self.migrate_failed_total();
+        let moves: u64 = self.epochs.iter().map(|e| e.migrated_pages).sum();
+        let attempts = moves + retried + failed;
+        if attempts == 0 {
+            return 0.0;
+        }
+        (retried + failed) as f64 / attempts as f64
+    }
+
+    /// Total submissions rejected for naming a PINNED page. Exported by
+    /// `bench` as `faults/pinned_rejections` and gated at exactly 0: a
+    /// nonzero value means some policy planned an unmovable page.
+    pub fn migrate_pinned_rejected_total(&self) -> u64 {
+        self.epochs.iter().map(|e| e.migrate_pinned_rejected).sum()
+    }
+
+    /// Number of epochs the policy spent in degraded safe mode.
+    pub fn safe_mode_epochs(&self) -> u64 {
+        self.epochs.iter().filter(|e| e.safe_mode).count() as u64
     }
 
     /// Fraction of submitted moves dropped by carry-over revalidation
@@ -237,6 +305,11 @@ mod tests {
         assert_eq!(s.migrate_deferred_ratio(), 0.0);
         assert_eq!(s.migrate_stale_drop_ratio(), 0.0);
         assert_eq!(s.migrate_over_quota_total(), 0);
+        assert_eq!(s.migrate_retried_total(), 0);
+        assert_eq!(s.migrate_failed_total(), 0);
+        assert_eq!(s.migrate_retry_ratio(), 0.0);
+        assert_eq!(s.migrate_pinned_rejected_total(), 0);
+        assert_eq!(s.safe_mode_epochs(), 0);
     }
 
     #[test]
@@ -252,10 +325,22 @@ mod tests {
         mig2.deferred = 2;
         mig2.stale = 1;
         mig2.over_quota = 3;
+        mig2.promoted = 6;
+        mig2.retried = 3;
+        mig2.failed = 1;
+        mig2.pinned_rejected = 2;
         s.record(1, &d, &out, &mig2, 0.5);
+        s.record_safe_mode(true);
         assert_eq!(s.migrate_queue_depth_peak(), 6);
         assert!((s.migrate_deferred_ratio() - 8.0 / 10.0).abs() < 1e-12);
         assert!((s.migrate_stale_drop_ratio() - 0.1).abs() < 1e-12);
         assert_eq!(s.migrate_over_quota_total(), 3);
+        assert_eq!(s.migrate_retried_total(), 3);
+        assert_eq!(s.migrate_failed_total(), 1);
+        // 6 landed moves + 3 retries + 1 permanent failure = 10 attempts.
+        assert!((s.migrate_retry_ratio() - 4.0 / 10.0).abs() < 1e-12);
+        assert_eq!(s.migrate_pinned_rejected_total(), 2);
+        assert_eq!(s.safe_mode_epochs(), 1);
+        assert!(!s.epochs[0].safe_mode);
     }
 }

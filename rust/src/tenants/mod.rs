@@ -525,6 +525,13 @@ impl MultiSimulation {
         if !quotas.is_empty() {
             engine.set_quotas(quotas);
         }
+        // Fault injection (DESIGN.md §13): arm the engine's copy-failure
+        // stream; pinning happens per tenant at map time (the pin draw is
+        // stateless in the global page id, so arrival order cannot change
+        // which pages pin). No-op for the default empty plan.
+        if !sim.faults.is_none() {
+            engine.set_fault_injection(&sim.faults, seed);
+        }
         let runs = workloads_built
             .into_iter()
             .enumerate()
@@ -603,6 +610,17 @@ impl MultiSimulation {
             }
             if cap.is_some() && self.pt.flags(page).tier() == Tier::Dram {
                 dram_used += 1;
+            }
+        }
+        // Fault-plan pins: mark this tenant's randomly selected pages
+        // unmovable (stateless per-page draw — identical whichever epoch
+        // the tenant arrives).
+        if self.sim.faults.pin > 0.0 {
+            for local in 0..pages {
+                let page = base + local;
+                if self.sim.faults.pin_page(self.sim.seed, page) {
+                    self.pt.set_pinned(page);
+                }
             }
         }
         let regions = self.runs[ti].workload.regions(0);
@@ -731,7 +749,12 @@ impl MultiSimulation {
         let page_bytes = self.cfg.page_bytes as f64;
 
         // --- 1. MMU per tenant: set R/D (+ delay-window) bits on
-        // touched pages, each tenant from its own RNG stream.
+        // touched pages, each tenant from its own RNG stream. A
+        // fault-plan scan gap drops the whole epoch's harvest (system-
+        // wide — the MMU scan is global); gated on a non-empty plan so
+        // the no-fault tenant RNG streams are untouched.
+        let scan_gap =
+            !self.sim.faults.is_none() && self.sim.faults.scan_gap_epoch(self.sim.seed, epoch);
         self.all_scratch.clear();
         let mut active_total = 0u64;
         let pt = &mut self.pt;
@@ -763,7 +786,7 @@ impl MultiSimulation {
                     write_bytes: bytes * r.write_frac,
                     random_frac: r.random_frac,
                 });
-                if bytes <= 0.0 {
+                if bytes <= 0.0 || scan_gap {
                     continue;
                 }
                 let coverage = bytes / (r.pages as f64 * page_bytes);
@@ -892,6 +915,11 @@ impl MultiSimulation {
         demand.overhead_secs += mig.overhead_secs;
 
         // --- 6. Serve + record (global), then the per-tenant series.
+        // Brownout windows derate the shared DCPMM ceilings (×1.0 for
+        // the empty plan — bit-identical).
+        if !self.sim.faults.is_none() {
+            self.model.set_pm_derate(self.sim.faults.pm_derate(epoch));
+        }
         let outcome = self.model.service(&demand);
         self.pcmon.record_epoch(&demand, &outcome);
         self.energy.record(&self.cfg, &demand, &outcome);
@@ -913,6 +941,7 @@ impl MultiSimulation {
             tenant_share.push(held as f64 / dram_capacity);
         }
         self.stats.record_tenant_series(tenant_app, tenant_share);
+        self.stats.record_safe_mode(self.policy.in_safe_mode());
         self.clock.advance(outcome.wall_secs);
         outcome.wall_secs
     }
@@ -999,6 +1028,9 @@ impl MultiSimulation {
             migrate_queue_peak: self.stats.migrate_queue_depth_peak(),
             migrate_deferred_ratio: self.stats.migrate_deferred_ratio(),
             migrate_stale_ratio: self.stats.migrate_stale_drop_ratio(),
+            migrate_retried: self.stats.migrate_retried_total(),
+            migrate_failed: self.stats.migrate_failed_total(),
+            safe_mode_epochs: self.stats.safe_mode_epochs(),
             tenants,
             stats: self.stats,
         }

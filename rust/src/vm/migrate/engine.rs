@@ -35,6 +35,8 @@
 use std::collections::VecDeque;
 
 use crate::config::{MachineConfig, Tier};
+use crate::faults::{self, FaultPlan};
+use crate::util::Rng64;
 
 use super::super::page_table::{PageId, PageTable, PlaneQuery};
 use super::{MigrationPlan, MigrationStats};
@@ -82,6 +84,14 @@ pub struct Backpressure {
     pub pm_copy_write_bytes: f64,
     /// PM bytes the engine's last epoch actually read (copy traffic).
     pub pm_copy_read_bytes: f64,
+    /// Fraction of the last epoch's attempted page-move copies that
+    /// failed (transiently or permanently). 0.0 with no fault injection
+    /// and whenever the epoch attempted nothing — this is the signal
+    /// HyPlacer's degraded safe mode watches (DESIGN.md §13).
+    pub copy_fail_rate: f64,
+    /// Page-moves permanently failed (retry cap exhausted) over the
+    /// engine's lifetime.
+    pub failed_total: u64,
 }
 
 impl Backpressure {
@@ -103,14 +113,48 @@ pub struct SubmitStats {
     /// partner was the offender is not itself counted (it was never
     /// duplicated — it is simply not moved this round).
     pub dropped_duplicate: u64,
+    /// References to PINNED (unmovable) pages dropped at submission,
+    /// per pinned reference; an exchange whose one side is pinned drops
+    /// the whole pair but counts only the pinned side. Drained into
+    /// [`MigrationStats::pinned_rejected`] by the next `run_epoch`.
+    pub dropped_pinned: u64,
 }
 
 /// One pending move, stamped with the epoch it was planned in so
 /// execution can tell a same-epoch precondition failure (`skipped`, the
 /// one-shot semantics) from a carried-over entry invalidated since
-/// planning (`stale`).
-type Queued = (PageId, u32);
-type QueuedPair = (PageId, PageId, u32);
+/// planning (`stale`), plus the transient-failure retry state: how many
+/// injected copy failures the entry has already survived and the
+/// earliest epoch its next attempt may run (the backoff gate). On the
+/// no-fault path `retries` stays 0 and `not_before` equals the planning
+/// epoch, so the entry is always immediately eligible — bit-identical
+/// to the pre-fault tuple queues.
+#[derive(Clone, Copy, Debug)]
+struct Queued {
+    page: PageId,
+    planned: u32,
+    retries: u32,
+    not_before: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct QueuedPair {
+    pm: PageId,
+    dram: PageId,
+    planned: u32,
+    retries: u32,
+    not_before: u32,
+}
+
+/// Installed copy-failure injection: the fault plan (for the per-epoch
+/// effective rate, brownout-amplified) plus the dedicated RNG stream
+/// its per-attempt draws consume. `None` — the default — is the
+/// bit-identical no-fault path: zero draws, zero branches taken.
+#[derive(Clone, Debug)]
+struct CopyFaults {
+    plan: FaultPlan,
+    rng: Rng64,
+}
 
 /// Stateful, bandwidth-throttled replacement for the one-shot
 /// [`super::execute`] — see the module docs for the full contract.
@@ -129,14 +173,21 @@ pub struct MigrationEngine {
     /// Page-moves accepted since the last `run_epoch` (drained into
     /// [`MigrationStats::submitted`]).
     submitted_since_run: u64,
+    /// Pinned references dropped since the last `run_epoch` (drained
+    /// into [`MigrationStats::pinned_rejected`]).
+    pinned_rejected_since_run: u64,
     /// Lifetime stale-drop counter (surfaced through [`Backpressure`]).
     stale_total: u64,
+    /// Lifetime permanently-failed page-moves (retry cap exhausted).
+    failed_total: u64,
     /// Summary after the last `run_epoch` (what the next policy tick
     /// sees).
     last_bp: Backpressure,
     /// Hard DRAM quotas, ascending by base (empty = no enforcement,
     /// the stock bit-identical path).
     quotas: Vec<TenantQuota>,
+    /// Transient copy-failure injection (None = never fail).
+    faults: Option<CopyFaults>,
 }
 
 impl MigrationEngine {
@@ -147,10 +198,26 @@ impl MigrationEngine {
             exchange_q: VecDeque::new(),
             promote_q: VecDeque::new(),
             submitted_since_run: 0,
+            pinned_rejected_since_run: 0,
             stale_total: 0,
+            failed_total: 0,
             last_bp: Backpressure::default(),
             quotas: Vec::new(),
+            faults: None,
         }
+    }
+
+    /// Install (or clear) transient copy-failure injection from a fault
+    /// plan. Only a plan with a nonzero `copy:` rate arms the engine —
+    /// pins, brownouts and scan gaps are enforced elsewhere, and an
+    /// unarmed engine never draws from the fault stream (bit-identical
+    /// to the pre-fault path).
+    pub fn set_fault_injection(&mut self, plan: &FaultPlan, seed: u64) {
+        self.faults = if plan.copy_fail > 0.0 {
+            Some(CopyFaults { plan: plan.clone(), rng: FaultPlan::copy_fail_rng(seed) })
+        } else {
+            None
+        };
     }
 
     /// Install per-tenant hard DRAM quotas (sorted by base internally).
@@ -230,12 +297,16 @@ impl MigrationEngine {
     pub fn submit(&mut self, pt: &mut PageTable, plan: &MigrationPlan, epoch: u32) -> SubmitStats {
         let mut stats = SubmitStats::default();
         for &p in &plan.demote {
+            if pt.flags(p).pinned() {
+                stats.dropped_pinned += 1;
+                continue;
+            }
             if pt.flags(p).queued() {
                 stats.dropped_duplicate += 1;
                 continue;
             }
             pt.set_queued(p);
-            self.demote_q.push_back((p, epoch));
+            self.demote_q.push_back(Queued { page: p, planned: epoch, retries: 0, not_before: epoch });
             stats.accepted += 1;
         }
         for &(pm_page, dram_page) in &plan.exchange {
@@ -247,25 +318,45 @@ impl MigrationEngine {
                 stats.dropped_duplicate += 1 + u64::from(a_dup);
                 continue;
             }
+            // pinned check mirrors the duplicate one: only the pinned
+            // side(s) count, but the whole pair is dropped (a pair with
+            // an unmovable side can never land)
+            let a_pin = pt.flags(pm_page).pinned();
+            let b_pin = pt.flags(dram_page).pinned();
+            if a_pin || b_pin {
+                stats.dropped_pinned += u64::from(a_pin) + u64::from(b_pin);
+                continue;
+            }
             if a_dup || b_dup {
                 stats.dropped_duplicate += u64::from(a_dup) + u64::from(b_dup);
                 continue;
             }
             pt.set_queued(pm_page);
             pt.set_queued(dram_page);
-            self.exchange_q.push_back((pm_page, dram_page, epoch));
+            self.exchange_q.push_back(QueuedPair {
+                pm: pm_page,
+                dram: dram_page,
+                planned: epoch,
+                retries: 0,
+                not_before: epoch,
+            });
             stats.accepted += 2;
         }
         for &p in &plan.promote {
+            if pt.flags(p).pinned() {
+                stats.dropped_pinned += 1;
+                continue;
+            }
             if pt.flags(p).queued() {
                 stats.dropped_duplicate += 1;
                 continue;
             }
             pt.set_queued(p);
-            self.promote_q.push_back((p, epoch));
+            self.promote_q.push_back(Queued { page: p, planned: epoch, retries: 0, not_before: epoch });
             stats.accepted += 1;
         }
         self.submitted_since_run += stats.accepted;
+        self.pinned_rejected_since_run += stats.dropped_pinned;
         stats
     }
 
@@ -318,16 +409,68 @@ impl MigrationEngine {
             }
         };
 
-        while let Some(&(p, e)) = self.demote_q.front() {
+        // Copy-failure injection state for this epoch. Taken out of self
+        // so the loops below can borrow the queues freely; restored at
+        // the end. `None` (the default) draws nothing — bit-identical.
+        let mut frng = self.faults.take();
+        let fail_p = match &frng {
+            Some(f) => f.plan.effective_copy_fail(epoch),
+            None => 0.0,
+        };
+        let mut copy_fails = move |frng: &mut Option<CopyFaults>| -> bool {
+            match frng {
+                Some(f) => f.rng.chance(fail_p),
+                None => false,
+            }
+        };
+
+        // Each phase pops every entry at most once per epoch (`scan`
+        // bounds the loop at the pre-epoch queue length), so a retry
+        // storm can never spin inside one epoch: backoff-gated entries
+        // rejoin the *front* in their original order, transiently
+        // failed ones re-enqueue at the *back* with `not_before` in the
+        // future. That bound plus the per-entry retry cap is the
+        // no-livelock argument DESIGN.md §13 spells out.
+        let mut scan = self.demote_q.len();
+        let mut backoff_d: Vec<Queued> = Vec::new();
+        let mut retry_d: Vec<Queued> = Vec::new();
+        while scan > 0 {
+            scan -= 1;
             if moves >= budget {
                 break;
             }
-            self.demote_q.pop_front();
+            let Some(qe) = self.demote_q.pop_front() else { break };
+            if qe.not_before > epoch {
+                backoff_d.push(qe);
+                continue;
+            }
+            let p = qe.page;
             pt.count_pte_visits(1);
             pt.clear_queued(p);
             let f = pt.flags(p);
             if !f.valid() || f.tier() != Tier::Dram {
-                drop_one(&mut stats, e, 1);
+                drop_one(&mut stats, qe.planned, 1);
+                continue;
+            }
+            if copy_fails(&mut frng) {
+                // the aborted copy still consumed bandwidth on both
+                // sides, so it is charged against the budget and the
+                // tiers like a landed move
+                moves += 1;
+                stats.dram_traffic.read_bytes += page;
+                stats.pm_traffic.write_bytes += page;
+                if qe.retries >= faults::RETRY_MAX {
+                    stats.failed += 1;
+                } else {
+                    stats.retried += 1;
+                    pt.set_queued(p);
+                    retry_d.push(Queued {
+                        page: p,
+                        planned: qe.planned,
+                        retries: qe.retries + 1,
+                        not_before: epoch + faults::backoff_epochs(qe.retries),
+                    });
+                }
                 continue;
             }
             if pt.migrate(p, Tier::Pm) {
@@ -347,7 +490,15 @@ impl MigrationEngine {
                 stats.skipped += 1;
             }
         }
-        while let Some(&(pm_page, dram_page, e)) = self.exchange_q.front() {
+        for e in backoff_d.into_iter().rev() {
+            self.demote_q.push_front(e);
+        }
+        self.demote_q.extend(retry_d);
+        let mut scan = self.exchange_q.len();
+        let mut backoff_x: Vec<QueuedPair> = Vec::new();
+        let mut retry_x: Vec<QueuedPair> = Vec::new();
+        while scan > 0 {
+            scan -= 1;
             // an exchange never splits across epochs; when it heads an
             // otherwise idle epoch it may overshoot a 1-move budget by
             // one (minimum transfer granularity — the alternative is a
@@ -355,7 +506,12 @@ impl MigrationEngine {
             if moves > 0 && moves + 2 > budget {
                 break;
             }
-            self.exchange_q.pop_front();
+            let Some(qe) = self.exchange_q.pop_front() else { break };
+            if qe.not_before > epoch {
+                backoff_x.push(qe);
+                continue;
+            }
+            let (pm_page, dram_page) = (qe.pm, qe.dram);
             pt.count_pte_visits(2);
             pt.clear_queued(pm_page);
             pt.clear_queued(dram_page);
@@ -374,6 +530,28 @@ impl MigrationEngine {
                         continue;
                     }
                 }
+                // one fault draw per pair: the two copies are a single
+                // batched operation and abort as a unit
+                if copy_fails(&mut frng) {
+                    moves += 2;
+                    stats.dram_traffic.read_bytes += page;
+                    stats.dram_traffic.write_bytes += page;
+                    stats.pm_traffic.read_bytes += page;
+                    stats.pm_traffic.write_bytes += page;
+                    if qe.retries >= faults::RETRY_MAX {
+                        stats.failed += 2;
+                    } else {
+                        stats.retried += 2;
+                        pt.set_queued(pm_page);
+                        pt.set_queued(dram_page);
+                        retry_x.push(QueuedPair {
+                            retries: qe.retries + 1,
+                            not_before: epoch + faults::backoff_epochs(qe.retries),
+                            ..qe
+                        });
+                    }
+                    continue;
+                }
             }
             if a_ok && b_ok && pt.exchange(pm_page, dram_page) {
                 stats.exchanged_pairs += 1;
@@ -390,19 +568,33 @@ impl MigrationEngine {
                     quota_dram[qi] = quota_dram[qi].saturating_sub(1);
                 }
             } else {
-                drop_one(&mut stats, e, u64::from(!a_ok) + u64::from(!b_ok));
+                drop_one(&mut stats, qe.planned, u64::from(!a_ok) + u64::from(!b_ok));
             }
         }
-        while let Some(&(p, e)) = self.promote_q.front() {
+        for e in backoff_x.into_iter().rev() {
+            self.exchange_q.push_front(e);
+        }
+        self.exchange_q.extend(retry_x);
+
+        let mut scan = self.promote_q.len();
+        let mut backoff_p: Vec<Queued> = Vec::new();
+        let mut retry_p: Vec<Queued> = Vec::new();
+        while scan > 0 {
+            scan -= 1;
             if moves >= budget {
                 break;
             }
-            self.promote_q.pop_front();
+            let Some(qe) = self.promote_q.pop_front() else { break };
+            if qe.not_before > epoch {
+                backoff_p.push(qe);
+                continue;
+            }
+            let p = qe.page;
             pt.count_pte_visits(1);
             pt.clear_queued(p);
             let f = pt.flags(p);
             if !f.valid() || f.tier() != Tier::Pm {
-                drop_one(&mut stats, e, 1);
+                drop_one(&mut stats, qe.planned, 1);
                 continue;
             }
             if let Some(qi) = self.quota_of(p) {
@@ -414,6 +606,24 @@ impl MigrationEngine {
                     stats.over_quota += 1;
                     continue;
                 }
+            }
+            if copy_fails(&mut frng) {
+                moves += 1;
+                stats.pm_traffic.read_bytes += page;
+                stats.dram_traffic.write_bytes += page;
+                if qe.retries >= faults::RETRY_MAX {
+                    stats.failed += 1;
+                } else {
+                    stats.retried += 1;
+                    pt.set_queued(p);
+                    retry_p.push(Queued {
+                        page: p,
+                        planned: qe.planned,
+                        retries: qe.retries + 1,
+                        not_before: epoch + faults::backoff_epochs(qe.retries),
+                    });
+                }
+                continue;
             }
             if pt.migrate(p, Tier::Dram) {
                 stats.promoted += 1;
@@ -429,10 +639,19 @@ impl MigrationEngine {
                 stats.skipped += 1;
             }
         }
+        for e in backoff_p.into_iter().rev() {
+            self.promote_q.push_front(e);
+        }
+        self.promote_q.extend(retry_p);
 
-        stats.overhead_secs = stats.moves() as f64 * cfg.migrate_page_overhead;
+        self.faults = frng;
+        stats.pinned_rejected = std::mem::take(&mut self.pinned_rejected_since_run);
+        // failed attempts cost the same kernel time as landed moves
+        let attempts = stats.moves() + stats.retried + stats.failed;
+        stats.overhead_secs = attempts as f64 * cfg.migrate_page_overhead;
         stats.deferred = self.queued_moves();
         self.stale_total += stats.stale;
+        self.failed_total += stats.failed;
         self.last_bp = Backpressure {
             queued_moves: stats.deferred,
             deferred_bytes: stats.deferred as f64 * page,
@@ -440,6 +659,12 @@ impl MigrationEngine {
             throttled: self.share < 1.0,
             pm_copy_write_bytes: stats.pm_traffic.write_bytes,
             pm_copy_read_bytes: stats.pm_traffic.read_bytes,
+            copy_fail_rate: if attempts == 0 {
+                0.0
+            } else {
+                (stats.retried + stats.failed) as f64 / attempts as f64
+            },
+            failed_total: self.failed_total,
         };
         (stats, executed)
     }
@@ -820,5 +1045,257 @@ mod tests {
         assert_eq!(s.overhead_secs, 0.0);
         assert!(ex.is_empty());
         assert!(eng.backpressure().is_idle());
+    }
+
+    /// A storm-strength fault plan: 94% of copy attempts abort.
+    fn storm() -> FaultPlan {
+        FaultPlan { copy_fail: 0.94, ..FaultPlan::none() }
+    }
+
+    #[test]
+    fn unarmed_fault_injection_is_inert() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        // a plan without a copy: rate must not arm the engine
+        eng.set_fault_injection(&FaultPlan::parse("pin:0.5,scan-gap:0.5").unwrap(), 7);
+        assert!(eng.faults.is_none());
+        let plan = MigrationPlan { promote: vec![8, 9], demote: vec![0], exchange: vec![] };
+        eng.submit(&mut pt, &plan, 0);
+        let (s, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!((s.retried, s.failed, s.pinned_rejected), (0, 0, 0));
+        assert_eq!(s.moves(), 3);
+        assert_eq!(eng.backpressure().copy_fail_rate, 0.0);
+        assert_eq!(eng.backpressure().failed_total, 0);
+    }
+
+    #[test]
+    fn copy_failures_retry_with_backoff_until_landed_or_failed() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        eng.set_fault_injection(&storm(), 42);
+        let promotes: Vec<PageId> = (8..24).collect();
+        let plan = MigrationPlan { promote: promotes.clone(), demote: vec![], exchange: vec![] };
+        eng.submit(&mut pt, &plan, 0);
+
+        let mut promoted = 0u64;
+        let mut retried = 0u64;
+        let mut failed = 0u64;
+        let mut submitted = 0u64;
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        submitted += s0.submitted;
+        promoted += s0.promoted;
+        retried += s0.retried;
+        failed += s0.failed;
+        // every entry still queued was transiently failed this epoch and
+        // is backoff-gated strictly into the future with one retry spent
+        assert!(eng.promote_q.iter().all(|q| q.retries == 1 && q.not_before > 0));
+        assert_eq!(s0.retried, eng.promote_q.len() as u64);
+        let bp = eng.backpressure();
+        assert!(bp.copy_fail_rate > 0.0, "storm epochs report a failure rate");
+
+        // an entry's lifetime is bounded: attempts at e, e+1, e+3, e+7 —
+        // by epoch 8 every entry has landed or failed permanently
+        for epoch in 1..=8u32 {
+            let (s, _) = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+            promoted += s.promoted;
+            retried += s.retried;
+            failed += s.failed;
+            assert_eq!(s.submitted, 0);
+        }
+        assert_eq!(eng.queued_moves(), 0, "no livelock: the storm queue drains");
+        assert_eq!(submitted, promotes.len() as u64);
+        assert_eq!(promoted + failed, submitted, "every entry lands or fails");
+        assert!(failed > 0, "a 94% storm permanently fails some entries");
+        assert!(retried > 0);
+        // every permanent failure climbed the full retry ladder first,
+        // and no entry can retry past the cap
+        assert!(retried >= failed * u64::from(faults::RETRY_MAX));
+        assert!(retried <= submitted * u64::from(faults::RETRY_MAX));
+        assert_eq!(eng.backpressure().failed_total, failed);
+        // terminal states release the QUEUED bit
+        for &p in &promotes {
+            assert!(!pt.flags(p).queued());
+        }
+    }
+
+    #[test]
+    fn backoff_delays_hold_entries_without_charging_budget() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        eng.set_fault_injection(&storm(), 3);
+        let plan = MigrationPlan { promote: (8..20).collect(), demote: vec![], exchange: vec![] };
+        eng.submit(&mut pt, &plan, 0);
+        let (s0, _) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        let gated = eng.promote_q.len();
+        if gated == 0 {
+            return; // every attempt landed — nothing left to gate
+        }
+        // first-retry entries wake at epoch 1; a second failure re-gates
+        // to epoch 3 — so after epoch 1 every queued entry waits past it
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert!(eng.promote_q.iter().all(|q| q.not_before > 1));
+        // epoch 2: everything is backoff-gated; the epoch is free
+        let (s2, _) = eng.run_epoch(&mut pt, &cfg, 2, 1.0);
+        assert_eq!(s2.moves() + s2.retried + s2.failed, 0, "gated epoch attempts nothing");
+        assert_eq!(s2.overhead_secs, 0.0);
+        let _ = (s0, s1);
+    }
+
+    #[test]
+    fn pinned_references_are_rejected_at_submission() {
+        let (mut pt, cfg) = setup();
+        let mut eng = MigrationEngine::new(1.0);
+        pt.set_pinned(0); // DRAM
+        pt.set_pinned(8); // PM
+        pt.set_pinned(9); // PM
+        let plan = MigrationPlan {
+            promote: vec![8, 10],
+            demote: vec![0, 1],
+            exchange: vec![(9, 2), (11, 3)],
+        };
+        assert!(plan.validate_against(&pt).is_err());
+        let sub = eng.submit(&mut pt, &plan, 0);
+        assert_eq!(sub.dropped_pinned, 3, "one per pinned reference");
+        assert_eq!(sub.accepted, 4, "demote 1, promote 10, pair (11, 3)");
+        assert_eq!(sub.dropped_duplicate, 0);
+        assert!(!pt.flags(2).queued(), "the pinned pair's clean partner stays plannable");
+        let (s, ex) = eng.run_epoch(&mut pt, &cfg, 0, 1.0);
+        assert_eq!(s.pinned_rejected, 3);
+        assert_eq!(s.moves(), 4);
+        assert_eq!(ex.promote, vec![10]);
+        assert_eq!(ex.demote, vec![1]);
+        assert_eq!(ex.exchange, vec![(11, 3)]);
+        // pinned pages never moved
+        assert_eq!(pt.flags(0).tier(), Tier::Dram);
+        assert_eq!(pt.flags(8).tier(), Tier::Pm);
+        assert_eq!(pt.flags(9).tier(), Tier::Pm);
+        // the counter drains: a fault-free follow-up epoch reports zero
+        let (s1, _) = eng.run_epoch(&mut pt, &cfg, 1, 1.0);
+        assert_eq!(s1.pinned_rejected, 0);
+    }
+
+    #[test]
+    fn every_submitted_single_move_is_accounted_exactly_once() {
+        use crate::util::proptest::check;
+        // satellite: stat conservation. Random single-move plans (valid,
+        // wrong-tier, duplicate and pinned references alike) under random
+        // fault rates, shares and quotas: at every epoch boundary,
+        //   submitted == executed + stale + skipped + over_quota
+        //                + failed + still-queued
+        // and `retried` stays a pure transition count bounded by the cap.
+        check("single-move conservation", 25, |rng| {
+            let mut cfg = MachineConfig::paper_machine();
+            cfg.page_bytes = 1024;
+            let pages = 64 + rng.next_below(192) as u32;
+            let dram_cap = 8 + rng.next_below(48);
+            let mut pt = PageTable::new(pages, 1024, dram_cap * 1024, pages as u64 * 1024);
+            for p in 0..pages {
+                let tier = if rng.chance(0.3) { Tier::Dram } else { Tier::Pm };
+                let _ = pt.allocate(p, tier) || pt.allocate(p, tier.other());
+            }
+            for p in 0..pages {
+                if rng.chance(0.05) {
+                    pt.set_pinned(p);
+                }
+            }
+            let share = if rng.chance(0.5) { 1.0 } else { 0.0005 + rng.next_f64() * 0.002 };
+            let mut eng = MigrationEngine::new(share);
+            if rng.chance(0.8) {
+                let f = FaultPlan { copy_fail: 0.05 + rng.next_f64() * 0.85, ..FaultPlan::none() };
+                eng.set_fault_injection(&f, rng.next_u64());
+            }
+            if rng.chance(0.4) {
+                // audit-allow(N1): dram_cap < 56, fits comfortably
+                let cap = 1 + rng.next_below(dram_cap) as u32;
+                eng.set_quotas(vec![TenantQuota { base: 0, pages: pages / 2, hard_cap_pages: cap }]);
+            }
+            let (mut sub, mut exec, mut stale, mut skip, mut oq, mut fail, mut retr) =
+                (0u64, 0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+            for epoch in 0..40u32 {
+                if epoch < 25 {
+                    let mut plan = MigrationPlan::default();
+                    for _ in 0..rng.next_below(10) {
+                        let p = rng.next_below(pages as u64) as u32;
+                        if rng.chance(0.5) {
+                            plan.promote.push(p);
+                        } else {
+                            plan.demote.push(p);
+                        }
+                    }
+                    sub += eng.submit(&mut pt, &plan, epoch).accepted;
+                }
+                let (s, _) = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+                exec += s.moves();
+                stale += s.stale;
+                skip += s.skipped;
+                oq += s.over_quota;
+                fail += s.failed;
+                retr += s.retried;
+                crate::prop_assert!(
+                    sub == exec + stale + skip + oq + fail + eng.queued_moves(),
+                    "conservation broke at epoch {epoch}: {sub} submitted vs \
+                     {exec}+{stale}+{skip}+{oq}+{fail}+{} accounted",
+                    eng.queued_moves()
+                );
+            }
+            crate::prop_assert!(
+                retr <= sub * u64::from(faults::RETRY_MAX),
+                "retries exceed the per-entry cap in aggregate"
+            );
+            crate::prop_assert!(
+                retr >= fail * u64::from(faults::RETRY_MAX),
+                "every permanent failure implies a full retry ladder"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exchange_pairs_conserve_up_to_partner_releases() {
+        use crate::util::proptest::check;
+        // Exchange drops are per-*reference* (a valid partner of a bad
+        // side is released unaccounted, by design — it stays selectable).
+        // The conservation identity therefore loosens to a bounded
+        // residual: 0 <= submitted - accounted <= stale + skipped.
+        check("exchange-pair conservation", 25, |rng| {
+            let mut cfg = MachineConfig::paper_machine();
+            cfg.page_bytes = 1024;
+            let pages = 64 + rng.next_below(128) as u32;
+            let mut pt = PageTable::new(pages, 1024, pages as u64 * 1024, pages as u64 * 1024);
+            for p in 0..pages {
+                let tier = if rng.chance(0.4) { Tier::Dram } else { Tier::Pm };
+                let _ = pt.allocate(p, tier) || pt.allocate(p, tier.other());
+            }
+            let share = if rng.chance(0.5) { 1.0 } else { 0.0005 + rng.next_f64() * 0.002 };
+            let mut eng = MigrationEngine::new(share);
+            if rng.chance(0.8) {
+                let f = FaultPlan { copy_fail: 0.05 + rng.next_f64() * 0.85, ..FaultPlan::none() };
+                eng.set_fault_injection(&f, rng.next_u64());
+            }
+            let (mut sub, mut exec, mut stale, mut skip, mut fail) = (0u64, 0u64, 0u64, 0u64, 0u64);
+            for epoch in 0..40u32 {
+                if epoch < 25 {
+                    let mut plan = MigrationPlan::default();
+                    for _ in 0..rng.next_below(6) {
+                        let a = rng.next_below(pages as u64) as u32;
+                        let b = rng.next_below(pages as u64) as u32;
+                        plan.exchange.push((a, b));
+                    }
+                    sub += eng.submit(&mut pt, &plan, epoch).accepted;
+                }
+                let (s, _) = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+                exec += s.moves();
+                stale += s.stale;
+                skip += s.skipped;
+                fail += s.failed;
+                let accounted = exec + stale + skip + fail + eng.queued_moves();
+                crate::prop_assert!(
+                    accounted <= sub && sub - accounted <= stale + skip,
+                    "pair residual out of bounds at epoch {epoch}: \
+                     {sub} submitted, {accounted} accounted"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -79,6 +79,32 @@ impl MigrationPlan {
         }
         Ok(())
     }
+
+    /// [`MigrationPlan::validate`] plus page-table-aware checks: a plan
+    /// referencing a PINNED (unmovable) page is rejected. The engine's
+    /// submission path *drops* pinned references (counting
+    /// `pinned_rejected`) rather than erroring; this standalone check is
+    /// for tests and policy debugging, like `validate`.
+    pub fn validate_against(&self, pt: &PageTable) -> Result<(), String> {
+        self.validate()?;
+        let pinned = |page: PageId, role: &str| -> Result<(), String> {
+            if pt.flags(page).pinned() {
+                return Err(format!("page {page} is pinned and unmovable ({role})"));
+            }
+            Ok(())
+        };
+        for &p in &self.demote {
+            pinned(p, "demote")?;
+        }
+        for &(pm, dram) in &self.exchange {
+            pinned(pm, "exchange pm side")?;
+            pinned(dram, "exchange dram side")?;
+        }
+        for &p in &self.promote {
+            pinned(p, "promote")?;
+        }
+        Ok(())
+    }
 }
 
 /// Cost and accounting of executed migration work.
@@ -110,6 +136,24 @@ pub struct MigrationStats {
     /// its hard quota ([`MigrationEngine::set_quotas`]). Dropped, never
     /// retried, and charged no move budget. Always 0 without quotas.
     pub over_quota: u64,
+    /// Page-moves whose copy failed transiently this epoch (injected by
+    /// a [`crate::faults::FaultPlan`] `copy:` rate) and were re-enqueued
+    /// with backoff through the carry-over FIFOs. A transition count,
+    /// not a terminal one: the same entry can contribute up to
+    /// [`crate::faults::RETRY_MAX`] retries before it lands or fails
+    /// permanently. The failed attempt still consumed copy bandwidth,
+    /// so it is charged against the epoch budget. Always 0 without
+    /// fault injection.
+    pub retried: u64,
+    /// Page-moves dropped permanently after exhausting the retry cap
+    /// (the terminal bucket for injected copy failures). Always 0
+    /// without fault injection.
+    pub failed: u64,
+    /// Plan references to PINNED (unmovable) pages dropped at
+    /// submission, per reference — policies are expected to exclude
+    /// pinned pages from their walks, so a nonzero count flags a policy
+    /// filter gap. Always 0 without fault injection.
+    pub pinned_rejected: u64,
     /// Copy traffic to charge each tier this epoch.
     pub dram_traffic: TierDemand,
     pub pm_traffic: TierDemand,
@@ -365,5 +409,23 @@ mod tests {
             exchange: vec![(6, 6)],
         };
         assert!(selfpair.validate().is_err());
+    }
+
+    #[test]
+    fn validate_against_rejects_pinned_references() {
+        let (mut pt, _cfg) = setup();
+        let plan = MigrationPlan {
+            promote: vec![4],
+            demote: vec![0],
+            exchange: vec![(5, 1)],
+        };
+        assert!(plan.validate_against(&pt).is_ok());
+        for pinned in [0u32, 4, 5, 1] {
+            pt.set_pinned(pinned);
+            let err = plan.validate_against(&pt).unwrap_err();
+            assert!(err.contains("pinned"), "{err}");
+            pt.clear_pinned(pinned);
+        }
+        assert!(plan.validate_against(&pt).is_ok());
     }
 }

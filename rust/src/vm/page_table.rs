@@ -45,6 +45,13 @@ impl PageFlags {
     /// exclude QUEUED pages from re-selection, which is what keeps the
     /// throttled engine's backlog free of duplicates.
     pub const QUEUED: u8 = 1 << 6;
+    /// Fault-plane bit: the page is permanently unmovable
+    /// (kernel-pinned / DMA-locked — the `move_pages` EPERM analogue).
+    /// Set once at allocation by a [`crate::faults::FaultPlan`] pin
+    /// draw, never cleared during a run. Policies exclude PINNED pages
+    /// from every selection walk and the migration engine rejects any
+    /// submitted reference to one (`pinned_rejected`).
+    pub const PINNED: u8 = 1 << 7;
 
     pub fn valid(self) -> bool {
         self.0 & Self::VALID != 0
@@ -64,6 +71,9 @@ impl PageFlags {
     pub fn queued(self) -> bool {
         self.0 & Self::QUEUED != 0
     }
+    pub fn pinned(self) -> bool {
+        self.0 & Self::PINNED != 0
+    }
     pub fn tier(self) -> Tier {
         if self.0 & Self::TIER_PM != 0 {
             Tier::Pm
@@ -74,9 +84,9 @@ impl PageFlags {
 }
 
 /// One bit-plane per PTE flag bit (plane index == flag bit position).
-const NUM_PLANES: usize = 7;
+const NUM_PLANES: usize = 8;
 /// Every flag bit the activity index mirrors.
-const ALL_BITS: u8 = (1 << NUM_PLANES) - 1;
+const ALL_BITS: u8 = ((1u16 << NUM_PLANES) - 1) as u8;
 
 /// The two-level bitmap index over the flag bytes: `leaves[b]` holds one
 /// bit per page for flag bit `b` (64 pages per word); `summaries[b]`
@@ -381,6 +391,22 @@ impl PageTable {
     pub fn clear_queued(&mut self, page: PageId) {
         let old = self.flags[page as usize];
         self.write_flags(page, old & !PageFlags::QUEUED);
+    }
+
+    /// Fault-plane path: mark a page permanently unmovable (see
+    /// [`PageFlags::PINNED`]). Applied once at allocation.
+    #[inline]
+    pub fn set_pinned(&mut self, page: PageId) {
+        let old = self.flags[page as usize];
+        self.write_flags(page, old | PageFlags::PINNED);
+    }
+
+    /// Test/verification helper: pins are permanent within a run, but
+    /// the property suite exercises the plane round trip.
+    #[inline]
+    pub fn clear_pinned(&mut self, page: PageId) {
+        let old = self.flags[page as usize];
+        self.write_flags(page, old & !PageFlags::PINNED);
     }
 
     /// DCPMM_CLEAR fast path: reset the delay-window bits of every valid
@@ -818,6 +844,30 @@ mod tests {
     }
 
     #[test]
+    fn pinned_bit_round_trips_and_filters_queries() {
+        let mut t = pt();
+        for p in 0..4 {
+            t.allocate(p, Tier::Pm);
+        }
+        t.touch(1, false);
+        t.touch(2, false);
+        t.set_pinned(2);
+        assert!(t.flags(2).pinned());
+        // a selection walk excluding unmovable pages skips page 2
+        let q = PlaneQuery::epoch_touched().and_none(PageFlags::PINNED);
+        assert_eq!(t.query_word(0, q), 1 << 1);
+        // pins are orthogonal to the in-flight mark
+        t.set_queued(2);
+        assert!(t.flags(2).pinned() && t.flags(2).queued());
+        t.clear_queued(2);
+        assert!(t.flags(2).pinned(), "clearing QUEUED must not unpin");
+        t.clear_pinned(2);
+        assert!(!t.flags(2).pinned());
+        assert_eq!(t.query_word(0, q), (1 << 1) | (1 << 2));
+        t.check_index_consistent().unwrap();
+    }
+
+    #[test]
     fn iter_matching_is_ascending_and_skips_idle_blocks() {
         let mut t = PageTable::new(10_000, 1024, 100_000 * 1024, 100_000 * 1024);
         for p in [3u32, 64, 4097, 9999] {
@@ -883,7 +933,7 @@ mod tests {
             let mut t = PageTable::new(pages, 1024, dram_cap * 1024, pm_cap * 1024);
             for _ in 0..500 {
                 let page = rng.next_below(pages as u64) as u32;
-                match rng.next_below(8) {
+                match rng.next_below(9) {
                     0 => {
                         if !t.flags(page).valid() {
                             let tier = if rng.chance(0.5) { Tier::Dram } else { Tier::Pm };
@@ -906,11 +956,18 @@ mod tests {
                         let other = rng.next_below(pages as u64) as u32;
                         let _ = t.exchange(page, other);
                     }
-                    _ => {
+                    7 => {
                         if rng.chance(0.5) {
                             t.set_queued(page);
                         } else {
                             t.clear_queued(page);
+                        }
+                    }
+                    _ => {
+                        if rng.chance(0.5) {
+                            t.set_pinned(page);
+                        } else {
+                            t.clear_pinned(page);
                         }
                     }
                 }

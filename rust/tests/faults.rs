@@ -1,0 +1,231 @@
+//! Fault-injection integration: the bit-identity contract of the
+//! no-fault path across the fig5 policy set (including the armed-but-
+//! neutral plan that exercises every fault branch with ×1.0 derates),
+//! the no-livelock guarantee under a sustained brownout + copy-failure
+//! storm, the PINNED-exclusion contract at the policy level, and
+//! run-level migration-stat conservation under random fault plans ×
+//! random policies.
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig, Tier};
+use hyplacer::coordinator::{run_pair, SimResult};
+use hyplacer::faults::{self, Brownout, FaultPlan};
+use hyplacer::mem::PcmonSnapshot;
+use hyplacer::policies::{self, PolicyCtx, FIG5_POLICIES};
+use hyplacer::util::proptest::check;
+use hyplacer::vm::{MigrationEngine, PageTable};
+use hyplacer::workloads;
+
+fn run_with(policy: &str, workload: &str, epochs: u32, faults: FaultPlan) -> SimResult {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = epochs;
+    sim.warmup_epochs = 2;
+    sim.faults = faults;
+    let hp = HyPlacerConfig::default();
+    let w = workloads::by_name(workload, cfg.page_bytes, sim.epoch_secs).unwrap();
+    let p = policies::by_name(policy, &cfg, &hp).unwrap();
+    run_pair(&cfg, &sim, w, p, 0.05)
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    let f64_pairs = [
+        ("total_wall_secs", a.total_wall_secs, b.total_wall_secs),
+        ("throughput", a.throughput, b.throughput),
+        ("steady_throughput", a.steady_throughput, b.steady_throughput),
+        ("energy_j_per_byte", a.energy_j_per_byte, b.energy_j_per_byte),
+        ("total_energy_j", a.total_energy_j, b.total_energy_j),
+        ("dram_traffic_share", a.dram_traffic_share, b.dram_traffic_share),
+    ];
+    for (name, x, y) in f64_pairs {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} diverged: {x} vs {y}");
+    }
+    assert_eq!(a.migrated_pages, b.migrated_pages, "{ctx}: migrated_pages");
+    assert_eq!(a.migrate_queue_peak, b.migrate_queue_peak, "{ctx}: queue peak");
+    assert_eq!(a.stats.epochs.len(), b.stats.epochs.len(), "{ctx}: epoch count");
+    for (ea, eb) in a.stats.epochs.iter().zip(&b.stats.epochs) {
+        assert_eq!(
+            ea.wall_secs.to_bits(),
+            eb.wall_secs.to_bits(),
+            "{ctx}: epoch {} wall time diverged",
+            ea.epoch
+        );
+    }
+}
+
+/// The tentpole's bit-identity contract, lockstep over the fig5 policy
+/// set: the default (empty) fault plan and an *armed but neutral* plan —
+/// a factor-1.0 brownout, which takes every fault-gated branch in the
+/// coordinator (`set_pm_derate`, engine installation with a zero copy
+/// rate, per-epoch window checks) while injecting nothing — produce
+/// bitwise-equal results. This is the strongest executable form of "the
+/// no-fault path is unchanged": the fault machinery itself, fully wired,
+/// is invisible at neutral settings.
+#[test]
+fn no_fault_path_is_bit_identical_across_the_fig5_policy_set() {
+    let neutral = FaultPlan::parse("brownout:ep2..6*1.0").expect("neutral plan parses");
+    assert!(!neutral.is_none(), "a windowed plan must arm the fault paths");
+    for pname in FIG5_POLICIES {
+        let clean = run_with(pname, "cg-M", 8, FaultPlan::none());
+        let armed = run_with(pname, "cg-M", 8, neutral.clone());
+        assert_bit_identical(&clean, &armed, pname);
+        for r in [&clean, &armed] {
+            assert_eq!(r.migrate_retried, 0, "{pname}: no-fault run retried");
+            assert_eq!(r.migrate_failed, 0, "{pname}: no-fault run failed moves");
+            assert_eq!(r.safe_mode_epochs, 0, "{pname}: no-fault run hit safe mode");
+            assert_eq!(r.stats.migrate_pinned_rejected_total(), 0);
+        }
+    }
+}
+
+/// The acceptance-criteria storm: every fault class at once, sustained
+/// past the safe-mode entry threshold. The run must complete (the
+/// per-epoch scan bound + bounded retry ladder is the no-livelock
+/// argument in DESIGN.md §13) with nonzero retried/failed counts and
+/// nonzero safe-mode dwell — and still serve exactly the workload's
+/// fixed demand.
+#[test]
+fn fault_storm_completes_without_livelock_and_reports_degradation() {
+    let storm = FaultPlan::parse("copy:0.6,pin:0.01,brownout:ep8..16*0.5,scan-gap:0.1")
+        .expect("storm plan parses");
+    let r = run_with("hyplacer", "cg-M", 24, storm);
+    assert_eq!(r.stats.epochs.len(), 24, "the storm run must complete every epoch");
+    assert!(r.total_wall_secs.is_finite() && r.total_wall_secs > 0.0);
+    assert!(r.migrate_retried > 0, "a 60% copy-failure storm must retry");
+    assert!(r.migrate_failed > 0, "sustained failure must exhaust some retry ladders");
+    assert!(r.safe_mode_epochs > 0, "HyPlacer must back off into safe mode");
+    assert!(
+        r.safe_mode_epochs < 24,
+        "safe mode must not start before any failure was observed"
+    );
+    assert_eq!(r.stats.migrate_pinned_rejected_total(), 0, "policies never plan pinned pages");
+    // fixed work: faults slow the run down, they do not shrink it
+    let clean = run_with("hyplacer", "cg-M", 24, FaultPlan::none());
+    assert_eq!(r.total_app_bytes.to_bits(), clean.total_app_bytes.to_bits());
+    assert_eq!(clean.safe_mode_epochs, 0);
+}
+
+/// PINNED exclusion at the policy level, over the whole fig5 set: with a
+/// deterministic subset of pages pinned, every plan any policy emits
+/// passes `validate_against` (which rejects pinned references), the
+/// engine sees zero pinned drops, and the pinned pages end the run in
+/// the tier they started in.
+#[test]
+fn policies_never_plan_pinned_pages_and_pinned_pages_never_move() {
+    let mut cfg = MachineConfig::paper_machine();
+    cfg.page_bytes = 1024;
+    cfg.migrate_page_overhead = 1e-6;
+    let hp = HyPlacerConfig::default();
+    let total: u32 = 256;
+    for pname in FIG5_POLICIES {
+        let mut policy = policies::by_name(pname, &cfg, &hp).unwrap();
+        let mut pt = PageTable::new(total, 1024, 64 * 1024, 512 * 1024);
+        for page in 0..total {
+            let want = policy.place_new(page, &pt);
+            assert!(pt.allocate(page, want) || pt.allocate(page, want.other()));
+        }
+        // every 7th page is pinned — including pages the touch pattern
+        // below keeps hot, so promotion-eligible pinned pages exist
+        let pinned: Vec<u32> = (0..total).filter(|p| p % 7 == 0).collect();
+        for &p in &pinned {
+            pt.set_pinned(p);
+        }
+        let home: Vec<Tier> = pinned.iter().map(|&p| pt.flags(p).tier()).collect();
+        let mut eng = MigrationEngine::new(1.0);
+        for epoch in 0..12u32 {
+            for i in 0..64u32 {
+                let page = (i * 3 + epoch * 11) % total;
+                pt.touch(page, (i + epoch) % 3 == 0);
+                if i % 4 == 0 {
+                    pt.touch_window(page, false);
+                }
+            }
+            let plan = {
+                let mut ctx = PolicyCtx {
+                    pt: &mut pt,
+                    pcmon: PcmonSnapshot::default(),
+                    cfg: &cfg,
+                    epoch,
+                    epoch_secs: 1.0,
+                    backpressure: eng.backpressure(),
+                    tenants: &[],
+                };
+                policy.epoch_tick(&mut ctx)
+            };
+            plan.validate_against(&pt)
+                .unwrap_or_else(|e| panic!("{pname} epoch {epoch}: planned a pinned page: {e}"));
+            let sub = eng.submit(&mut pt, &plan, epoch);
+            assert_eq!(sub.dropped_pinned, 0, "{pname} epoch {epoch}: pinned reference");
+            let _ = eng.run_epoch(&mut pt, &cfg, epoch, 1.0);
+        }
+        for (&p, &t) in pinned.iter().zip(&home) {
+            assert_eq!(pt.flags(p).tier(), t, "{pname}: pinned page {p} moved");
+        }
+    }
+}
+
+/// Satellite: run-level stat conservation. Under random fault plans ×
+/// random fig5 policies × random throttles, the epoch records must
+/// account for every accepted page-move: executed + stale + skipped +
+/// over_quota + failed + still-queued, up to the per-reference exchange
+/// residual (a valid partner of a dropped side is released unaccounted,
+/// by design), with `retried` bounded by the per-entry retry cap.
+#[test]
+fn run_level_stats_conserve_under_random_fault_plans_and_policies() {
+    check("run-level conservation", 8, |rng| {
+        let pname = FIG5_POLICIES[rng.next_below(FIG5_POLICIES.len() as u64) as usize];
+        let workload = ["cg-S", "cg-M", "mg-M"][rng.next_below(3) as usize];
+        let epochs = 8 + rng.next_below(6) as u32;
+        let mut plan = FaultPlan::none();
+        if rng.chance(0.8) {
+            plan.copy_fail = rng.next_f64() * 0.6;
+        }
+        if rng.chance(0.5) {
+            plan.pin = rng.next_f64() * 0.02;
+        }
+        if rng.chance(0.5) {
+            plan.scan_gap = rng.next_f64() * 0.3;
+        }
+        if rng.chance(0.7) {
+            let start = rng.next_below(epochs as u64 / 2) as u32;
+            let end = start + 1 + rng.next_below(epochs as u64 / 2) as u32;
+            let factor = 0.25 + rng.next_f64() * 0.75;
+            plan.brownouts.push(Brownout { start, end, factor });
+        }
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = epochs;
+        sim.warmup_epochs = 2;
+        sim.seed = rng.next_u64();
+        sim.migrate_share = if rng.chance(0.5) { 1.0 } else { 0.05 };
+        sim.faults = plan;
+        let hp = HyPlacerConfig::default();
+        let w = workloads::by_name(workload, cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p = policies::by_name(pname, &cfg, &hp).unwrap();
+        let r = run_pair(&cfg, &sim, w, p, 0.05);
+
+        let (mut sub, mut exec, mut stale, mut skip, mut oq, mut fail, mut retr) =
+            (0u64, 0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+        for e in &r.stats.epochs {
+            sub += e.migrate_submitted;
+            exec += e.migrated_pages;
+            stale += e.migrate_stale;
+            skip += e.migrate_skipped;
+            oq += e.migrate_over_quota;
+            fail += e.migrate_failed;
+            retr += e.migrate_retried;
+        }
+        let queued_end = r.stats.epochs.last().map_or(0, |e| e.migrate_queued);
+        let accounted = exec + stale + skip + oq + fail + queued_end;
+        hyplacer::prop_assert!(
+            accounted <= sub && sub - accounted <= stale + skip,
+            "{pname}/{workload}: {sub} accepted vs {accounted} accounted \
+             ({exec} exec + {stale} stale + {skip} skip + {oq} oq + {fail} fail \
+             + {queued_end} queued)"
+        );
+        hyplacer::prop_assert!(
+            retr <= sub * u64::from(faults::RETRY_MAX),
+            "{pname}/{workload}: {retr} retries exceed the aggregate cap for {sub} accepted"
+        );
+        Ok(())
+    });
+}
