@@ -113,6 +113,22 @@ def test_hotpath_carries_the_fault_injection_metrics():
     assert metrics["faults/pinned_rejections"]["value"] == 0
 
 
+def test_hotpath_carries_the_shard_metrics():
+    # The sharded touch-phase PR (DESIGN.md §14) gates its bit-identity
+    # contract from the hotpath doc: result_invariant is exact and must
+    # be 1 (shard_jobs 4 reproduced the sequential run bit for bit);
+    # touch_speedup is a host-dependent wall ratio and stays info-kind
+    # permanently — sharding must never be justified by broken results.
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    for name in ("shard/result_invariant", "shard/touch_speedup"):
+        assert name in metrics, f"missing {name}"
+    assert metrics["shard/result_invariant"]["kind"] == "exact"
+    assert metrics["shard/result_invariant"]["value"] == 1
+    assert metrics["shard/touch_speedup"]["kind"] == "info"
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

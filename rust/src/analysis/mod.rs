@@ -26,6 +26,12 @@
 //! * **N1** — no truncating `as` casts to narrow integer types in
 //!   `vm/`/`tenants/` page-index arithmetic (the global↔local tenant
 //!   bijection is exactly where a silent `as u32` corrupts placement).
+//! * **M1** — `Ordering::Relaxed` atomics are confined to the
+//!   touch-phase bit-set path ([`M1_ALLOWLIST`]): the sharded MMU
+//!   phase's determinism argument (DESIGN.md §14) covers only monotone
+//!   OR-style updates published by a scope join; a relaxed load/store
+//!   anywhere else in a result-affecting module needs its own
+//!   `audit-allow` argument.
 //!
 //! `#[cfg(test)]`-gated items are exempt from every rule. The JSON
 //! report reuses the [`BaselineDoc`] envelope so CI gates audits and
@@ -90,9 +96,16 @@ pub const RULES: &[Rule] = &[
         severity: Severity::Error,
         summary: "no truncating integer casts on page-index arithmetic",
     },
+    Rule {
+        id: "M1",
+        severity: Severity::Error,
+        summary: "Ordering::Relaxed confined to the touch-phase bit-set path",
+    },
 ];
 
-/// Module prefixes whose execution affects committed results (D1 scope).
+/// Module prefixes whose execution affects committed results (D1 scope;
+/// also the M1 scope — relaxed atomics are a result-determinism hazard
+/// exactly where iteration order is).
 pub const D1_SCOPE: &[&str] = &[
     "sim/",
     "vm/",
@@ -103,6 +116,7 @@ pub const D1_SCOPE: &[&str] = &[
     "exec/",
     "coordinator/",
     "faults/",
+    "shard/",
 ];
 
 /// Files allowed to read wall-clock time: cell wall-time metadata in the
@@ -111,12 +125,18 @@ pub const D1_SCOPE: &[&str] = &[
 pub const D2_ALLOWLIST: &[&str] = &["exec/mod.rs", "bench_harness/perf.rs"];
 
 /// Library decision paths (R1 scope): policies, the vm layer incl. the
-/// migration engine, the tenant subsystem, and the fault-injection
-/// plans (a panic there takes down a whole sweep cell).
-pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/", "faults/"];
+/// migration engine, the tenant subsystem, the fault-injection plans
+/// and the shard worker pool (a panic there takes down a whole sweep
+/// cell).
+pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/", "faults/", "shard/"];
 
 /// Page-index arithmetic modules (N1 scope).
 pub const N1_SCOPE: &[&str] = &["vm/", "tenants/"];
+
+/// The one file where `Ordering::Relaxed` is part of the design: the
+/// activity index's touch-phase `fetch_or` path, whose interleaving
+/// independence is argued (and lockstep-tested) in DESIGN.md §14.
+pub const M1_ALLOWLIST: &[&str] = &["vm/page_table.rs"];
 
 const D3_TOKENS: &[&str] = &["thread_rng", "ThreadRng", "from_entropy", "OsRng"];
 const R1_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
@@ -322,6 +342,7 @@ pub fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
     let in_r1 = in_scope(rel, R1_SCOPE);
     let in_n1 = in_scope(rel, N1_SCOPE);
     let d2_allowed = D2_ALLOWLIST.contains(&rel);
+    let in_m1 = in_d1 && !M1_ALLOWLIST.contains(&rel);
 
     for (k, t) in toks.iter().enumerate() {
         let text = t.text.as_str();
@@ -396,6 +417,21 @@ pub fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
                     format!("{text}! in a library decision path"),
                 );
             }
+        }
+        if in_m1 && text == "Relaxed" {
+            emit(
+                &mut findings,
+                &mut allows,
+                &exempt,
+                "M1",
+                rel,
+                t.line,
+                t.col,
+                "Ordering::Relaxed outside the touch-phase bit-set path \
+                 (vm/page_table.rs); use acquire/release or justify why \
+                 ordering cannot affect results"
+                    .to_string(),
+            );
         }
         if in_n1 && text == "as" && k + 1 < toks.len() {
             let ty = toks[k + 1].text.as_str();
@@ -608,7 +644,32 @@ mod tests {
         assert_eq!(doc.metrics["findings/errors"].value, 0.0);
         assert_eq!(doc.metrics["rule/D1"].kind, MetricKind::Exact);
         assert_eq!(doc.metrics["rule/AU"].kind, MetricKind::Info);
-        // zero-violation doc gates: 7 exact metrics (5 rules + AA + total)
-        assert_eq!(doc.compared_len(), 7);
+        // zero-violation doc gates: 8 exact metrics (6 rules + AA + total)
+        assert_eq!(doc.compared_len(), 8);
+    }
+
+    #[test]
+    fn m1_relaxed_confined_to_the_touch_path() {
+        let src = "let v = w.fetch_or(bit, Ordering::Relaxed);\n";
+        // the activity index's bit-set path is the design allowlist
+        assert_eq!(errs("vm/page_table.rs", src).len(), 0);
+        // everywhere else in result-affecting scope it's an error...
+        assert_eq!(errs("shard/mod.rs", src).len(), 1);
+        assert!(errs("shard/mod.rs", src)[0].contains("[M1]"));
+        assert_eq!(errs("vm/migrate.rs", src).len(), 1);
+        // ...and out of scope it's nobody's business
+        assert_eq!(errs("report/x.rs", src).len(), 0);
+        // an audit-allow with a justification escapes (exec's claim cursor)
+        let allowed = "// audit-allow(M1): claim order cannot affect results\n\
+                       let i = next.fetch_add(1, Ordering::Relaxed);\n";
+        assert_eq!(errs("exec/mod.rs", allowed).len(), 0);
+        // non-Relaxed orderings never match
+        assert_eq!(errs("shard/mod.rs", "w.store(1, Ordering::Release);\n").len(), 0);
+    }
+
+    #[test]
+    fn shard_module_joins_the_result_affecting_scopes() {
+        assert_eq!(errs("shard/mod.rs", "use std::collections::HashMap;\n").len(), 1);
+        assert_eq!(errs("shard/mod.rs", "fn f() { x.unwrap(); }\n").len(), 1);
     }
 }

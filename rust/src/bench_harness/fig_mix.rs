@@ -60,6 +60,7 @@ pub fn mix_spec(
     sim.epochs = opts.epochs;
     sim.seed = opts.seed;
     sim.migrate_share = opts.migrate_share;
+    sim.shard_jobs = opts.shard_jobs;
     sim.warmup_epochs = (opts.epochs / 3).max(2);
     let mut hp = HyPlacerConfig::default();
     hp.use_aot = opts.use_aot;

@@ -89,6 +89,11 @@ pub struct BenchOpts {
     /// fig-faults swaps its built-in fault grid for {none, this} when
     /// set; parsed per cell into [`crate::faults::FaultPlan`].
     pub faults: String,
+    /// Touch-phase worker threads inside each multi-tenant cell
+    /// (`--shard-jobs`; 1 = sequential reference path, 0 = one per
+    /// core). Bit-identical at every setting, so — like `jobs` — it
+    /// never enters content keys (DESIGN.md §14).
+    pub shard_jobs: usize,
 }
 
 impl Default for BenchOpts {
@@ -103,6 +108,7 @@ impl Default for BenchOpts {
             resume: false,
             migrate_share: 1.0,
             faults: String::new(),
+            shard_jobs: 1,
         }
     }
 }

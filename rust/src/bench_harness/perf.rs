@@ -278,6 +278,39 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
     );
     doc.put("host/storm_ms", storm_secs * 1e3, MetricKind::Info);
 
+    // --- sharded touch phase: the same 2-tenant mix at shard_jobs 1
+    // (sequential reference path) vs 4. result_invariant is the
+    // bit-identity contract itself (DESIGN.md §14) — exact, gating, and
+    // by construction either 1.0 or a broken build. touch_speedup is a
+    // host timing ratio (whole-run wall over wall), informational only:
+    // small mixes are policy-tick-dominated, so it reports plumbing
+    // health rather than a scaling claim.
+    let mut sim_shard = SimConfig::default();
+    sim_shard.epochs = if quick { 10 } else { 24 };
+    sim_shard.warmup_epochs = 2;
+    let shard_mix = crate::tenants::MixSpec::parse("cg.S+mg.S").expect("shard mix parses");
+    let run_sharded = |jobs: usize| {
+        let mut s = sim_shard.clone();
+        s.shard_jobs = jobs;
+        let p = policies::by_name("hyplacer", &cfg, &hp).expect("hyplacer registered");
+        let t0 = Instant::now();
+        let r = crate::tenants::run_mix(&cfg, &s, &shard_mix, p, 0.05)
+            .expect("shard bench mix runs");
+        (r, t0.elapsed().as_secs_f64())
+    };
+    let (seq, seq_secs) = run_sharded(1);
+    let (par, par_secs) = run_sharded(4);
+    let invariant = seq.total_wall_secs.to_bits() == par.total_wall_secs.to_bits()
+        && seq.total_app_bytes.to_bits() == par.total_app_bytes.to_bits()
+        && seq.migrated_pages == par.migrated_pages
+        && seq.migrate_queue_peak == par.migrate_queue_peak;
+    doc.put(
+        "shard/result_invariant",
+        if invariant { 1.0 } else { 0.0 },
+        MetricKind::Exact,
+    );
+    doc.put("shard/touch_speedup", seq_secs / par_secs.max(1e-9), MetricKind::Info);
+
     doc.notes.push(
         "gating metrics are scale-free and deterministic (RNG draws, page counts, \
          simulated ratios); host/* timings are informational only"
@@ -417,6 +450,9 @@ mod tests {
         assert!(a.metrics["faults/retry_ratio"].value > 0.0);
         assert_eq!(a.metrics["faults/pinned_rejections"].value, 0.0);
         assert!(a.metrics["faults/safe_mode_epochs"].value >= 0.0);
+        // the sharded touch phase reproduced the sequential run exactly
+        assert_eq!(a.metrics["shard/result_invariant"].value, 1.0);
+        assert!(a.metrics["shard/touch_speedup"].value > 0.0);
     }
 
     #[test]

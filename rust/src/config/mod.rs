@@ -263,6 +263,15 @@ pub struct SimConfig {
     /// existed. Like `migrate_share`, it feeds the sweep cell-key
     /// fingerprint only when non-empty, keeping legacy checkpoints valid.
     pub faults: crate::faults::FaultPlan,
+    /// Worker threads for the per-epoch MMU/touch phase of multi-tenant
+    /// runs (DESIGN.md §14): `1` (the default) runs the tenants inline
+    /// on the epoch thread — today's sequential path — `0` means one
+    /// worker per core, and any value is capped at the tenant count.
+    /// Results are **bit-identical at every setting** (the touch phase
+    /// is OR-only and every tenant has its own RNG stream), which is why
+    /// this knob must NEVER enter the sweep cell-key fingerprint: it is
+    /// an execution detail, like `--jobs`, not a simulated input.
+    pub shard_jobs: usize,
 }
 
 impl Default for SimConfig {
@@ -274,6 +283,7 @@ impl Default for SimConfig {
             warmup_epochs: 10,
             migrate_share: 1.0,
             faults: crate::faults::FaultPlan::none(),
+            shard_jobs: 1,
         }
     }
 }
@@ -320,6 +330,19 @@ impl SimConfig {
                 eprintln!(
                     "config: sim.migrate_share = {v} outside (0, 1]; keeping {}",
                     self.migrate_share
+                );
+            }
+        }
+        if let Some(v) = doc.i64("sim.shard_jobs") {
+            // 0 = one worker per core; negative values are meaningless.
+            // apply_doc is infallible by design, so warn-and-keep rather
+            // than erroring (matching migrate_share/faults).
+            if v >= 0 {
+                self.shard_jobs = v as usize;
+            } else {
+                eprintln!(
+                    "config: sim.shard_jobs = {v} is negative; keeping {}",
+                    self.shard_jobs
                 );
             }
         }
@@ -665,6 +688,31 @@ mod tests {
         // fingerprint (only when != 1.0), so a default flip would re-key
         // every committed checkpoint
         assert_eq!(SimConfig::default().migrate_share, 1.0);
+    }
+
+    #[test]
+    fn shard_jobs_default_sequential_and_doc_override() {
+        // the default MUST stay 1 (the sequential reference path): the
+        // knob is an execution detail that never enters cell keys, and
+        // sharding only engages when explicitly requested
+        assert_eq!(SimConfig::default().shard_jobs, 1);
+
+        let doc = parse::Doc::parse("[sim]\nshard_jobs = 4").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert_eq!(sim.shard_jobs, 4);
+
+        // 0 = one worker per core (resolved at run time)
+        let doc = parse::Doc::parse("[sim]\nshard_jobs = 0").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert_eq!(sim.shard_jobs, 0);
+
+        // negative values keep the current setting (warn on stderr)
+        let doc = parse::Doc::parse("[sim]\nshard_jobs = -2").unwrap();
+        let mut sim = SimConfig::default();
+        sim.apply_doc(&doc);
+        assert_eq!(sim.shard_jobs, 1);
     }
 
     #[test]

@@ -83,6 +83,7 @@ where
     std::thread::scope(|scope| {
         for _ in 0..jobs {
             scope.spawn(|| loop {
+                // audit-allow(M1): work-queue claim cursor — claim order cannot affect results
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
@@ -910,6 +911,24 @@ mod tests {
         assert!(parallel_map(&empty, 8, |_, &x| x).is_empty());
         let one = [5u32];
         assert_eq!(parallel_map(&one, 0, |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn parallel_map_caps_workers_at_item_count() {
+        // small grids must not pay idle thread spawns: with 3 items and
+        // 64 requested workers, at most 3 distinct threads may ever
+        // execute `f` (each item dwells long enough that uncapped spares
+        // would certainly steal a slot)
+        let items = [0u32, 1, 2];
+        let seen: Mutex<std::collections::HashSet<std::thread::ThreadId>> =
+            Mutex::new(std::collections::HashSet::new());
+        parallel_map(&items, 64, |_, &x| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            x
+        });
+        let distinct = seen.lock().unwrap().len();
+        assert!(distinct <= 3, "spawned {distinct} workers for 3 items");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod tenants;
 pub mod report;
 pub mod exec;
+pub mod shard;
 pub mod bench_harness;
 pub mod analysis;
 

@@ -70,6 +70,8 @@ struct Args {
     tolerance: f64,
     /// audit: scan root (default rust/src).
     root: Option<String>,
+    /// touch-phase worker threads (1 = sequential, 0 = one per core).
+    shard_jobs: Option<usize>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -97,6 +99,7 @@ fn parse_args() -> Result<Args, String> {
         current: None,
         tolerance: 0.25,
         root: None,
+        shard_jobs: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -107,6 +110,10 @@ fn parse_args() -> Result<Args, String> {
             "--epochs" => args.epochs = Some(take("--epochs")?.parse().map_err(|e| format!("--epochs: {e}"))?),
             "--seed" => args.seed = Some(take("--seed")?.parse().map_err(|e| format!("--seed: {e}"))?),
             "--jobs" | "-j" => args.jobs = take("--jobs")?.parse().map_err(|e| format!("--jobs: {e}"))?,
+            "--shard-jobs" => {
+                args.shard_jobs =
+                    Some(take("--shard-jobs")?.parse().map_err(|e| format!("--shard-jobs: {e}"))?)
+            }
             "--csv" => args.csv = Some(take("--csv")?),
             "--json" => args.json = Some(take("--json")?),
             "--workload" | "-w" => args.workload = Some(take("--workload")?),
@@ -199,7 +206,8 @@ COMMANDS
   audit     determinism/robustness static analysis over the library
             source (DESIGN.md §11 rule table: D1 ordered collections,
             D2 wall-clock, D3 seeded RNG, R1 no-panic decision paths,
-            N1 truncating page-index casts; `audit-allow(rule): reason`
+            N1 truncating page-index casts, M1 relaxed atomics outside
+            the touch-phase bit-set path; `audit-allow(rule): reason`
             escapes must justify themselves). Exits nonzero on any
             error-severity finding.
             [--json FILE] [--baseline AUDIT_baseline.json] [--root DIR]
@@ -209,6 +217,11 @@ FLAGS
   --epochs N     epochs per run (default 60; figures use their own)
   --seed N       RNG seed (default 42)
   -j, --jobs N   worker threads for fig5/6/7 + sweep (default: one per core)
+  --shard-jobs N touch-phase worker threads inside one multi-tenant
+                 simulation (default 1 = sequential; 0 = one per core;
+                 capped at tenant count). Bit-identical at every setting
+                 — an execution detail like --jobs, never part of sweep
+                 cell keys (DESIGN.md §14)
   --csv DIR      also write each table as CSV under DIR
   --json FILE    (sweep) also write full results as JSON
                  (compare) machine-readable comparison incl. queue telemetry
@@ -286,6 +299,9 @@ fn opts_from(args: &Args) -> BenchOpts {
     if let Some(f) = &args.faults {
         o.faults = f.clone();
     }
+    if let Some(s) = args.shard_jobs {
+        o.shard_jobs = s;
+    }
     o
 }
 
@@ -326,6 +342,9 @@ fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig
     if let Some(f) = &args.faults {
         sim.faults =
             hyplacer::faults::FaultPlan::parse(f).map_err(|e| format!("--faults: {e}"))?;
+    }
+    if let Some(s) = args.shard_jobs {
+        sim.shard_jobs = s;
     }
     hp.use_aot = args.aot;
     Ok((machine, sim, hp))

@@ -1,0 +1,126 @@
+//! Scoped worker pool for the per-epoch touch phase.
+//!
+//! [`run_tasks`] fans a set of per-tenant MMU tasks over scoped threads —
+//! the in-simulation analogue of [`crate::exec::parallel_map`], which
+//! parallelizes *across* simulations. The contract that keeps results
+//! bit-identical at any `jobs` count (DESIGN.md §14):
+//!
+//! * every task owns its mutable state exclusively (`&mut T` handed to
+//!   exactly one worker), so there is no cross-task data flow;
+//! * tasks only communicate through OR-only atomic bit-sets in the
+//!   shared activity index ([`crate::vm::TouchShard`]), whose final
+//!   state is interleaving-independent;
+//! * `jobs <= 1` runs the tasks inline in index order — the reference
+//!   sequential path — and the scoped pool merely reorders execution of
+//!   independent tasks, never their per-task internals.
+//!
+//! A panic in any worker propagates to the caller when the scope joins,
+//! mirroring `parallel_map`. Worker count is capped at the task count so
+//! small mixes never pay idle thread spawns.
+
+use std::sync::Mutex;
+
+use crate::exec::resolve_jobs;
+
+/// Run `run(i, &mut tasks[i])` for every task, on up to `jobs` scoped
+/// worker threads (`0` = one per core, `1` = inline in index order).
+///
+/// Workers pull `(index, &mut task)` pairs from a shared queue, so
+/// uneven tenant footprints balance automatically. The queue hands each
+/// task to exactly one worker; claim order is arbitrary, which is safe
+/// because callers only pass order-independent work (see module docs).
+pub fn run_tasks<T, F>(tasks: &mut [T], jobs: usize, run: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(tasks.len().max(1));
+    if jobs <= 1 {
+        for (i, t) in tasks.iter_mut().enumerate() {
+            run(i, t);
+        }
+        return;
+    }
+    let queue = Mutex::new(tasks.iter_mut().enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                // a poisoned lock only means another worker panicked
+                // mid-claim; the iterator state is still coherent, and
+                // the scope join will re-raise that panic anyway
+                let next = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
+                match next {
+                    Some((i, t)) => run(i, t),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn inline_path_runs_in_index_order() {
+        let mut tasks: Vec<usize> = vec![0; 16];
+        let seen = Mutex::new(Vec::new());
+        run_tasks(&mut tasks, 1, |i, t| {
+            *t = i + 1;
+            seen.lock().unwrap().push(i);
+        });
+        assert_eq!(*seen.lock().unwrap(), (0..16).collect::<Vec<_>>());
+        assert_eq!(tasks, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once_at_any_jobs_count() {
+        for jobs in [0, 1, 2, 3, 8, 64] {
+            let mut tasks: Vec<u64> = (0..33).collect();
+            run_tasks(&mut tasks, jobs, |i, t| {
+                assert_eq!(*t, i as u64, "task handed to the wrong index");
+                *t = *t * 10 + 7;
+            });
+            let want: Vec<u64> = (0..33).map(|v| v * 10 + 7).collect();
+            assert_eq!(tasks, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn parallel_results_match_inline_results() {
+        let work = |i: usize, t: &mut u64| {
+            // order-independent per-task computation
+            let mut acc = i as u64;
+            for k in 0..1000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            *t = acc;
+        };
+        let mut a: Vec<u64> = vec![0; 50];
+        let mut b: Vec<u64> = vec![0; 50];
+        run_tasks(&mut a, 1, work);
+        run_tasks(&mut b, 8, work);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_count_never_exceeds_task_count() {
+        // 2 tasks, 64 requested workers: at most 2 distinct threads may
+        // ever claim work (the pool caps at the task count)
+        let mut tasks = vec![(); 2];
+        let claims = AtomicUsize::new(0);
+        run_tasks(&mut tasks, 64, |_, _| {
+            claims.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert_eq!(claims.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn empty_task_list_is_a_no_op() {
+        let mut tasks: Vec<u32> = Vec::new();
+        run_tasks(&mut tasks, 4, |_, _| panic!("must not run"));
+    }
+}

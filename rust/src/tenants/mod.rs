@@ -51,7 +51,7 @@ use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx, TenantRange};
 use crate::sim::{RunStats, SimClock};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
-use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery, TenantQuota};
+use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery, TenantQuota, TouchShard};
 use crate::workloads::{self, Region, Workload};
 
 /// One tenant of a co-run mix.
@@ -443,6 +443,10 @@ struct TenantRun {
     /// Index of this tenant's first [`ActiveRegion`] in the epoch's
     /// union scratch list.
     scratch_start: usize,
+    /// This tenant's own [`ActiveRegion`]s this epoch, staged by its
+    /// touch task and merged into the union scratch in tenant order
+    /// after the shard barrier (DESIGN.md §14).
+    scratch: Vec<ActiveRegion>,
     /// Offered bytes this epoch (post share-weight scaling).
     offered: f64,
     /// Pages touched this epoch.
@@ -543,6 +547,7 @@ impl MultiSimulation {
                 region_dram: Vec::new(),
                 regions: Vec::new(),
                 scratch_start: 0,
+                scratch: Vec::new(),
                 offered: 0.0,
                 active_pages: 0,
             })
@@ -753,34 +758,62 @@ impl MultiSimulation {
         // fault-plan scan gap drops the whole epoch's harvest (system-
         // wide — the MMU scan is global); gated on a non-empty plan so
         // the no-fault tenant RNG streams are untouched.
+        //
+        // The phase is sharded by tenant (DESIGN.md §14): each tenant's
+        // task owns its `TenantRun` and its exclusive flag-byte slice
+        // (`TouchShard`) and communicates with its neighbours only via
+        // OR-only atomic bit-sets in the shared activity index, so any
+        // worker interleaving — including `shard_jobs = 1`, the inline
+        // reference path — produces bit-identical state. Per-tenant
+        // results are staged in `TenantRun::scratch` and merged into the
+        // union list sequentially, in tenant order, after the barrier.
         let scan_gap =
             !self.sim.faults.is_none() && self.sim.faults.scan_gap_epoch(self.sim.seed, epoch);
-        self.all_scratch.clear();
-        let mut active_total = 0u64;
-        let pt = &mut self.pt;
-        let scratch = &mut self.all_scratch;
+        let shard_jobs = self.sim.shard_jobs;
         let window_frac = self.window_frac;
-        for ti in 0..self.runs.len() {
-            let spec_arrival = self.set.spec(ti).arrival_epoch;
-            let weight = self.set.spec(ti).share_weight;
-            let base = self.set.base(ti) as u64;
-            let t = &mut self.runs[ti];
-            t.scratch_start = scratch.len();
+        struct TouchTask<'a> {
+            t: &'a mut TenantRun,
+            shard: TouchShard<'a>,
+            arrival: u32,
+            weight: f64,
+            base: u64,
+        }
+        let ranges: Vec<(PageId, u32)> =
+            (0..self.runs.len()).map(|ti| (self.set.base(ti), self.set.pages(ti))).collect();
+        let set = &self.set;
+        let mut tasks: Vec<TouchTask> = self
+            .runs
+            .iter_mut()
+            .zip(self.pt.touch_shards(&ranges))
+            .enumerate()
+            .map(|(ti, (t, shard))| TouchTask {
+                t,
+                shard,
+                arrival: set.spec(ti).arrival_epoch,
+                weight: set.spec(ti).share_weight,
+                base: set.base(ti) as u64,
+            })
+            .collect();
+        crate::shard::run_tasks(&mut tasks, shard_jobs, |_, task| {
+            let t = &mut *task.t;
+            let shard = &mut task.shard;
+            t.scratch.clear();
+            t.scratch_start = 0;
             t.active_pages = 0;
             if !t.arrived {
                 t.regions.clear();
                 t.offered = 0.0;
-                continue;
+                return;
             }
-            t.regions = t.workload.regions(epoch - spec_arrival);
+            t.regions = t.workload.regions(epoch - task.arrival);
             let total_weight: f64 = t.regions.iter().map(|r| r.weight).sum();
-            let offered = t.workload.offered_bytes() * weight;
+            let offered = t.workload.offered_bytes() * task.weight;
             t.offered = offered;
             let mut tenant_active = 0u64;
             for r in &t.regions {
                 let share = if total_weight > 0.0 { r.weight / total_weight } else { 0.0 };
                 let bytes = offered * share;
-                scratch.push(ActiveRegion {
+                t.scratch.push(ActiveRegion {
                     pages: r.pages as u64,
                     read_bytes: bytes * (1.0 - r.write_frac),
                     write_bytes: bytes * r.write_frac,
@@ -801,30 +834,40 @@ impl MultiSimulation {
                 let rng = &mut t.rng;
                 bernoulli_hits(
                     rng,
-                    base + r.start as u64,
-                    base + r.end() as u64,
+                    task.base + r.start as u64,
+                    task.base + r.end() as u64,
                     p_touch,
                     |rng, page| {
                         tenant_active += 1;
                         let write = rng.chance(p_write_given_touch);
                         // audit-allow(N1): page < pt.len(), a u32 by construction
-                        pt.touch(page as u32, write);
+                        shard.touch(page as u32, write);
                     },
                 );
                 bernoulli_hits(
                     rng,
-                    base + r.start as u64,
-                    base + r.end() as u64,
+                    task.base + r.start as u64,
+                    task.base + r.end() as u64,
                     p_window,
                     |rng, page| {
                         let wwrite = rng.chance(p_wwrite_given);
                         // audit-allow(N1): page < pt.len(), a u32 by construction
-                        pt.touch_window(page as u32, wwrite);
+                        shard.touch_window(page as u32, wwrite);
                     },
                 );
             }
             t.active_pages = tenant_active;
-            active_total += tenant_active;
+        });
+        drop(tasks);
+        // Sequential reduce: merge per-tenant staging into the union
+        // scratch in fixed tenant order — what demand routing and every
+        // later phase observe is independent of worker interleaving.
+        self.all_scratch.clear();
+        let mut active_total = 0u64;
+        for t in &mut self.runs {
+            t.scratch_start = self.all_scratch.len();
+            self.all_scratch.extend(t.scratch.iter().copied());
+            active_total += t.active_pages;
         }
 
         // --- 2. One system-wide policy decision tick over the union

@@ -12,7 +12,7 @@ pub mod page_table;
 pub mod pagewalk;
 pub mod migrate;
 
-pub use page_table::{MatchingPages, PageFlags, PageId, PageTable, PlaneQuery};
+pub use page_table::{MatchingPages, PageFlags, PageId, PageTable, PlaneQuery, TouchShard};
 pub use pagewalk::{PageWalker, SparseWalker, WalkControl};
 pub use migrate::{
     Backpressure, MigrationEngine, MigrationPlan, MigrationStats, SubmitStats, TenantQuota,

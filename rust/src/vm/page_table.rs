@@ -16,6 +16,8 @@
 //! inspecting every PTE — the llfree-style fix for the scan overhead that
 //! otherwise dominates tiered-memory daemons (see DESIGN.md §8).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::config::Tier;
 
 pub type PageId = u32;
@@ -86,6 +88,7 @@ impl PageFlags {
 /// One bit-plane per PTE flag bit (plane index == flag bit position).
 const NUM_PLANES: usize = 8;
 /// Every flag bit the activity index mirrors.
+// audit-allow(N1): compile-time flag-bit mask (NUM_PLANES <= 8), not page-index arithmetic
 const ALL_BITS: u8 = ((1u16 << NUM_PLANES) - 1) as u8;
 
 /// The two-level bitmap index over the flag bytes: `leaves[b]` holds one
@@ -93,19 +96,51 @@ const ALL_BITS: u8 = ((1u16 << NUM_PLANES) - 1) as u8;
 /// holds one bit per leaf word (set ⇔ the word is nonzero). Maintained
 /// incrementally by [`PageTable::write_flags`]; a dense rebuild exists
 /// only for verification ([`PageTable::check_index_consistent`]).
-#[derive(Clone, Debug, PartialEq)]
+///
+/// The words are `AtomicU64` so the touch phase can shard across tenant
+/// workers (llfree-style atomic bitfield trees): index words straddle
+/// tenant boundaries even though the flag bytes are disjoint, so
+/// concurrent shards meet here. The **memory-ordering contract**
+/// (DESIGN.md §14) is deliberately minimal:
+///
+/// * the touch phase only *sets* bits ([`Self::set_bits_shared`], a
+///   `fetch_or` per word) — a monotone, commutative update whose final
+///   word values are independent of thread interleaving, so `Relaxed`
+///   suffices; the `std::thread::scope` join is the happens-before edge
+///   that publishes the words to the sequential phases;
+/// * every clearing path keeps `&mut self` and goes through `get_mut`
+///   (plain stores, no atomic RMW) — clears only ever run in the
+///   sequential kernel phases where the table is exclusively borrowed;
+/// * reads in the sequential phases ([`Self::leaf`]/[`Self::summary`])
+///   are `Relaxed` loads under that same exclusive borrow.
+#[derive(Debug)]
 struct ActivityIndex {
-    leaves: [Vec<u64>; NUM_PLANES],
-    summaries: [Vec<u64>; NUM_PLANES],
+    leaves: [Vec<AtomicU64>; NUM_PLANES],
+    summaries: [Vec<AtomicU64>; NUM_PLANES],
+}
+
+/// `AtomicU64` is not `Clone`; snapshot the word values (only ever done
+/// while the owning `PageTable` is exclusively borrowed).
+impl Clone for ActivityIndex {
+    fn clone(&self) -> Self {
+        let snap = |v: &Vec<AtomicU64>| {
+            v.iter().map(|w| AtomicU64::new(w.load(Ordering::Relaxed))).collect()
+        };
+        ActivityIndex {
+            leaves: std::array::from_fn(|b| snap(&self.leaves[b])),
+            summaries: std::array::from_fn(|b| snap(&self.summaries[b])),
+        }
+    }
 }
 
 impl ActivityIndex {
     fn new(num_pages: u32) -> Self {
         let nw = (num_pages as usize).div_ceil(64);
         let ns = nw.div_ceil(64);
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
         ActivityIndex {
-            leaves: std::array::from_fn(|_| vec![0u64; nw]),
-            summaries: std::array::from_fn(|_| vec![0u64; ns]),
+            leaves: std::array::from_fn(|_| zeros(nw)),
+            summaries: std::array::from_fn(|_| zeros(ns)),
         }
     }
 
@@ -127,14 +162,16 @@ impl ActivityIndex {
 
     #[inline]
     fn leaf(&self, plane: usize, wi: usize) -> u64 {
-        self.leaves[plane][wi]
+        self.leaves[plane][wi].load(Ordering::Relaxed)
     }
 
     #[inline]
     fn summary(&self, plane: usize, si: usize) -> u64 {
-        self.summaries[plane][si]
+        self.summaries[plane][si].load(Ordering::Relaxed)
     }
 
+    /// Sequential set path (exclusive borrow): plain read-modify-write
+    /// through `get_mut`, no atomic RMW cost.
     #[inline]
     fn set_bits(&mut self, page: usize, mut bits: u8) {
         let (wi, bit) = (page / 64, 1u64 << (page % 64));
@@ -142,8 +179,25 @@ impl ActivityIndex {
         while bits != 0 {
             let b = bits.trailing_zeros() as usize;
             bits &= bits - 1;
-            self.leaves[b][wi] |= bit;
-            self.summaries[b][si] |= sbit;
+            *self.leaves[b][wi].get_mut() |= bit;
+            *self.summaries[b][si].get_mut() |= sbit;
+        }
+    }
+
+    /// Concurrent set path for shard workers: one `fetch_or` per leaf /
+    /// summary word. OR-only and commutative, so the final index state is
+    /// bit-identical to running [`Self::set_bits`] for the same pages in
+    /// any order — which is what makes the sharded touch phase
+    /// indistinguishable from the sequential one (DESIGN.md §14).
+    #[inline]
+    fn set_bits_shared(&self, page: usize, mut bits: u8) {
+        let (wi, bit) = (page / 64, 1u64 << (page % 64));
+        let (si, sbit) = (page / 4096, 1u64 << ((page / 64) % 64));
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.leaves[b][wi].fetch_or(bit, Ordering::Relaxed);
+            self.summaries[b][si].fetch_or(sbit, Ordering::Relaxed);
         }
     }
 
@@ -154,9 +208,10 @@ impl ActivityIndex {
         while bits != 0 {
             let b = bits.trailing_zeros() as usize;
             bits &= bits - 1;
-            self.leaves[b][wi] &= !bit;
-            if self.leaves[b][wi] == 0 {
-                self.summaries[b][si] &= !sbit;
+            let w = self.leaves[b][wi].get_mut();
+            *w &= !bit;
+            if *w == 0 {
+                *self.summaries[b][si].get_mut() &= !sbit;
             }
         }
     }
@@ -169,9 +224,10 @@ impl ActivityIndex {
         while bits != 0 {
             let b = bits.trailing_zeros() as usize;
             bits &= bits - 1;
-            self.leaves[b][wi] &= !mask;
-            if self.leaves[b][wi] == 0 {
-                self.summaries[b][si] &= !sbit;
+            let w = self.leaves[b][wi].get_mut();
+            *w &= !mask;
+            if *w == 0 {
+                *self.summaries[b][si].get_mut() &= !sbit;
             }
         }
     }
@@ -409,6 +465,34 @@ impl PageTable {
         self.write_flags(page, old & !PageFlags::PINNED);
     }
 
+    /// Split the MMU touch surface into disjoint per-tenant shards for
+    /// the parallel touch phase. `ranges` are `(first_page, page_count)`
+    /// pairs in ascending, non-overlapping order (the tenant layout is
+    /// exactly that); each returned [`TouchShard`] owns its range's flag
+    /// bytes exclusively while all shards share the atomic activity
+    /// index, whose leaf/summary words straddle range boundaries.
+    ///
+    /// Only the OR-only MMU paths ([`TouchShard::touch`] /
+    /// [`TouchShard::touch_window`]) are reachable through a shard, so
+    /// any interleaving of shard execution produces the same final flag
+    /// bytes and index words as the sequential loop (DESIGN.md §14).
+    pub fn touch_shards(&mut self, ranges: &[(PageId, u32)]) -> Vec<TouchShard<'_>> {
+        let index = &self.index;
+        let mut rest: &mut [u8] = &mut self.flags;
+        let mut consumed = 0usize;
+        let mut out = Vec::with_capacity(ranges.len());
+        for &(start, len) in ranges {
+            let s = start as usize;
+            assert!(s >= consumed, "touch_shards: ranges must be ascending and disjoint");
+            let tail = rest.split_at_mut(s - consumed).1;
+            let (mine, tail) = tail.split_at_mut(len as usize);
+            rest = tail;
+            consumed = s + len as usize;
+            out.push(TouchShard { start, flags: mine, index });
+        }
+        out
+    }
+
     /// DCPMM_CLEAR fast path: reset the delay-window bits of every valid
     /// PM-resident page, whole 64-page index words at a time. Returns the
     /// number of pages whose bits were actually cleared; cost (and the
@@ -630,11 +714,16 @@ impl PageTable {
     /// maintenance this checks.
     pub fn check_index_consistent(&self) -> Result<(), String> {
         let fresh = ActivityIndex::build(&self.flags);
+        let differ = |a: &[AtomicU64], b: &[AtomicU64]| {
+            a.iter()
+                .zip(b)
+                .any(|(x, y)| x.load(Ordering::Relaxed) != y.load(Ordering::Relaxed))
+        };
         for b in 0..NUM_PLANES {
-            if fresh.leaves[b] != self.index.leaves[b] {
+            if differ(&fresh.leaves[b], &self.index.leaves[b]) {
                 return Err(format!("leaf plane {b} diverged from the flag bytes"));
             }
-            if fresh.summaries[b] != self.index.summaries[b] {
+            if differ(&fresh.summaries[b], &self.index.summaries[b]) {
                 return Err(format!("summary plane {b} diverged from its leaves"));
             }
         }
@@ -686,6 +775,61 @@ impl Iterator for MatchingPages<'_> {
         self.word = m & (m - 1);
         // audit-allow(N1): w is a leaf word index of a u32-page table.
         Some((w as u32) * 64 + b)
+    }
+}
+
+/// One tenant's slice of the MMU touch surface (see
+/// [`PageTable::touch_shards`]): exclusive flag bytes for
+/// `[start, start + flags.len())` plus the shared atomic activity index.
+/// `Send` by construction (`&mut [u8]` + a `Sync` index reference), so a
+/// scoped shard worker can carry it across a thread boundary. Only the
+/// bit-*setting* MMU paths exist here; every clearing or tier-changing
+/// operation stays on [`PageTable`]'s exclusive methods.
+pub struct TouchShard<'a> {
+    start: PageId,
+    flags: &'a mut [u8],
+    index: &'a ActivityIndex,
+}
+
+impl TouchShard<'_> {
+    /// OR `add` into the page's flag byte and mirror newly-set bits into
+    /// the shared index (the shard twin of [`PageTable::write_flags`],
+    /// restricted to monotone sets).
+    #[inline]
+    fn write(&mut self, page: PageId, add: u8) {
+        let i = (page - self.start) as usize;
+        let old = self.flags[i];
+        let new = old | add;
+        if new != old {
+            self.flags[i] = new;
+            self.index.set_bits_shared(page as usize, new & !old);
+        }
+    }
+
+    /// MMU access path: set REF (and DIRTY for stores). Identical final
+    /// state to [`PageTable::touch`].
+    #[inline]
+    pub fn touch(&mut self, page: PageId, write: bool) {
+        debug_assert!(
+            self.flags[(page - self.start) as usize] & PageFlags::VALID != 0,
+            "touch of unmapped page {page}"
+        );
+        let mut add = PageFlags::REF;
+        if write {
+            add |= PageFlags::DIRTY;
+        }
+        self.write(page, add);
+    }
+
+    /// Delay-window access path: set WREF (and WDIRTY for stores).
+    /// Identical final state to [`PageTable::touch_window`].
+    #[inline]
+    pub fn touch_window(&mut self, page: PageId, write: bool) {
+        let mut add = PageFlags::WREF;
+        if write {
+            add |= PageFlags::WDIRTY;
+        }
+        self.write(page, add);
     }
 }
 
@@ -991,5 +1135,89 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn touch_shards_match_sequential_touch() {
+        let build = || {
+            let mut t = PageTable::new(200, 1024, 100 * 1024, 200 * 1024);
+            for p in 0..200 {
+                t.allocate(p, if p % 3 == 0 { Tier::Dram } else { Tier::Pm });
+            }
+            t
+        };
+        let mut seq = build();
+        let mut shd = build();
+        // ranges deliberately straddle 64-page index words (0..90, 90..200)
+        let ranges = [(0u32, 90u32), (90, 110)];
+        let touches: Vec<(u32, bool, bool)> = (0..200)
+            .filter(|p| p % 2 == 0)
+            .map(|p| (p, p % 4 == 0, p % 8 == 0))
+            .collect();
+        for &(p, w, win) in &touches {
+            if win {
+                seq.touch_window(p, w);
+            } else {
+                seq.touch(p, w);
+            }
+        }
+        {
+            let mut shards = shd.touch_shards(&ranges);
+            for &(p, w, win) in &touches {
+                let s = &mut shards[if p < 90 { 0 } else { 1 }];
+                if win {
+                    s.touch_window(p, w);
+                } else {
+                    s.touch(p, w);
+                }
+            }
+        }
+        for p in 0..200 {
+            assert_eq!(seq.flags(p).0, shd.flags(p).0, "page {p}");
+        }
+        shd.check_index_consistent().unwrap();
+        for wi in 0..shd.num_index_words() {
+            assert_eq!(
+                seq.query_word(wi, PlaneQuery::any_activity()),
+                shd.query_word(wi, PlaneQuery::any_activity()),
+                "word {wi}"
+            );
+        }
+    }
+
+    #[test]
+    fn touch_shards_concurrent_workers_keep_index_consistent() {
+        let mut t = PageTable::new(4 * 4096, 4096, 1 << 30, 1 << 30);
+        for p in 0..4 * 4096 {
+            t.allocate(p, Tier::Pm);
+        }
+        // four shards whose boundaries are NOT word-aligned, so workers
+        // contend on the straddling leaf/summary words
+        let ranges = [(0u32, 4000u32), (4000, 4100), (8100, 4100), (12200, 4184)];
+        let shards = t.touch_shards(&ranges);
+        std::thread::scope(|scope| {
+            for mut s in shards {
+                scope.spawn(move || {
+                    let (start, len) = (s.start, s.flags.len() as u32);
+                    for p in start..start + len {
+                        s.touch(p, p % 2 == 0);
+                        if p % 3 == 0 {
+                            s.touch_window(p, p % 6 == 0);
+                        }
+                    }
+                });
+            }
+        });
+        t.check_index_consistent().unwrap();
+        for p in 0..4 * 4096 {
+            assert!(t.flags(p).referenced(), "page {p} lost its REF bit");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending and disjoint")]
+    fn touch_shards_rejects_overlapping_ranges() {
+        let mut t = pt();
+        let _ = t.touch_shards(&[(0, 10), (5, 5)]);
     }
 }

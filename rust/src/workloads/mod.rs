@@ -40,8 +40,11 @@ impl Region {
     }
 }
 
-/// A workload bound to the simulator.
-pub trait Workload {
+/// A workload bound to the simulator. `Send` so a tenant's workload
+/// (plain data + its own RNG state in every implementation) can ride
+/// inside a per-tenant MMU task handed to a shard worker thread
+/// (`crate::shard::run_tasks`).
+pub trait Workload: Send {
     /// Display name, e.g. "CG-L".
     fn name(&self) -> String;
     /// Total mapped footprint in pages.

@@ -1,0 +1,169 @@
+//! Sharded touch-phase determinism: the cross-layer bit-identity
+//! contract for `sim.shard_jobs` (DESIGN.md §14).
+//!
+//! * **Lockstep equivalence** — a multi-tenant `MultiSimulation` at
+//!   `shard_jobs ∈ {2, 8}` matches the sequential reference path
+//!   (`shard_jobs = 1`) bit for bit, per epoch, for every fig5 policy:
+//!   wall seconds, RNG draws and PTE visits each epoch, and every
+//!   float/counter field of the final `SimResult`. This is the contract
+//!   that keeps `--shard-jobs` out of sweep cell keys.
+//! * **Faulted regime** — the same lockstep holds under a non-trivial
+//!   fault plan (copy failures + pinning + brownout + scan gaps), where
+//!   the scan-gap draw and per-tenant RNG streams interact with the
+//!   sharded phase.
+//! * **Oversubscription** — `shard_jobs` far above the tenant count
+//!   (and 0 = one per core) degrades to the same results.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::faults::FaultPlan;
+use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::tenants::{MixSpec, MultiSimulation};
+
+/// Drive two simulations in lockstep and assert bit-identity of every
+/// observable: per-epoch wall clock, cumulative RNG draws and PTE
+/// visits, and the full `SimResult` at the end.
+fn assert_lockstep(
+    cfg: &MachineConfig,
+    sim_seq: &SimConfig,
+    sim_shard: &SimConfig,
+    spec: &MixSpec,
+    pname: &str,
+    label: &str,
+) {
+    let hp = HyPlacerConfig::default();
+    let p_a = policies::by_name(pname, cfg, &hp).unwrap();
+    let p_b = policies::by_name(pname, cfg, &hp).unwrap();
+    let mut seq =
+        MultiSimulation::new(cfg.clone(), sim_seq.clone(), spec, p_a, 0.05).unwrap();
+    let mut shard =
+        MultiSimulation::new(cfg.clone(), sim_shard.clone(), spec, p_b, 0.05).unwrap();
+    for e in 0..sim_seq.epochs {
+        let a = seq.step();
+        let b = shard.step();
+        assert_eq!(a.to_bits(), b.to_bits(), "{label} {pname}: epoch {e} wall diverged");
+        assert_eq!(
+            seq.rng_draws(),
+            shard.rng_draws(),
+            "{label} {pname}: epoch {e} rng draws"
+        );
+        assert_eq!(
+            seq.pte_visits(),
+            shard.pte_visits(),
+            "{label} {pname}: epoch {e} pte visits"
+        );
+    }
+    let ra = seq.finish();
+    let rb = shard.finish();
+    assert_eq!(ra.total_wall_secs.to_bits(), rb.total_wall_secs.to_bits(), "{label} {pname}");
+    assert_eq!(ra.total_app_bytes.to_bits(), rb.total_app_bytes.to_bits(), "{label} {pname}");
+    assert_eq!(ra.throughput.to_bits(), rb.throughput.to_bits(), "{label} {pname}");
+    assert_eq!(
+        ra.steady_throughput.to_bits(),
+        rb.steady_throughput.to_bits(),
+        "{label} {pname}"
+    );
+    assert_eq!(
+        ra.energy_j_per_byte.to_bits(),
+        rb.energy_j_per_byte.to_bits(),
+        "{label} {pname}"
+    );
+    assert_eq!(ra.total_energy_j.to_bits(), rb.total_energy_j.to_bits(), "{label} {pname}");
+    assert_eq!(ra.migrated_pages, rb.migrated_pages, "{label} {pname}");
+    assert_eq!(
+        ra.dram_traffic_share.to_bits(),
+        rb.dram_traffic_share.to_bits(),
+        "{label} {pname}"
+    );
+    assert_eq!(ra.migrate_queue_peak, rb.migrate_queue_peak, "{label} {pname}");
+    assert_eq!(
+        ra.migrate_deferred_ratio.to_bits(),
+        rb.migrate_deferred_ratio.to_bits(),
+        "{label} {pname}"
+    );
+    assert_eq!(
+        ra.migrate_stale_ratio.to_bits(),
+        rb.migrate_stale_ratio.to_bits(),
+        "{label} {pname}"
+    );
+    assert_eq!(ra.tenants.len(), rb.tenants.len(), "{label} {pname}");
+    for (ta, tb) in ra.tenants.iter().zip(rb.tenants.iter()) {
+        assert_eq!(ta.name, tb.name, "{label} {pname}");
+        assert_eq!(ta.app_bytes.to_bits(), tb.app_bytes.to_bits(), "{label} {pname}");
+    }
+}
+
+#[test]
+fn sharded_touch_phase_is_bit_identical_for_fig5_policies() {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 12;
+    sim.warmup_epochs = 3;
+    let spec = MixSpec::parse("cg.S+mg.S").unwrap();
+    for pname in FIG5_POLICIES {
+        for jobs in [2usize, 8] {
+            let mut sharded = sim.clone();
+            sharded.shard_jobs = jobs;
+            assert_lockstep(&cfg, &sim, &sharded, &spec, pname, &format!("shard_jobs={jobs}"));
+        }
+    }
+}
+
+#[test]
+fn sharded_touch_phase_is_bit_identical_under_faults() {
+    // a non-trivial plan: transient copy failures, pinned pages, a
+    // brownout window and scan gaps — the scan-gap epoch draw and the
+    // per-tenant RNG streams must stay untouched by sharding
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 10;
+    sim.warmup_epochs = 2;
+    sim.faults = FaultPlan::parse("copy:0.05,pin:0.001,brownout:ep2..6*0.5,scan-gap:0.05")
+        .unwrap();
+    let spec = MixSpec::parse("is.M:5000/1+pr.M*2/2").unwrap();
+    for pname in ["hyplacer", "adm-default", "hyplacer-qos"] {
+        for jobs in [2usize, 8] {
+            let mut sharded = sim.clone();
+            sharded.shard_jobs = jobs;
+            assert_lockstep(
+                &cfg,
+                &sim,
+                &sharded,
+                &spec,
+                pname,
+                &format!("faults shard_jobs={jobs}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_jobs_zero_and_oversubscribed_match_sequential() {
+    // 0 = one worker per core; 64 = far more workers than tenants
+    // (run_tasks caps at the task count) — both must match jobs=1
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 8;
+    sim.warmup_epochs = 2;
+    let spec = MixSpec::parse("cg.S+mg.S@2*0.5+ft.S").unwrap();
+    for jobs in [0usize, 64] {
+        let mut sharded = sim.clone();
+        sharded.shard_jobs = jobs;
+        assert_lockstep(&cfg, &sim, &sharded, &spec, "hyplacer", &format!("shard_jobs={jobs}"));
+    }
+}
+
+#[test]
+fn single_tenant_shard_jobs_is_a_no_op() {
+    // one tenant = one shard: parallel setting must still reproduce the
+    // sequential single-tenant stream exactly (checkpoint stability)
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 8;
+    sim.warmup_epochs = 2;
+    let mut sharded = sim.clone();
+    sharded.shard_jobs = 8;
+    let spec = MixSpec::single("cg-M");
+    assert_lockstep(&cfg, &sim, &sharded, &spec, "hyplacer", "1-tenant shard_jobs=8");
+}
