@@ -129,6 +129,23 @@ def test_hotpath_carries_the_shard_metrics():
     assert metrics["shard/touch_speedup"]["kind"] == "info"
 
 
+def test_hotpath_carries_the_trace_metrics():
+    # The run-tracing PR (DESIGN.md §15) gates its observer-effect
+    # contract from the hotpath doc: observer_effect_zero is exact and
+    # must be 1 (the traced re-run of the throttled cg-M cell is
+    # bit-identical to the untraced one); events_per_epoch is the emitted
+    # volume and stays info-kind permanently — it legitimately moves
+    # whenever the event taxonomy grows.
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = json.load(f)
+    metrics = doc["metrics"]
+    for name in ("trace/observer_effect_zero", "trace/events_per_epoch"):
+        assert name in metrics, f"missing {name}"
+    assert metrics["trace/observer_effect_zero"]["kind"] == "exact"
+    assert metrics["trace/observer_effect_zero"]["value"] == 1
+    assert metrics["trace/events_per_epoch"]["kind"] == "info"
+
+
 def test_baselines_never_gate_on_wall_clock():
     # the whole point of ratio baselines: host timings stay informational
     for name in BASELINES:

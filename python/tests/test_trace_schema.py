@@ -1,0 +1,228 @@
+# Schema guard for trace JSONL streams (DESIGN.md §15) — stdlib-only,
+# dual-use:
+#
+#  * under pytest it validates the committed fixture
+#    rust/tests/fixtures/trace/sample.jsonl, pinning the wire format the
+#    rust side emits (render_line) and `hyplacer trace` consumes;
+#  * as a script (`python3 python/tests/test_trace_schema.py FILE`) it
+#    validates an arbitrary trace artifact — CI runs it against the
+#    JSONL a real `--trace` run just wrote, so the schema the repo
+#    documents is the schema the binary ships.
+#
+# Checked invariants:
+#  * every line is a JSON object carrying the versioned envelope
+#    {v, kind, epoch, t, seq} with v == 1;
+#  * every kind is known and carries its required fields with the right
+#    types (page.tier is the one optional field);
+#  * seq is strictly increasing across the whole file (one global
+#    emission order);
+#  * epoch is nondecreasing *within a segment* and t never runs
+#    backwards within a segment — a `header` starts a new segment (the
+#    sim clock restarts per compare segment), so both reset there.
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "trace", "sample.jsonl"
+)
+
+SCHEMA_VERSION = 1
+
+NUM = (int, float)
+# kind -> {field: allowed types}; page.tier is optional (place steps only)
+REQUIRED = {
+    "header": {
+        "policy": str,
+        "workload": str,
+        "seed": NUM,
+        "epochs": NUM,
+        "epoch_secs": NUM,
+    },
+    "epoch_begin": {"offered_bytes": NUM},
+    "fault_arm": {"fault": str, "value": NUM},
+    "shard_task": {"tenant": str, "offered_bytes": NUM, "active_pages": NUM},
+    "policy_tick": {
+        "promote": NUM,
+        "demote": NUM,
+        "exchange_pairs": NUM,
+        "safe_mode": bool,
+    },
+    "migrate_submit": {
+        "accepted": NUM,
+        "dropped_duplicate": NUM,
+        "dropped_pinned": NUM,
+    },
+    "migrate_exec": {
+        "promoted": NUM,
+        "demoted": NUM,
+        "exchanged_pairs": NUM,
+        "skipped": NUM,
+        "stale": NUM,
+        "retried": NUM,
+        "failed": NUM,
+        "over_quota": NUM,
+        "deferred": NUM,
+    },
+    "quota_reject": {"count": NUM},
+    "page": {"page": NUM, "step": str},
+    "tenant_epoch": {"tenant": str, "app_bytes": NUM, "dram_share": NUM},
+    "safe_mode": {"entered": bool},
+    "epoch_end": {
+        "wall_secs": NUM,
+        "app_bytes": NUM,
+        "throughput": NUM,
+        "dram_occupancy": NUM,
+        "queue_depth": NUM,
+        "safe_mode": bool,
+    },
+}
+
+OPTIONAL = {"page": {"tier": str}}
+
+PAGE_STEPS = {
+    "place",
+    "submit",
+    "duplicate",
+    "pinned_drop",
+    "backoff",
+    "stale",
+    "skip",
+    "retry",
+    "fail",
+    "over_quota",
+    "promote",
+    "demote",
+    "exchange",
+    "defer",
+}
+
+
+def validate(path):
+    """Validate one trace JSONL file; returns the number of events.
+
+    Raises AssertionError with a `path:line:` prefixed message on the
+    first violation.
+    """
+    events = 0
+    last_seq = None
+    # per-segment monotonicity state; a header resets both
+    seg_epoch = None
+    seg_t = None
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            where = f"{path}:{lineno}:"
+            ev = json.loads(line)
+            assert isinstance(ev, dict), f"{where} not a JSON object"
+            for key in ("v", "kind", "epoch", "t", "seq"):
+                assert key in ev, f"{where} missing envelope key {key!r}"
+            assert ev["v"] == SCHEMA_VERSION, f"{where} v={ev['v']!r}, want {SCHEMA_VERSION}"
+            kind = ev["kind"]
+            assert kind in REQUIRED, f"{where} unknown kind {kind!r}"
+            for key in ("epoch", "t", "seq"):
+                assert isinstance(ev[key], NUM) and not isinstance(
+                    ev[key], bool
+                ), f"{where} envelope key {key!r} must be numeric"
+
+            spec = REQUIRED[kind]
+            for field, types in spec.items():
+                assert field in ev, f"{where} {kind} missing field {field!r}"
+                val = ev[field]
+                if types is not bool and isinstance(val, bool):
+                    raise AssertionError(f"{where} {kind}.{field} must be numeric, got bool")
+                assert isinstance(val, types), f"{where} {kind}.{field} has type {type(val).__name__}"
+            allowed = set(spec) | set(OPTIONAL.get(kind, {})) | {"v", "kind", "epoch", "t", "seq"}
+            extra = set(ev) - allowed
+            assert not extra, f"{where} {kind} carries undocumented fields {sorted(extra)}"
+            for field, types in OPTIONAL.get(kind, {}).items():
+                if field in ev:
+                    assert isinstance(ev[field], types), f"{where} {kind}.{field} bad type"
+            if kind == "page":
+                assert ev["step"] in PAGE_STEPS, f"{where} unknown page step {ev['step']!r}"
+
+            # ordering: seq is one global strictly-increasing counter ...
+            if last_seq is not None:
+                assert ev["seq"] > last_seq, f"{where} seq {ev['seq']} not > {last_seq}"
+            last_seq = ev["seq"]
+            # ... while epoch/t restart with the sim clock at each header
+            if kind == "header":
+                seg_epoch, seg_t = ev["epoch"], ev["t"]
+            else:
+                if seg_epoch is not None:
+                    assert (
+                        ev["epoch"] >= seg_epoch
+                    ), f"{where} epoch {ev['epoch']} ran backwards (was {seg_epoch})"
+                    assert ev["t"] >= seg_t, f"{where} t {ev['t']} ran backwards (was {seg_t})"
+                seg_epoch, seg_t = ev["epoch"], ev["t"]
+            events += 1
+    assert events > 0, f"{path}: trace is empty"
+    return events
+
+
+def test_committed_fixture_is_schema_valid():
+    events = validate(FIXTURE)
+    assert events == 21
+
+
+def test_fixture_covers_every_event_kind():
+    # the fixture is the schema's executable documentation: if a new
+    # kind joins the taxonomy, it must appear here (and in DESIGN.md §15)
+    kinds = set()
+    with open(FIXTURE) as f:
+        for line in f:
+            if line.strip():
+                kinds.add(json.loads(line)["kind"])
+    assert kinds == set(REQUIRED), f"fixture kinds {sorted(kinds)} != taxonomy"
+
+
+def test_validator_rejects_broken_streams(tmp_path):
+    import pytest
+
+    def check(name, lines, match):
+        p = tmp_path / name
+        p.write_text("\n".join(lines) + "\n")
+        with pytest.raises(AssertionError, match=match):
+            validate(str(p))
+
+    good = '{"epoch":0,"kind":"epoch_begin","offered_bytes":1,"seq":0,"t":0,"v":1}'
+    check("v.jsonl", ['{"epoch":0,"kind":"epoch_begin","offered_bytes":1,"seq":0,"t":0,"v":9}'], "v=9")
+    check("envelope.jsonl", ['{"kind":"epoch_begin","offered_bytes":1,"seq":0,"t":0,"v":1}'], "missing envelope key 'epoch'")
+    check("kind.jsonl", ['{"epoch":0,"kind":"warp_drive","seq":0,"t":0,"v":1}'], "unknown kind")
+    check("field.jsonl", ['{"epoch":0,"kind":"epoch_begin","seq":0,"t":0,"v":1}'], "missing field 'offered_bytes'")
+    check(
+        "seq.jsonl",
+        [good, '{"epoch":0,"kind":"epoch_begin","offered_bytes":1,"seq":0,"t":0,"v":1}'],
+        "seq 0 not > 0",
+    )
+    check(
+        "epoch.jsonl",
+        [
+            '{"epoch":3,"kind":"epoch_begin","offered_bytes":1,"seq":0,"t":3,"v":1}',
+            '{"epoch":1,"kind":"epoch_begin","offered_bytes":1,"seq":1,"t":3.5,"v":1}',
+        ],
+        "epoch 1 ran backwards",
+    )
+    check("empty.jsonl", [""], "trace is empty")
+
+
+def test_epoch_monotonicity_resets_at_headers(tmp_path):
+    # a compare trace restarts the sim clock per policy segment: epoch 5
+    # followed by a header at epoch 0 is legal, the same drop without a
+    # header is not
+    header = '{"epoch":0,"epoch_secs":1,"epochs":1,"kind":"header","policy":"p","seed":1,"seq":%d,"t":0,"v":1,"workload":"w"}'
+    end5 = '{"app_bytes":1,"dram_occupancy":0,"epoch":5,"kind":"epoch_end","queue_depth":0,"safe_mode":false,"seq":1,"t":5,"throughput":1,"v":1,"wall_secs":1}'
+    p = tmp_path / "reset.jsonl"
+    p.write_text("\n".join([header % 0, end5, header % 2]) + "\n")
+    assert validate(str(p)) == 3
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        sys.exit(f"usage: {sys.argv[0]} TRACE.jsonl")
+    n = validate(sys.argv[1])
+    print(f"trace schema ok: {n} event(s) in {sys.argv[1]}")

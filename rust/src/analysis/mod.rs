@@ -105,7 +105,10 @@ pub const RULES: &[Rule] = &[
 
 /// Module prefixes whose execution affects committed results (D1 scope;
 /// also the M1 scope — relaxed atomics are a result-determinism hazard
-/// exactly where iteration order is).
+/// exactly where iteration order is). `trace/` is in scope even though
+/// it is observation-only: its events are committed artifacts whose
+/// field order must be deterministic, and an unordered map there would
+/// silently reorder JSONL keys between runs.
 pub const D1_SCOPE: &[&str] = &[
     "sim/",
     "vm/",
@@ -117,6 +120,7 @@ pub const D1_SCOPE: &[&str] = &[
     "coordinator/",
     "faults/",
     "shard/",
+    "trace/",
 ];
 
 /// Files allowed to read wall-clock time: cell wall-time metadata in the
@@ -127,8 +131,10 @@ pub const D2_ALLOWLIST: &[&str] = &["exec/mod.rs", "bench_harness/perf.rs"];
 /// Library decision paths (R1 scope): policies, the vm layer incl. the
 /// migration engine, the tenant subsystem, the fault-injection plans
 /// and the shard worker pool (a panic there takes down a whole sweep
-/// cell).
-pub const R1_SCOPE: &[&str] = &["policies/", "vm/", "tenants/", "faults/", "shard/"];
+/// cell). `trace/` joins because observation must never kill a run:
+/// sink I/O errors degrade to dropped-event counters, not panics.
+pub const R1_SCOPE: &[&str] =
+    &["policies/", "vm/", "tenants/", "faults/", "shard/", "trace/"];
 
 /// Page-index arithmetic modules (N1 scope).
 pub const N1_SCOPE: &[&str] = &["vm/", "tenants/"];
@@ -671,5 +677,19 @@ mod tests {
     fn shard_module_joins_the_result_affecting_scopes() {
         assert_eq!(errs("shard/mod.rs", "use std::collections::HashMap;\n").len(), 1);
         assert_eq!(errs("shard/mod.rs", "fn f() { x.unwrap(); }\n").len(), 1);
+    }
+
+    #[test]
+    fn trace_module_joins_the_determinism_and_robustness_scopes() {
+        // D1: unordered maps would reorder JSONL keys between runs
+        assert_eq!(errs("trace/mod.rs", "use std::collections::HashMap;\n").len(), 1);
+        // R1: observation must never kill a run — sink errors degrade to
+        // dropped-event counters, not panics
+        assert_eq!(errs("trace/mod.rs", "fn f() { x.unwrap(); }\n").len(), 1);
+        // D2 is global: simulated epoch time is the only legal stamp
+        assert_eq!(errs("trace/chrome.rs", "let t = std::time::Instant::now();\n").len(), 1);
+        // N1 deliberately excludes trace/ (no page-index arithmetic —
+        // page ids arrive pre-narrowed from the engine/coordinators)
+        assert_eq!(errs("trace/mod.rs", "fn f(x: u64) -> u32 { x as u32 }\n").len(), 0);
     }
 }

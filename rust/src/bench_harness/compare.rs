@@ -44,13 +44,29 @@ pub fn run_comparison(
     wname: &str,
     window_frac: f64,
 ) -> Result<Comparison, String> {
+    run_comparison_traced(machine, sim, hp, wname, window_frac, None).map(|(c, _)| c)
+}
+
+/// [`run_comparison`] with one optional tracer threaded through every
+/// policy segment: each segment re-binds the tracer and so emits its own
+/// `header` (segment boundaries restart the simulated clock — consumers
+/// key per-segment epoch monotonicity on those headers).
+pub fn run_comparison_traced(
+    machine: &MachineConfig,
+    sim: &SimConfig,
+    hp: &HyPlacerConfig,
+    wname: &str,
+    window_frac: f64,
+    mut tracer: Option<crate::trace::Tracer>,
+) -> Result<(Comparison, Option<crate::trace::Tracer>), String> {
     let mut cells: Vec<CompareCell> = Vec::new();
     let mut base_wall: Option<f64> = None;
     let mut base_energy: Option<f64> = None;
     for pname in FIG5_POLICIES {
         let p = build_policy(pname, machine, hp)
             .ok_or_else(|| format!("unknown policy {pname:?}"))?;
-        let r = tenants::run_named(machine, sim, wname, p, window_frac)?;
+        let (r, t) = tenants::run_named_traced(machine, sim, wname, p, window_frac, tracer)?;
+        tracer = t;
         let speedup = base_wall.map(|b| b / r.total_wall_secs).unwrap_or(1.0);
         let egain = base_energy.map(|b| b / r.energy_j_per_byte).unwrap_or(1.0);
         if pname == "adm-default" {
@@ -64,7 +80,7 @@ pub fn run_comparison(
             sim: r,
         });
     }
-    Ok(Comparison { workload: wname.to_string(), cells })
+    Ok((Comparison { workload: wname.to_string(), cells }, tracer))
 }
 
 impl Comparison {
@@ -133,6 +149,15 @@ impl Comparison {
                 );
                 m.insert("deferred_ratio".to_string(), num(c.sim.migrate_deferred_ratio));
                 m.insert("stale_drop_ratio".to_string(), num(c.sim.migrate_stale_ratio));
+                // fault/quota telemetry the JSON used to drop (the text
+                // renderers already surface these); values read through
+                // the trace counter registry so the two stay one source
+                let counters = crate::trace::counters::Counters::from_result(&c.sim);
+                let cget = |name: &str| num(counters.get(name).unwrap_or(0.0));
+                m.insert("over_quota".to_string(), cget("migrate/over_quota"));
+                m.insert("retried".to_string(), cget("faults/retried"));
+                m.insert("failed".to_string(), cget("faults/failed"));
+                m.insert("safe_mode_epochs".to_string(), cget("faults/safe_mode_epochs"));
                 Json::Obj(m)
             })
             .collect();
@@ -181,13 +206,75 @@ mod tests {
                 "queue_depth_peak",
                 "deferred_ratio",
                 "stale_drop_ratio",
+                "over_quota",
+                "retried",
+                "failed",
+                "safe_mode_epochs",
             ] {
                 assert!(cell.get(key).is_some(), "missing field {key}");
             }
-            // unthrottled: telemetry is exactly zero
-            assert_eq!(cell.get("queue_depth_peak").unwrap().as_f64(), Some(0.0));
-            assert_eq!(cell.get("deferred_ratio").unwrap().as_f64(), Some(0.0));
-            assert_eq!(cell.get("stale_drop_ratio").unwrap().as_f64(), Some(0.0));
+            // unthrottled + fault-free: telemetry is exactly zero
+            for key in [
+                "queue_depth_peak",
+                "deferred_ratio",
+                "stale_drop_ratio",
+                "over_quota",
+                "retried",
+                "failed",
+                "safe_mode_epochs",
+            ] {
+                assert_eq!(cell.get(key).unwrap().as_f64(), Some(0.0), "{key}");
+            }
+        }
+    }
+
+    #[test]
+    fn json_carries_nonzero_fault_and_quota_counters() {
+        // synthesize nonzero telemetry on one real cell: this pins the
+        // *rendering* (the counters the JSON used to drop); the nonzero
+        // end-to-end paths are pinned in tests/faults.rs + tests/tenants.rs
+        let mut c = quick_comparison("cg-S", 1.0);
+        c.cells[0].sim.migrate_retried = 7;
+        c.cells[0].sim.migrate_failed = 3;
+        c.cells[0].sim.safe_mode_epochs = 2;
+        if let Some(e) = c.cells[0].sim.stats.epochs.last_mut() {
+            e.migrate_over_quota = 5;
+        }
+        let json = c.to_json().render();
+        let doc = crate::report::json::parse(&json).unwrap();
+        let cell = &doc.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(cell.get("retried").unwrap().as_f64(), Some(7.0));
+        assert_eq!(cell.get("failed").unwrap().as_f64(), Some(3.0));
+        assert_eq!(cell.get("safe_mode_epochs").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cell.get("over_quota").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn traced_compare_threads_one_tracer_across_segments() {
+        let machine = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 4;
+        sim.warmup_epochs = 1;
+        let hp = HyPlacerConfig::default();
+        let tracer =
+            crate::trace::Tracer::new(Box::new(crate::trace::MemSink::default()));
+        let (c, tracer) =
+            run_comparison_traced(&machine, &sim, &hp, "cg-S", 0.05, Some(tracer)).unwrap();
+        let tracer = tracer.expect("tracer must survive all segments");
+        let sink = tracer.into_sink();
+        let lines = sink.lines().expect("mem sink buffers lines");
+        let headers = lines.iter().filter(|l| l.contains("\"kind\":\"header\"")).count();
+        assert_eq!(
+            headers,
+            FIG5_POLICIES.len(),
+            "one header per policy segment"
+        );
+        assert_eq!(c.cells.len(), FIG5_POLICIES.len());
+        // a traced comparison is bit-identical to the untraced one
+        let plain = run_comparison(&machine, &sim, &hp, "cg-S", 0.05).unwrap();
+        for (a, b) in c.cells.iter().zip(plain.cells.iter()) {
+            assert_eq!(a.sim.total_wall_secs.to_bits(), b.sim.total_wall_secs.to_bits());
+            assert_eq!(a.sim.throughput.to_bits(), b.sim.throughput.to_bits());
         }
     }
 

@@ -311,9 +311,46 @@ pub fn collect_hotpath(quick: bool) -> BaselineDoc {
     );
     doc.put("shard/touch_speedup", seq_secs / par_secs.max(1e-9), MetricKind::Info);
 
+    // --- observer effect: the same throttled cg-M hyplacer cell run
+    // again with a full in-memory tracer attached, including per-page
+    // provenance over the first 4096 pages (enough to exercise every
+    // emission hook). The traced result must be bit-identical to the
+    // untraced `thr` run above — `trace/observer_effect_zero` gates at
+    // exactly 1.0 (DESIGN.md §15) — while the event volume per epoch is
+    // recorded as info (it moves whenever the taxonomy grows).
+    let w = workloads::by_name("cg-M", cfg.page_bytes, sim_thr.epoch_secs)
+        .expect("cg-M registered");
+    let p = policies::by_name("hyplacer", &cfg, &hp).expect("hyplacer registered");
+    let tracer = crate::trace::Tracer::new(Box::new(crate::trace::MemSink::default()))
+        .with_pages(vec![(0, 4096)]);
+    let (traced, tracer) =
+        crate::coordinator::run_pair_traced(&cfg, &sim_thr, w, p, 0.05, Some(tracer));
+    let events = tracer.map_or(0, |t| t.written());
+    let zero_effect = traced.total_wall_secs.to_bits() == thr.total_wall_secs.to_bits()
+        && traced.total_app_bytes.to_bits() == thr.total_app_bytes.to_bits()
+        && traced.throughput.to_bits() == thr.throughput.to_bits()
+        && traced.migrated_pages == thr.migrated_pages
+        && traced.migrate_queue_peak == thr.migrate_queue_peak
+        && traced.migrate_deferred_ratio.to_bits() == thr.migrate_deferred_ratio.to_bits();
+    doc.put(
+        "trace/observer_effect_zero",
+        if zero_effect { 1.0 } else { 0.0 },
+        MetricKind::Exact,
+    );
+    doc.put(
+        "trace/events_per_epoch",
+        events as f64 / sim_thr.epochs as f64,
+        MetricKind::Info,
+    );
+
     doc.notes.push(
         "gating metrics are scale-free and deterministic (RNG draws, page counts, \
          simulated ratios); host/* timings are informational only"
+            .to_string(),
+    );
+    doc.notes.push(
+        "trace/observer_effect_zero re-runs the throttled cg-M cell with the \
+         tracer attached and gates bit-identity of the traced result"
             .to_string(),
     );
     doc
@@ -453,6 +490,10 @@ mod tests {
         // the sharded touch phase reproduced the sequential run exactly
         assert_eq!(a.metrics["shard/result_invariant"].value, 1.0);
         assert!(a.metrics["shard/touch_speedup"].value > 0.0);
+        // tracing is observation-only: the traced re-run is bit-identical
+        // and actually produced events
+        assert_eq!(a.metrics["trace/observer_effect_zero"].value, 1.0);
+        assert!(a.metrics["trace/events_per_epoch"].value > 0.0);
     }
 
     #[test]

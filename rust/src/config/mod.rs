@@ -272,6 +272,14 @@ pub struct SimConfig {
     /// this knob must NEVER enter the sweep cell-key fingerprint: it is
     /// an execution detail, like `--jobs`, not a simulated input.
     pub shard_jobs: usize,
+    /// Path for the deterministic JSONL event trace (DESIGN.md §15);
+    /// empty (the default) disables tracing — no tracer is constructed
+    /// and every emission site stays on its `None` fast path. Like
+    /// `shard_jobs` this is an *observation* knob, never a simulated
+    /// input: it MUST NOT enter the sweep cell-key fingerprint, and the
+    /// lockstep tests pin that traced and untraced runs produce
+    /// bit-identical [`crate::coordinator::SimResult`]s.
+    pub trace: String,
 }
 
 impl Default for SimConfig {
@@ -284,6 +292,7 @@ impl Default for SimConfig {
             migrate_share: 1.0,
             faults: crate::faults::FaultPlan::none(),
             shard_jobs: 1,
+            trace: String::new(),
         }
     }
 }
@@ -355,6 +364,9 @@ impl SimConfig {
                 Ok(plan) => self.faults = plan,
                 Err(e) => eprintln!("config: sim.faults: {e}; keeping current plan"),
             }
+        }
+        if let Some(v) = doc.str("sim.trace") {
+            self.trace = v.to_string();
         }
     }
 }

@@ -27,6 +27,7 @@ use crate::mem::energy::EnergyAccount;
 use crate::mem::{EpochDemand, PerfModel, Pcmon, TierDemand};
 use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx};
 use crate::sim::{RunStats, SimClock};
+use crate::trace::{PageStep, TraceEvent, Tracer};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
 use crate::vm::{MigrationEngine, PageTable, PlaneQuery};
@@ -110,6 +111,11 @@ pub struct Simulation {
     engine: MigrationEngine,
     /// delay-window fraction of the epoch (HyPlacer's 50 ms / 1 s).
     window_frac: f64,
+    /// Deterministic run tracing (DESIGN.md §15). `None` — the default
+    /// and the only path every pre-trace caller exercises — emits
+    /// nothing and adds no work; the fig5 lockstep test pins both that
+    /// and the observer-effect-zero property of the `Some` path.
+    tracer: Option<Tracer>,
     region_scratch: Vec<ActiveRegion>,
     /// Cached region boundaries (start, pages) and incremental per-region
     /// DRAM-resident page counts — avoids rescanning every region's pages
@@ -179,6 +185,7 @@ impl Simulation {
             rng: Rng64::new(seed),
             engine,
             window_frac: window_frac.clamp(0.0, 1.0),
+            tracer: None,
             region_scratch: Vec::new(),
             region_bounds: Vec::new(),
             region_dram: Vec::new(),
@@ -256,6 +263,43 @@ impl Simulation {
         }
     }
 
+    /// Attach a tracer (DESIGN.md §15): emits the run header, records
+    /// the first-touch `place` provenance for any sampled pages, and
+    /// installs the sampled ranges into the migration engine. Call
+    /// before the first `step()`.
+    pub fn set_tracer(&mut self, mut tracer: Tracer) {
+        tracer.begin_epoch(self.clock.epoch(), self.clock.now());
+        tracer.emit(&TraceEvent::Header {
+            policy: self.policy.name().to_string(),
+            workload: self.workload.name(),
+            seed: self.sim.seed,
+            epochs: self.sim.epochs,
+            epoch_secs: self.sim.epoch_secs,
+        });
+        if tracer.samples_pages() {
+            let pages = u64::from(self.pt.len());
+            let ranges = tracer.page_ranges().to_vec();
+            for &(a, b) in &ranges {
+                for page in a..b.min(pages) {
+                    let f = self.pt.flags(page as u32);
+                    if f.valid() {
+                        let tier = match f.tier() {
+                            Tier::Dram => "dram",
+                            Tier::Pm => "pm",
+                        };
+                        tracer.emit(&TraceEvent::Page {
+                            page: page as u32,
+                            step: PageStep::Place,
+                            tier: Some(tier),
+                        });
+                    }
+                }
+            }
+            self.engine.set_page_trace(ranges);
+        }
+        self.tracer = Some(tracer);
+    }
+
     pub fn page_table(&self) -> &PageTable {
         &self.pt
     }
@@ -306,6 +350,13 @@ impl Simulation {
         // no-fault RNG stream is untouched.
         let scan_gap =
             !self.sim.faults.is_none() && self.sim.faults.scan_gap_epoch(self.sim.seed, epoch);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.begin_epoch(epoch, self.clock.now());
+            tr.emit(&TraceEvent::EpochBegin { offered_bytes: offered });
+            for (fault, value) in self.sim.faults.armed(self.sim.seed, epoch) {
+                tr.emit(&TraceEvent::FaultArm { fault, value });
+            }
+        }
         let mut active_pages = 0u64;
         self.region_scratch.clear();
         for r in &regions {
@@ -368,12 +419,44 @@ impl Simulation {
             };
             self.policy.epoch_tick(&mut ctx)
         };
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(&TraceEvent::PolicyTick {
+                promote: plan.promote.len() as u64,
+                demote: plan.demote.len() as u64,
+                exchange_pairs: plan.exchange.len() as u64,
+                safe_mode: self.policy.in_safe_mode(),
+            });
+        }
 
         // --- 3. Submit the plan and execute queued migrations up to the
         // epoch's copy-bandwidth budget; the remainder carries over.
-        self.engine.submit(&mut self.pt, &plan, epoch);
+        let sub = self.engine.submit(&mut self.pt, &plan, epoch);
         let (mig, executed) =
             self.engine.run_epoch(&mut self.pt, &self.cfg, epoch, self.sim.epoch_secs);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(&TraceEvent::MigrateSubmit {
+                accepted: sub.accepted,
+                dropped_duplicate: sub.dropped_duplicate,
+                dropped_pinned: sub.dropped_pinned,
+            });
+            tr.emit(&TraceEvent::MigrateExec {
+                promoted: mig.promoted,
+                demoted: mig.demoted,
+                exchanged_pairs: mig.exchanged_pairs,
+                skipped: mig.skipped,
+                stale: mig.stale,
+                retried: mig.retried,
+                failed: mig.failed,
+                over_quota: mig.over_quota,
+                deferred: mig.deferred,
+            });
+            if mig.over_quota > 0 {
+                tr.emit(&TraceEvent::QuotaReject { count: mig.over_quota });
+            }
+            for (page, step) in self.engine.take_page_notes() {
+                tr.emit(&TraceEvent::Page { page, step, tier: None });
+            }
+        }
 
         // --- 4. App demand from the post-migration distribution, using
         // the incrementally maintained per-region DRAM counts.
@@ -431,17 +514,41 @@ impl Simulation {
         self.energy.record(&self.cfg, &demand, &outcome);
         self.stats
             .record(epoch, &demand, &outcome, &mig, self.pt.dram_occupancy());
-        self.stats.record_safe_mode(self.policy.in_safe_mode());
+        let safe = self.policy.in_safe_mode();
+        self.stats.record_safe_mode(safe);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.note_safe_mode(safe);
+            tr.emit(&TraceEvent::EpochEnd {
+                wall_secs: outcome.wall_secs,
+                app_bytes: demand.app_bytes,
+                throughput: if outcome.wall_secs > 0.0 {
+                    demand.app_bytes / outcome.wall_secs
+                } else {
+                    0.0
+                },
+                dram_occupancy: self.pt.dram_occupancy(),
+                queue_depth: mig.deferred,
+                safe_mode: safe,
+            });
+        }
         self.clock.advance(outcome.wall_secs);
         outcome.wall_secs
     }
 
     /// Run the configured number of epochs and summarize.
-    pub fn run(mut self) -> SimResult {
+    pub fn run(self) -> SimResult {
+        self.run_traced().0
+    }
+
+    /// Like [`Simulation::run`], additionally handing the tracer (and
+    /// its sink) back so the caller can flush the stream or inspect the
+    /// buffered events. With no tracer attached this *is* `run()`.
+    pub fn run_traced(mut self) -> (SimResult, Option<Tracer>) {
         for _ in 0..self.sim.epochs {
             self.step();
         }
-        self.finish()
+        let tracer = self.tracer.take();
+        (self.finish(), tracer)
     }
 
     /// Summarize without consuming a fixed epoch count (for callers that
@@ -480,6 +587,24 @@ pub fn run_pair(
     window_frac: f64,
 ) -> SimResult {
     Simulation::new(cfg.clone(), sim.clone(), workload, policy, window_frac).run()
+}
+
+/// [`run_pair`] with an optional tracer threaded through (`None` is
+/// exactly `run_pair`). The tracer comes back out so a `compare` run
+/// can reuse one stream across several policy segments.
+pub fn run_pair_traced(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    workload: Box<dyn Workload>,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+    tracer: Option<Tracer>,
+) -> (SimResult, Option<Tracer>) {
+    let mut s = Simulation::new(cfg.clone(), sim.clone(), workload, policy, window_frac);
+    if let Some(t) = tracer {
+        s.set_tracer(t);
+    }
+    s.run_traced()
 }
 
 #[cfg(test)]

@@ -265,6 +265,28 @@ impl FaultPlan {
     pub fn copy_fail_rng(seed: u64) -> Rng64 {
         Rng64::new(seed.wrapping_add(STREAM_COPY))
     }
+
+    /// Which fault arms fire in `epoch`, for the trace subsystem
+    /// (DESIGN.md §15): `("scan_gap", 1.0)` when the reference-bit
+    /// harvest is dropped, `("brownout", derate)` when a brownout
+    /// window derates PM. Pure recomputation over the plan's stateless
+    /// decision functions — no RNG stream is advanced, so tracing a
+    /// faulted run stays bit-identical to the untraced one. Empty for
+    /// the empty plan.
+    pub fn armed(&self, seed: u64, epoch: u32) -> Vec<(&'static str, f64)> {
+        let mut arms = Vec::new();
+        if self.is_none() {
+            return arms;
+        }
+        if self.scan_gap_epoch(seed, epoch) {
+            arms.push(("scan_gap", 1.0));
+        }
+        let derate = self.pm_derate(epoch);
+        if derate < 1.0 {
+            arms.push(("brownout", derate));
+        }
+        arms
+    }
 }
 
 #[cfg(test)]

@@ -31,6 +31,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod tenants;
 pub mod report;
+pub mod trace;
 pub mod exec;
 pub mod shard;
 pub mod bench_harness;

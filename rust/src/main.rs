@@ -23,7 +23,7 @@ use hyplacer::bench_harness::{
     compare, fig2, fig3, fig5, fig_faults, fig_gap, fig_mix, perf, tables, BenchOpts, Report,
 };
 use hyplacer::config::{parse::Doc, CellOverride, HyPlacerConfig, MachineConfig, SimConfig};
-use hyplacer::coordinator::run_pair;
+use hyplacer::coordinator::run_pair_traced;
 use hyplacer::exec::{self, SweepSpec};
 use hyplacer::policies;
 use hyplacer::report::Table;
@@ -72,6 +72,13 @@ struct Args {
     root: Option<String>,
     /// touch-phase worker threads (1 = sequential, 0 = one per core).
     shard_jobs: Option<usize>,
+    /// JSONL event-trace path: output for run/compare, input for the
+    /// `trace` converter subcommand.
+    trace: Option<String>,
+    /// per-page provenance sampling ranges, e.g. '0x10..0x40,0x100'.
+    trace_pages: Option<String>,
+    /// trace: print the text digest instead of Chrome trace JSON.
+    summary: bool,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -100,6 +107,9 @@ fn parse_args() -> Result<Args, String> {
         tolerance: 0.25,
         root: None,
         shard_jobs: None,
+        trace: None,
+        trace_pages: None,
+        summary: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -142,6 +152,15 @@ fn parse_args() -> Result<Args, String> {
                     .map_err(|e| format!("--faults: {e}"))?;
                 args.faults = Some(spec);
             }
+            "--trace" => args.trace = Some(take("--trace")?),
+            "--trace-pages" => {
+                let spec = take("--trace-pages")?;
+                // fail fast on a malformed range list, before any run starts
+                hyplacer::trace::parse_page_ranges(&spec)
+                    .map_err(|e| format!("--trace-pages: {e}"))?;
+                args.trace_pages = Some(spec);
+            }
+            "--summary" => args.summary = true,
             "--baseline" => args.baseline = Some(take("--baseline")?),
             "--current" => args.current = Some(take("--current")?),
             "--root" => args.root = Some(take("--root")?),
@@ -195,6 +214,10 @@ COMMANDS
   compare   all policies on one workload or mix   [-w cg-L]
             (incl. migration-engine queue telemetry; --json FILE for
             the machine-readable rendering)
+  trace     convert a --trace JSONL stream to Chrome trace-event JSON
+            (loadable in Perfetto / chrome://tracing), or --summary for
+            a text digest (churning pages, queue-depth timeline)
+            [--trace RUN.jsonl [--json OUT.json | --summary]]
   sweep     parallel (machine x workload x policy x seed) grid
             [-w bt-M,ft-M,mg-M,cg-M -p all --seeds 42 --machines paper]
   bench     scale-free perf metrics for the baseline pipeline
@@ -250,6 +273,16 @@ FLAGS
                  [A, B)), scan-gap:P (epochs that skip reference-bit
                  harvesting). Folds into sweep cell keys, so faulted
                  cells never collide with clean checkpoints
+  --trace FILE   (run/compare) stream the deterministic event trace to
+                 FILE as JSONL, one versioned event per line, all
+                 timestamps in simulated epoch time (DESIGN.md §15);
+                 traced runs are bit-identical to untraced ones
+                 (trace) the JSONL stream to convert
+  --trace-pages RANGES
+                 with --trace: per-page decision provenance for the given
+                 page-id ranges, e.g. '0x10..0x40,0x100' (half-open,
+                 comma list, hex or decimal)
+  --summary      (trace) print the text digest instead of Chrome JSON
   --baseline F   (bench-check) committed baseline file(s), comma list
                  (audit) committed AUDIT_baseline.json to gate against
   --current DIR  (bench-check) compare against DIR/BENCH_*.json from a
@@ -346,8 +379,50 @@ fn load_configs(args: &Args) -> Result<(MachineConfig, SimConfig, HyPlacerConfig
     if let Some(s) = args.shard_jobs {
         sim.shard_jobs = s;
     }
+    if let Some(t) = &args.trace {
+        sim.trace = t.clone();
+    }
     hp.use_aot = args.aot;
     Ok((machine, sim, hp))
+}
+
+/// Build the optional JSONL tracer from `sim.trace` + `--trace-pages`.
+/// `None` when tracing is off — the coordinators then stay on their
+/// exact pre-trace code path.
+fn build_tracer(
+    sim: &SimConfig,
+    trace_pages: &Option<String>,
+) -> Result<Option<hyplacer::trace::Tracer>, String> {
+    if sim.trace.is_empty() {
+        if trace_pages.is_some() {
+            return Err("--trace-pages requires --trace FILE".to_string());
+        }
+        return Ok(None);
+    }
+    let path = &sim.trace;
+    let file = std::fs::File::create(path).map_err(|e| format!("--trace {path}: {e}"))?;
+    let sink = hyplacer::trace::JsonlSink::new(std::io::BufWriter::new(file));
+    let mut tracer = hyplacer::trace::Tracer::new(Box::new(sink));
+    if let Some(spec) = trace_pages {
+        let ranges = hyplacer::trace::parse_page_ranges(spec)
+            .map_err(|e| format!("--trace-pages: {e}"))?;
+        tracer = tracer.with_pages(ranges);
+    }
+    Ok(Some(tracer))
+}
+
+/// Flush the tracer and report the stream accounting — on **stderr**,
+/// so a traced run's stdout stays byte-identical to the untraced run
+/// (the CI trace smoke `cmp`s the two as its observer-effect check).
+fn finish_tracer(path: &str, tracer: Option<hyplacer::trace::Tracer>) {
+    if let Some(mut t) = tracer {
+        t.flush();
+        eprintln!(
+            "trace: wrote {} event(s) to {path} ({} dropped)",
+            t.written(),
+            t.dropped()
+        );
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
@@ -355,8 +430,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let wname = args.workload.as_deref().unwrap_or("cg-M");
     let pname = args.policy.as_deref().unwrap_or("hyplacer");
     let window_frac = hp.delay_secs / sim.epoch_secs;
+    let tracer = build_tracer(&sim, &args.trace_pages)?;
     if MixSpec::is_mix(wname) {
-        return cmd_run_mix(&machine, &sim, &hp, wname, pname, window_frac);
+        return cmd_run_mix(&machine, &sim, &hp, wname, pname, window_frac, tracer);
     }
     let w = workloads::by_name(wname, machine.page_bytes, sim.epoch_secs)
         .ok_or_else(|| format!("unknown workload {wname:?}"))?;
@@ -364,7 +440,8 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // classifier here exactly like the mix/compare/figure paths do
     let p = exec::build_policy(pname, &machine, &hp)
         .ok_or_else(|| format!("unknown policy {pname:?}"))?;
-    let r = run_pair(&machine, &sim, w, p, window_frac);
+    let (r, tracer) = run_pair_traced(&machine, &sim, w, p, window_frac, tracer);
+    finish_tracer(&sim.trace, tracer);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["workload".to_string(), r.workload.clone()]);
     t.row(vec!["policy".to_string(), r.policy.clone()]);
@@ -401,14 +478,23 @@ fn cmd_run_mix(
     wname: &str,
     pname: &str,
     window_frac: f64,
+    tracer: Option<hyplacer::trace::Tracer>,
 ) -> Result<(), String> {
     if policies::by_name(pname, machine, hp).is_none() {
         return Err(format!("unknown policy {pname:?}"));
     }
     let mix = MixSpec::parse(wname)?;
-    let out = tenants::run_mix_with_solos(machine, sim, &mix, window_frac, || {
-        exec::build_policy(pname, machine, hp).expect("policy checked above")
-    })?;
+    // only the co-run is traced — the solo references are derived
+    // baselines, and interleaving their events would garble the stream
+    let (out, tracer) = tenants::run_mix_with_solos_traced(
+        machine,
+        sim,
+        &mix,
+        window_frac,
+        || exec::build_policy(pname, machine, hp).expect("policy checked above"),
+        tracer,
+    )?;
+    finish_tracer(&sim.trace, tracer);
     let r = &out.corun;
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["mix".to_string(), r.workload.clone()]);
@@ -461,13 +547,43 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     let (machine, sim, hp) = load_configs(args)?;
     let wname = args.workload.as_deref().unwrap_or("cg-M");
     let window_frac = hp.delay_secs / sim.epoch_secs;
-    let cmp = compare::run_comparison(&machine, &sim, &hp, wname, window_frac)?;
+    let tracer = build_tracer(&sim, &args.trace_pages)?;
+    let (cmp, tracer) =
+        compare::run_comparison_traced(&machine, &sim, &hp, wname, window_frac, tracer)?;
+    finish_tracer(&sim.trace, tracer);
     emit(&cmp.report(), &args.csv);
     if let Some(path) = &args.json {
         let mut text = cmp.to_json().render();
         text.push('\n');
         std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `hyplacer trace`: convert a `--trace` JSONL stream to the Chrome
+/// trace-event JSON that Perfetto / chrome://tracing load (`--json OUT`
+/// writes it, else stdout), or print the `--summary` text digest
+/// (per-segment migration balance, queue-depth timeline, top churning
+/// pages).
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let input = args.trace.as_deref().ok_or_else(|| {
+        "trace requires --trace FILE (the JSONL stream to convert)".to_string()
+    })?;
+    let text = std::fs::read_to_string(input).map_err(|e| format!("{input}: {e}"))?;
+    if args.summary {
+        println!("{}", hyplacer::trace::chrome::summary(&text)?);
+        return Ok(());
+    }
+    let doc = hyplacer::trace::chrome::to_chrome(&text)?;
+    match &args.json {
+        Some(path) => {
+            let mut out = doc.render();
+            out.push('\n');
+            std::fs::write(path, out).map_err(|e| format!("{path}: {e}"))?;
+            println!("wrote {path}");
+        }
+        None => println!("{}", doc.render()),
     }
     Ok(())
 }
@@ -868,6 +984,7 @@ fn main() -> ExitCode {
         }
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "bench-check" => cmd_bench_check(&args),

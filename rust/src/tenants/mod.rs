@@ -49,6 +49,7 @@ use crate::mem::energy::EnergyAccount;
 use crate::mem::{EpochDemand, PerfModel, Pcmon, TierDemand};
 use crate::policies::{ActiveRegion, Policy, PolicyCtx, RouteCtx, TenantRange};
 use crate::sim::{RunStats, SimClock};
+use crate::trace::{PageStep, TraceEvent, Tracer};
 use crate::util::rng::bernoulli_hits;
 use crate::util::Rng64;
 use crate::vm::{MigrationEngine, PageId, PageTable, PlaneQuery, TenantQuota, TouchShard};
@@ -476,6 +477,10 @@ pub struct MultiSimulation {
     energy: EnergyAccount,
     engine: MigrationEngine,
     window_frac: f64,
+    /// Optional event tracer (DESIGN.md §15). `None` by default — every
+    /// emission site is gated on it, so the untraced co-run path is the
+    /// exact pre-trace code path.
+    tracer: Option<Tracer>,
     /// Union scratch of every arrived tenant's [`ActiveRegion`]s this
     /// epoch, in tenant order (what demand routing sees).
     all_scratch: Vec<ActiveRegion>,
@@ -566,6 +571,7 @@ impl MultiSimulation {
             energy: EnergyAccount::default(),
             engine,
             window_frac: window_frac.clamp(0.0, 1.0),
+            tracer: None,
             all_scratch: Vec::new(),
             arrived_ranges: Vec::new(),
         };
@@ -740,6 +746,57 @@ impl MultiSimulation {
         self.pt.pte_visits()
     }
 
+    /// Attach a tracer (DESIGN.md §15): emits the run header (workload =
+    /// the mix display name), records `place` provenance for any sampled
+    /// pages already mapped (epoch-0 tenants), and installs the sampled
+    /// ranges into the shared migration engine. Call before the first
+    /// `step()`; later-arriving tenants' pages appear when migrated.
+    pub fn set_tracer(&mut self, mut tracer: Tracer) {
+        tracer.begin_epoch(self.clock.epoch(), self.clock.now());
+        let workload = self
+            .runs
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let mut n = t.workload.name();
+                n.push_str(&self.set.spec(ti).display_suffix());
+                n
+            })
+            .collect::<Vec<_>>()
+            .join("+");
+        tracer.emit(&TraceEvent::Header {
+            policy: self.policy.name().to_string(),
+            workload,
+            seed: self.sim.seed,
+            epochs: self.sim.epochs,
+            epoch_secs: self.sim.epoch_secs,
+        });
+        if tracer.samples_pages() {
+            let pages = u64::from(self.pt.len());
+            let ranges = tracer.page_ranges().to_vec();
+            for &(a, b) in &ranges {
+                for page in a..b.min(pages) {
+                    // audit-allow(N1): page < pt.len(), a u32 by construction
+                    let page = page as u32;
+                    let f = self.pt.flags(page);
+                    if f.valid() {
+                        let tier = match f.tier() {
+                            Tier::Dram => "dram",
+                            Tier::Pm => "pm",
+                        };
+                        tracer.emit(&TraceEvent::Page {
+                            page,
+                            step: PageStep::Place,
+                            tier: Some(tier),
+                        });
+                    }
+                }
+            }
+            self.engine.set_page_trace(ranges);
+        }
+        self.tracer = Some(tracer);
+    }
+
     /// Run one epoch; returns its wall-clock seconds. The phase order
     /// and float-op order mirror `Simulation::step` exactly — that is
     /// the 1-tenant bit-identity contract.
@@ -869,6 +926,27 @@ impl MultiSimulation {
             self.all_scratch.extend(t.scratch.iter().copied());
             active_total += t.active_pages;
         }
+        // Trace: epoch scope, armed faults, then one `shard_task` span
+        // per arrived tenant — emitted here, sequentially after the
+        // barrier, so worker interleaving can never reorder events.
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.begin_epoch(epoch, self.clock.now());
+            let offered_total: f64 = self.runs.iter().map(|t| t.offered).sum();
+            tr.emit(&TraceEvent::EpochBegin { offered_bytes: offered_total });
+            for (fault, value) in self.sim.faults.armed(self.sim.seed, epoch) {
+                tr.emit(&TraceEvent::FaultArm { fault, value });
+            }
+            for (ti, t) in self.runs.iter().enumerate() {
+                if !t.arrived {
+                    continue;
+                }
+                tr.emit(&TraceEvent::ShardTask {
+                    tenant: format!("{}#{ti}", t.workload.name()),
+                    offered_bytes: t.offered,
+                    active_pages: t.active_pages,
+                });
+            }
+        }
 
         // --- 2. One system-wide policy decision tick over the union
         // footprint (the engine's queue summary is global).
@@ -884,13 +962,45 @@ impl MultiSimulation {
             };
             self.policy.epoch_tick(&mut ctx)
         };
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(&TraceEvent::PolicyTick {
+                promote: plan.promote.len() as u64,
+                demote: plan.demote.len() as u64,
+                exchange_pairs: plan.exchange.len() as u64,
+                safe_mode: self.policy.in_safe_mode(),
+            });
+        }
 
         // --- 3. Submit to the single global engine; execute up to the
         // epoch's copy-bandwidth budget (DRAM capacity and migration
         // bandwidth are shared — this is where tenants contend).
-        self.engine.submit(&mut self.pt, &plan, epoch);
+        let sub = self.engine.submit(&mut self.pt, &plan, epoch);
         let (mig, executed) =
             self.engine.run_epoch(&mut self.pt, &self.cfg, epoch, self.sim.epoch_secs);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(&TraceEvent::MigrateSubmit {
+                accepted: sub.accepted,
+                dropped_duplicate: sub.dropped_duplicate,
+                dropped_pinned: sub.dropped_pinned,
+            });
+            tr.emit(&TraceEvent::MigrateExec {
+                promoted: mig.promoted,
+                demoted: mig.demoted,
+                exchanged_pairs: mig.exchanged_pairs,
+                skipped: mig.skipped,
+                stale: mig.stale,
+                retried: mig.retried,
+                failed: mig.failed,
+                over_quota: mig.over_quota,
+                deferred: mig.deferred,
+            });
+            if mig.over_quota > 0 {
+                tr.emit(&TraceEvent::QuotaReject { count: mig.over_quota });
+            }
+            for (page, step) in self.engine.take_page_notes() {
+                tr.emit(&TraceEvent::Page { page, step, tier: None });
+            }
+        }
 
         // --- 4. Per-tenant region counts from the post-migration
         // distribution: rebuild tenants whose boundaries changed,
@@ -983,18 +1093,54 @@ impl MultiSimulation {
             tenant_app.push(t.offered);
             tenant_share.push(held as f64 / dram_capacity);
         }
+        if let Some(tr) = self.tracer.as_mut() {
+            for (ti, t) in self.runs.iter().enumerate() {
+                if !t.arrived {
+                    continue;
+                }
+                tr.emit(&TraceEvent::TenantEpoch {
+                    tenant: format!("{}#{ti}", t.workload.name()),
+                    app_bytes: tenant_app[ti],
+                    dram_share: tenant_share[ti],
+                });
+            }
+        }
         self.stats.record_tenant_series(tenant_app, tenant_share);
-        self.stats.record_safe_mode(self.policy.in_safe_mode());
+        let safe = self.policy.in_safe_mode();
+        self.stats.record_safe_mode(safe);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.note_safe_mode(safe);
+            tr.emit(&TraceEvent::EpochEnd {
+                wall_secs: outcome.wall_secs,
+                app_bytes: demand.app_bytes,
+                throughput: if outcome.wall_secs > 0.0 {
+                    demand.app_bytes / outcome.wall_secs
+                } else {
+                    0.0
+                },
+                dram_occupancy: self.pt.dram_occupancy(),
+                queue_depth: mig.deferred,
+                safe_mode: safe,
+            });
+        }
         self.clock.advance(outcome.wall_secs);
         outcome.wall_secs
     }
 
     /// Run the configured number of epochs and summarize.
-    pub fn run(mut self) -> SimResult {
+    pub fn run(self) -> SimResult {
+        self.run_traced().0
+    }
+
+    /// Like [`MultiSimulation::run`], additionally handing the tracer
+    /// (and its sink) back so the caller can flush the stream or inspect
+    /// the buffered events. With no tracer attached this *is* `run()`.
+    pub fn run_traced(mut self) -> (SimResult, Option<Tracer>) {
         for _ in 0..self.sim.epochs {
             self.step();
         }
-        self.finish()
+        let tracer = self.tracer.take();
+        (self.finish(), tracer)
     }
 
     /// Summarize without consuming a fixed epoch count.
@@ -1089,7 +1235,24 @@ pub fn run_mix(
     policy: Box<dyn Policy>,
     window_frac: f64,
 ) -> Result<SimResult, String> {
-    Ok(MultiSimulation::new(cfg.clone(), sim.clone(), mix, policy, window_frac)?.run())
+    run_mix_traced(cfg, sim, mix, policy, window_frac, None).map(|(r, _)| r)
+}
+
+/// [`run_mix`] with an optional tracer threaded through (header emitted
+/// at bind time, tracer returned after the run for flushing).
+pub fn run_mix_traced(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    mix: &MixSpec,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+    tracer: Option<Tracer>,
+) -> Result<(SimResult, Option<Tracer>), String> {
+    let mut m = MultiSimulation::new(cfg.clone(), sim.clone(), mix, policy, window_frac)?;
+    if let Some(t) = tracer {
+        m.set_tracer(t);
+    }
+    Ok(m.run_traced())
 }
 
 /// Run a workload-axis name — a plain workload or a `+`-joined mix —
@@ -1102,13 +1265,29 @@ pub fn run_named(
     policy: Box<dyn Policy>,
     window_frac: f64,
 ) -> Result<SimResult, String> {
+    run_named_traced(cfg, sim, name, policy, window_frac, None).map(|(r, _)| r)
+}
+
+/// [`run_named`] with an optional tracer threaded through whichever
+/// coordinator the name dispatches to. The tracer comes back for
+/// flushing (and reuse across compare segments — each bind emits its
+/// own `header`, restarting the per-segment epoch clock downstream
+/// consumers key on).
+pub fn run_named_traced(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    name: &str,
+    policy: Box<dyn Policy>,
+    window_frac: f64,
+    tracer: Option<Tracer>,
+) -> Result<(SimResult, Option<Tracer>), String> {
     if MixSpec::is_mix(name) {
         let mix = MixSpec::parse(name)?;
-        run_mix(cfg, sim, &mix, policy, window_frac)
+        run_mix_traced(cfg, sim, &mix, policy, window_frac, tracer)
     } else {
         let w = workloads::by_name(name, cfg.page_bytes, sim.epoch_secs)
             .ok_or_else(|| format!("unknown workload {name:?}"))?;
-        Ok(crate::coordinator::run_pair(cfg, sim, w, policy, window_frac))
+        Ok(crate::coordinator::run_pair_traced(cfg, sim, w, policy, window_frac, tracer))
     }
 }
 
@@ -1140,9 +1319,23 @@ pub fn run_mix_with_solos(
     sim: &SimConfig,
     mix: &MixSpec,
     window_frac: f64,
-    mut build_policy: impl FnMut() -> Box<dyn Policy>,
+    build_policy: impl FnMut() -> Box<dyn Policy>,
 ) -> Result<MixOutcome, String> {
-    let corun = run_mix(cfg, sim, mix, build_policy(), window_frac)?;
+    run_mix_with_solos_traced(cfg, sim, mix, window_frac, build_policy, None).map(|(o, _)| o)
+}
+
+/// [`run_mix_with_solos`] with an optional tracer on the **co-run only**
+/// — the solo references are derived baselines whose events would
+/// interleave confusingly with the contended run's stream.
+pub fn run_mix_with_solos_traced(
+    cfg: &MachineConfig,
+    sim: &SimConfig,
+    mix: &MixSpec,
+    window_frac: f64,
+    mut build_policy: impl FnMut() -> Box<dyn Policy>,
+    tracer: Option<Tracer>,
+) -> Result<(MixOutcome, Option<Tracer>), String> {
+    let (corun, tracer) = run_mix_traced(cfg, sim, mix, build_policy(), window_frac, tracer)?;
     let mut solos = Vec::with_capacity(mix.tenants.len());
     for t in &mix.tenants {
         let mut solo_spec = t.clone();
@@ -1183,13 +1376,16 @@ pub fn run_mix_with_solos(
         (max, min) if min > 0.0 => max / min,
         _ => 0.0,
     };
-    Ok(MixOutcome {
-        corun,
-        solos,
-        slowdowns,
-        unfairness,
-        weighted_speedup: if weight_sum > 0.0 { weighted / weight_sum } else { 0.0 },
-    })
+    Ok((
+        MixOutcome {
+            corun,
+            solos,
+            slowdowns,
+            unfairness,
+            weighted_speedup: if weight_sum > 0.0 { weighted / weight_sum } else { 0.0 },
+        },
+        tracer,
+    ))
 }
 
 #[cfg(test)]

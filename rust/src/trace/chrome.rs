@@ -1,0 +1,498 @@
+//! Post-processing for trace JSONL files (`hyplacer trace`): convert a
+//! trace into Chrome trace-event JSON (loadable in Perfetto / Chrome
+//! `about:tracing`) or render a text summary. Pure functions over the
+//! already-written lines — nothing here runs during a simulation.
+//!
+//! Layout of the converted trace:
+//!  * one *process* (pid) per run segment (a `compare` trace has one
+//!    segment per policy, each announced by a `header` event),
+//!  * tid 0 — epoch frames (`ph:"X"` slices, one per epoch, duration =
+//!    simulated wall seconds) plus fault/safe-mode instants,
+//!  * tid 1 — sampled-page lifecycle instants (`--trace-pages`),
+//!  * tid 2+ — per-tenant lanes (one slice per tenant per epoch),
+//!  * counter tracks (`ph:"C"`) — migration queue depth, DRAM
+//!    occupancy, safe-mode dwell, plan size, executed moves, per-tenant
+//!    DRAM share.
+//!
+//! All timestamps are *simulated* microseconds (`t * 1e6`), preserving
+//! the module's never-wall-clock contract end to end.
+
+use crate::report::json::{self, Json};
+use std::collections::BTreeMap;
+
+fn f(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn s(doc: &Json, key: &str) -> String {
+    doc.get(key).and_then(|v| v.as_str()).unwrap_or("").to_string()
+}
+
+fn b(doc: &Json, key: &str) -> bool {
+    doc.get(key).and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+/// Parse every non-empty JSONL line; errors carry the 1-based line no.
+fn parse_lines(text: &str) -> Result<Vec<Json>, String> {
+    let mut docs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match json::parse(line) {
+            Ok(doc) => docs.push(doc),
+            Err(e) => return Err(format!("trace line {}: {}", i + 1, e)),
+        }
+    }
+    if docs.is_empty() {
+        return Err("trace is empty".to_string());
+    }
+    Ok(docs)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn event(
+    name: &str,
+    ph: &str,
+    ts_us: f64,
+    pid: u64,
+    tid: u64,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ];
+    pairs.extend(extra);
+    obj(pairs)
+}
+
+fn metadata(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    event(
+        name,
+        "M",
+        0.0,
+        pid,
+        tid,
+        vec![("args", obj(vec![("name", Json::Str(value.to_string()))]))],
+    )
+}
+
+fn counter(name: &str, ts_us: f64, pid: u64, series: &str, value: f64) -> Json {
+    event(name, "C", ts_us, pid, 0, vec![("args", obj(vec![(series, Json::Num(value))]))])
+}
+
+/// Convert trace JSONL text into a Chrome trace-event document.
+pub fn to_chrome(text: &str) -> Result<Json, String> {
+    let docs = parse_lines(text)?;
+    let mut out: Vec<Json> = Vec::new();
+    let mut pid: u64 = 0;
+    // per-segment tenant lane assignment (tid 2+), insertion-ordered
+    let mut tenant_lanes: Vec<String> = Vec::new();
+    // tenant slices buffered until epoch_end supplies the duration
+    let mut pending_tenants: Vec<(String, f64, f64)> = Vec::new();
+    for doc in &docs {
+        let kind = s(doc, "kind");
+        let ts = f(doc, "t") * 1e6;
+        let epoch = f(doc, "epoch") as u64;
+        if kind == "header" {
+            pid += 1;
+            tenant_lanes.clear();
+            pending_tenants.clear();
+            let label = format!("{} @ {}", s(doc, "policy"), s(doc, "workload"));
+            out.push(metadata("process_name", pid, 0, &label));
+            out.push(metadata("thread_name", pid, 0, "epochs"));
+            out.push(metadata("thread_name", pid, 1, "pages"));
+            continue;
+        }
+        if pid == 0 {
+            // headerless trace fragment: park everything in one process
+            pid = 1;
+        }
+        match kind.as_str() {
+            "epoch_end" => {
+                let dur = f(doc, "wall_secs") * 1e6;
+                out.push(event(
+                    &format!("epoch {epoch}"),
+                    "X",
+                    ts,
+                    pid,
+                    0,
+                    vec![
+                        ("dur", Json::Num(dur)),
+                        (
+                            "args",
+                            obj(vec![
+                                ("app_bytes", Json::Num(f(doc, "app_bytes"))),
+                                ("throughput", Json::Num(f(doc, "throughput"))),
+                            ]),
+                        ),
+                    ],
+                ));
+                out.push(counter("queue_depth", ts, pid, "pages", f(doc, "queue_depth")));
+                out.push(counter("dram_occupancy", ts, pid, "frac", f(doc, "dram_occupancy")));
+                out.push(counter(
+                    "safe_mode",
+                    ts,
+                    pid,
+                    "in",
+                    if b(doc, "safe_mode") { 1.0 } else { 0.0 },
+                ));
+                for (tenant, app_bytes, share) in pending_tenants.drain(..) {
+                    let lane = match tenant_lanes.iter().position(|t| *t == tenant) {
+                        Some(i) => i,
+                        None => {
+                            tenant_lanes.push(tenant.clone());
+                            let tid = 2 + (tenant_lanes.len() - 1) as u64;
+                            out.push(metadata("thread_name", pid, tid, &tenant));
+                            tenant_lanes.len() - 1
+                        }
+                    };
+                    out.push(event(
+                        &tenant,
+                        "X",
+                        ts,
+                        pid,
+                        2 + lane as u64,
+                        vec![
+                            ("dur", Json::Num(dur)),
+                            (
+                                "args",
+                                obj(vec![
+                                    ("app_bytes", Json::Num(app_bytes)),
+                                    ("dram_share", Json::Num(share)),
+                                ]),
+                            ),
+                        ],
+                    ));
+                    out.push(counter(
+                        &format!("dram_share {tenant}"),
+                        ts,
+                        pid,
+                        "frac",
+                        share,
+                    ));
+                }
+            }
+            "tenant_epoch" => {
+                pending_tenants.push((s(doc, "tenant"), f(doc, "app_bytes"), f(doc, "dram_share")));
+            }
+            "policy_tick" => {
+                let moves =
+                    f(doc, "promote") + f(doc, "demote") + 2.0 * f(doc, "exchange_pairs");
+                out.push(counter("plan_size", ts, pid, "moves", moves));
+            }
+            "migrate_exec" => {
+                let moves =
+                    f(doc, "promoted") + f(doc, "demoted") + 2.0 * f(doc, "exchanged_pairs");
+                out.push(counter("executed_moves", ts, pid, "moves", moves));
+            }
+            "page" => {
+                let page = f(doc, "page") as u64;
+                out.push(event(
+                    &format!("page {page:#x} {}", s(doc, "step")),
+                    "i",
+                    ts,
+                    pid,
+                    1,
+                    vec![("s", Json::Str("t".to_string()))],
+                ));
+            }
+            "fault_arm" => {
+                out.push(event(
+                    &format!("fault {}", s(doc, "fault")),
+                    "i",
+                    ts,
+                    pid,
+                    0,
+                    vec![("s", Json::Str("t".to_string()))],
+                ));
+            }
+            "safe_mode" => {
+                let name = if b(doc, "entered") { "safe_mode enter" } else { "safe_mode exit" };
+                out.push(event(name, "i", ts, pid, 0, vec![("s", Json::Str("p".to_string()))]));
+            }
+            // epoch_begin / shard_task / migrate_submit / quota_reject
+            // carry no track of their own — their data is summarized by
+            // the counters above and kept in the JSONL for `--summary`.
+            _ => {}
+        }
+    }
+    Ok(obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ]))
+}
+
+/// Per-run-segment accumulator for [`summary`].
+#[derive(Default)]
+struct Segment {
+    label: String,
+    epochs: u64,
+    promoted: f64,
+    demoted: f64,
+    exchanged: f64,
+    retried: f64,
+    failed: f64,
+    over_quota: f64,
+    safe_mode_epochs: u64,
+    queue_peak: f64,
+    queue_peak_epoch: u64,
+    queue_timeline: Vec<(u64, f64)>,
+    // page -> churn step count (BTreeMap keeps the report ordering
+    // deterministic; ties resolve to the lower page number)
+    page_churn: BTreeMap<u64, u64>,
+}
+
+/// Render a text summary of a trace: per segment, the
+/// promotion/demotion balance, queue-depth timeline, safe-mode dwell
+/// and top churning sampled pages. Row labels are stable — CI greps
+/// them.
+pub fn summary(text: &str) -> Result<String, String> {
+    let docs = parse_lines(text)?;
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut events = 0u64;
+    for doc in &docs {
+        events += 1;
+        let kind = s(doc, "kind");
+        if kind == "header" || segs.is_empty() {
+            if kind == "header" {
+                let mut seg = Segment::default();
+                seg.label = format!(
+                    "{} @ {} (seed {})",
+                    s(doc, "policy"),
+                    s(doc, "workload"),
+                    f(doc, "seed") as u64
+                );
+                segs.push(seg);
+                continue;
+            }
+            segs.push(Segment { label: "(no header)".to_string(), ..Segment::default() });
+        }
+        let seg = match segs.last_mut() {
+            Some(seg) => seg,
+            None => continue,
+        };
+        let epoch = f(doc, "epoch") as u64;
+        match kind.as_str() {
+            "epoch_end" => {
+                seg.epochs += 1;
+                if b(doc, "safe_mode") {
+                    seg.safe_mode_epochs += 1;
+                }
+                let qd = f(doc, "queue_depth");
+                if qd > seg.queue_peak {
+                    seg.queue_peak = qd;
+                    seg.queue_peak_epoch = epoch;
+                }
+                if qd > 0.0 {
+                    seg.queue_timeline.push((epoch, qd));
+                }
+            }
+            "migrate_exec" => {
+                seg.promoted += f(doc, "promoted");
+                seg.demoted += f(doc, "demoted");
+                seg.exchanged += f(doc, "exchanged_pairs");
+                seg.retried += f(doc, "retried");
+                seg.failed += f(doc, "failed");
+                seg.over_quota += f(doc, "over_quota");
+            }
+            "page" => {
+                if s(doc, "step") != "place" {
+                    let page = f(doc, "page") as u64;
+                    *seg.page_churn.entry(page).or_insert(0) += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("trace summary: {} events, {} segment(s)\n", events, segs.len()));
+    for (i, seg) in segs.iter().enumerate() {
+        out.push_str(&format!("segment {}: {}\n", i + 1, seg.label));
+        out.push_str(&format!("  epochs: {}\n", seg.epochs));
+        out.push_str(&format!(
+            "  promotions: {}  demotions: {}  exchanges: {}\n",
+            seg.promoted as u64, seg.demoted as u64, seg.exchanged as u64
+        ));
+        out.push_str(&format!(
+            "  retried: {}  failed: {}  over-quota: {}\n",
+            seg.retried as u64, seg.failed as u64, seg.over_quota as u64
+        ));
+        out.push_str(&format!("  safe-mode epochs: {}\n", seg.safe_mode_epochs));
+        if seg.queue_peak > 0.0 {
+            out.push_str(&format!(
+                "  queue depth peak: {} at epoch {}\n",
+                seg.queue_peak as u64, seg.queue_peak_epoch
+            ));
+            let shown: Vec<String> = seg
+                .queue_timeline
+                .iter()
+                .take(12)
+                .map(|(e, d)| format!("e{}:{}", e, *d as u64))
+                .collect();
+            let more = seg.queue_timeline.len().saturating_sub(12);
+            let tail = if more > 0 { format!(" (+{more} more)") } else { String::new() };
+            out.push_str(&format!("  queue depth timeline: {}{}\n", shown.join(" "), tail));
+        } else {
+            out.push_str("  queue depth peak: 0\n");
+        }
+        if !seg.page_churn.is_empty() {
+            let mut churn: Vec<(u64, u64)> =
+                seg.page_churn.iter().map(|(&p, &n)| (p, n)).collect();
+            churn.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            let rows: Vec<String> = churn
+                .iter()
+                .take(5)
+                .map(|(p, n)| format!("{p:#x} ({n} steps)"))
+                .collect();
+            out.push_str(&format!("  top churning pages: {}\n", rows.join(", ")));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{render_line, PageStep, Stamp, TraceEvent};
+
+    fn sample_trace() -> String {
+        let mut lines = Vec::new();
+        let mut seq = 0u64;
+        let mut push = |epoch: u32, t: f64, ev: TraceEvent| {
+            lines.push(render_line(&Stamp { epoch, t_secs: t, seq }, &ev));
+            seq += 1;
+        };
+        push(
+            0,
+            0.0,
+            TraceEvent::Header {
+                policy: "hyplacer".into(),
+                workload: "cg-M".into(),
+                seed: 42,
+                epochs: 2,
+                epoch_secs: 1.0,
+            },
+        );
+        push(0, 0.0, TraceEvent::Page { page: 0x20, step: PageStep::Place, tier: Some("pm") });
+        push(0, 0.0, TraceEvent::EpochBegin { offered_bytes: 1e9 });
+        push(
+            0,
+            0.0,
+            TraceEvent::PolicyTick { promote: 2, demote: 1, exchange_pairs: 0, safe_mode: false },
+        );
+        push(
+            0,
+            0.0,
+            TraceEvent::MigrateSubmit { accepted: 3, dropped_duplicate: 0, dropped_pinned: 0 },
+        );
+        push(0, 0.0, TraceEvent::Page { page: 0x20, step: PageStep::Submit, tier: None });
+        push(0, 0.0, TraceEvent::Page { page: 0x20, step: PageStep::Defer, tier: None });
+        push(
+            0,
+            0.0,
+            TraceEvent::MigrateExec {
+                promoted: 1,
+                demoted: 1,
+                exchanged_pairs: 0,
+                skipped: 0,
+                stale: 0,
+                retried: 0,
+                failed: 0,
+                over_quota: 0,
+                deferred: 1,
+            },
+        );
+        push(
+            0,
+            0.0,
+            TraceEvent::TenantEpoch { tenant: "is.M#0".into(), app_bytes: 5e8, dram_share: 0.4 },
+        );
+        push(
+            0,
+            0.0,
+            TraceEvent::EpochEnd {
+                wall_secs: 1.5,
+                app_bytes: 1e9,
+                throughput: 6.6e8,
+                dram_occupancy: 0.8,
+                queue_depth: 1,
+                safe_mode: false,
+            },
+        );
+        push(1, 1.5, TraceEvent::EpochBegin { offered_bytes: 1e9 });
+        push(1, 1.5, TraceEvent::Page { page: 0x20, step: PageStep::Promote, tier: None });
+        push(
+            1,
+            1.5,
+            TraceEvent::EpochEnd {
+                wall_secs: 1.2,
+                app_bytes: 1e9,
+                throughput: 8.3e8,
+                dram_occupancy: 0.9,
+                queue_depth: 0,
+                safe_mode: false,
+            },
+        );
+        lines.join("\n")
+    }
+
+    #[test]
+    fn converts_to_valid_chrome_trace() {
+        let doc = to_chrome(&sample_trace()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        // round-trips through the JSON parser
+        let rendered = doc.render();
+        let reparsed = json::parse(&rendered).unwrap();
+        assert!(reparsed.get("traceEvents").is_some());
+        // one X slice per epoch on the epoch lane
+        let slices: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                    && e.get("tid").and_then(|t| t.as_f64()) == Some(0.0)
+            })
+            .collect();
+        assert_eq!(slices.len(), 2);
+        assert_eq!(slices[0].get("dur").unwrap().as_f64(), Some(1.5e6));
+        // counters and page instants present
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")));
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i")));
+        // tenant lane got a slice on tid >= 2
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                && e.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) >= 2.0
+        }));
+    }
+
+    #[test]
+    fn summary_reports_stable_rows() {
+        let text = summary(&sample_trace()).unwrap();
+        assert!(text.contains("trace summary: 13 events, 1 segment(s)"));
+        assert!(text.contains("segment 1: hyplacer @ cg-M (seed 42)"));
+        assert!(text.contains("epochs: 2"));
+        assert!(text.contains("promotions: 1  demotions: 1  exchanges: 0"));
+        assert!(text.contains("queue depth peak: 1 at epoch 0"));
+        assert!(text.contains("top churning pages: 0x20 (3 steps)"));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(to_chrome("").is_err());
+        assert!(to_chrome("not json\n").is_err());
+        assert!(summary("{oops\n").is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Unified counter registry (DESIGN.md §15): one typed home for the
+//! run-level proxies that used to be re-derived ad hoc at every
+//! emission site (`hyplacer run` tables, `compare --json`, the bench
+//! hot-path collector). Each counter has a canonical slash-scoped name;
+//! emitters read the registry instead of cherry-picking `SimResult`
+//! fields, so a counter added here shows up everywhere at once.
+
+use crate::coordinator::SimResult;
+
+/// One named run-level counter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Counter {
+    pub name: &'static str,
+    pub value: f64,
+}
+
+/// An ordered registry of named counters (order = emission order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    items: Vec<Counter>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Counters::default()
+    }
+
+    /// Append a counter (hot-path collectors add their own proxies —
+    /// `hotpath/rng_draws_per_epoch`, `hotpath/pte_visits_per_epoch` —
+    /// next to the run-level set).
+    pub fn push(&mut self, name: &'static str, value: f64) {
+        self.items.push(Counter { name, value });
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.items.iter().find(|c| c.name == name).map(|c| c.value)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Counter> {
+        self.items.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The canonical run-level registry: every engine / fault / QoS
+    /// telemetry counter a finished [`SimResult`] carries, under its
+    /// canonical name. `compare --json` and the bench emitters read
+    /// these instead of open-coding field access.
+    pub fn from_result(r: &SimResult) -> Self {
+        let mut c = Counters::new();
+        c.push("run/wall_secs", r.total_wall_secs);
+        c.push("run/throughput", r.throughput);
+        c.push("run/steady_throughput", r.steady_throughput);
+        c.push("energy/j_per_byte", r.energy_j_per_byte);
+        c.push("mem/dram_traffic_share", r.dram_traffic_share);
+        c.push("migrate/pages", r.migrated_pages as f64);
+        c.push("migrate/queue_peak", r.migrate_queue_peak as f64);
+        c.push("migrate/deferred_ratio", r.migrate_deferred_ratio);
+        c.push("migrate/stale_ratio", r.migrate_stale_ratio);
+        c.push("migrate/over_quota", r.stats.migrate_over_quota_total() as f64);
+        c.push("migrate/pinned_rejected", r.stats.migrate_pinned_rejected_total() as f64);
+        c.push("faults/retried", r.migrate_retried as f64);
+        c.push("faults/failed", r.migrate_failed as f64);
+        c.push("faults/safe_mode_epochs", r.safe_mode_epochs as f64);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, SimConfig};
+    use crate::coordinator::run_pair;
+    use crate::policies;
+    use crate::workloads;
+
+    #[test]
+    fn registry_mirrors_the_result_fields() {
+        let cfg = MachineConfig::paper_machine();
+        let mut sim = SimConfig::default();
+        sim.epochs = 8;
+        sim.warmup_epochs = 2;
+        let hp = crate::config::HyPlacerConfig::default();
+        let w = workloads::by_name("cg-M", cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+        let r = run_pair(&cfg, &sim, w, p, 0.05);
+        let c = Counters::from_result(&r);
+        assert_eq!(c.get("run/wall_secs"), Some(r.total_wall_secs));
+        assert_eq!(c.get("migrate/pages"), Some(r.migrated_pages as f64));
+        assert_eq!(c.get("migrate/over_quota"), Some(0.0));
+        assert_eq!(c.get("faults/safe_mode_epochs"), Some(0.0));
+        assert!(c.get("no/such").is_none());
+        assert_eq!(c.len(), 14);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn push_extends_the_registry() {
+        let mut c = Counters::new();
+        c.push("hotpath/rng_draws_per_epoch", 12.0);
+        assert_eq!(c.get("hotpath/rng_draws_per_epoch"), Some(12.0));
+        assert_eq!(c.iter().count(), 1);
+    }
+}

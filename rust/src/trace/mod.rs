@@ -1,0 +1,661 @@
+//! Deterministic run tracing (DESIGN.md §15).
+//!
+//! A [`Tracer`] stamps typed, epoch-scoped [`TraceEvent`]s with
+//! **simulated** time only — the epoch counter and [`crate::sim::
+//! SimClock::now`] seconds, never `Instant`/`SystemTime` (the D2 audit
+//! rule holds inside this module too: `trace/` is in the audit's
+//! result-affecting scope). Events flow into a [`TraceSink`]; the two
+//! shipped sinks are a streaming JSONL writer ([`JsonlSink`], behind
+//! `--trace FILE`) and an in-memory buffer ([`MemSink`], used by the
+//! lockstep tests and the bench observer-effect probe).
+//!
+//! Design invariants:
+//!
+//! * **Zero cost when off.** Every emission site is gated on
+//!   `Option<Tracer>`; with `None` the epoch loop is the exact pre-trace
+//!   instruction stream. The fig5 lockstep test pins this bit-for-bit.
+//! * **Observer effect zero when on.** Trace code only *reads* values
+//!   the simulation already computed — it never draws RNG, never touches
+//!   page flags, never reorders float accumulation. Enabling any sink
+//!   leaves `SimResult` bit-identical; the same lockstep test pins it.
+//! * **Robust writer.** JSONL I/O errors degrade to a dropped-events
+//!   counter (reported at exit), never a panic — the R1 audit rule
+//!   covers this module.
+//!
+//! Per-page decision provenance (`--trace-pages`) is sampled through
+//! [`PageTrace`]: the migration engine notes every lifecycle step
+//! (submit, duplicate-drop, backoff, stale, retry, fail, over-quota,
+//! execute, defer) for pages inside the sampled ranges, and the
+//! coordinator drains those notes into `page` events each epoch.
+
+pub mod chrome;
+pub mod counters;
+
+use crate::report::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+
+/// Version stamped into every event envelope (`"v"`). Bump when an
+/// event kind's required fields change; `python/tests/test_trace_schema.py`
+/// validates against the version it reads.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Simulated-time stamp carried by every event: the epoch index, the
+/// simulated clock at the *start* of that epoch (seconds), and a
+/// process-wide sequence number. `(epoch, seq)` is strictly monotone
+/// over a trace — the schema test asserts it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stamp {
+    pub epoch: u32,
+    pub t_secs: f64,
+    pub seq: u64,
+}
+
+/// One step in a sampled page's migration lifecycle (`--trace-pages`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageStep {
+    /// First-touch placement at simulation build time.
+    Place,
+    /// Accepted into a migration queue by `MigrationEngine::submit`.
+    Submit,
+    /// Dropped at submit: already queued.
+    Duplicate,
+    /// Dropped at submit: page is PINNED.
+    PinnedDrop,
+    /// Skipped this epoch: retry backoff window still open.
+    Backoff,
+    /// Carried-over entry dropped by revalidation (planned before this
+    /// epoch and no longer eligible).
+    Stale,
+    /// Same-epoch entry skipped by revalidation.
+    Skip,
+    /// Copy failed transiently; re-enqueued with backoff.
+    Retry,
+    /// Copy failed permanently (retry cap exhausted).
+    Fail,
+    /// Promotion rejected by a hard DRAM quota.
+    OverQuota,
+    /// Executed: promoted PM → DRAM.
+    Promote,
+    /// Executed: demoted DRAM → PM.
+    Demote,
+    /// Executed as one side of an exchange pair.
+    Exchange,
+    /// Still queued when the epoch's bandwidth budget ran out.
+    Defer,
+}
+
+impl PageStep {
+    pub fn name(self) -> &'static str {
+        match self {
+            PageStep::Place => "place",
+            PageStep::Submit => "submit",
+            PageStep::Duplicate => "duplicate",
+            PageStep::PinnedDrop => "pinned_drop",
+            PageStep::Backoff => "backoff",
+            PageStep::Stale => "stale",
+            PageStep::Skip => "skip",
+            PageStep::Retry => "retry",
+            PageStep::Fail => "fail",
+            PageStep::OverQuota => "over_quota",
+            PageStep::Promote => "promote",
+            PageStep::Demote => "demote",
+            PageStep::Exchange => "exchange",
+            PageStep::Defer => "defer",
+        }
+    }
+}
+
+/// Typed trace events. Every variant renders as one JSONL object with
+/// the versioned envelope `{v, kind, epoch, t, seq}` plus the fields
+/// documented per kind in DESIGN.md §15.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Run preamble: one per traced run segment (a `compare` trace
+    /// carries one header per policy segment).
+    Header {
+        policy: String,
+        workload: String,
+        seed: u64,
+        epochs: u32,
+        epoch_secs: f64,
+    },
+    /// Start of an epoch, with the workload's offered demand.
+    EpochBegin { offered_bytes: f64 },
+    /// A deterministic fault arm fired this epoch (`scan_gap` with
+    /// value 1, or `brownout` with the PM derate factor).
+    FaultArm { fault: &'static str, value: f64 },
+    /// One tenant's slice of the sharded MMU/touch phase.
+    ShardTask { tenant: String, offered_bytes: f64, active_pages: u64 },
+    /// The policy decision tick's plan summary.
+    PolicyTick { promote: u64, demote: u64, exchange_pairs: u64, safe_mode: bool },
+    /// `MigrationEngine::submit` outcome for this epoch's plan.
+    MigrateSubmit { accepted: u64, dropped_duplicate: u64, dropped_pinned: u64 },
+    /// `MigrationEngine::run_epoch` outcome: what actually moved.
+    MigrateExec {
+        promoted: u64,
+        demoted: u64,
+        exchanged_pairs: u64,
+        skipped: u64,
+        stale: u64,
+        retried: u64,
+        failed: u64,
+        over_quota: u64,
+        deferred: u64,
+    },
+    /// Promotions bounced off hard DRAM quotas this epoch (emitted only
+    /// when nonzero).
+    QuotaReject { count: u64 },
+    /// One sampled page's lifecycle step (`--trace-pages`). `tier` is
+    /// present for `place` steps only.
+    Page { page: u32, step: PageStep, tier: Option<&'static str> },
+    /// One tenant's served bytes and end-of-epoch DRAM-capacity share.
+    TenantEpoch { tenant: String, app_bytes: f64, dram_share: f64 },
+    /// The policy crossed into (`entered = true`) or out of its
+    /// degraded safe mode.
+    SafeMode { entered: bool },
+    /// End of an epoch: served demand, wall time, throughput and the
+    /// engine/occupancy counter tracks.
+    EpochEnd {
+        wall_secs: f64,
+        app_bytes: f64,
+        throughput: f64,
+        dram_occupancy: f64,
+        queue_depth: u64,
+        safe_mode: bool,
+    },
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Header { .. } => "header",
+            TraceEvent::EpochBegin { .. } => "epoch_begin",
+            TraceEvent::FaultArm { .. } => "fault_arm",
+            TraceEvent::ShardTask { .. } => "shard_task",
+            TraceEvent::PolicyTick { .. } => "policy_tick",
+            TraceEvent::MigrateSubmit { .. } => "migrate_submit",
+            TraceEvent::MigrateExec { .. } => "migrate_exec",
+            TraceEvent::QuotaReject { .. } => "quota_reject",
+            TraceEvent::Page { .. } => "page",
+            TraceEvent::TenantEpoch { .. } => "tenant_epoch",
+            TraceEvent::SafeMode { .. } => "safe_mode",
+            TraceEvent::EpochEnd { .. } => "epoch_end",
+        }
+    }
+
+    fn put_fields(&self, m: &mut BTreeMap<String, Json>) {
+        let num = |v: f64| Json::Num(v);
+        let int = |v: u64| Json::Num(v as f64);
+        match self {
+            TraceEvent::Header { policy, workload, seed, epochs, epoch_secs } => {
+                m.insert("policy".into(), Json::Str(policy.clone()));
+                m.insert("workload".into(), Json::Str(workload.clone()));
+                m.insert("seed".into(), int(*seed));
+                m.insert("epochs".into(), int(*epochs as u64));
+                m.insert("epoch_secs".into(), num(*epoch_secs));
+            }
+            TraceEvent::EpochBegin { offered_bytes } => {
+                m.insert("offered_bytes".into(), num(*offered_bytes));
+            }
+            TraceEvent::FaultArm { fault, value } => {
+                m.insert("fault".into(), Json::Str((*fault).into()));
+                m.insert("value".into(), num(*value));
+            }
+            TraceEvent::ShardTask { tenant, offered_bytes, active_pages } => {
+                m.insert("tenant".into(), Json::Str(tenant.clone()));
+                m.insert("offered_bytes".into(), num(*offered_bytes));
+                m.insert("active_pages".into(), int(*active_pages));
+            }
+            TraceEvent::PolicyTick { promote, demote, exchange_pairs, safe_mode } => {
+                m.insert("promote".into(), int(*promote));
+                m.insert("demote".into(), int(*demote));
+                m.insert("exchange_pairs".into(), int(*exchange_pairs));
+                m.insert("safe_mode".into(), Json::Bool(*safe_mode));
+            }
+            TraceEvent::MigrateSubmit { accepted, dropped_duplicate, dropped_pinned } => {
+                m.insert("accepted".into(), int(*accepted));
+                m.insert("dropped_duplicate".into(), int(*dropped_duplicate));
+                m.insert("dropped_pinned".into(), int(*dropped_pinned));
+            }
+            TraceEvent::MigrateExec {
+                promoted,
+                demoted,
+                exchanged_pairs,
+                skipped,
+                stale,
+                retried,
+                failed,
+                over_quota,
+                deferred,
+            } => {
+                m.insert("promoted".into(), int(*promoted));
+                m.insert("demoted".into(), int(*demoted));
+                m.insert("exchanged_pairs".into(), int(*exchanged_pairs));
+                m.insert("skipped".into(), int(*skipped));
+                m.insert("stale".into(), int(*stale));
+                m.insert("retried".into(), int(*retried));
+                m.insert("failed".into(), int(*failed));
+                m.insert("over_quota".into(), int(*over_quota));
+                m.insert("deferred".into(), int(*deferred));
+            }
+            TraceEvent::QuotaReject { count } => {
+                m.insert("count".into(), int(*count));
+            }
+            TraceEvent::Page { page, step, tier } => {
+                m.insert("page".into(), int(*page as u64));
+                m.insert("step".into(), Json::Str(step.name().into()));
+                if let Some(t) = tier {
+                    m.insert("tier".into(), Json::Str((*t).into()));
+                }
+            }
+            TraceEvent::TenantEpoch { tenant, app_bytes, dram_share } => {
+                m.insert("tenant".into(), Json::Str(tenant.clone()));
+                m.insert("app_bytes".into(), num(*app_bytes));
+                m.insert("dram_share".into(), num(*dram_share));
+            }
+            TraceEvent::SafeMode { entered } => {
+                m.insert("entered".into(), Json::Bool(*entered));
+            }
+            TraceEvent::EpochEnd {
+                wall_secs,
+                app_bytes,
+                throughput,
+                dram_occupancy,
+                queue_depth,
+                safe_mode,
+            } => {
+                m.insert("wall_secs".into(), num(*wall_secs));
+                m.insert("app_bytes".into(), num(*app_bytes));
+                m.insert("throughput".into(), num(*throughput));
+                m.insert("dram_occupancy".into(), num(*dram_occupancy));
+                m.insert("queue_depth".into(), int(*queue_depth));
+                m.insert("safe_mode".into(), Json::Bool(*safe_mode));
+            }
+        }
+    }
+}
+
+/// Render one event + stamp as its canonical JSONL line (no trailing
+/// newline). Both shipped sinks use this, so the in-memory buffer the
+/// tests inspect is byte-identical to what `--trace` writes.
+pub fn render_line(stamp: &Stamp, ev: &TraceEvent) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".into(), Json::Num(SCHEMA_VERSION as f64));
+    m.insert("kind".into(), Json::Str(ev.kind().into()));
+    m.insert("epoch".into(), Json::Num(stamp.epoch as f64));
+    m.insert("t".into(), Json::Num(stamp.t_secs));
+    m.insert("seq".into(), Json::Num(stamp.seq as f64));
+    ev.put_fields(&mut m);
+    Json::Obj(m).render()
+}
+
+/// Destination for stamped trace events. Implementations must never
+/// panic on I/O failure — degrade to the `dropped` counter.
+pub trait TraceSink: Send {
+    fn record(&mut self, stamp: &Stamp, ev: &TraceEvent);
+    /// Events accepted so far.
+    fn written(&self) -> u64 {
+        0
+    }
+    /// Events lost to I/O errors so far.
+    fn dropped(&self) -> u64 {
+        0
+    }
+    /// Flush buffered output (no-op for in-memory sinks).
+    fn flush(&mut self) {}
+    /// In-memory sinks expose their rendered lines for tests and the
+    /// bench observer-effect probe; streaming sinks return `None`.
+    fn lines(&self) -> Option<&[String]> {
+        None
+    }
+}
+
+/// Streaming JSONL writer (`--trace FILE`). Write errors are counted,
+/// not raised: a full disk mid-run costs trace lines, never the run.
+pub struct JsonlSink<W: Write + Send> {
+    out: W,
+    written: u64,
+    dropped: u64,
+}
+
+impl<W: Write + Send> JsonlSink<W> {
+    pub fn new(out: W) -> Self {
+        JsonlSink { out, written: 0, dropped: 0 }
+    }
+}
+
+impl<W: Write + Send> TraceSink for JsonlSink<W> {
+    fn record(&mut self, stamp: &Stamp, ev: &TraceEvent) {
+        let mut line = render_line(stamp, ev);
+        line.push('\n');
+        if self.out.write_all(line.as_bytes()).is_ok() {
+            self.written += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+    fn written(&self) -> u64 {
+        self.written
+    }
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+    fn flush(&mut self) {
+        // flush failures surface through the dropped counter too: the
+        // caller reports drops at exit instead of panicking mid-run.
+        if self.out.flush().is_err() {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// In-memory sink: buffers rendered JSONL lines for tests, the chrome
+/// converter unit tests and the bench observer-effect probe.
+#[derive(Default)]
+pub struct MemSink {
+    buf: Vec<String>,
+}
+
+impl MemSink {
+    pub fn new() -> Self {
+        MemSink::default()
+    }
+}
+
+impl TraceSink for MemSink {
+    fn record(&mut self, stamp: &Stamp, ev: &TraceEvent) {
+        self.buf.push(render_line(stamp, ev));
+    }
+    fn written(&self) -> u64 {
+        self.buf.len() as u64
+    }
+    fn lines(&self) -> Option<&[String]> {
+        Some(&self.buf)
+    }
+}
+
+/// The stamping front-end the coordinators hold (as `Option<Tracer>`;
+/// `None` compiles to the pre-trace epoch loop). Owns the sink, the
+/// monotone sequence counter, the current simulated-time stamp and the
+/// sampled page ranges.
+pub struct Tracer {
+    sink: Box<dyn TraceSink>,
+    seq: u64,
+    epoch: u32,
+    t_secs: f64,
+    pages: Vec<(u64, u64)>,
+    last_safe_mode: bool,
+}
+
+impl Tracer {
+    pub fn new(sink: Box<dyn TraceSink>) -> Self {
+        Tracer { sink, seq: 0, epoch: 0, t_secs: 0.0, pages: Vec::new(), last_safe_mode: false }
+    }
+
+    /// Attach sampled page ranges (half-open, from [`parse_page_ranges`]).
+    pub fn with_pages(mut self, ranges: Vec<(u64, u64)>) -> Self {
+        self.pages = ranges;
+        self
+    }
+
+    /// The sampled ranges (installed into the engine's [`PageTrace`]).
+    pub fn page_ranges(&self) -> &[(u64, u64)] {
+        &self.pages
+    }
+
+    pub fn samples_pages(&self) -> bool {
+        !self.pages.is_empty()
+    }
+
+    pub fn samples(&self, page: u32) -> bool {
+        let p = page as u64;
+        self.pages.iter().any(|&(a, b)| p >= a && p < b)
+    }
+
+    /// Set the stamp for the coming epoch: the epoch index and the
+    /// simulated clock (seconds) at its start. Call once per epoch,
+    /// before any emission.
+    pub fn begin_epoch(&mut self, epoch: u32, t_secs: f64) {
+        self.epoch = epoch;
+        self.t_secs = t_secs;
+    }
+
+    pub fn emit(&mut self, ev: &TraceEvent) {
+        let stamp = Stamp { epoch: self.epoch, t_secs: self.t_secs, seq: self.seq };
+        self.seq += 1;
+        self.sink.record(&stamp, ev);
+    }
+
+    /// Emit a `safe_mode` transition event iff the flag changed since
+    /// the last call (runs start outside safe mode).
+    pub fn note_safe_mode(&mut self, safe: bool) {
+        if safe != self.last_safe_mode {
+            self.last_safe_mode = safe;
+            self.emit(&TraceEvent::SafeMode { entered: safe });
+        }
+    }
+
+    pub fn written(&self) -> u64 {
+        self.sink.written()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.sink.dropped()
+    }
+
+    pub fn flush(&mut self) {
+        self.sink.flush();
+    }
+
+    /// Hand the sink back (tests read [`MemSink`] lines through it).
+    pub fn into_sink(self) -> Box<dyn TraceSink> {
+        self.sink
+    }
+}
+
+/// Per-page provenance state owned by the migration engine when
+/// `--trace-pages` is active: the sampled ranges plus the lifecycle
+/// notes accumulated since the coordinator last drained them. `None`
+/// on the engine means zero per-move overhead — the default.
+#[derive(Clone, Debug, Default)]
+pub struct PageTrace {
+    ranges: Vec<(u64, u64)>,
+    notes: Vec<(u32, PageStep)>,
+}
+
+impl PageTrace {
+    pub fn new(ranges: Vec<(u64, u64)>) -> Self {
+        PageTrace { ranges, notes: Vec::new() }
+    }
+
+    pub fn samples(&self, page: u32) -> bool {
+        let p = page as u64;
+        self.ranges.iter().any(|&(a, b)| p >= a && p < b)
+    }
+
+    /// Record a lifecycle step if `page` is sampled.
+    pub fn note(&mut self, page: u32, step: PageStep) {
+        if self.samples(page) {
+            self.notes.push((page, step));
+        }
+    }
+
+    /// Take the notes accumulated since the last drain (submission
+    /// order — the order the engine touched the pages in).
+    pub fn drain(&mut self) -> Vec<(u32, PageStep)> {
+        std::mem::take(&mut self.notes)
+    }
+}
+
+/// Parse a `--trace-pages` spec: comma-separated half-open ranges
+/// `A..B` or single pages `A`, each decimal or `0x` hex. Returns the
+/// ranges sorted and merged. Errors name the offending entry.
+pub fn parse_page_ranges(spec: &str) -> Result<Vec<(u64, u64)>, String> {
+    fn page_num(s: &str) -> Result<u64, String> {
+        let s = s.trim();
+        let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+            Some(hex) => u64::from_str_radix(hex, 16),
+            None => s.parse::<u64>(),
+        };
+        parsed.map_err(|_| format!("bad page number '{s}'"))
+    }
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (a, b) = match entry.split_once("..") {
+            Some((lo, hi)) => (page_num(lo)?, page_num(hi)?),
+            None => {
+                let p = page_num(entry)?;
+                (p, p + 1)
+            }
+        };
+        if a >= b {
+            return Err(format!("empty page range '{entry}'"));
+        }
+        out.push((a, b));
+    }
+    if out.is_empty() {
+        return Err("no pages in spec".to_string());
+    }
+    out.sort_unstable();
+    let mut merged: Vec<(u64, u64)> = Vec::with_capacity(out.len());
+    for (a, b) in out {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::json;
+
+    #[test]
+    fn envelope_is_versioned_and_monotone() {
+        let mut tr = Tracer::new(Box::new(MemSink::new()));
+        tr.begin_epoch(0, 0.0);
+        tr.emit(&TraceEvent::EpochBegin { offered_bytes: 1.5e9 });
+        tr.begin_epoch(1, 2.25);
+        tr.emit(&TraceEvent::QuotaReject { count: 3 });
+        let sink = tr.into_sink();
+        let lines = sink.lines().unwrap();
+        assert_eq!(lines.len(), 2);
+        let first = json::parse(&lines[0]).unwrap();
+        assert_eq!(first.get("v").unwrap().as_f64(), Some(SCHEMA_VERSION as f64));
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("epoch_begin"));
+        assert_eq!(first.get("seq").unwrap().as_f64(), Some(0.0));
+        let second = json::parse(&lines[1]).unwrap();
+        assert_eq!(second.get("epoch").unwrap().as_f64(), Some(1.0));
+        assert_eq!(second.get("t").unwrap().as_f64(), Some(2.25));
+        assert_eq!(second.get("seq").unwrap().as_f64(), Some(1.0));
+        assert_eq!(second.get("count").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn every_kind_renders_with_its_fields() {
+        let evs = [
+            TraceEvent::Header {
+                policy: "hyplacer".into(),
+                workload: "cg-M".into(),
+                seed: 42,
+                epochs: 10,
+                epoch_secs: 1.0,
+            },
+            TraceEvent::EpochBegin { offered_bytes: 1.0 },
+            TraceEvent::FaultArm { fault: "brownout", value: 0.5 },
+            TraceEvent::ShardTask { tenant: "is.M#0".into(), offered_bytes: 2.0, active_pages: 7 },
+            TraceEvent::PolicyTick { promote: 1, demote: 2, exchange_pairs: 3, safe_mode: false },
+            TraceEvent::MigrateSubmit { accepted: 4, dropped_duplicate: 1, dropped_pinned: 0 },
+            TraceEvent::MigrateExec {
+                promoted: 1,
+                demoted: 1,
+                exchanged_pairs: 0,
+                skipped: 0,
+                stale: 0,
+                retried: 2,
+                failed: 0,
+                over_quota: 0,
+                deferred: 5,
+            },
+            TraceEvent::QuotaReject { count: 2 },
+            TraceEvent::Page { page: 0x20, step: PageStep::Place, tier: Some("dram") },
+            TraceEvent::Page { page: 0x20, step: PageStep::Retry, tier: None },
+            TraceEvent::TenantEpoch { tenant: "pr.M#1".into(), app_bytes: 9.0, dram_share: 0.25 },
+            TraceEvent::SafeMode { entered: true },
+            TraceEvent::EpochEnd {
+                wall_secs: 1.1,
+                app_bytes: 3.0,
+                throughput: 2.7,
+                dram_occupancy: 0.9,
+                queue_depth: 11,
+                safe_mode: true,
+            },
+        ];
+        let stamp = Stamp { epoch: 2, t_secs: 2.0, seq: 9 };
+        for ev in &evs {
+            let line = render_line(&stamp, ev);
+            let doc = json::parse(&line).unwrap();
+            assert_eq!(doc.get("kind").unwrap().as_str(), Some(ev.kind()));
+            assert_eq!(doc.get("v").unwrap().as_f64(), Some(1.0));
+        }
+        // spot-check field presence
+        let page_line = render_line(&stamp, &evs[8]);
+        let doc = json::parse(&page_line).unwrap();
+        assert_eq!(doc.get("step").unwrap().as_str(), Some("place"));
+        assert_eq!(doc.get("tier").unwrap().as_str(), Some("dram"));
+        assert_eq!(doc.get("page").unwrap().as_f64(), Some(32.0));
+    }
+
+    #[test]
+    fn jsonl_sink_counts_drops_instead_of_panicking() {
+        struct Broken;
+        impl Write for Broken {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::Other, "full"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Err(std::io::Error::new(std::io::ErrorKind::Other, "full"))
+            }
+        }
+        let mut sink = JsonlSink::new(Broken);
+        let stamp = Stamp { epoch: 0, t_secs: 0.0, seq: 0 };
+        sink.record(&stamp, &TraceEvent::EpochBegin { offered_bytes: 1.0 });
+        sink.flush();
+        assert_eq!(sink.written(), 0);
+        assert_eq!(sink.dropped(), 2);
+    }
+
+    #[test]
+    fn page_range_spec_parses_hex_and_merges() {
+        let r = parse_page_ranges("0x10..0x40,100..200,0x20..0x50, 300").unwrap();
+        assert_eq!(r, vec![(0x10, 0x50), (100, 200), (300, 301)]);
+        assert!(parse_page_ranges("").is_err());
+        assert!(parse_page_ranges("5..5").is_err());
+        assert!(parse_page_ranges("a..b").is_err());
+        let mut pt = PageTrace::new(r);
+        assert!(pt.samples(0x10) && pt.samples(0x4f) && !pt.samples(0x50));
+        pt.note(0x10, PageStep::Submit);
+        pt.note(0x50, PageStep::Submit); // not sampled
+        assert_eq!(pt.drain(), vec![(0x10, PageStep::Submit)]);
+        assert!(pt.drain().is_empty());
+    }
+
+    #[test]
+    fn safe_mode_notes_only_transitions() {
+        let mut tr = Tracer::new(Box::new(MemSink::new()));
+        tr.begin_epoch(0, 0.0);
+        tr.note_safe_mode(false);
+        tr.note_safe_mode(true);
+        tr.note_safe_mode(true);
+        tr.note_safe_mode(false);
+        let sink = tr.into_sink();
+        assert_eq!(sink.lines().unwrap().len(), 2);
+    }
+}

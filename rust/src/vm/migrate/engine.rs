@@ -36,6 +36,7 @@ use std::collections::VecDeque;
 
 use crate::config::{MachineConfig, Tier};
 use crate::faults::{self, FaultPlan};
+use crate::trace::{PageStep, PageTrace};
 use crate::util::Rng64;
 
 use super::super::page_table::{PageId, PageTable, PlaneQuery};
@@ -188,6 +189,13 @@ pub struct MigrationEngine {
     quotas: Vec<TenantQuota>,
     /// Transient copy-failure injection (None = never fail).
     faults: Option<CopyFaults>,
+    /// Per-page decision-provenance sampling (`--trace-pages`,
+    /// DESIGN.md §15). `None` — the default — records nothing and adds
+    /// no per-move work; when installed, every lifecycle step of a
+    /// sampled page is noted for the coordinator to drain into the
+    /// trace. Notes only *read* engine state, so results are identical
+    /// either way.
+    page_trace: Option<PageTrace>,
 }
 
 impl MigrationEngine {
@@ -204,6 +212,29 @@ impl MigrationEngine {
             last_bp: Backpressure::default(),
             quotas: Vec::new(),
             faults: None,
+            page_trace: None,
+        }
+    }
+
+    /// Install (or clear) per-page provenance sampling over half-open
+    /// page-id ranges (from [`crate::trace::parse_page_ranges`]).
+    pub fn set_page_trace(&mut self, ranges: Vec<(u64, u64)>) {
+        self.page_trace = if ranges.is_empty() { None } else { Some(PageTrace::new(ranges)) };
+    }
+
+    /// Drain the lifecycle notes accumulated since the last drain (the
+    /// coordinator turns them into `page` trace events each epoch).
+    pub fn take_page_notes(&mut self) -> Vec<(PageId, PageStep)> {
+        match &mut self.page_trace {
+            Some(t) => t.drain(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Note a sampled page's lifecycle step (no-op without sampling).
+    fn note_page(trace: &mut Option<PageTrace>, page: PageId, step: PageStep) {
+        if let Some(t) = trace.as_mut() {
+            t.note(page, step);
         }
     }
 
@@ -299,15 +330,18 @@ impl MigrationEngine {
         for &p in &plan.demote {
             if pt.flags(p).pinned() {
                 stats.dropped_pinned += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::PinnedDrop);
                 continue;
             }
             if pt.flags(p).queued() {
                 stats.dropped_duplicate += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Duplicate);
                 continue;
             }
             pt.set_queued(p);
             self.demote_q.push_back(Queued { page: p, planned: epoch, retries: 0, not_before: epoch });
             stats.accepted += 1;
+            Self::note_page(&mut self.page_trace, p, PageStep::Submit);
         }
         for &(pm_page, dram_page) in &plan.exchange {
             // per-reference accounting, mirroring execute()'s per-page
@@ -316,6 +350,7 @@ impl MigrationEngine {
             let b_dup = pt.flags(dram_page).queued();
             if pm_page == dram_page {
                 stats.dropped_duplicate += 1 + u64::from(a_dup);
+                Self::note_page(&mut self.page_trace, pm_page, PageStep::Duplicate);
                 continue;
             }
             // pinned check mirrors the duplicate one: only the pinned
@@ -325,10 +360,22 @@ impl MigrationEngine {
             let b_pin = pt.flags(dram_page).pinned();
             if a_pin || b_pin {
                 stats.dropped_pinned += u64::from(a_pin) + u64::from(b_pin);
+                if a_pin {
+                    Self::note_page(&mut self.page_trace, pm_page, PageStep::PinnedDrop);
+                }
+                if b_pin {
+                    Self::note_page(&mut self.page_trace, dram_page, PageStep::PinnedDrop);
+                }
                 continue;
             }
             if a_dup || b_dup {
                 stats.dropped_duplicate += u64::from(a_dup) + u64::from(b_dup);
+                if a_dup {
+                    Self::note_page(&mut self.page_trace, pm_page, PageStep::Duplicate);
+                }
+                if b_dup {
+                    Self::note_page(&mut self.page_trace, dram_page, PageStep::Duplicate);
+                }
                 continue;
             }
             pt.set_queued(pm_page);
@@ -341,19 +388,24 @@ impl MigrationEngine {
                 not_before: epoch,
             });
             stats.accepted += 2;
+            Self::note_page(&mut self.page_trace, pm_page, PageStep::Submit);
+            Self::note_page(&mut self.page_trace, dram_page, PageStep::Submit);
         }
         for &p in &plan.promote {
             if pt.flags(p).pinned() {
                 stats.dropped_pinned += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::PinnedDrop);
                 continue;
             }
             if pt.flags(p).queued() {
                 stats.dropped_duplicate += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Duplicate);
                 continue;
             }
             pt.set_queued(p);
             self.promote_q.push_back(Queued { page: p, planned: epoch, retries: 0, not_before: epoch });
             stats.accepted += 1;
+            Self::note_page(&mut self.page_trace, p, PageStep::Submit);
         }
         self.submitted_since_run += stats.accepted;
         self.pinned_rejected_since_run += stats.dropped_pinned;
@@ -408,6 +460,10 @@ impl MigrationEngine {
                 stats.skipped += n;
             }
         };
+        // provenance twin of `drop_one`: which lifecycle step a
+        // revalidation drop maps to for a sampled page
+        let drop_step =
+            |planned: u32| if planned < epoch { PageStep::Stale } else { PageStep::Skip };
 
         // Copy-failure injection state for this epoch. Taken out of self
         // so the loops below can borrow the queues freely; restored at
@@ -441,6 +497,7 @@ impl MigrationEngine {
             }
             let Some(qe) = self.demote_q.pop_front() else { break };
             if qe.not_before > epoch {
+                Self::note_page(&mut self.page_trace, qe.page, PageStep::Backoff);
                 backoff_d.push(qe);
                 continue;
             }
@@ -450,6 +507,7 @@ impl MigrationEngine {
             let f = pt.flags(p);
             if !f.valid() || f.tier() != Tier::Dram {
                 drop_one(&mut stats, qe.planned, 1);
+                Self::note_page(&mut self.page_trace, p, drop_step(qe.planned));
                 continue;
             }
             if copy_fails(&mut frng) {
@@ -461,8 +519,10 @@ impl MigrationEngine {
                 stats.pm_traffic.write_bytes += page;
                 if qe.retries >= faults::RETRY_MAX {
                     stats.failed += 1;
+                    Self::note_page(&mut self.page_trace, p, PageStep::Fail);
                 } else {
                     stats.retried += 1;
+                    Self::note_page(&mut self.page_trace, p, PageStep::Retry);
                     pt.set_queued(p);
                     retry_d.push(Queued {
                         page: p,
@@ -479,6 +539,7 @@ impl MigrationEngine {
                 stats.pm_traffic.write_bytes += page;
                 executed.demote.push(p);
                 moves += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Demote);
                 // demotions always pass — they move the tenant toward
                 // (or keep it within) its cap
                 if let Some(qi) = self.quota_of(p) {
@@ -488,6 +549,7 @@ impl MigrationEngine {
                 // capacity exhausted: always `skipped` (it is not a
                 // revalidation failure), never retried
                 stats.skipped += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Skip);
             }
         }
         for e in backoff_d.into_iter().rev() {
@@ -508,6 +570,8 @@ impl MigrationEngine {
             }
             let Some(qe) = self.exchange_q.pop_front() else { break };
             if qe.not_before > epoch {
+                Self::note_page(&mut self.page_trace, qe.pm, PageStep::Backoff);
+                Self::note_page(&mut self.page_trace, qe.dram, PageStep::Backoff);
                 backoff_x.push(qe);
                 continue;
             }
@@ -527,6 +591,7 @@ impl MigrationEngine {
                     let net_gain = self.quota_of(dram_page) != Some(qi);
                     if net_gain && quota_dram[qi] >= u64::from(self.quotas[qi].hard_cap_pages) {
                         stats.over_quota += 1;
+                        Self::note_page(&mut self.page_trace, pm_page, PageStep::OverQuota);
                         continue;
                     }
                 }
@@ -540,8 +605,12 @@ impl MigrationEngine {
                     stats.pm_traffic.write_bytes += page;
                     if qe.retries >= faults::RETRY_MAX {
                         stats.failed += 2;
+                        Self::note_page(&mut self.page_trace, pm_page, PageStep::Fail);
+                        Self::note_page(&mut self.page_trace, dram_page, PageStep::Fail);
                     } else {
                         stats.retried += 2;
+                        Self::note_page(&mut self.page_trace, pm_page, PageStep::Retry);
+                        Self::note_page(&mut self.page_trace, dram_page, PageStep::Retry);
                         pt.set_queued(pm_page);
                         pt.set_queued(dram_page);
                         retry_x.push(QueuedPair {
@@ -561,6 +630,8 @@ impl MigrationEngine {
                 stats.pm_traffic.write_bytes += page;
                 executed.exchange.push((pm_page, dram_page));
                 moves += 2;
+                Self::note_page(&mut self.page_trace, pm_page, PageStep::Exchange);
+                Self::note_page(&mut self.page_trace, dram_page, PageStep::Exchange);
                 if let Some(qi) = self.quota_of(pm_page) {
                     quota_dram[qi] += 1;
                 }
@@ -569,6 +640,12 @@ impl MigrationEngine {
                 }
             } else {
                 drop_one(&mut stats, qe.planned, u64::from(!a_ok) + u64::from(!b_ok));
+                if !a_ok {
+                    Self::note_page(&mut self.page_trace, pm_page, drop_step(qe.planned));
+                }
+                if !b_ok {
+                    Self::note_page(&mut self.page_trace, dram_page, drop_step(qe.planned));
+                }
             }
         }
         for e in backoff_x.into_iter().rev() {
@@ -586,6 +663,7 @@ impl MigrationEngine {
             }
             let Some(qe) = self.promote_q.pop_front() else { break };
             if qe.not_before > epoch {
+                Self::note_page(&mut self.page_trace, qe.page, PageStep::Backoff);
                 backoff_p.push(qe);
                 continue;
             }
@@ -595,6 +673,7 @@ impl MigrationEngine {
             let f = pt.flags(p);
             if !f.valid() || f.tier() != Tier::Pm {
                 drop_one(&mut stats, qe.planned, 1);
+                Self::note_page(&mut self.page_trace, p, drop_step(qe.planned));
                 continue;
             }
             if let Some(qi) = self.quota_of(p) {
@@ -604,6 +683,7 @@ impl MigrationEngine {
                     // retrying would livelock the queue) and charged
                     // no move budget
                     stats.over_quota += 1;
+                    Self::note_page(&mut self.page_trace, p, PageStep::OverQuota);
                     continue;
                 }
             }
@@ -613,8 +693,10 @@ impl MigrationEngine {
                 stats.dram_traffic.write_bytes += page;
                 if qe.retries >= faults::RETRY_MAX {
                     stats.failed += 1;
+                    Self::note_page(&mut self.page_trace, p, PageStep::Fail);
                 } else {
                     stats.retried += 1;
+                    Self::note_page(&mut self.page_trace, p, PageStep::Retry);
                     pt.set_queued(p);
                     retry_p.push(Queued {
                         page: p,
@@ -631,12 +713,14 @@ impl MigrationEngine {
                 stats.dram_traffic.write_bytes += page;
                 executed.promote.push(p);
                 moves += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Promote);
                 if let Some(qi) = self.quota_of(p) {
                     quota_dram[qi] += 1;
                 }
             } else {
                 // DRAM at capacity: `skipped`, never retried
                 stats.skipped += 1;
+                Self::note_page(&mut self.page_trace, p, PageStep::Skip);
             }
         }
         for e in backoff_p.into_iter().rev() {
@@ -645,6 +729,21 @@ impl MigrationEngine {
         self.promote_q.extend(retry_p);
 
         self.faults = frng;
+        // Provenance: everything still queued at epoch end was deferred
+        // past the bandwidth budget (or is waiting out a retry backoff).
+        // A read-only scan of the queues, gated on sampling being on.
+        if let Some(t) = self.page_trace.as_mut() {
+            for qe in &self.demote_q {
+                t.note(qe.page, PageStep::Defer);
+            }
+            for qe in &self.exchange_q {
+                t.note(qe.pm, PageStep::Defer);
+                t.note(qe.dram, PageStep::Defer);
+            }
+            for qe in &self.promote_q {
+                t.note(qe.page, PageStep::Defer);
+            }
+        }
         stats.pinned_rejected = std::mem::take(&mut self.pinned_rejected_since_run);
         // failed attempts cost the same kernel time as landed moves
         let attempts = stats.moves() + stats.retried + stats.failed;

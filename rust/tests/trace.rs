@@ -1,0 +1,299 @@
+//! Run tracing (DESIGN.md §15): the observer-effect-zero contract and
+//! the per-page provenance reconstruction.
+//!
+//! * **Observer effect zero** — a run with a full in-memory tracer
+//!   attached (including per-page provenance over every page) produces
+//!   a `SimResult` bit-identical to the untraced run, for every fig5
+//!   policy and for a faulted multi-tenant antagonist mix. This is the
+//!   contract that keeps `--trace` out of sweep cell keys.
+//! * **Stream invariants** — the emitted JSONL carries the versioned
+//!   envelope, a strictly increasing `seq`, nondecreasing epochs, and
+//!   never a wall-clock value.
+//! * **Provenance** — a sampled page's lifecycle reconstructs
+//!   submit → defer → execute under a throttled engine, and
+//!   submit → retry → execute under copy-fault injection.
+//! * **Conversion** — the committed fixture converts to a valid Chrome
+//!   trace-event document and a stable text summary.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use hyplacer::config::{HyPlacerConfig, MachineConfig, SimConfig};
+use hyplacer::coordinator::{run_pair, run_pair_traced, SimResult};
+use hyplacer::faults::FaultPlan;
+use hyplacer::policies::{self, FIG5_POLICIES};
+use hyplacer::report::json;
+use hyplacer::tenants::{self, MixSpec};
+use hyplacer::trace::{chrome, MemSink, Tracer};
+use hyplacer::workloads;
+
+/// Assert every result field matches bit for bit (floats via to_bits).
+fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(a.total_wall_secs.to_bits(), b.total_wall_secs.to_bits(), "{label}: wall");
+    assert_eq!(a.total_app_bytes.to_bits(), b.total_app_bytes.to_bits(), "{label}: bytes");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{label}: throughput");
+    assert_eq!(
+        a.steady_throughput.to_bits(),
+        b.steady_throughput.to_bits(),
+        "{label}: steady"
+    );
+    assert_eq!(
+        a.energy_j_per_byte.to_bits(),
+        b.energy_j_per_byte.to_bits(),
+        "{label}: energy/B"
+    );
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits(), "{label}: energy");
+    assert_eq!(a.migrated_pages, b.migrated_pages, "{label}: migrated");
+    assert_eq!(
+        a.dram_traffic_share.to_bits(),
+        b.dram_traffic_share.to_bits(),
+        "{label}: dram share"
+    );
+    assert_eq!(a.migrate_queue_peak, b.migrate_queue_peak, "{label}: queue peak");
+    assert_eq!(
+        a.migrate_deferred_ratio.to_bits(),
+        b.migrate_deferred_ratio.to_bits(),
+        "{label}: deferred"
+    );
+    assert_eq!(
+        a.migrate_stale_ratio.to_bits(),
+        b.migrate_stale_ratio.to_bits(),
+        "{label}: stale"
+    );
+    assert_eq!(a.migrate_retried, b.migrate_retried, "{label}: retried");
+    assert_eq!(a.migrate_failed, b.migrate_failed, "{label}: failed");
+    assert_eq!(a.safe_mode_epochs, b.safe_mode_epochs, "{label}: safe-mode");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{label}: tenant count");
+    for (ta, tb) in a.tenants.iter().zip(b.tenants.iter()) {
+        assert_eq!(ta.name, tb.name, "{label}: tenant name");
+        assert_eq!(ta.app_bytes.to_bits(), tb.app_bytes.to_bits(), "{label}: tenant bytes");
+    }
+}
+
+/// A tracer that records everything in memory, sampling all pages.
+fn full_tracer() -> Tracer {
+    Tracer::new(Box::new(MemSink::new())).with_pages(vec![(0, u64::MAX)])
+}
+
+/// Run the tracer's sink dry and return the rendered JSONL lines.
+fn lines_of(tracer: Tracer) -> Vec<String> {
+    let sink = tracer.into_sink();
+    sink.lines().expect("MemSink exposes lines").to_vec()
+}
+
+#[test]
+fn tracing_has_zero_observer_effect_for_fig5_policies() {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 10;
+    sim.warmup_epochs = 2;
+    // throttle the engine so deferrals (and their extra events) flow
+    sim.migrate_share = 0.05;
+    let hp = HyPlacerConfig::default();
+    for pname in FIG5_POLICIES {
+        let w_a = workloads::by_name("cg-S", cfg.page_bytes, sim.epoch_secs).unwrap();
+        let w_b = workloads::by_name("cg-S", cfg.page_bytes, sim.epoch_secs).unwrap();
+        let p_a = policies::by_name(pname, &cfg, &hp).unwrap();
+        let p_b = policies::by_name(pname, &cfg, &hp).unwrap();
+        let plain = run_pair(&cfg, &sim, w_a, p_a, 0.05);
+        let (traced, tracer) = run_pair_traced(&cfg, &sim, w_b, p_b, 0.05, Some(full_tracer()));
+        assert_bit_identical(&plain, &traced, pname);
+        let tracer = tracer.expect("tracer comes back out");
+        assert!(tracer.written() > 0, "{pname}: no events emitted");
+        assert_eq!(tracer.dropped(), 0, "{pname}: in-memory sink never drops");
+    }
+}
+
+#[test]
+fn tracing_has_zero_observer_effect_on_a_faulted_antagonist_mix() {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 10;
+    sim.warmup_epochs = 2;
+    sim.faults = FaultPlan::parse("copy:0.05,pin:0.001,brownout:ep2..6*0.5,scan-gap:0.05")
+        .unwrap();
+    let mix = MixSpec::parse("is.M:5000/1+pr.M*2/2").unwrap();
+    for pname in ["hyplacer", "hyplacer-qos", "adm-default"] {
+        let hp = HyPlacerConfig::default();
+        let p_a = policies::by_name(pname, &cfg, &hp).unwrap();
+        let p_b = policies::by_name(pname, &cfg, &hp).unwrap();
+        let plain = tenants::run_mix(&cfg, &sim, &mix, p_a, 0.05).unwrap();
+        let (traced, tracer) =
+            tenants::run_mix_traced(&cfg, &sim, &mix, p_b, 0.05, Some(full_tracer())).unwrap();
+        assert_bit_identical(&plain, &traced, pname);
+        assert!(tracer.unwrap().written() > 0, "{pname}: no events emitted");
+    }
+}
+
+#[test]
+fn stream_is_versioned_ordered_and_wall_clock_free() {
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 8;
+    sim.warmup_epochs = 2;
+    sim.faults = FaultPlan::parse("brownout:ep2..5*0.5,scan-gap:0.2").unwrap();
+    let mix = MixSpec::parse("is.M:5000/1+pr.M*2/2").unwrap();
+    let hp = HyPlacerConfig::default();
+    let p = policies::by_name("hyplacer-qos", &cfg, &hp).unwrap();
+    let (_, tracer) =
+        tenants::run_mix_traced(&cfg, &sim, &mix, p, 0.05, Some(full_tracer())).unwrap();
+    let lines = lines_of(tracer.unwrap());
+    assert!(!lines.is_empty());
+
+    let mut last_seq: Option<f64> = None;
+    let mut last_epoch = 0.0f64;
+    // the simulated clock: 0 at bind, advanced by each epoch's wall secs
+    let mut expected_t = 0.0f64;
+    let mut kinds = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let doc = json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+        assert_eq!(doc.get("v").and_then(|v| v.as_f64()), Some(1.0), "line {i}: v");
+        let seq = doc.get("seq").and_then(|v| v.as_f64()).expect("seq");
+        if let Some(prev) = last_seq {
+            assert!(seq > prev, "line {i}: seq not strictly increasing");
+        }
+        last_seq = Some(seq);
+        let epoch = doc.get("epoch").and_then(|v| v.as_f64()).expect("epoch");
+        assert!(epoch >= last_epoch, "line {i}: epoch ran backwards");
+        last_epoch = epoch;
+        // the stamp is simulated time: exactly the sum of the wall secs
+        // of the epochs already completed — never a host clock
+        let t = doc.get("t").and_then(|v| v.as_f64()).expect("t");
+        assert_eq!(
+            t.to_bits(),
+            expected_t.to_bits(),
+            "line {i}: t is not the simulated clock"
+        );
+        let kind = doc.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string();
+        if kind == "epoch_end" {
+            expected_t += doc.get("wall_secs").and_then(|v| v.as_f64()).expect("wall_secs");
+        }
+        kinds.push(kind);
+    }
+    assert_eq!(kinds[0], "header", "stream starts with the run preamble");
+    for k in ["epoch_begin", "shard_task", "policy_tick", "migrate_exec", "tenant_epoch",
+              "epoch_end", "fault_arm", "page"] {
+        assert!(kinds.iter().any(|x| x == k), "missing kind {k}");
+    }
+    // 8 epochs → 8 epoch frames in this segment
+    assert_eq!(kinds.iter().filter(|k| *k == "epoch_end").count(), 8);
+}
+
+/// Collect each sampled page's lifecycle (kind == "page" events, in
+/// emission order) from rendered JSONL lines.
+fn lifecycles(lines: &[String]) -> std::collections::BTreeMap<u64, Vec<String>> {
+    let mut map = std::collections::BTreeMap::new();
+    for line in lines {
+        let doc = json::parse(line).unwrap();
+        if doc.get("kind").and_then(|k| k.as_str()) != Some("page") {
+            continue;
+        }
+        let page = doc.get("page").and_then(|v| v.as_f64()).unwrap() as u64;
+        let step = doc.get("step").and_then(|s| s.as_str()).unwrap().to_string();
+        map.entry(page).or_insert_with(Vec::new).push(step);
+    }
+    map
+}
+
+/// True if `steps` contains `pattern` as a subsequence, where the final
+/// element may match any of the executed-move steps.
+fn has_subsequence(steps: &[String], pattern: &[&str]) -> bool {
+    let mut i = 0;
+    for s in steps {
+        let want = pattern[i];
+        let hit = if want == "<exec>" {
+            matches!(s.as_str(), "promote" | "demote" | "exchange")
+        } else {
+            s == want
+        };
+        if hit {
+            i += 1;
+            if i == pattern.len() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[test]
+fn provenance_reconstructs_submit_defer_execute_under_throttling() {
+    // 5% migrate share on cg-L backs the queue up (the throttle cell
+    // the engine's own budget test pins): some sampled page must be
+    // submitted, sit deferred past at least one epoch boundary, and
+    // then actually move
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 16;
+    sim.warmup_epochs = 2;
+    sim.migrate_share = 0.05;
+    let hp = HyPlacerConfig::default();
+    let w = workloads::by_name("cg-L", cfg.page_bytes, sim.epoch_secs).unwrap();
+    let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+    let (r, tracer) = run_pair_traced(&cfg, &sim, w, p, 0.05, Some(full_tracer()));
+    assert!(r.migrate_deferred_ratio > 0.0, "throttled run must defer");
+    let lines = lines_of(tracer.unwrap());
+    let by_page = lifecycles(&lines);
+    assert!(!by_page.is_empty(), "no page events");
+    let full = by_page
+        .values()
+        .filter(|steps| has_subsequence(steps, &["submit", "defer", "<exec>"]))
+        .count();
+    assert!(full > 0, "no page shows submit -> defer -> execute");
+}
+
+#[test]
+fn provenance_reconstructs_submit_retry_execute_under_copy_faults() {
+    // 60% copy-failure probability: transient failures re-queue moves
+    // (retry) and most re-attempts eventually land
+    let cfg = MachineConfig::paper_machine();
+    let mut sim = SimConfig::default();
+    sim.epochs = 12;
+    sim.warmup_epochs = 3;
+    sim.faults = FaultPlan::parse("copy:0.6").unwrap();
+    let hp = HyPlacerConfig::default();
+    let w = workloads::by_name("cg-M", cfg.page_bytes, sim.epoch_secs).unwrap();
+    let p = policies::by_name("hyplacer", &cfg, &hp).unwrap();
+    let (r, tracer) = run_pair_traced(&cfg, &sim, w, p, 0.05, Some(full_tracer()));
+    assert!(r.migrate_retried > 0, "fault plan must force retries");
+    let lines = lines_of(tracer.unwrap());
+    let by_page = lifecycles(&lines);
+    let retried = by_page
+        .values()
+        .filter(|steps| has_subsequence(steps, &["submit", "retry", "<exec>"]))
+        .count();
+    assert!(retried > 0, "no page shows submit -> retry -> execute");
+}
+
+#[test]
+fn committed_fixture_converts_to_chrome_and_summary() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/trace/sample.jsonl");
+    let text = std::fs::read_to_string(path).expect("committed fixture");
+
+    let doc = chrome::to_chrome(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // the converted document round-trips through the JSON parser
+    let reparsed = json::parse(&doc.render()).unwrap();
+    assert!(reparsed.get("traceEvents").is_some());
+    // the two headers split the fixture into two processes
+    let pids: std::collections::BTreeSet<u64> = events
+        .iter()
+        .filter_map(|e| e.get("pid").and_then(|p| p.as_f64()))
+        .map(|p| p as u64)
+        .collect();
+    assert_eq!(pids.len(), 2, "one pid per run segment");
+    // epoch slices, counters and instants all present
+    assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+    assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")));
+    assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i")));
+
+    let text = chrome::summary(&text).unwrap();
+    assert!(text.contains("trace summary: 21 events, 2 segment(s)"), "{text}");
+    assert!(text.contains("segment 1: hyplacer @ cg-M (seed 42)"), "{text}");
+    assert!(text.contains("segment 2: memm @ cg-M (seed 42)"), "{text}");
+    assert!(text.contains("promotions: 1  demotions: 1  exchanges: 0"), "{text}");
+    assert!(text.contains("retried: 0  failed: 0  over-quota: 2"), "{text}");
+    assert!(text.contains("safe-mode epochs: 1"), "{text}");
+    assert!(text.contains("queue depth peak: 1 at epoch 0"), "{text}");
+    assert!(text.contains("top churning pages: 0x20 (3 steps)"), "{text}");
+}
